@@ -1,0 +1,20 @@
+//! The fine-tuning evaluation suite: regenerates Table 1 (five model
+//! variants × two sparsity levels × paired seeds with significance tests)
+//! and the Fig. 7 μ-sweep.
+//!
+//! ```bash
+//! cargo run --release --example finetune_suite [-- --fast]
+//! ```
+
+use regtopk::experiments::{self, ExpOpts};
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let opts = ExpOpts { fast, ..Default::default() };
+    std::fs::create_dir_all(&opts.out_dir)?;
+    println!("=== Table 1: fine-tuning suite ===");
+    experiments::run("table1", &opts)?;
+    println!("\n=== Fig 7: mu sweep ===");
+    experiments::run("fig7", &opts)?;
+    Ok(())
+}

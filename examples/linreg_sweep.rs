@@ -1,0 +1,21 @@
+//! Linear-regression experiment sweep: regenerates Figs. 3, 4, 5 and 8
+//! (plus the Table 2 trace) from the library API.
+//!
+//! ```bash
+//! cargo run --release --example linreg_sweep            # paper scale
+//! cargo run --release --example linreg_sweep -- --fast  # smoke scale
+//! ```
+
+use regtopk::experiments::{self, ExpOpts};
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let opts = ExpOpts { fast, ..Default::default() };
+    std::fs::create_dir_all(&opts.out_dir)?;
+    for id in ["fig3", "fig4", "fig5", "fig8", "table2"] {
+        println!("\n=== {id} ===");
+        experiments::run(id, &opts)?;
+    }
+    println!("\nCSVs under {}", opts.out_dir.display());
+    Ok(())
+}

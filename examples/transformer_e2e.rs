@@ -1,0 +1,186 @@
+//! END-TO-END VALIDATION DRIVER: distributed training of a transformer
+//! language model where every local gradient is an AOT-compiled JAX
+//! artifact executed via PJRT, and every update travels through the
+//! sparsified parameter-server protocol.
+//!
+//! All three layers compose here:
+//!   L1/L2  python/compile/model_transformer.py (+ Pallas score kernel in
+//!          the same compile pipeline) -> artifacts/transformer_grad.hlo.txt
+//!   L3     this binary: rust coordinator, REGTOP-k sparsifier, Adam server
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example transformer_e2e [-- --fast]
+//! ```
+//!
+//! Scale note (DESIGN.md §4): the testbed is one CPU core, so the model
+//! is ~0.44M parameters rather than the ~100M a TPU pod run would use;
+//! every code path (flat-parameter sparsification, artifact execution,
+//! sparse aggregation, posterior-distortion feedback) is identical.
+
+use regtopk::config::{OptimizerKind, TrainConfig};
+use regtopk::coordinator::{train, IterStats};
+use regtopk::data::{TokenCorpus, TokenGenConfig};
+use regtopk::grad::WorkerGrad;
+use regtopk::metrics::{AsciiPlot, Curves};
+use regtopk::rng::Pcg64;
+use regtopk::runtime::hlo_grad::{open_engine, Feeder, HloGrad, SharedEngine};
+use regtopk::sparsify::SparsifierKind;
+use std::rc::Rc;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let dir = regtopk::runtime::hlo_grad::default_artifacts_dir();
+    anyhow::ensure!(
+        regtopk::runtime::Manifest::available(&dir),
+        "transformer_e2e requires artifacts — run `make artifacts` first"
+    );
+    let engine = open_engine(&dir)?;
+    let entry = engine.borrow_mut().entry("transformer_grad")?;
+    let dim = entry.inputs[0].elements();
+    let vocab = entry.meta_usize("vocab").unwrap();
+    let seq = entry.meta_usize("seq").unwrap();
+    let batch = entry.meta_usize("batch").unwrap();
+    let workers_n = entry.meta_usize("workers").unwrap();
+    println!("transformer: J = {dim} params, vocab {vocab}, seq {seq}, N = {workers_n}");
+
+    // Synthetic Markov corpus, sharded per worker + a held-out set.
+    let gen = TokenGenConfig {
+        vocab,
+        seq_len: seq,
+        per_worker: 256,
+        workers: workers_n,
+        peakiness: 8.0,
+        heterogeneity: 0.25,
+    };
+    let corpus = Arc::new(TokenCorpus::generate(&gen, &mut Pcg64::seed_from_u64(7)));
+    let val = TokenCorpus::generate(
+        &TokenGenConfig { per_worker: batch * 4, workers: 1, heterogeneity: 0.0, ..gen },
+        &mut Pcg64::seed_from_u64(7),
+    );
+
+    // Initial parameters from the compile side (seeded jax init).
+    let theta0 = read_f32(&format!("{dir}/transformer_grad.init.f32"))?;
+    anyhow::ensure!(theta0.len() == dim);
+
+    let steps = if fast { 30 } else { 300 };
+    let sparsity = 0.01; // 1% of J — k ≈ 4378 entries per worker per step
+    let mut curves = Curves::new();
+    for (name, kind, s) in [
+        ("dense", SparsifierKind::Dense, 1.0),
+        ("topk", SparsifierKind::TopK, sparsity),
+        ("regtopk", SparsifierKind::RegTopK { mu: 3.0, y: 1.0 }, s_or(sparsity)),
+    ] {
+        let t0 = std::time::Instant::now();
+        let cfg = TrainConfig {
+            workers: workers_n,
+            dim,
+            sparsity: s,
+            sparsifier: kind,
+            lr: 1e-3,
+            optimizer: OptimizerKind::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+            iters: steps,
+            seed: 0,
+            ..Default::default()
+        };
+        let workers = build_workers(&engine, &corpus, workers_n, batch, seq)?;
+        let eval_every = (steps / 15).max(1);
+        let series = curves.series_mut(name);
+        let mut val_pts: Vec<(usize, f64)> = Vec::new();
+        let result = train(&cfg, theta0.clone(), workers, &mut |st: IterStats<'_>| {
+            series.push(st.t, st.mean_loss);
+            if st.t % eval_every == 0 {
+                val_pts.push((st.t, f64::NAN)); // placeholder; filled below
+            }
+        })?;
+        // Validation loss of the final model.
+        let val_loss = evaluate(&engine, &val, &result.theta, batch, seq)?;
+        let train_final = curves.get(name).unwrap().last_value().unwrap();
+        println!(
+            "{name:<8} S={s:<5} {} steps in {:.1?}: train loss {:.4} -> {:.4}, val {:.4}, \
+             uplink {:.1} MiB (vs {:.1} MiB dense)",
+            steps,
+            t0.elapsed(),
+            curves.get(name).unwrap().points[0].1,
+            train_final,
+            val_loss,
+            result.comm.uplink_bytes() as f64 / (1024.0 * 1024.0),
+            (dim * 4 * steps * workers_n) as f64 / (1024.0 * 1024.0),
+        );
+    }
+    std::fs::create_dir_all("results")?;
+    curves.write_csv("results/e2e_transformer_loss.csv")?;
+    let mut plot = AsciiPlot::new(format!(
+        "e2e transformer ({dim} params, N={workers_n}): train loss vs step  [ln(V) = {:.2}]",
+        (vocab as f64).ln()
+    ));
+    plot.add('-', curves.get("dense").unwrap());
+    plot.add('o', curves.get("topk").unwrap());
+    plot.add('x', curves.get("regtopk").unwrap());
+    println!("{}", plot.render());
+    println!("wrote results/e2e_transformer_loss.csv");
+    Ok(())
+}
+
+fn s_or(s: f64) -> f64 {
+    s
+}
+
+fn build_workers(
+    engine: &SharedEngine,
+    corpus: &Arc<TokenCorpus>,
+    n: usize,
+    batch: usize,
+    seq: usize,
+) -> anyhow::Result<Vec<Box<dyn WorkerGrad>>> {
+    (0..n)
+        .map(|w| {
+            let corpus = Arc::clone(corpus);
+            let feeder: Feeder = Box::new(move |t, bufs: &mut Vec<Vec<f32>>| {
+                if bufs.is_empty() {
+                    bufs.push(vec![0.0; batch * seq]);
+                }
+                let idx = corpus.batch_indices(w, t, batch, 42);
+                for (b, &i) in idx.iter().enumerate() {
+                    for (j, &tok) in corpus.shards[w][i].iter().enumerate() {
+                        bufs[0][b * seq + j] = tok as f32;
+                    }
+                }
+            });
+            Ok(Box::new(HloGrad::new(Rc::clone(engine), "transformer_grad", feeder)?)
+                as Box<dyn WorkerGrad>)
+        })
+        .collect()
+}
+
+fn evaluate(
+    engine: &SharedEngine,
+    val: &TokenCorpus,
+    theta: &[f32],
+    batch: usize,
+    seq: usize,
+) -> anyhow::Result<f64> {
+    let seqs = &val.shards[0];
+    let mut total = 0.0;
+    let mut count = 0usize;
+    let mut buf = vec![0.0f32; batch * seq];
+    for chunk in seqs.chunks(batch) {
+        if chunk.len() < batch {
+            break;
+        }
+        for (b, s) in chunk.iter().enumerate() {
+            for (j, &tok) in s.iter().enumerate() {
+                buf[b * seq + j] = tok as f32;
+            }
+        }
+        let outs = engine.borrow_mut().run_f32("transformer_eval", &[theta, &buf])?;
+        total += outs[0][0] as f64;
+        count += 1;
+    }
+    Ok(total / count.max(1) as f64)
+}
+
+fn read_f32(path: &str) -> anyhow::Result<Vec<f32>> {
+    let bytes = std::fs::read(path)?;
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}

@@ -1,0 +1,228 @@
+"""AOT compile pipeline: lower every L2 entry to HLO text + manifest.
+
+Run once via `make artifacts` (python -m compile.aot --out ../artifacts).
+The rust runtime consumes artifacts/manifest.json and the *.hlo.txt files;
+python never runs at training time.
+
+Interchange is HLO TEXT, not serialized HloModuleProto: the image's
+xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction ids); the
+text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, model_cnn, model_mlp, model_transformer
+
+F32 = jnp.float32
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def to_hlo_text(fn, example_args):
+    """Lower a jax function to HLO text with return_tuple=True."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Entry registry. Shapes are the experiment defaults; DESIGN.md §4 maps each
+# entry to the figure/table it serves.
+# ---------------------------------------------------------------------------
+
+LINREG_D, LINREG_J = 500, 100
+SCORE_J = 65536
+MLP = dict(input=192, hidden=32, classes=10, batch=16)
+CNN = model_cnn.CnnSpec(side=16, classes=10, c1=16, c2=32)
+CNN_BATCH, CNN_WORKERS = 32, 8
+TRANSFORMER = model_transformer.TransformerSpec(
+    vocab=256, seq=64, d=128, heads=4, layers=2, ff=512
+)
+TF_BATCH, TF_WORKERS = 8, 4
+
+
+def entries():
+    """(name, fn, example_args, input_names, output_names, meta, init_fn)."""
+    mlp_grad = model_mlp.make_grad_entry(MLP["input"], MLP["hidden"], MLP["classes"])
+    mlp_eval = model_mlp.make_eval_entry(MLP["input"], MLP["hidden"], MLP["classes"])
+    mlp_dim = model_mlp.dims(MLP["input"], MLP["hidden"], MLP["classes"])
+    cnn_grad = model_cnn.make_grad_entry(CNN)
+    cnn_eval = model_cnn.make_eval_entry(CNN)
+    tf_grad = model_transformer.make_grad_entry(TRANSFORMER)
+    tf_eval = model_transformer.make_eval_entry(TRANSFORMER)
+    return [
+        (
+            "linreg_grad",
+            model.linreg_grad_entry,
+            (spec(LINREG_J), spec(LINREG_D, LINREG_J), spec(LINREG_D)),
+            ["theta", "x", "y"],
+            ["grad", "loss"],
+            {"dim": LINREG_J, "points": LINREG_D},
+            None,
+        ),
+        (
+            "toy_logistic_grad",
+            model.toy_logistic_grad_entry,
+            (spec(2), spec(2)),
+            ["theta", "x"],
+            ["grad", "loss"],
+            {"dim": 2},
+            None,
+        ),
+        (
+            "regtopk_score",
+            model.regtopk_score_entry,
+            (spec(SCORE_J), spec(SCORE_J), spec(SCORE_J), spec(SCORE_J), spec(2)),
+            ["a", "a_prev", "g_prev", "mask_prev", "scalars"],
+            ["scores"],
+            {"dim": SCORE_J},
+            None,
+        ),
+        (
+            "mlp_grad",
+            mlp_grad,
+            (spec(mlp_dim), spec(MLP["batch"], MLP["input"]), spec(MLP["batch"], MLP["classes"])),
+            ["theta", "x", "y_onehot"],
+            ["grad", "loss", "acc"],
+            {**MLP, "dim": mlp_dim},
+            None,
+        ),
+        (
+            "mlp_eval",
+            mlp_eval,
+            (spec(mlp_dim), spec(MLP["batch"], MLP["input"]), spec(MLP["batch"], MLP["classes"])),
+            ["theta", "x", "y_onehot"],
+            ["loss", "acc"],
+            {**MLP, "dim": mlp_dim},
+            None,
+        ),
+        (
+            "cnn_grad",
+            cnn_grad,
+            (
+                spec(CNN.dims()),
+                spec(CNN_BATCH, 3 * CNN.side * CNN.side),
+                spec(CNN_BATCH, CNN.classes),
+            ),
+            ["theta", "x", "y_onehot"],
+            ["grad", "loss", "acc"],
+            {
+                "dim": CNN.dims(),
+                "side": CNN.side,
+                "classes": CNN.classes,
+                "batch": CNN_BATCH,
+                "workers": CNN_WORKERS,
+                "has_init": 1,
+            },
+            lambda: CNN.init(jax.random.PRNGKey(0)),
+        ),
+        (
+            "cnn_eval",
+            cnn_eval,
+            (
+                spec(CNN.dims()),
+                spec(CNN_BATCH, 3 * CNN.side * CNN.side),
+                spec(CNN_BATCH, CNN.classes),
+            ),
+            ["theta", "x", "y_onehot"],
+            ["loss", "acc"],
+            {"dim": CNN.dims(), "side": CNN.side, "classes": CNN.classes, "batch": CNN_BATCH},
+            None,
+        ),
+        (
+            "transformer_grad",
+            tf_grad,
+            (spec(TRANSFORMER.dims()), spec(TF_BATCH, TRANSFORMER.seq)),
+            ["theta", "tokens"],
+            ["grad", "loss"],
+            {
+                "dim": TRANSFORMER.dims(),
+                "vocab": TRANSFORMER.vocab,
+                "seq": TRANSFORMER.seq,
+                "batch": TF_BATCH,
+                "workers": TF_WORKERS,
+                "d_model": TRANSFORMER.d,
+                "layers": TRANSFORMER.layers,
+                "has_init": 1,
+            },
+            lambda: TRANSFORMER.init(jax.random.PRNGKey(1)),
+        ),
+        (
+            "transformer_eval",
+            tf_eval,
+            (spec(TRANSFORMER.dims()), spec(TF_BATCH, TRANSFORMER.seq)),
+            ["theta", "tokens"],
+            ["loss"],
+            {"dim": TRANSFORMER.dims(), "vocab": TRANSFORMER.vocab, "seq": TRANSFORMER.seq,
+             "batch": TF_BATCH},
+            None,
+        ),
+    ]
+
+
+def tensor_specs(names, args):
+    return [
+        {"name": n, "shape": list(a.shape), "dtype": "f32"}
+        for n, a in zip(names, args)
+    ]
+
+
+def output_specs(fn, args, names):
+    out = jax.eval_shape(fn, *args)
+    if not isinstance(out, (tuple, list)):
+        out = (out,)
+    return [
+        {"name": n, "shape": list(o.shape), "dtype": "f32"}
+        for n, o in zip(names, out)
+    ]
+
+
+def main():
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--out", default="../artifacts")
+    parser.add_argument("--only", default=None, help="comma-separated entry names")
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"version": 1, "entries": []}
+    for name, fn, example, in_names, out_names, meta, init_fn in entries():
+        if only and name not in only:
+            continue
+        print(f"lowering {name} ...", flush=True)
+        text = to_hlo_text(fn, example)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        entry = {
+            "name": name,
+            "file": fname,
+            "inputs": tensor_specs(in_names, example),
+            "outputs": output_specs(fn, example, out_names),
+            "meta": meta,
+        }
+        if init_fn is not None:
+            init = init_fn()
+            init_name = f"{name}.init.f32"
+            with open(os.path.join(args.out, init_name), "wb") as f:
+                f.write(np.asarray(init, np.float32).tobytes())
+        manifest["entries"].append(entry)
+        print(f"  {fname}: {len(text)} chars")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {args.out}/manifest.json ({len(manifest['entries'])} entries)")
+
+
+if __name__ == "__main__":
+    main()

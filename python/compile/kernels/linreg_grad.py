@@ -1,0 +1,88 @@
+"""L1 Pallas kernels: tiled least-squares gradient 2/D * X^T (X theta - y).
+
+Two kernels chained by the L2 wrapper:
+  1. residual: r = X theta - y, tiled over rows of X
+  2. grad:     g = 2/D * X^T r,  tiled over columns of X
+
+TPU mapping (DESIGN.md §5): each grid step of the residual kernel loads a
+(ROWS x J) block of X into VMEM and contracts it with theta on the MXU;
+the grad kernel loads (D x COLS) column panels. For the paper's
+D=500, J=100 the panels are 500*128*4 B = 256 KiB — VMEM-resident with
+double-buffering room to spare. BlockSpec expresses the HBM->VMEM
+schedule a CUDA implementation would express with threadblock tiling.
+
+interpret=True: see regtopk_score.py.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 128
+COL_BLOCK = 64
+
+
+def _residual_kernel(x_ref, theta_ref, y_ref, out_ref):
+    # (ROWS, J) @ (J,) - (ROWS,)
+    out_ref[...] = x_ref[...] @ theta_ref[...] - y_ref[...]
+
+
+def _grad_kernel(x_ref, r_ref, scale_ref, out_ref):
+    # (D, COLS)^T @ (D,) * 2/D
+    out_ref[...] = (x_ref[...].T @ r_ref[...]) * scale_ref[0]
+
+
+def residual(x, theta, y):
+    """r = X theta - y with row-tiled Pallas matvec."""
+    d, j = x.shape
+    padded = (d + ROW_BLOCK - 1) // ROW_BLOCK * ROW_BLOCK
+    pad = padded - d
+    x_p = jnp.pad(x, ((0, pad), (0, 0)))
+    y_p = jnp.pad(y, (0, pad))
+    out = pl.pallas_call(
+        _residual_kernel,
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.float32),
+        grid=(padded // ROW_BLOCK,),
+        in_specs=[
+            pl.BlockSpec((ROW_BLOCK, j), lambda i: (i, 0)),
+            pl.BlockSpec((j,), lambda i: (0,)),
+            pl.BlockSpec((ROW_BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((ROW_BLOCK,), lambda i: (i,)),
+        interpret=True,
+    )(x_p, theta, y_p)
+    return out[:d]
+
+
+def grad_from_residual(x, r):
+    """g = 2/D * X^T r with column-tiled Pallas matvec."""
+    d, j = x.shape
+    padded = (j + COL_BLOCK - 1) // COL_BLOCK * COL_BLOCK
+    pad = padded - j
+    x_p = jnp.pad(x, ((0, 0), (0, pad)))
+    scale = jnp.array([2.0 / d], jnp.float32)
+    out = pl.pallas_call(
+        _grad_kernel,
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.float32),
+        grid=(padded // COL_BLOCK,),
+        in_specs=[
+            pl.BlockSpec((d, COL_BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((COL_BLOCK,), lambda i: (i,)),
+        interpret=True,
+    )(x_p, r, scale)
+    return out[:j]
+
+
+@jax.jit
+def linreg_grad(theta, x, y):
+    """Full-batch least-squares gradient through the Pallas kernels.
+
+    Returns (grad f32[J], loss f32[]).
+    """
+    r = residual(x, theta, y)
+    g = grad_from_residual(x, r)
+    loss = jnp.mean(r * r)
+    return g, loss

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here;
+pytest sweeps shapes/parameters (hypothesis) and asserts allclose.
+"""
+
+import jax.numpy as jnp
+
+DELTA_GUARD = 1e-30
+
+
+def regtopk_score_ref(a, a_prev, g_prev, mask_prev, omega, mu):
+    """REGTOP-k selection scores (Algorithm 2, lines 8-9).
+
+    score_j = |a_j| * tanh(|1 + delta_j| / mu)   for mask_prev_j = 1
+    score_j = |a_j| * C (C = 1)                  otherwise
+    delta_j = (g_prev_j - omega * a_prev_j) / (omega * a_prev_j)
+
+    Delta is normalized by the *previous* accumulated gradient — see the
+    reproduction note in DESIGN.md §2 / rust/src/sparsify/regtopk.rs.
+    mu = 0 is the TOP-k limit (u = 1).
+    """
+    a = jnp.asarray(a, jnp.float32)
+    denom = omega * jnp.asarray(a_prev, jnp.float32)
+    safe = jnp.abs(denom) > DELTA_GUARD
+    delta = jnp.where(safe, (jnp.asarray(g_prev, jnp.float32) - denom)
+                      / jnp.where(safe, denom, 1.0), 0.0)
+    reg = jnp.where(
+        mu > 0.0,
+        jnp.tanh(jnp.abs(1.0 + delta) / jnp.where(mu > 0.0, mu, 1.0)),
+        1.0,
+    )
+    u = jnp.where(jnp.asarray(mask_prev, jnp.float32) > 0.5,
+                  jnp.where(safe, reg, 1.0), 1.0)
+    return jnp.abs(a) * u
+
+
+def linreg_grad_ref(theta, x, y):
+    """Full-batch least-squares gradient: 2/D * X^T (X theta - y)."""
+    theta = jnp.asarray(theta, jnp.float32)
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    resid = x @ theta - y
+    d = x.shape[0]
+    return (2.0 / d) * (x.T @ resid)
+
+
+def linreg_loss_ref(theta, x, y):
+    """RSS loss (eq. 48): ||X theta - y||^2 / D."""
+    resid = jnp.asarray(x, jnp.float32) @ jnp.asarray(theta, jnp.float32) - y
+    return jnp.mean(resid * resid) * resid.shape[0] / x.shape[0]

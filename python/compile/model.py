@@ -1,0 +1,42 @@
+"""L2 JAX models (build-time only): the computations AOT-lowered to HLO.
+
+Each exported entry is a pure function over f32 arrays whose first input
+is the flat parameter vector theta and whose first output is the gradient
+of the local loss wrt theta — the contract `rust/src/runtime/hlo_grad.rs`
+expects. The linear-regression entry routes through the L1 Pallas kernels
+(same HLO module after lowering); heavier models live in model_mlp.py /
+model_cnn.py / model_transformer.py.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import linreg_grad as linreg_kernels
+from .kernels import regtopk_score as score_kernel
+
+
+def linreg_grad_entry(theta, x, y):
+    """(theta[J], x[D,J], y[D]) -> (grad[J], loss[]) via Pallas kernels."""
+    g, loss = linreg_kernels.linreg_grad(theta, x, y)
+    return g, loss
+
+
+def toy_logistic_grad_entry(theta, x):
+    """The §1.3 toy worker: loss log(1+exp(-<theta; x>)), label fixed to 1.
+
+    (theta[2], x[2]) -> (grad[2], loss[]).
+    """
+    z = jnp.dot(theta, x)
+    # Stable log(1 + exp(-z)) and its gradient -(1 - sigmoid(z)) x.
+    loss = jnp.logaddexp(0.0, -z)
+    coeff = -(1.0 - jax.nn.sigmoid(z))
+    return coeff * x, loss
+
+
+def regtopk_score_entry(a, a_prev, g_prev, mask_prev, scalars):
+    """(a[J], a_prev[J], g_prev[J], mask_prev[J], [omega, mu]) -> scores[J].
+
+    The worker-side score pass as a standalone artifact (used by the
+    score-backend ablation bench in rust).
+    """
+    return (score_kernel.regtopk_score(a, a_prev, g_prev, mask_prev, scalars),)

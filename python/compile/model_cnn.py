@@ -1,0 +1,124 @@
+"""L2 CNN classifier — the ResNet-18/CIFAR-10 stand-in for Fig. 6.
+
+Architecture (NCHW): conv3x3(3->c1) + relu + maxpool2 -> conv3x3(c1->c2)
++ relu + maxpool2 -> flatten -> dense(classes). Parameters travel as one
+flat f32 vector (layout below) so the rust coordinator can sparsify them
+uniformly, exactly as it does for every other model.
+
+Layout: [conv1 (c1,3,3,3) | b1 (c1) | conv2 (c2,c1,3,3) | b2 (c2)
+         | dense W (feat, classes) | dense b (classes)]
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+class CnnSpec:
+    def __init__(self, side=16, classes=10, c1=16, c2=32):
+        self.side = side
+        self.classes = classes
+        self.c1 = c1
+        self.c2 = c2
+        # Two stride-2 pools.
+        self.feat_side = side // 4
+        self.feat = self.feat_side * self.feat_side * c2
+
+    def dims(self):
+        return (
+            self.c1 * 3 * 3 * 3
+            + self.c1
+            + self.c2 * self.c1 * 3 * 3
+            + self.c2
+            + self.feat * self.classes
+            + self.classes
+        )
+
+    def unflatten(self, theta):
+        s = self
+        o = 0
+        k1 = theta[o : o + s.c1 * 27].reshape(s.c1, 3, 3, 3)
+        o += s.c1 * 27
+        b1 = theta[o : o + s.c1]
+        o += s.c1
+        k2 = theta[o : o + s.c2 * s.c1 * 9].reshape(s.c2, s.c1, 3, 3)
+        o += s.c2 * s.c1 * 9
+        b2 = theta[o : o + s.c2]
+        o += s.c2
+        w = theta[o : o + s.feat * s.classes].reshape(s.feat, s.classes)
+        o += s.feat * s.classes
+        b = theta[o : o + s.classes]
+        return k1, b1, k2, b2, w, b
+
+    def init(self, key):
+        """He-initialized flat parameter vector."""
+        s = self
+        ks = jax.random.split(key, 3)
+        k1 = jax.random.normal(ks[0], (s.c1, 3, 3, 3)) * (2.0 / 27) ** 0.5
+        k2 = jax.random.normal(ks[1], (s.c2, s.c1, 3, 3)) * (2.0 / (s.c1 * 9)) ** 0.5
+        w = jax.random.normal(ks[2], (s.feat, s.classes)) * (2.0 / s.feat) ** 0.5
+        return jnp.concatenate(
+            [
+                k1.reshape(-1),
+                jnp.zeros(s.c1),
+                k2.reshape(-1),
+                jnp.zeros(s.c2),
+                w.reshape(-1),
+                jnp.zeros(s.classes),
+            ]
+        ).astype(jnp.float32)
+
+
+def _conv(x, k, b):
+    """3x3 same conv, NCHW/OIHW."""
+    out = jax.lax.conv_general_dilated(
+        x, k, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out + b[None, :, None, None]
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+def forward(spec, theta, x_flat):
+    """x_flat: (B, 3*side*side) CHW-flattened images -> logits (B, classes)."""
+    b = x_flat.shape[0]
+    x = x_flat.reshape(b, 3, spec.side, spec.side)
+    k1, b1, k2, b2, w, bias = spec.unflatten(theta)
+    x = _maxpool2(jax.nn.relu(_conv(x, k1, b1)))
+    x = _maxpool2(jax.nn.relu(_conv(x, k2, b2)))
+    x = x.reshape(b, -1)
+    return x @ w + bias
+
+
+def loss_acc(spec, theta, x_flat, y_onehot):
+    logits = forward(spec, theta, x_flat)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+    acc = jnp.mean(
+        (jnp.argmax(logits, axis=-1) == jnp.argmax(y_onehot, axis=-1)).astype(jnp.float32)
+    )
+    return loss, acc
+
+
+def make_grad_entry(spec):
+    """(theta, x[B, 3*side^2], y_onehot[B, classes]) -> (grad, loss, acc)."""
+
+    def entry(theta, x_flat, y_onehot):
+        def loss_fn(t):
+            return loss_acc(spec, t, x_flat, y_onehot)
+
+        (loss, acc), grad = jax.value_and_grad(loss_fn, has_aux=True)(theta)
+        return grad, loss, acc
+
+    return entry
+
+
+def make_eval_entry(spec):
+    def entry(theta, x_flat, y_onehot):
+        return loss_acc(spec, theta, x_flat, y_onehot)
+
+    return entry

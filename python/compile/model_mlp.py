@@ -1,0 +1,67 @@
+"""L2 MLP classifier — the JAX twin of the native rust model.
+
+Parameter layout matches `rust/src/models/mlp.rs` exactly:
+    [W1 (input x hidden) | b1 (hidden) | W2 (hidden x classes) | b2]
+so the rust integration test can feed the same flat theta to both paths
+and assert the gradients agree — the strongest cross-language check in
+the repository.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def dims(input_, hidden, classes):
+    """Total flat parameter count."""
+    return input_ * hidden + hidden + hidden * classes + classes
+
+
+def unflatten(theta, input_, hidden, classes):
+    w1_end = input_ * hidden
+    b1_end = w1_end + hidden
+    w2_end = b1_end + hidden * classes
+    w1 = theta[:w1_end].reshape(input_, hidden)
+    b1 = theta[w1_end:b1_end]
+    w2 = theta[b1_end:w2_end].reshape(hidden, classes)
+    b2 = theta[w2_end:]
+    return w1, b1, w2, b2
+
+
+def forward(theta, x, input_, hidden, classes):
+    """Batched logits: relu(x W1 + b1) W2 + b2."""
+    w1, b1, w2, b2 = unflatten(theta, input_, hidden, classes)
+    h = jax.nn.relu(x @ w1 + b1)
+    return h @ w2 + b2
+
+
+def loss_acc(theta, x, y_onehot, input_, hidden, classes):
+    logits = forward(theta, x, input_, hidden, classes)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+    acc = jnp.mean(
+        (jnp.argmax(logits, axis=-1) == jnp.argmax(y_onehot, axis=-1)).astype(jnp.float32)
+    )
+    return loss, acc
+
+
+def make_grad_entry(input_, hidden, classes):
+    """(theta, x[B,input], y_onehot[B,classes]) -> (grad, loss, acc)."""
+
+    def entry(theta, x, y_onehot):
+        def loss_fn(t):
+            loss, acc = loss_acc(t, x, y_onehot, input_, hidden, classes)
+            return loss, acc
+
+        (loss, acc), grad = jax.value_and_grad(loss_fn, has_aux=True)(theta)
+        return grad, loss, acc
+
+    return entry
+
+
+def make_eval_entry(input_, hidden, classes):
+    """(theta, x, y_onehot) -> (loss, acc)."""
+
+    def entry(theta, x, y_onehot):
+        return loss_acc(theta, x, y_onehot, input_, hidden, classes)
+
+    return entry

@@ -1,0 +1,155 @@
+"""L2 transformer language model — the end-to-end validation driver.
+
+A compact pre-LN decoder-only transformer (learned positional embeddings,
+tied unembedding) whose entire parameter set travels as one flat f32
+vector so the rust coordinator can sparsify it like any other gradient.
+The e2e example trains it with distributed REGTOP-k on the synthetic
+Markov corpus and logs the loss curve (EXPERIMENTS.md §E2E).
+
+Flat layout (per layer, then globals):
+  for each layer l:  ln1_scale ln1_bias | Wqkv (d, 3d) | bqkv | Wo (d, d) |
+                     bo | ln2_scale ln2_bias | Wff1 (d, f) | bff1 |
+                     Wff2 (f, d) | bff2
+  then: tok_embed (V, d) | pos_embed (T, d) | lnf_scale lnf_bias
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+class TransformerSpec:
+    def __init__(self, vocab=256, seq=64, d=128, heads=4, layers=2, ff=512):
+        assert d % heads == 0
+        self.vocab = vocab
+        self.seq = seq
+        self.d = d
+        self.heads = heads
+        self.layers = layers
+        self.ff = ff
+
+    def layer_dims(self):
+        d, f = self.d, self.ff
+        return 2 * d + d * 3 * d + 3 * d + d * d + d + 2 * d + d * f + f + f * d + d
+
+    def dims(self):
+        return (
+            self.layers * self.layer_dims()
+            + self.vocab * self.d
+            + self.seq * self.d
+            + 2 * self.d
+        )
+
+    def init(self, key):
+        d, f = self.d, self.ff
+        parts = []
+        for l in range(self.layers):
+            ks = jax.random.split(jax.random.fold_in(key, l), 4)
+            parts += [
+                jnp.ones(d), jnp.zeros(d),                                  # ln1
+                (jax.random.normal(ks[0], (d, 3 * d)) * d ** -0.5).reshape(-1),
+                jnp.zeros(3 * d),
+                (jax.random.normal(ks[1], (d, d)) * d ** -0.5).reshape(-1),
+                jnp.zeros(d),
+                jnp.ones(d), jnp.zeros(d),                                  # ln2
+                (jax.random.normal(ks[2], (d, f)) * d ** -0.5).reshape(-1),
+                jnp.zeros(f),
+                (jax.random.normal(ks[3], (f, d)) * f ** -0.5).reshape(-1),
+                jnp.zeros(d),
+            ]
+        ke, kp = jax.random.split(jax.random.fold_in(key, 999))
+        parts += [
+            (jax.random.normal(ke, (self.vocab, d)) * 0.02).reshape(-1),
+            (jax.random.normal(kp, (self.seq, d)) * 0.02).reshape(-1),
+            jnp.ones(d), jnp.zeros(d),                                      # final ln
+        ]
+        return jnp.concatenate([p.astype(jnp.float32) for p in parts])
+
+    def unflatten(self, theta):
+        d, f = self.d, self.ff
+        o = 0
+
+        def take(n, shape=None):
+            nonlocal o
+            v = theta[o : o + n]
+            o += n
+            return v.reshape(shape) if shape else v
+
+        layers = []
+        for _ in range(self.layers):
+            layers.append(
+                dict(
+                    ln1_s=take(d), ln1_b=take(d),
+                    wqkv=take(d * 3 * d, (d, 3 * d)), bqkv=take(3 * d),
+                    wo=take(d * d, (d, d)), bo=take(d),
+                    ln2_s=take(d), ln2_b=take(d),
+                    w1=take(d * f, (d, f)), b1=take(f),
+                    w2=take(f * d, (f, d)), b2=take(d),
+                )
+            )
+        tok = take(self.vocab * d, (self.vocab, d))
+        pos = take(self.seq * d, (self.seq, d))
+        lnf_s, lnf_b = take(d), take(d)
+        return layers, tok, pos, lnf_s, lnf_b
+
+
+def _layernorm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def forward(spec, theta, tokens):
+    """tokens: int32 (B, T) -> logits (B, T, V)."""
+    layers, tok, pos, lnf_s, lnf_b = spec.unflatten(theta)
+    b, t = tokens.shape
+    h = tok[tokens] + pos[None, :t, :]
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    nh, hd = spec.heads, spec.d // spec.heads
+    for p in layers:
+        x = _layernorm(h, p["ln1_s"], p["ln1_b"])
+        qkv = x @ p["wqkv"] + p["bqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+        k = k.reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+        att = (q @ k.transpose(0, 1, 3, 2)) * hd ** -0.5
+        att = jnp.where(causal[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        out = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, spec.d)
+        h = h + out @ p["wo"] + p["bo"]
+        x = _layernorm(h, p["ln2_s"], p["ln2_b"])
+        h = h + jax.nn.gelu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+    h = _layernorm(h, lnf_s, lnf_b)
+    return h @ tok.T  # tied unembedding
+
+
+def loss_fn(spec, theta, tokens):
+    """Next-token cross entropy (nats)."""
+    logits = forward(spec, theta, tokens)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    targets = tokens[:, 1:]
+    picked = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(picked)
+
+
+def make_grad_entry(spec):
+    """(theta[P], tokens_f32[B,T]) -> (grad[P], loss[]).
+
+    Tokens travel as f32 (the runtime's uniform literal type) and are cast
+    to int32 inside the computation.
+    """
+
+    def entry(theta, tokens_f32):
+        tokens = tokens_f32.astype(jnp.int32)
+        loss, grad = jax.value_and_grad(lambda t: loss_fn(spec, t, tokens))(theta)
+        return grad, loss
+
+    return entry
+
+
+def make_eval_entry(spec):
+    def entry(theta, tokens_f32):
+        tokens = tokens_f32.astype(jnp.int32)
+        return (loss_fn(spec, theta, tokens),)
+
+    return entry

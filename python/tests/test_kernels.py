@@ -1,0 +1,140 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes and hyperparameters; assert_allclose against the
+reference is the CORE correctness signal of the compile path.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import linreg_grad as lk
+from compile.kernels import regtopk_score as sk
+from compile.kernels import ref
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# regtopk_score
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    j=st.integers(min_value=1, max_value=3000),
+    mu=st.floats(min_value=0.0, max_value=10.0),
+    omega=st.floats(min_value=0.01, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_score_kernel_matches_ref(j, mu, omega, seed):
+    r = rng(seed)
+    a = r.normal(0, 3, j).astype(np.float32)
+    a_prev = r.normal(0, 3, j).astype(np.float32)
+    g_prev = r.normal(0, 1, j).astype(np.float32)
+    mask = (r.random(j) < 0.5).astype(np.float32)
+    scalars = np.array([omega, mu], np.float32)
+    out = sk.regtopk_score(a, a_prev, g_prev, mask, scalars)
+    expect = ref.regtopk_score_ref(a, a_prev, g_prev, mask, omega, mu)
+    assert out.shape == (j,)
+    assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-5, atol=1e-6)
+
+
+def test_score_mu_zero_is_topk_prior():
+    r = rng(0)
+    a = r.normal(0, 1, 257).astype(np.float32)
+    out = sk.regtopk_score(
+        a, a.copy(), a.copy(), np.ones(257, np.float32), np.array([0.5, 0.0], np.float32)
+    )
+    assert_allclose(np.asarray(out), np.abs(a), rtol=1e-6)
+
+
+def test_score_cancellation_damps_to_zero():
+    # g_prev == 0 while omega*a_prev != 0 -> delta = -1 -> tanh(0) = 0.
+    j = 64
+    a = np.full(j, 5.0, np.float32)
+    a_prev = np.full(j, 5.0, np.float32)
+    g_prev = np.zeros(j, np.float32)
+    mask = np.ones(j, np.float32)
+    out = sk.regtopk_score(a, a_prev, g_prev, mask, np.array([0.5, 1.0], np.float32))
+    assert np.max(np.abs(np.asarray(out))) < 1e-6
+
+
+def test_score_zero_prev_guard():
+    # a_prev = 0 on a masked entry must not produce NaN/Inf.
+    a = np.array([1.0, 2.0], np.float32)
+    a_prev = np.array([0.0, 1.0], np.float32)
+    g_prev = np.array([1.0, 1.0], np.float32)
+    mask = np.ones(2, np.float32)
+    out = np.asarray(
+        sk.regtopk_score(a, a_prev, g_prev, mask, np.array([0.5, 1.0], np.float32))
+    )
+    assert np.all(np.isfinite(out))
+    # Guarded entry falls back to the TOP-k prior |a|.
+    assert_allclose(out[0], 1.0, rtol=1e-6)
+
+
+def test_score_unmasked_entries_keep_prior():
+    r = rng(1)
+    a = r.normal(0, 1, 100).astype(np.float32)
+    out = sk.regtopk_score(
+        a,
+        r.normal(0, 1, 100).astype(np.float32),
+        r.normal(0, 1, 100).astype(np.float32),
+        np.zeros(100, np.float32),
+        np.array([0.5, 2.0], np.float32),
+    )
+    assert_allclose(np.asarray(out), np.abs(a), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# linreg_grad
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=400),
+    j=st.integers(min_value=1, max_value=200),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_linreg_kernel_matches_ref(d, j, seed):
+    r = rng(seed)
+    x = r.normal(0, 1, (d, j)).astype(np.float32)
+    y = r.normal(0, 1, d).astype(np.float32)
+    theta = r.normal(0, 1, j).astype(np.float32)
+    g, loss = lk.linreg_grad(theta, x, y)
+    expect = ref.linreg_grad_ref(theta, x, y)
+    assert_allclose(np.asarray(g), np.asarray(expect), rtol=2e-4, atol=2e-4)
+    expect_loss = float(np.mean((x @ theta - y) ** 2))
+    assert_allclose(float(loss), expect_loss, rtol=1e-4)
+
+
+def test_linreg_paper_shape():
+    # The exact Fig. 3 shape: D=500, J=100.
+    r = rng(7)
+    x = r.normal(0, 1, (500, 100)).astype(np.float32)
+    truth = r.normal(0, 1, 100).astype(np.float32)
+    y = (x @ truth).astype(np.float32)
+    g, loss = lk.linreg_grad(truth, x, y)
+    # At the generating model with no noise the gradient vanishes.
+    assert float(jnp.max(jnp.abs(g))) < 1e-3
+    assert float(loss) < 1e-6
+
+
+def test_linreg_grad_descends():
+    r = rng(8)
+    x = r.normal(0, 1, (120, 30)).astype(np.float32)
+    truth = r.normal(0, 1, 30).astype(np.float32)
+    y = (x @ truth).astype(np.float32)
+    theta = np.zeros(30, np.float32)
+    _, loss0 = lk.linreg_grad(theta, x, y)
+    for _ in range(60):
+        g, _ = lk.linreg_grad(theta, x, y)
+        theta = theta - 0.01 * np.asarray(g)
+    _, loss1 = lk.linreg_grad(theta, x, y)
+    assert float(loss1) < 0.1 * float(loss0)

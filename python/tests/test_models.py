@@ -1,0 +1,165 @@
+"""L2 model tests: shapes, gradient identities, learnability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import model, model_cnn, model_mlp, model_transformer
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# toy logistic
+# ---------------------------------------------------------------------------
+
+
+def test_toy_logistic_matches_closed_form():
+    theta = jnp.array([0.0, 1.0], jnp.float32)
+    x = jnp.array([100.0, 1.0], jnp.float32)
+    g, loss = model.toy_logistic_grad_entry(theta, x)
+    z = 1.0
+    coeff = -(1.0 - 1.0 / (1.0 + np.exp(-z)))
+    assert_allclose(np.asarray(g), coeff * np.asarray(x), rtol=1e-5)
+    assert_allclose(float(loss), np.log(1 + np.exp(-z)), rtol=1e-5)
+
+
+def test_toy_logistic_mirrored_workers_cancel():
+    theta = jnp.array([0.0, 1.0], jnp.float32)
+    g1, _ = model.toy_logistic_grad_entry(theta, jnp.array([100.0, 1.0]))
+    g2, _ = model.toy_logistic_grad_entry(theta, jnp.array([-100.0, 1.0]))
+    assert_allclose(float(g1[0] + g2[0]), 0.0, atol=1e-6)
+    assert_allclose(float(g1[1] - g2[1]), 0.0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# MLP (must mirror the rust native model exactly)
+# ---------------------------------------------------------------------------
+
+
+def test_mlp_zero_params_uniform_loss():
+    i, h, c, b = 6, 4, 3, 5
+    theta = jnp.zeros(model_mlp.dims(i, h, c), jnp.float32)
+    x = jnp.asarray(rng().normal(0, 1, (b, i)), jnp.float32)
+    y = jax.nn.one_hot(jnp.arange(b) % c, c)
+    entry = model_mlp.make_grad_entry(i, h, c)
+    grad, loss, acc = entry(theta, x, y)
+    assert grad.shape == (model_mlp.dims(i, h, c),)
+    assert_allclose(float(loss), np.log(c), rtol=1e-5)
+
+
+def test_mlp_grad_is_true_gradient():
+    i, h, c, b = 5, 7, 4, 3
+    r = rng(1)
+    theta = jnp.asarray(r.normal(0, 0.5, model_mlp.dims(i, h, c)), jnp.float32)
+    x = jnp.asarray(r.normal(0, 1, (b, i)), jnp.float32)
+    y = jax.nn.one_hot(jnp.arange(b) % c, c)
+    entry = model_mlp.make_grad_entry(i, h, c)
+    grad, loss, _ = entry(theta, x, y)
+    # Directional finite difference.
+    d = jnp.asarray(r.normal(0, 1, theta.shape), jnp.float32)
+    d = d / jnp.linalg.norm(d)
+    eps = 1e-3
+    _, lp, _ = entry(theta + eps * d, x, y)
+    _, lm, _ = entry(theta - eps * d, x, y)
+    fd = (float(lp) - float(lm)) / (2 * eps)
+    assert_allclose(fd, float(jnp.dot(grad, d)), rtol=5e-2, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# CNN
+# ---------------------------------------------------------------------------
+
+
+def test_cnn_shapes_and_dims():
+    spec = model_cnn.CnnSpec(side=16, classes=10, c1=16, c2=32)
+    theta = spec.init(jax.random.PRNGKey(0))
+    assert theta.shape == (spec.dims(),)
+    x = jnp.zeros((4, 3 * 16 * 16), jnp.float32)
+    logits = model_cnn.forward(spec, theta, x)
+    assert logits.shape == (4, 10)
+
+
+def test_cnn_grad_entry_outputs():
+    spec = model_cnn.CnnSpec(side=8, classes=4, c1=4, c2=8)
+    entry = model_cnn.make_grad_entry(spec)
+    theta = spec.init(jax.random.PRNGKey(1))
+    r = rng(2)
+    x = jnp.asarray(r.normal(0, 1, (4, 3 * 8 * 8)), jnp.float32)
+    y = jax.nn.one_hot(jnp.arange(4) % 4, 4)
+    grad, loss, acc = entry(theta, x, y)
+    assert grad.shape == theta.shape
+    assert float(loss) > 0
+    assert 0.0 <= float(acc) <= 1.0
+    assert bool(jnp.all(jnp.isfinite(grad)))
+
+
+def test_cnn_learns_blob_classes():
+    spec = model_cnn.CnnSpec(side=8, classes=2, c1=4, c2=8)
+    entry = model_cnn.make_grad_entry(spec)
+    theta = spec.init(jax.random.PRNGKey(2))
+    r = rng(3)
+    protos = r.normal(0, 1, (2, 3 * 64)).astype(np.float32)
+    xs = np.concatenate([protos[i % 2] + r.normal(0, 0.3, 3 * 64) for i in range(32)]).reshape(
+        32, -1
+    ).astype(np.float32)
+    ys = jax.nn.one_hot(jnp.arange(32) % 2, 2)
+    step = jax.jit(lambda t: entry(t, xs, ys))
+    _, loss0, _ = step(theta)
+    for _ in range(60):
+        g, _, _ = step(theta)
+        theta = theta - 0.05 * g
+    _, loss1, acc = step(theta)
+    assert float(loss1) < 0.5 * float(loss0)
+    assert float(acc) > 0.8
+
+
+# ---------------------------------------------------------------------------
+# transformer
+# ---------------------------------------------------------------------------
+
+
+def test_transformer_dims_and_forward():
+    spec = model_transformer.TransformerSpec(vocab=32, seq=8, d=16, heads=2, layers=2, ff=32)
+    theta = spec.init(jax.random.PRNGKey(0))
+    assert theta.shape == (spec.dims(),)
+    tokens = jnp.asarray(rng().integers(0, 32, (2, 8)), jnp.int32)
+    logits = model_transformer.forward(spec, theta, tokens)
+    assert logits.shape == (2, 8, 32)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_transformer_initial_loss_near_uniform():
+    spec = model_transformer.TransformerSpec(vocab=64, seq=16, d=16, heads=2, layers=1, ff=32)
+    theta = spec.init(jax.random.PRNGKey(1))
+    tokens = jnp.asarray(rng(1).integers(0, 64, (4, 16)), jnp.int32)
+    loss = model_transformer.loss_fn(spec, theta, tokens)
+    assert abs(float(loss) - np.log(64)) < 0.5
+
+
+def test_transformer_causality():
+    # Changing a future token must not affect earlier logits.
+    spec = model_transformer.TransformerSpec(vocab=16, seq=8, d=16, heads=2, layers=1, ff=32)
+    theta = spec.init(jax.random.PRNGKey(2))
+    t1 = jnp.asarray(rng(2).integers(0, 16, (1, 8)), jnp.int32)
+    t2 = t1.at[0, 7].set((t1[0, 7] + 1) % 16)
+    l1 = model_transformer.forward(spec, theta, t1)
+    l2 = model_transformer.forward(spec, theta, t2)
+    assert_allclose(np.asarray(l1[0, :7]), np.asarray(l2[0, :7]), atol=1e-5)
+
+
+def test_transformer_grad_entry_learns():
+    spec = model_transformer.TransformerSpec(vocab=8, seq=8, d=16, heads=2, layers=1, ff=32)
+    entry = jax.jit(model_transformer.make_grad_entry(spec))
+    theta = spec.init(jax.random.PRNGKey(3))
+    # A trivially predictable stream: ascending tokens mod 8.
+    tokens = jnp.asarray([[(i + s) % 8 for i in range(8)] for s in range(4)], jnp.float32)
+    _, loss0 = entry(theta, tokens)
+    for _ in range(40):
+        g, _ = entry(theta, tokens)
+        theta = theta - 0.5 * g
+    _, loss1 = entry(theta, tokens)
+    assert float(loss1) < 0.5 * float(loss0), f"{float(loss0)} -> {float(loss1)}"

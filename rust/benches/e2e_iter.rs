@@ -1,0 +1,85 @@
+//! End-to-end per-iteration latency of the full coordinator protocol
+//! (grad -> compress -> aggregate -> observe -> optimize), on the native
+//! linreg workload and — when artifacts are present — on the HLO CNN and
+//! transformer workloads (the production path).
+
+use regtopk::bench::Bencher;
+use regtopk::config::TrainConfig;
+use regtopk::coordinator::train;
+use regtopk::data::linreg::{LinRegDataset, LinRegGenConfig};
+use regtopk::grad::LinRegGrad;
+use regtopk::rng::Pcg64;
+use regtopk::sparsify::SparsifierKind;
+use std::sync::Arc;
+
+fn main() {
+    let b = Bencher::from_env();
+    println!("== full coordinator iteration (N workers, sequential executor) ==");
+    for (kind, s) in [
+        (SparsifierKind::Dense, 1.0),
+        (SparsifierKind::TopK, 0.01),
+        (SparsifierKind::RegTopK { mu: 1.0, y: 1.0 }, 0.01),
+        (SparsifierKind::GlobalTopK, 0.01),
+    ] {
+        // 50 iterations per sample -> report per-iteration time.
+        let iters = 50;
+        let gen = LinRegGenConfig {
+            workers: 20,
+            dim: 1000,
+            points_per_worker: 100,
+            ..Default::default()
+        };
+        let data = Arc::new(LinRegDataset::generate(&gen, &mut Pcg64::seed_from_u64(1)));
+        let cfg = TrainConfig {
+            workers: 20,
+            dim: 1000,
+            sparsity: s,
+            sparsifier: kind,
+            lr: 0.01,
+            iters,
+            ..Default::default()
+        };
+        let stats = b.report(&format!("linreg_J1000_N20/{}/50iters", kind.name()), || {
+            let workers = LinRegGrad::all(&data);
+            train(&cfg, vec![0.0; 1000], workers, &mut |_| {}).unwrap();
+        });
+        println!(
+            "{:<44} per-iteration {:.1} µs",
+            "",
+            stats.median.as_secs_f64() * 1e6 / iters as f64
+        );
+    }
+
+    let dir = regtopk::runtime::hlo_grad::default_artifacts_dir();
+    if regtopk::runtime::Manifest::available(&dir) {
+        println!("\n== PJRT artifact execution latency ==");
+        let mut engine = regtopk::runtime::Engine::new(&dir).unwrap();
+        let mut rng = Pcg64::seed_from_u64(2);
+        for name in ["linreg_grad", "mlp_grad", "cnn_grad", "transformer_grad"] {
+            let Ok(entry) = engine.entry(name) else { continue };
+            let inputs: Vec<Vec<f32>> = entry
+                .inputs
+                .iter()
+                .map(|t| rng.normal_vec(t.elements(), 0.0, 0.1))
+                .collect();
+            let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+            // Token inputs must be valid indices.
+            let refs_fixed: Vec<Vec<f32>> = refs
+                .iter()
+                .zip(entry.inputs.iter())
+                .map(|(buf, spec)| {
+                    if spec.name == "tokens" {
+                        buf.iter().map(|v| (v.abs() * 100.0) as u32 as f32 % 250.0).collect()
+                    } else {
+                        buf.to_vec()
+                    }
+                })
+                .collect();
+            let refs2: Vec<&[f32]> = refs_fixed.iter().map(|v| v.as_slice()).collect();
+            let _ = engine.run_f32(name, &refs2); // compile outside timing
+            b.report(&format!("execute/{name}"), || {
+                engine.run_f32(name, &refs2).unwrap();
+            });
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Hot-path micro-benchmarks: the per-worker per-iteration sparsifier
+//! cost (score + select + error update), the selection kernel itself, and
+//! the native-vs-HLO score ablation.
+//!
+//! `cargo bench --bench sparsify_hot` (REGTOPK_BENCH_FAST=1 for smoke).
+
+use regtopk::bench::{black_box, Bencher};
+use regtopk::rng::Pcg64;
+use regtopk::sparsify::select::{top_k_indices_into, top_k_indices_sort};
+use regtopk::sparsify::{SparseGrad, SparsifierKind};
+
+fn main() {
+    let b = Bencher::from_env();
+    println!("== sparsifier compress() latency (per worker per iteration) ==");
+    for &j in &[10_000usize, 100_000, 1_000_000] {
+        let k = (j / 1000).max(1); // 0.1% — the paper's practical regime
+        let mut rng = Pcg64::seed_from_u64(1);
+        let grad = rng.normal_vec(j, 0.0, 1.0);
+        let agg = rng.normal_vec(j, 0.0, 0.1);
+        for kind in [
+            SparsifierKind::TopK,
+            SparsifierKind::RegTopK { mu: 1.0, y: 1.0 },
+            SparsifierKind::RandK,
+            SparsifierKind::HardThreshold { lambda: 2.5 },
+        ] {
+            let mut s = kind.build(j, k, 0.1, 7);
+            let mut out = SparseGrad::default();
+            // Warm the history so REGTOP-k runs its regularized path.
+            s.compress(&grad, &mut out);
+            s.observe(&agg);
+            b.report_throughput(&format!("{}/J={j}/k={k}", kind.name()), j, || {
+                s.compress(black_box(&grad), &mut out);
+                s.observe(black_box(&agg));
+            });
+        }
+    }
+
+    println!("\n== top-k index selection: quickselect vs full sort ==");
+    for &j in &[100_000usize, 1_000_000] {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let scores = rng.normal_vec(j, 0.0, 1.0);
+        let k = j / 1000;
+        let mut scratch = Vec::new();
+        let mut out = Vec::new();
+        b.report(&format!("quickselect/J={j}/k={k}"), || {
+            top_k_indices_into(black_box(&scores), k, &mut scratch, &mut out);
+        });
+        b.report(&format!("full_sort/J={j}/k={k}"), || {
+            black_box(top_k_indices_sort(black_box(&scores), k));
+        });
+    }
+
+    // Ablation: the fused native score loop vs executing the Pallas/HLO
+    // score artifact through PJRT (same math, artifact adds
+    // literal-copy + dispatch overhead; the artifact exists to prove the
+    // kernel lowers into the same stack, not to win this race on CPU).
+    let dir = regtopk::runtime::hlo_grad::default_artifacts_dir();
+    if regtopk::runtime::Manifest::available(&dir) {
+        println!("\n== score backend ablation (native loop vs HLO artifact) ==");
+        let engine = regtopk::runtime::Engine::new(&dir);
+        if let Ok(mut engine) = engine {
+            if let Ok(entry) = engine.entry("regtopk_score") {
+                let j = entry.inputs[0].elements();
+                let mut rng = Pcg64::seed_from_u64(3);
+                let a = rng.normal_vec(j, 0.0, 1.0);
+                let a_prev = rng.normal_vec(j, 0.0, 1.0);
+                let g_prev = rng.normal_vec(j, 0.0, 1.0);
+                let mask: Vec<f32> =
+                    (0..j).map(|_| if rng.f32() < 0.5 { 1.0 } else { 0.0 }).collect();
+                let scalars = [0.1f32, 1.0];
+                b.report(&format!("hlo_score_artifact/J={j}"), || {
+                    let outs = engine
+                        .run_f32("regtopk_score", &[&a, &a_prev, &g_prev, &mask, &scalars])
+                        .unwrap();
+                    black_box(outs);
+                });
+                // Equivalent native loop.
+                let mut scores = vec![0.0f32; j];
+                b.report(&format!("native_score_loop/J={j}"), || {
+                    for i in 0..j {
+                        let denom = 0.1f32 * a_prev[i];
+                        let u = if mask[i] > 0.5 && denom.abs() > 1e-30 {
+                            (((g_prev[i] - denom) / denom + 1.0).abs() / 1.0).tanh()
+                        } else {
+                            1.0
+                        };
+                        scores[i] = a[i].abs() * u;
+                    }
+                    black_box(&scores);
+                });
+            }
+        }
+    }
+}

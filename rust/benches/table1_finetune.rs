@@ -1,0 +1,17 @@
+//! Bench target regenerating the paper experiment(s): table1.
+//! Runs the harness in fast mode under timing; the full-scale run is
+//! `regtopk exp <id>` (or the linreg_sweep / finetune_suite examples).
+
+use regtopk::bench::Bencher;
+use regtopk::experiments::{self, ExpOpts};
+
+fn main() {
+    let b = Bencher { warmup: 0, target_samples: 1, ..Default::default() };
+    let opts = ExpOpts::fast();
+    std::fs::create_dir_all(&opts.out_dir).unwrap();
+    for id in "table1".split_whitespace() {
+        b.report(&format!("experiment/{id} (fast mode)"), || {
+            experiments::run(id, &opts).unwrap();
+        });
+    }
+}

@@ -1,0 +1,162 @@
+//! Benchmark harness (no `criterion` in the offline vendor set).
+//!
+//! Provides warmed-up, repeated timing with robust statistics (median,
+//! p10/p90, mean) and a `criterion`-like reporting format. Used by every
+//! `rust/benches/*.rs` target (declared with `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over repeated runs of a closure.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub samples: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    fn from_samples(mut ns: Vec<u64>) -> Self {
+        ns.sort_unstable();
+        let n = ns.len();
+        let pick = |q: f64| Duration::from_nanos(ns[((n - 1) as f64 * q).round() as usize]);
+        BenchStats {
+            samples: n,
+            mean: Duration::from_nanos(ns.iter().sum::<u64>() / n as u64),
+            median: pick(0.5),
+            p10: pick(0.1),
+            p90: pick(0.9),
+            min: Duration::from_nanos(ns[0]),
+            max: Duration::from_nanos(ns[n - 1]),
+        }
+    }
+}
+
+/// Pretty duration (ns/µs/ms/s auto-scaled).
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Bench runner: fixed warmup, then either `target_samples` runs or as many
+/// as fit in `budget`.
+pub struct Bencher {
+    pub warmup: usize,
+    pub target_samples: usize,
+    pub budget: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 3, target_samples: 30, budget: Duration::from_secs(10) }
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Bencher {
+    /// Fast profile for CI / smoke runs (REGTOPK_BENCH_FAST=1).
+    pub fn from_env() -> Self {
+        if std::env::var("REGTOPK_BENCH_FAST").is_ok() {
+            Bencher { warmup: 1, target_samples: 5, budget: Duration::from_secs(2) }
+        } else {
+            Bencher::default()
+        }
+    }
+
+    /// Time `f` repeatedly; returns stats.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> BenchStats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.target_samples);
+        let started = Instant::now();
+        while samples.len() < self.target_samples.max(1) {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as u64);
+            if started.elapsed() > self.budget && samples.len() >= 3 {
+                break;
+            }
+        }
+        BenchStats::from_samples(samples)
+    }
+
+    /// Run and print a one-line criterion-style report. Returns the stats
+    /// so callers can derive throughput numbers.
+    pub fn report<F: FnMut()>(&self, name: &str, f: F) -> BenchStats {
+        let stats = self.run(f);
+        println!(
+            "{name:<44} median {:>10}   mean {:>10}   [p10 {} .. p90 {}]  n={}",
+            fmt_duration(stats.median),
+            fmt_duration(stats.mean),
+            fmt_duration(stats.p10),
+            fmt_duration(stats.p90),
+            stats.samples,
+        );
+        stats
+    }
+
+    /// Report with a throughput line (elements/sec based on the median).
+    pub fn report_throughput<F: FnMut()>(&self, name: &str, elems: usize, f: F) -> BenchStats {
+        let stats = self.report(name, f);
+        let eps = elems as f64 / stats.median.as_secs_f64();
+        println!("{:<44} throughput {:.3} Melem/s", "", eps / 1e6);
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering_invariants() {
+        let b = Bencher { warmup: 1, target_samples: 10, budget: Duration::from_secs(5) };
+        let mut acc = 0u64;
+        let stats = b.run(|| {
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(stats.min <= stats.p10);
+        assert!(stats.p10 <= stats.median);
+        assert!(stats.median <= stats.p90);
+        assert!(stats.p90 <= stats.max);
+        assert_eq!(stats.samples, 10);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500 ns");
+        assert_eq!(fmt_duration(Duration::from_micros(1500)), "1.50 ms");
+        assert_eq!(fmt_duration(Duration::from_millis(2500)), "2.500 s");
+    }
+
+    #[test]
+    fn budget_cuts_off_long_runs() {
+        let b = Bencher {
+            warmup: 0,
+            target_samples: 1000,
+            budget: Duration::from_millis(50),
+        };
+        let stats = b.run(|| std::thread::sleep(Duration::from_millis(10)));
+        assert!(stats.samples < 1000);
+        assert!(stats.samples >= 3);
+    }
+}

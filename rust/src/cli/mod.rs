@@ -1,0 +1,174 @@
+//! Command-line argument parser (no `clap` in the offline vendor set).
+//!
+//! Grammar: `regtopk <subcommand> [positional...] [--flag] [--key value]
+//! [--key=value]`. Flags may repeat (`--set a=1 --set b=2`). The launcher
+//! (`main.rs`) declares subcommands and queries parsed arguments through
+//! this module.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Argument parse error.
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// First non-flag token (subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positional tokens.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options; repeated keys accumulate.
+    options: BTreeMap<String, Vec<String>>,
+    /// Bare `--flag` switches.
+    flags: Vec<String>,
+}
+
+/// Option keys that take a value (everything else is a boolean switch).
+const VALUED: &[&str] = &[
+    "config", "set", "out", "sparsifier", "mu", "y", "sparsity", "workers", "iters", "lr",
+    "seed", "seeds", "dim", "k", "backend", "artifacts", "samples", "optimizer", "log-every",
+    "model", "steps", "batch", "score-backend",
+];
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Self, CliError> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: rest is positional.
+                    args.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some(eq) = body.find('=') {
+                    let (key, value) = (body[..eq].to_string(), body[eq + 1..].to_string());
+                    args.options.entry(key).or_default().push(value);
+                } else if VALUED.contains(&body) {
+                    let value = it
+                        .next()
+                        .ok_or_else(|| CliError(format!("--{body} requires a value")))?;
+                    args.options.entry(body.to_string()).or_default().push(value);
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Self, CliError> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Last value of `--key`, if present.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All values of a repeatable option.
+    pub fn opt_all(&self, key: &str) -> &[String] {
+        self.options.get(key).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Whether a bare `--flag` was given.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Typed option access with parse errors naming the flag.
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, CliError>
+    where
+        T::Err: fmt::Display,
+    {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(raw) => raw
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| CliError(format!("--{key}: invalid value `{raw}`: {e}"))),
+        }
+    }
+
+    /// Typed option with default.
+    pub fn opt_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: fmt::Display,
+    {
+        Ok(self.opt_parse(key)?.unwrap_or(default))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse(tokens.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse(&["exp", "fig3", "extra"]);
+        assert_eq!(a.command.as_deref(), Some("exp"));
+        assert_eq!(a.positional, vec!["fig3", "extra"]);
+    }
+
+    #[test]
+    fn valued_options_both_syntaxes() {
+        let a = parse(&["train", "--mu", "2.5", "--sparsity=0.6"]);
+        assert_eq!(a.opt("mu"), Some("2.5"));
+        assert_eq!(a.opt("sparsity"), Some("0.6"));
+    }
+
+    #[test]
+    fn repeated_set_accumulates() {
+        let a = parse(&["train", "--set", "a=1", "--set", "b=2"]);
+        assert_eq!(a.opt_all("set"), &["a=1".to_string(), "b=2".to_string()]);
+    }
+
+    #[test]
+    fn bare_flags() {
+        let a = parse(&["bench", "--fast", "--verbose"]);
+        assert!(a.flag("fast"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("slow"));
+    }
+
+    #[test]
+    fn typed_access() {
+        let a = parse(&["train", "--iters", "500"]);
+        assert_eq!(a.opt_or("iters", 100usize).unwrap(), 500);
+        assert_eq!(a.opt_or("workers", 4usize).unwrap(), 4);
+        let bad = parse(&["train", "--iters", "many"]);
+        assert!(bad.opt_parse::<usize>("iters").is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let r = Args::parse(["train".to_string(), "--mu".to_string()]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn double_dash_terminates_flags() {
+        let a = parse(&["run", "--", "--not-a-flag"]);
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+}

@@ -1,0 +1,210 @@
+//! Simulated parameter-server network: sparse gradient aggregation with
+//! exact communication accounting.
+//!
+//! The server receives one [`SparseGrad`] per worker, scatter-adds them
+//! with the aggregation weights ω_n (eq. 8), and broadcasts the sparse
+//! union back. [`Aggregator`] reuses its dense buffer across iterations —
+//! only previously-touched entries are cleared — so aggregation is
+//! O(Σ message sizes), not O(J), per round.
+//!
+//! Communication accounting follows §2.2: each sparse entry costs one f32
+//! value plus a ⌈log2 J⌉-bit index; the broadcast costs the union size
+//! per worker.
+
+use crate::metrics::CommStats;
+use crate::sparsify::SparseGrad;
+
+/// Sparse weighted-sum aggregator with comm accounting.
+pub struct Aggregator {
+    dim: usize,
+    index_bits: u64,
+    /// Dense aggregation buffer (g^t view).
+    dense: Vec<f32>,
+    /// Entries touched this round (the broadcast union, kept sorted at
+    /// `finish`).
+    touched: Vec<u32>,
+    /// Dirty flags to avoid duplicate entries in `touched`.
+    dirty: Vec<bool>,
+    /// Number of messages added this round.
+    messages: usize,
+    /// Cumulative communication statistics.
+    pub comm: CommStats,
+}
+
+impl Aggregator {
+    pub fn new(dim: usize) -> Self {
+        Aggregator {
+            dim,
+            index_bits: (usize::BITS - (dim.max(2) - 1).leading_zeros()) as u64,
+            dense: vec![0.0; dim],
+            touched: Vec::new(),
+            dirty: vec![false; dim],
+            messages: 0,
+            comm: CommStats::default(),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Bits per transmitted index (⌈log2 J⌉).
+    pub fn index_bits(&self) -> u64 {
+        self.index_bits
+    }
+
+    /// Start a new aggregation round: clear only the entries touched in
+    /// the previous round.
+    pub fn begin(&mut self) {
+        for &i in &self.touched {
+            self.dense[i as usize] = 0.0;
+            self.dirty[i as usize] = false;
+        }
+        self.touched.clear();
+        self.messages = 0;
+    }
+
+    /// Add one worker's message with weight ω (uplink accounting included).
+    pub fn add(&mut self, omega: f32, msg: &SparseGrad) {
+        debug_assert_eq!(msg.indices.len(), msg.values.len());
+        for (&i, &v) in msg.indices.iter().zip(msg.values.iter()) {
+            let idx = i as usize;
+            assert!(idx < self.dim, "index {idx} out of range (J={})", self.dim);
+            self.dense[idx] += omega * v;
+            if !self.dirty[idx] {
+                self.dirty[idx] = true;
+                self.touched.push(i);
+            }
+        }
+        self.comm.uplink_values += msg.len() as u64;
+        // A full-vector message needs no index side-channel (dense send).
+        if msg.len() < self.dim {
+            self.comm.uplink_index_bits += msg.len() as u64 * self.index_bits;
+        }
+        self.messages += 1;
+    }
+
+    /// Finish the round: account the broadcast to `workers` receivers and
+    /// return the dense aggregate view plus the sorted union of indices.
+    pub fn finish(&mut self, workers: usize) -> (&[f32], &[u32]) {
+        self.touched.sort_unstable();
+        let union = self.touched.len() as u64;
+        self.comm.downlink_values += union * workers as u64;
+        self.comm.downlink_index_bits += union * self.index_bits * workers as u64;
+        (&self.dense, &self.touched)
+    }
+
+    /// Dense aggregate view (valid between `finish` and the next `begin`).
+    pub fn dense(&self) -> &[f32] {
+        &self.dense
+    }
+
+    /// Reset all statistics and buffers.
+    pub fn reset(&mut self) {
+        for &i in &self.touched {
+            self.dense[i as usize] = 0.0;
+            self.dirty[i as usize] = false;
+        }
+        self.touched.clear();
+        self.comm = CommStats::default();
+        self.messages = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+
+    fn msg(indices: Vec<u32>, values: Vec<f32>) -> SparseGrad {
+        SparseGrad { indices, values }
+    }
+
+    #[test]
+    fn weighted_aggregation() {
+        let mut agg = Aggregator::new(5);
+        agg.begin();
+        agg.add(0.5, &msg(vec![0, 2], vec![2.0, 4.0]));
+        agg.add(0.5, &msg(vec![2, 4], vec![-4.0, 6.0]));
+        let (dense, union) = agg.finish(2);
+        assert_eq!(dense, &[1.0, 0.0, 0.0, 0.0, 3.0]);
+        assert_eq!(union, &[0, 2, 4]);
+    }
+
+    #[test]
+    fn buffer_reuse_between_rounds() {
+        let mut agg = Aggregator::new(4);
+        agg.begin();
+        agg.add(1.0, &msg(vec![1], vec![5.0]));
+        agg.finish(1);
+        agg.begin();
+        agg.add(1.0, &msg(vec![2], vec![7.0]));
+        let (dense, union) = agg.finish(1);
+        assert_eq!(dense, &[0.0, 0.0, 7.0, 0.0], "stale entry must be cleared");
+        assert_eq!(union, &[2]);
+    }
+
+    #[test]
+    fn comm_accounting_exact() {
+        // J = 100 -> 7-bit indices.
+        let mut agg = Aggregator::new(100);
+        assert_eq!(agg.index_bits(), 7);
+        agg.begin();
+        agg.add(0.5, &msg(vec![0, 1, 2], vec![1.0; 3]));
+        agg.add(0.5, &msg(vec![2, 3], vec![1.0; 2]));
+        agg.finish(2);
+        assert_eq!(agg.comm.uplink_values, 5);
+        assert_eq!(agg.comm.uplink_index_bits, 35);
+        // union = {0,1,2,3} broadcast to 2 workers
+        assert_eq!(agg.comm.downlink_values, 8);
+        assert_eq!(agg.comm.downlink_index_bits, 56);
+    }
+
+    #[test]
+    fn index_bits_edge_cases() {
+        assert_eq!(Aggregator::new(2).index_bits(), 1);
+        assert_eq!(Aggregator::new(1024).index_bits(), 10);
+        assert_eq!(Aggregator::new(1025).index_bits(), 11);
+        assert_eq!(Aggregator::new(1).index_bits(), 1);
+    }
+
+    #[test]
+    fn aggregation_linearity_property() {
+        // Aggregating (m1 then m2) equals densify(m1)*w1 + densify(m2)*w2.
+        check(100, |g| {
+            let dim = g.usize_in(1..=128);
+            let mk = |g: &mut crate::testing::Gen| {
+                let len = g.usize_in(0..=dim);
+                let mut idx: Vec<u32> = (0..dim as u32).collect();
+                // random subset
+                for i in 0..len {
+                    let j = i + g.usize_in(0..=(dim - i - 1));
+                    idx.swap(i, j);
+                }
+                idx.truncate(len);
+                let values: Vec<f32> = (0..len).map(|_| g.normal_f32()).collect();
+                SparseGrad { indices: idx, values }
+            };
+            let m1 = mk(g);
+            let m2 = mk(g);
+            let (w1, w2) = (g.f32_in(0.0, 1.0), g.f32_in(0.0, 1.0));
+            let mut agg = Aggregator::new(dim);
+            agg.begin();
+            agg.add(w1, &m1);
+            agg.add(w2, &m2);
+            let (dense, union) = agg.finish(1);
+            let mut expect = vec![0.0f32; dim];
+            m1.scatter_into(w1, &mut expect);
+            m2.scatter_into(w2, &mut expect);
+            for j in 0..dim {
+                assert!((dense[j] - expect[j]).abs() <= 1e-5);
+            }
+            // Union is sorted, unique, covers exactly the touched entries.
+            assert!(union.windows(2).all(|w| w[0] < w[1]));
+            let mut all: Vec<u32> = m1.indices.iter().chain(m2.indices.iter()).cloned().collect();
+            all.sort_unstable();
+            all.dedup();
+            assert_eq!(union, all.as_slice());
+        });
+    }
+}

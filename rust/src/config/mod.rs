@@ -1,0 +1,306 @@
+//! Experiment configuration system.
+//!
+//! No `serde`/`toml` in the offline vendor set, so this module implements a
+//! TOML-subset parser ([`parser`]) plus typed experiment configs
+//! ([`TrainConfig`] etc.) with validation and file/CLI overrides. Every
+//! launcher entrypoint (`regtopk train --config cfg.toml --set key=value`)
+//! goes through here.
+
+pub mod parser;
+
+pub use parser::{ConfigDoc, ConfigError, Value};
+
+use crate::sparsify::SparsifierKind;
+
+/// Which gradient backend computes local gradients.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GradBackend {
+    /// Pure-rust native model (linear regression / logistic).
+    Native,
+    /// AOT-compiled HLO artifact executed via PJRT.
+    Hlo,
+}
+
+impl GradBackend {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "native" => Ok(GradBackend::Native),
+            "hlo" => Ok(GradBackend::Hlo),
+            _ => Err(ConfigError::new(format!("unknown grad backend `{s}`"))),
+        }
+    }
+}
+
+/// Server-side optimizer selection.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum OptimizerKind {
+    Sgd,
+    Momentum { beta: f64 },
+    Adam { beta1: f64, beta2: f64, eps: f64 },
+}
+
+impl OptimizerKind {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "sgd" => Ok(OptimizerKind::Sgd),
+            "momentum" => Ok(OptimizerKind::Momentum { beta: 0.9 }),
+            "adam" => Ok(OptimizerKind::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 }),
+            _ => Err(ConfigError::new(format!("unknown optimizer `{s}`"))),
+        }
+    }
+}
+
+/// Learning-rate schedule.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LrSchedule {
+    Constant,
+    /// Multiply by `factor` every `every` iterations.
+    Step { every: usize, factor: f64 },
+    /// Cosine decay to `final_frac * lr` over `total` iterations.
+    Cosine { total: usize, final_frac: f64 },
+}
+
+impl LrSchedule {
+    /// Learning rate at iteration `t` for base rate `lr`.
+    pub fn at(&self, lr: f64, t: usize) -> f64 {
+        match self {
+            LrSchedule::Constant => lr,
+            LrSchedule::Step { every, factor } => lr * factor.powi((t / (*every).max(1)) as i32),
+            LrSchedule::Cosine { total, final_frac } => {
+                let total = (*total).max(1);
+                let p = (t.min(total) as f64) / total as f64;
+                let cos = 0.5 * (1.0 + (std::f64::consts::PI * p).cos());
+                lr * (final_frac + (1.0 - final_frac) * cos)
+            }
+        }
+    }
+}
+
+/// Full configuration of one distributed-training run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Number of workers N.
+    pub workers: usize,
+    /// Model dimension J (set by the model when using HLO backends).
+    pub dim: usize,
+    /// Sparsity factor S = k / J. `1.0` disables sparsification.
+    pub sparsity: f64,
+    /// Sparsifier selection and hyperparameters.
+    pub sparsifier: SparsifierKind,
+    /// Base learning rate eta.
+    pub lr: f64,
+    /// Learning-rate schedule.
+    pub lr_schedule: LrSchedule,
+    /// Server optimizer.
+    pub optimizer: OptimizerKind,
+    /// Number of training iterations.
+    pub iters: usize,
+    /// Aggregation weights omega_n; empty means uniform 1/N.
+    pub weights: Vec<f64>,
+    /// Root PRNG seed for the whole run.
+    pub seed: u64,
+    /// Gradient backend.
+    pub backend: GradBackend,
+    /// Directory of AOT artifacts (HLO backend only).
+    pub artifacts_dir: String,
+    /// Log metrics every `log_every` iterations.
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            workers: 4,
+            dim: 100,
+            sparsity: 0.1,
+            sparsifier: SparsifierKind::RegTopK { mu: 1.0, y: 1.0 },
+            lr: 0.01,
+            lr_schedule: LrSchedule::Constant,
+            optimizer: OptimizerKind::Sgd,
+            iters: 1000,
+            weights: Vec::new(),
+            seed: 0,
+            backend: GradBackend::Native,
+            artifacts_dir: "artifacts".into(),
+            log_every: 10,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Effective k for a given model dimension: k = max(1, round(S * J)).
+    pub fn k(&self) -> usize {
+        k_for(self.sparsity, self.dim)
+    }
+
+    /// Per-worker aggregation weights (uniform when unspecified).
+    pub fn omega(&self) -> Vec<f64> {
+        if self.weights.is_empty() {
+            vec![1.0 / self.workers as f64; self.workers]
+        } else {
+            self.weights.clone()
+        }
+    }
+
+    /// Populate from a parsed config document (unknown keys are errors —
+    /// catching typos in sweep scripts is worth the strictness).
+    pub fn apply_doc(&mut self, doc: &ConfigDoc) -> Result<(), ConfigError> {
+        for (key, value) in doc.entries() {
+            self.apply_kv(key, value)?;
+        }
+        self.validate()
+    }
+
+    /// Apply one `key=value` override (CLI `--set`).
+    pub fn apply_kv(&mut self, key: &str, value: &Value) -> Result<(), ConfigError> {
+        match key {
+            "workers" => self.workers = value.as_usize()?,
+            "dim" => self.dim = value.as_usize()?,
+            "sparsity" => self.sparsity = value.as_f64()?,
+            "sparsifier" => self.sparsifier = SparsifierKind::parse(&value.as_str()?)?,
+            "mu" => {
+                if let SparsifierKind::RegTopK { mu, .. } = &mut self.sparsifier {
+                    *mu = value.as_f64()?;
+                } else {
+                    return Err(ConfigError::new("`mu` only applies to regtopk"));
+                }
+            }
+            "y" => {
+                if let SparsifierKind::RegTopK { y, .. } = &mut self.sparsifier {
+                    *y = value.as_f64()?;
+                } else {
+                    return Err(ConfigError::new("`y` only applies to regtopk"));
+                }
+            }
+            "lr" => self.lr = value.as_f64()?,
+            "optimizer" => self.optimizer = OptimizerKind::parse(&value.as_str()?)?,
+            "iters" => self.iters = value.as_usize()?,
+            "seed" => self.seed = value.as_usize()? as u64,
+            "backend" => self.backend = GradBackend::parse(&value.as_str()?)?,
+            "artifacts_dir" => self.artifacts_dir = value.as_str()?,
+            "log_every" => self.log_every = value.as_usize()?,
+            "lr_step_every" => {
+                let every = value.as_usize()?;
+                self.lr_schedule = match self.lr_schedule {
+                    LrSchedule::Step { factor, .. } => LrSchedule::Step { every, factor },
+                    _ => LrSchedule::Step { every, factor: 0.5 },
+                };
+            }
+            "lr_step_factor" => {
+                let factor = value.as_f64()?;
+                self.lr_schedule = match self.lr_schedule {
+                    LrSchedule::Step { every, .. } => LrSchedule::Step { every, factor },
+                    _ => LrSchedule::Step { every: 1000, factor },
+                };
+            }
+            other => return Err(ConfigError::new(format!("unknown config key `{other}`"))),
+        }
+        Ok(())
+    }
+
+    /// Check cross-field invariants.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.workers == 0 {
+            return Err(ConfigError::new("workers must be >= 1"));
+        }
+        if self.dim == 0 {
+            return Err(ConfigError::new("dim must be >= 1"));
+        }
+        if !(0.0 < self.sparsity && self.sparsity <= 1.0) {
+            return Err(ConfigError::new("sparsity must be in (0, 1]"));
+        }
+        if self.lr <= 0.0 {
+            return Err(ConfigError::new("lr must be positive"));
+        }
+        if !self.weights.is_empty() {
+            if self.weights.len() != self.workers {
+                return Err(ConfigError::new("weights length must equal workers"));
+            }
+            let s: f64 = self.weights.iter().sum();
+            if (s - 1.0).abs() > 1e-6 {
+                return Err(ConfigError::new("weights must sum to 1"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// k = max(1, round(S * J)) — shared between configs and experiments.
+pub fn k_for(sparsity: f64, dim: usize) -> usize {
+    if sparsity >= 1.0 {
+        return dim;
+    }
+    ((sparsity * dim as f64).round() as usize).clamp(1, dim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k_rounding() {
+        assert_eq!(k_for(0.01, 100), 1);
+        assert_eq!(k_for(0.5, 100), 50);
+        assert_eq!(k_for(1.0, 100), 100);
+        assert_eq!(k_for(0.0001, 100), 1); // floor at 1
+        assert_eq!(k_for(0.75, 4), 3);
+    }
+
+    #[test]
+    fn defaults_validate() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn kv_overrides() {
+        let mut cfg = TrainConfig::default();
+        cfg.apply_kv("workers", &Value::Int(20)).unwrap();
+        cfg.apply_kv("sparsity", &Value::Float(0.6)).unwrap();
+        cfg.apply_kv("sparsifier", &Value::Str("topk".into())).unwrap();
+        assert_eq!(cfg.workers, 20);
+        assert_eq!(cfg.sparsity, 0.6);
+        assert_eq!(cfg.sparsifier, SparsifierKind::TopK);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut cfg = TrainConfig::default();
+        assert!(cfg.apply_kv("wrokers", &Value::Int(3)).is_err());
+    }
+
+    #[test]
+    fn mu_requires_regtopk() {
+        let mut cfg = TrainConfig::default();
+        cfg.apply_kv("sparsifier", &Value::Str("topk".into())).unwrap();
+        assert!(cfg.apply_kv("mu", &Value::Float(2.0)).is_err());
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut cfg = TrainConfig::default();
+        cfg.workers = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::default();
+        cfg.sparsity = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::default();
+        cfg.sparsity = 1.5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig { workers: 2, weights: vec![0.7, 0.7], ..Default::default() };
+        assert!(cfg.validate().is_err());
+        cfg.weights = vec![0.5, 0.5];
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn lr_schedules() {
+        let c = LrSchedule::Constant;
+        assert_eq!(c.at(0.1, 500), 0.1);
+        let s = LrSchedule::Step { every: 100, factor: 0.5 };
+        assert!((s.at(1.0, 250) - 0.25).abs() < 1e-12);
+        let cos = LrSchedule::Cosine { total: 100, final_frac: 0.1 };
+        assert!((cos.at(1.0, 0) - 1.0).abs() < 1e-12);
+        assert!((cos.at(1.0, 100) - 0.1).abs() < 1e-12);
+        assert!(cos.at(1.0, 50) < 1.0 && cos.at(1.0, 50) > 0.1);
+    }
+}

@@ -1,0 +1,284 @@
+//! TOML-subset parser for experiment configs.
+//!
+//! Supported syntax (sufficient for flat experiment configs):
+//! - `key = value` lines, `#` comments, blank lines
+//! - `[section]` headers flatten to `section.key`
+//! - values: integers, floats (incl. scientific), booleans, quoted strings,
+//!   bare strings, and homogeneous arrays `[1, 2, 3]`
+//!
+//! Deliberately *not* supported: nested tables, dotted keys, multi-line
+//! strings, datetimes — the experiment configs don't need them and a small
+//! grammar keeps error messages crisp.
+
+use std::fmt;
+
+/// Parse error with line context.
+#[derive(Debug, Clone)]
+pub struct ConfigError {
+    pub message: String,
+}
+
+impl ConfigError {
+    pub fn new(message: impl Into<String>) -> Self {
+        ConfigError { message: message.into() }
+    }
+
+    fn at(line_no: usize, message: impl Into<String>) -> Self {
+        ConfigError { message: format!("line {line_no}: {}", message.into()) }
+    }
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error: {}", self.message)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// A parsed config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Result<f64, ConfigError> {
+        match self {
+            Value::Int(i) => Ok(*i as f64),
+            Value::Float(f) => Ok(*f),
+            _ => Err(ConfigError::new(format!("expected number, got {self:?}"))),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize, ConfigError> {
+        match self {
+            Value::Int(i) if *i >= 0 => Ok(*i as usize),
+            _ => Err(ConfigError::new(format!("expected non-negative integer, got {self:?}"))),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool, ConfigError> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => Err(ConfigError::new(format!("expected bool, got {self:?}"))),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<String, ConfigError> {
+        match self {
+            Value::Str(s) => Ok(s.clone()),
+            _ => Err(ConfigError::new(format!("expected string, got {self:?}"))),
+        }
+    }
+
+    pub fn as_f64_array(&self) -> Result<Vec<f64>, ConfigError> {
+        match self {
+            Value::Array(items) => items.iter().map(|v| v.as_f64()).collect(),
+            _ => Err(ConfigError::new(format!("expected array, got {self:?}"))),
+        }
+    }
+}
+
+/// An ordered set of `key -> value` entries (section names flattened in).
+#[derive(Debug, Clone, Default)]
+pub struct ConfigDoc {
+    entries: Vec<(String, Value)>,
+}
+
+impl ConfigDoc {
+    /// Parse from source text.
+    pub fn parse(src: &str) -> Result<Self, ConfigError> {
+        let mut doc = ConfigDoc::default();
+        let mut section = String::new();
+        for (idx, raw) in src.lines().enumerate() {
+            let line_no = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[') {
+                let name = inner
+                    .strip_suffix(']')
+                    .ok_or_else(|| ConfigError::at(line_no, "unterminated section header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(ConfigError::at(line_no, "empty section name"));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| ConfigError::at(line_no, "expected `key = value`"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(ConfigError::at(line_no, "empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| ConfigError::at(line_no, e.message))?;
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            if doc.entries.iter().any(|(k, _)| k == &full_key) {
+                return Err(ConfigError::at(line_no, format!("duplicate key `{full_key}`")));
+            }
+            doc.entries.push((full_key, value));
+        }
+        Ok(doc)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<Self, ConfigError> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError::new(format!("cannot read {path}: {e}")))?;
+        Self::parse(&src)
+    }
+
+    /// Iterate entries in file order.
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &Value)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Look up a key.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Honour '#' only outside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse a single scalar or array value.
+pub fn parse_value(s: &str) -> Result<Value, ConfigError> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err(ConfigError::new("empty value"));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| ConfigError::new("unterminated array"))?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| ConfigError::new("unterminated string"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // Bare identifier — treated as a string (e.g. `sparsifier = regtopk`).
+    if s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.') {
+        return Ok(Value::Str(s.to_string()));
+    }
+    Err(ConfigError::new(format!("cannot parse value `{s}`")))
+}
+
+/// Split an array body on commas that are not inside nested brackets.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '[' => depth += 1,
+            ']' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(parse_value("3").unwrap(), Value::Int(3));
+        assert_eq!(parse_value("-7").unwrap(), Value::Int(-7));
+        assert_eq!(parse_value("0.5").unwrap(), Value::Float(0.5));
+        assert_eq!(parse_value("1e-3").unwrap(), Value::Float(1e-3));
+        assert_eq!(parse_value("true").unwrap(), Value::Bool(true));
+        assert_eq!(parse_value("\"hi there\"").unwrap(), Value::Str("hi there".into()));
+        assert_eq!(parse_value("regtopk").unwrap(), Value::Str("regtopk".into()));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        assert_eq!(
+            parse_value("[1, 2, 3]").unwrap(),
+            Value::Array(vec![Value::Int(1), Value::Int(2), Value::Int(3)])
+        );
+        assert_eq!(parse_value("[]").unwrap(), Value::Array(vec![]));
+        assert_eq!(
+            parse_value("[0.25, 0.75]").unwrap().as_f64_array().unwrap(),
+            vec![0.25, 0.75]
+        );
+    }
+
+    #[test]
+    fn parses_document_with_sections_and_comments() {
+        let doc = ConfigDoc::parse(
+            "# run config\nworkers = 20  # N\n[sparsify]\nkind = regtopk\nmu = 2.5\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("workers").unwrap(), &Value::Int(20));
+        assert_eq!(doc.get("sparsify.kind").unwrap(), &Value::Str("regtopk".into()));
+        assert_eq!(doc.get("sparsify.mu").unwrap(), &Value::Float(2.5));
+    }
+
+    #[test]
+    fn rejects_duplicates_and_garbage() {
+        assert!(ConfigDoc::parse("a = 1\na = 2\n").is_err());
+        assert!(ConfigDoc::parse("no equals sign\n").is_err());
+        assert!(ConfigDoc::parse("[unterminated\n").is_err());
+        assert!(parse_value("\"open").is_err());
+        assert!(parse_value("[1, 2").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_preserved() {
+        let doc = ConfigDoc::parse("name = \"exp#7\"\n").unwrap();
+        assert_eq!(doc.get("name").unwrap(), &Value::Str("exp#7".into()));
+    }
+}

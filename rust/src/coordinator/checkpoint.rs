@@ -1,0 +1,186 @@
+//! Training-state checkpointing: serialize/restore the global model (and
+//! optionally any flat auxiliary state such as optimizer moments) to a
+//! simple self-describing binary format, so long sweeps can resume and
+//! the finetune suite can persist its pretrained variants.
+//!
+//! Format (little-endian): magic "RTKC" | u32 version | u32 section count
+//! | per section: u32 name_len | name bytes | u64 f32 count | payload.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"RTKC";
+const VERSION: u32 = 1;
+
+/// A named collection of flat f32 tensors.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Checkpoint {
+    pub sections: Vec<(String, Vec<f32>)>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: &str, data: &[f32]) -> &mut Self {
+        self.sections.push((name.to_string(), data.to_vec()));
+        self
+    }
+
+    pub fn get(&self, name: &str) -> Option<&[f32]> {
+        self.sections.iter().find(|(n, _)| n == name).map(|(_, d)| d.as_slice())
+    }
+
+    /// Write to a file (atomic: temp + rename).
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let tmp = path.with_extension("tmp");
+        let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&(self.sections.len() as u32).to_le_bytes())?;
+        for (name, data) in &self.sections {
+            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            w.write_all(name.as_bytes())?;
+            w.write_all(&(data.len() as u64).to_le_bytes())?;
+            for v in data {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        w.into_inner()?.sync_all()?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Checkpoint> {
+        let mut r = std::io::BufReader::new(std::fs::File::open(path.as_ref())?);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "not a regtopk checkpoint");
+        let version = read_u32(&mut r)?;
+        anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+        let count = read_u32(&mut r)? as usize;
+        anyhow::ensure!(count < 1_000_000, "implausible section count");
+        let mut sections = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name_len = read_u32(&mut r)? as usize;
+            anyhow::ensure!(name_len < 4096, "implausible name length");
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name)?;
+            let n = read_u64(&mut r)? as usize;
+            let mut bytes = vec![0u8; n * 4];
+            r.read_exact(&mut bytes)?;
+            let data = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            sections.push((name, data));
+        }
+        Ok(Checkpoint { sections })
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> anyhow::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> anyhow::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("regtopk_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut c = Checkpoint::new();
+        c.add("theta", &[1.0, -2.5, 3.25]);
+        c.add("adam_m", &[0.0; 7]);
+        let path = tmpdir().join("a.rtkc");
+        c.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, c);
+        assert_eq!(back.get("theta").unwrap(), &[1.0, -2.5, 3.25]);
+        assert!(back.get("missing").is_none());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn empty_checkpoint_roundtrips() {
+        let c = Checkpoint::new();
+        let path = tmpdir().join("empty.rtkc");
+        c.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), c);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmpdir().join("garbage.rtkc");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn resume_training_from_checkpoint_matches_uninterrupted() {
+        // Train 40 iters; vs train 20, checkpoint theta, restore, train 20
+        // more — identical final model for SGD (stateless optimizer).
+        use crate::config::TrainConfig;
+        use crate::coordinator::train;
+        use crate::data::linreg::{LinRegDataset, LinRegGenConfig};
+        use crate::grad::LinRegGrad;
+        use crate::rng::Pcg64;
+        use crate::sparsify::SparsifierKind;
+        use std::sync::Arc;
+        let gen = LinRegGenConfig {
+            workers: 3,
+            dim: 8,
+            points_per_worker: 30,
+            ..Default::default()
+        };
+        let data = Arc::new(LinRegDataset::generate(&gen, &mut Pcg64::seed_from_u64(1)));
+        let mk = |iters: usize| TrainConfig {
+            workers: 3,
+            dim: 8,
+            sparsity: 1.0,
+            sparsifier: SparsifierKind::Dense,
+            lr: 0.01,
+            iters,
+            ..Default::default()
+        };
+        let full = train(&mk(40), vec![0.0; 8], LinRegGrad::all(&data), &mut |_| {}).unwrap();
+        let half = train(&mk(20), vec![0.0; 8], LinRegGrad::all(&data), &mut |_| {}).unwrap();
+        let path = tmpdir().join("resume.rtkc");
+        let mut c = Checkpoint::new();
+        c.add("theta", &half.theta);
+        c.save(&path).unwrap();
+        let restored = Checkpoint::load(&path).unwrap();
+        let resumed = train(
+            &mk(20),
+            restored.get("theta").unwrap().to_vec(),
+            LinRegGrad::all(&data),
+            &mut |_| {},
+        )
+        .unwrap();
+        assert_eq!(full.theta, resumed.theta);
+        std::fs::remove_file(path).ok();
+    }
+}

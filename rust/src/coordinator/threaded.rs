@@ -1,0 +1,191 @@
+//! Threaded executor: one OS thread per worker, channel-based leader ⇄
+//! worker messaging — the deployment topology of a real parameter-server
+//! cluster, producing results bit-identical to the sequential executor
+//! (the leader aggregates in worker order; f32 addition order is fixed).
+//!
+//! Message flow per iteration:
+//! ```text
+//! leader --Step{t, θ}-->   worker n      (broadcast, Arc-shared)
+//! leader <--(loss, ĝ_n)--  worker n      (uplink)
+//! leader --Observe{g^t}--> worker n      (broadcast, Arc-shared)
+//! ```
+
+use super::{IterStats, TrainResult};
+use crate::collective::Aggregator;
+use crate::config::TrainConfig;
+use crate::grad::WorkerGrad;
+use crate::optim;
+use crate::sparsify::{SparseGrad, Sparsifier, SparsifierKind};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+
+/// Leader -> worker messages.
+enum ToWorker {
+    Step { t: usize, theta: Arc<Vec<f32>> },
+    Observe { agg: Arc<Vec<f32>> },
+    Stop,
+}
+
+/// Worker -> leader message: local loss + sparse gradient.
+struct FromWorker {
+    loss: f64,
+    msg: SparseGrad,
+}
+
+struct WorkerHandle {
+    tx: mpsc::Sender<ToWorker>,
+    rx: mpsc::Receiver<FromWorker>,
+    join: thread::JoinHandle<()>,
+}
+
+fn spawn_worker(
+    mut grad: Box<dyn WorkerGrad + Send>,
+    mut sparsifier: Box<dyn Sparsifier>,
+    dim: usize,
+) -> WorkerHandle {
+    let (tx_cmd, rx_cmd) = mpsc::channel::<ToWorker>();
+    let (tx_res, rx_res) = mpsc::channel::<FromWorker>();
+    let join = thread::spawn(move || {
+        let mut gbuf = vec![0.0f32; dim];
+        let mut msg = SparseGrad::default();
+        while let Ok(cmd) = rx_cmd.recv() {
+            match cmd {
+                ToWorker::Step { t, theta } => {
+                    let loss = grad.grad(t, &theta, &mut gbuf);
+                    sparsifier.compress(&gbuf, &mut msg);
+                    // Channel ownership forces a clone of the message; the
+                    // sequential executor avoids this (see benches).
+                    if tx_res.send(FromWorker { loss, msg: msg.clone() }).is_err() {
+                        return;
+                    }
+                }
+                ToWorker::Observe { agg } => sparsifier.observe(&agg),
+                ToWorker::Stop => return,
+            }
+        }
+    });
+    WorkerHandle { tx: tx_cmd, rx: rx_res, join }
+}
+
+/// Threaded executor (see module docs). Not used for the genie policy.
+pub fn train_threaded(
+    cfg: &TrainConfig,
+    theta0: Vec<f32>,
+    workers: Vec<Box<dyn WorkerGrad + Send>>,
+    probe: &mut dyn FnMut(IterStats<'_>),
+) -> anyhow::Result<TrainResult> {
+    anyhow::ensure!(workers.len() == cfg.workers, "worker count mismatch");
+    anyhow::ensure!(
+        cfg.sparsifier != SparsifierKind::GlobalTopK,
+        "global_topk runs on the sequential genie executor"
+    );
+    let dim = theta0.len();
+    for (n, w) in workers.iter().enumerate() {
+        anyhow::ensure!(w.dim() == dim, "worker {n} dim {} != theta dim {dim}", w.dim());
+    }
+    let omega: Vec<f32> = cfg.omega().iter().map(|&w| w as f32).collect();
+    let sparsifiers = super::build_sparsifiers(cfg, dim);
+    let mut handles: Vec<WorkerHandle> = workers
+        .into_iter()
+        .zip(sparsifiers)
+        .map(|(g, s)| spawn_worker(g, s, dim))
+        .collect();
+    let mut optimizer = optim::build(cfg.optimizer, dim);
+    let mut agg = Aggregator::new(dim);
+    let mut theta = theta0;
+    let mut dense_copy = vec![0.0f32; dim];
+    let mut result: anyhow::Result<()> = Ok(());
+    'outer: for t in 0..cfg.iters {
+        let lr = cfg.lr_schedule.at(cfg.lr, t);
+        let shared = Arc::new(theta.clone());
+        for h in &handles {
+            if h.tx.send(ToWorker::Step { t, theta: Arc::clone(&shared) }).is_err() {
+                result = Err(anyhow::anyhow!("worker died"));
+                break 'outer;
+            }
+        }
+        agg.begin();
+        let mut loss_sum = 0.0;
+        // Collect in worker order for deterministic aggregation.
+        for (n, h) in handles.iter().enumerate() {
+            match h.rx.recv() {
+                Ok(res) => {
+                    loss_sum += res.loss;
+                    agg.add(omega[n], &res.msg);
+                }
+                Err(_) => {
+                    result = Err(anyhow::anyhow!("worker {n} dropped its channel"));
+                    break 'outer;
+                }
+            }
+        }
+        let (dense, _) = agg.finish(cfg.workers);
+        dense_copy.copy_from_slice(dense);
+        let shared_agg = Arc::new(dense_copy.clone());
+        for h in &handles {
+            let _ = h.tx.send(ToWorker::Observe { agg: Arc::clone(&shared_agg) });
+        }
+        optimizer.step(&mut theta, &dense_copy, lr);
+        probe(IterStats {
+            t,
+            theta: &theta,
+            mean_loss: loss_sum / cfg.workers as f64,
+            agg: &dense_copy,
+            comm: &agg.comm,
+        });
+    }
+    for h in &handles {
+        let _ = h.tx.send(ToWorker::Stop);
+    }
+    for h in handles.drain(..) {
+        let _ = h.join.join();
+    }
+    result?;
+    Ok(TrainResult { theta, comm: agg.comm, iters: cfg.iters })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+    use crate::coordinator::{run_linreg, RunOpts};
+
+    fn cfg(kind: SparsifierKind) -> TrainConfig {
+        TrainConfig {
+            workers: 4,
+            dim: 12,
+            sparsity: 0.5,
+            sparsifier: kind,
+            lr: 0.01,
+            iters: 60,
+            seed: 11,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn threaded_matches_sequential_bitwise() {
+        for kind in [
+            SparsifierKind::TopK,
+            SparsifierKind::RegTopK { mu: 1.0, y: 1.0 },
+            SparsifierKind::Dense,
+        ] {
+            let c = cfg(kind);
+            let seq = run_linreg(&c, &RunOpts { threaded: false }).unwrap();
+            let thr = run_linreg(&c, &RunOpts { threaded: true }).unwrap();
+            assert_eq!(
+                seq.result.theta, thr.result.theta,
+                "{kind:?}: executors must agree bit-for-bit"
+            );
+            assert_eq!(seq.result.comm.total_bytes(), thr.result.comm.total_bytes());
+        }
+    }
+
+    #[test]
+    fn genie_rejected_on_threaded_path() {
+        let c = cfg(SparsifierKind::GlobalTopK);
+        let r = train_threaded(&c, vec![0.0; 12], Vec::new(), &mut |_| {});
+        assert!(r.is_err());
+    }
+}

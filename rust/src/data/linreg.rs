@@ -1,0 +1,275 @@
+//! Synthetic distributed linear-regression data — the paper's §5.1 model.
+//!
+//! For worker n:
+//! * data points  x ~ N(0, I_J), D_n per worker
+//! * ground truth t_n ~ N(u_n, h² I_J) with u_n ~ N(U, σ²)
+//! * labels       y_n = X_n t_n + e_n, e_n ~ N(0, ε² I)
+//!
+//! σ² (the spread of per-worker model means) is the heterogeneity knob
+//! used throughout Figs. 3–5; σ² = 0, h² arbitrary with shared t_0 and
+//! ε = 0 is the *strictly homogeneous* setting of Fig. 4 (left).
+
+use crate::rng::Pcg64;
+use crate::tensor::Matrix;
+
+/// Generation parameters (paper notation).
+#[derive(Clone, Copy, Debug)]
+pub struct LinRegGenConfig {
+    /// Number of workers N.
+    pub workers: usize,
+    /// Model dimension J.
+    pub dim: usize,
+    /// Points per worker D_n.
+    pub points_per_worker: usize,
+    /// Mean of the worker-mean distribution U.
+    pub u: f64,
+    /// Variance σ² of worker means u_n.
+    pub sigma2: f64,
+    /// Variance h² of t_n around u_n.
+    pub h2: f64,
+    /// Label noise variance ε².
+    pub eps2: f64,
+    /// Strictly homogeneous: all workers share one ground truth t_0 and
+    /// ε is forced to 0 (Fig. 4 left).
+    pub homogeneous: bool,
+}
+
+impl Default for LinRegGenConfig {
+    fn default() -> Self {
+        // Fig. 3 setting: N=20, J=100, D=500, U=0, σ²=5, h²=1, ε²=0.5.
+        LinRegGenConfig {
+            workers: 20,
+            dim: 100,
+            points_per_worker: 500,
+            u: 0.0,
+            sigma2: 5.0,
+            h2: 1.0,
+            eps2: 0.5,
+            homogeneous: false,
+        }
+    }
+}
+
+/// One worker's local dataset.
+#[derive(Clone, Debug)]
+pub struct WorkerData {
+    /// X_n: D_n x J design matrix.
+    pub x: Matrix,
+    /// y_n: labels.
+    pub y: Vec<f32>,
+    /// Ground-truth model t_n (kept for diagnostics).
+    pub truth: Vec<f32>,
+}
+
+/// The full distributed dataset plus the analytical global optimum.
+#[derive(Clone, Debug)]
+pub struct LinRegDataset {
+    pub cfg: LinRegGenConfig,
+    pub workers: Vec<WorkerData>,
+    /// θ* = [Σ XᵀX]⁻¹ Σ Xᵀy (eq. 50).
+    pub optimum: Vec<f32>,
+}
+
+impl LinRegDataset {
+    /// Generate a dataset from the paper's Gaussian linear model.
+    pub fn generate(cfg: &LinRegGenConfig, rng: &mut Pcg64) -> Self {
+        assert!(cfg.workers >= 1 && cfg.dim >= 1 && cfg.points_per_worker >= 1);
+        let shared_truth: Option<Vec<f32>> = if cfg.homogeneous {
+            let u0 = rng.normal_with(cfg.u, cfg.sigma2.sqrt());
+            Some(rng.normal_vec(cfg.dim, u0, cfg.h2.sqrt()))
+        } else {
+            None
+        };
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let mut wrng = rng.split(w as u64 + 1);
+            let truth = match &shared_truth {
+                Some(t) => t.clone(),
+                None => {
+                    let u_n = wrng.normal_with(cfg.u, cfg.sigma2.sqrt());
+                    wrng.normal_vec(cfg.dim, u_n, cfg.h2.sqrt())
+                }
+            };
+            let x = Matrix::from_vec(
+                cfg.points_per_worker,
+                cfg.dim,
+                wrng.normal_vec(cfg.points_per_worker * cfg.dim, 0.0, 1.0),
+            );
+            let mut y = vec![0.0f32; cfg.points_per_worker];
+            x.matvec(&truth, &mut y);
+            if !cfg.homogeneous && cfg.eps2 > 0.0 {
+                let noise_std = cfg.eps2.sqrt();
+                for v in y.iter_mut() {
+                    *v += wrng.normal_with(0.0, noise_std) as f32;
+                }
+            }
+            workers.push(WorkerData { x, y, truth });
+        }
+        let optimum = Self::solve_optimum(&workers, cfg.dim);
+        LinRegDataset { cfg: *cfg, workers, optimum }
+    }
+
+    /// Analytical optimum θ* = [Σ XᵀX]⁻¹ Σ Xᵀy (eq. 50 — the reference
+    /// point for the optimality-gap metric δ^t = ||θ^t − θ*||).
+    fn solve_optimum(workers: &[WorkerData], dim: usize) -> Vec<f32> {
+        let mut gram = Matrix::zeros(dim, dim);
+        let mut rhs = vec![0.0f32; dim];
+        let mut xty = vec![0.0f32; dim];
+        for w in workers {
+            let g = w.x.gram();
+            for (a, b) in gram.data.iter_mut().zip(g.data.iter()) {
+                *a += b;
+            }
+            w.x.matvec_t(&w.y, &mut xty);
+            for (a, b) in rhs.iter_mut().zip(xty.iter()) {
+                *a += b;
+            }
+        }
+        gram.solve(&rhs).expect("Σ XᵀX must be invertible (D·N >> J)")
+    }
+
+    /// Local empirical loss F_n(θ) = ||X_n θ − y_n||² / D_n (eq. 48).
+    pub fn local_loss(&self, n: usize, theta: &[f32]) -> f64 {
+        let w = &self.workers[n];
+        let mut pred = vec![0.0f32; w.y.len()];
+        w.x.matvec(theta, &mut pred);
+        let mut s = 0.0f64;
+        for (p, y) in pred.iter().zip(w.y.iter()) {
+            let d = (*p - *y) as f64;
+            s += d * d;
+        }
+        s / w.y.len() as f64
+    }
+
+    /// Global loss F(θ) = mean of local losses (eq. 49).
+    pub fn global_loss(&self, theta: &[f32]) -> f64 {
+        (0..self.workers.len()).map(|n| self.local_loss(n, theta)).sum::<f64>()
+            / self.workers.len() as f64
+    }
+
+    /// Local full-batch gradient: ∇F_n(θ) = 2/D_n · X_nᵀ(X_nθ − y_n).
+    /// `resid` and `grad` are caller-provided buffers (hot loop).
+    pub fn local_grad(&self, n: usize, theta: &[f32], resid: &mut Vec<f32>, grad: &mut [f32]) {
+        let w = &self.workers[n];
+        resid.resize(w.y.len(), 0.0);
+        w.x.matvec(theta, resid);
+        for (r, y) in resid.iter_mut().zip(w.y.iter()) {
+            *r -= *y;
+        }
+        w.x.matvec_t(resid, grad);
+        let scale = 2.0 / w.y.len() as f32;
+        for v in grad.iter_mut() {
+            *v *= scale;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::dist2;
+
+    fn small_cfg() -> LinRegGenConfig {
+        LinRegGenConfig {
+            workers: 3,
+            dim: 8,
+            points_per_worker: 40,
+            sigma2: 2.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn generation_shapes() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let ds = LinRegDataset::generate(&small_cfg(), &mut rng);
+        assert_eq!(ds.workers.len(), 3);
+        assert_eq!(ds.workers[0].x.rows, 40);
+        assert_eq!(ds.workers[0].x.cols, 8);
+        assert_eq!(ds.optimum.len(), 8);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Pcg64::seed_from_u64(7);
+        let mut r2 = Pcg64::seed_from_u64(7);
+        let a = LinRegDataset::generate(&small_cfg(), &mut r1);
+        let b = LinRegDataset::generate(&small_cfg(), &mut r2);
+        assert_eq!(a.workers[1].y, b.workers[1].y);
+        assert_eq!(a.optimum, b.optimum);
+    }
+
+    #[test]
+    fn optimum_is_stationary_point() {
+        // Aggregate gradient at θ* must vanish (it minimizes the sum of
+        // quadratics).
+        let mut rng = Pcg64::seed_from_u64(2);
+        let ds = LinRegDataset::generate(&small_cfg(), &mut rng);
+        let mut resid = Vec::new();
+        let mut grad = vec![0.0f32; 8];
+        let mut total = vec![0.0f32; 8];
+        for n in 0..3 {
+            ds.local_grad(n, &ds.optimum, &mut resid, &mut grad);
+            for (t, g) in total.iter_mut().zip(grad.iter()) {
+                *t += g / 3.0;
+            }
+        }
+        let norm: f32 = total.iter().map(|v| v.abs()).sum();
+        assert!(norm < 1e-3, "gradient at optimum should vanish, got {norm}");
+    }
+
+    #[test]
+    fn optimum_beats_truths() {
+        // Global loss at θ* is no worse than at any worker's ground truth.
+        let mut rng = Pcg64::seed_from_u64(3);
+        let ds = LinRegDataset::generate(&small_cfg(), &mut rng);
+        let at_opt = ds.global_loss(&ds.optimum);
+        for w in &ds.workers {
+            assert!(at_opt <= ds.global_loss(&w.truth) + 1e-6);
+        }
+    }
+
+    #[test]
+    fn homogeneous_shares_truth_and_optimum_matches() {
+        let cfg = LinRegGenConfig { homogeneous: true, eps2: 0.0, ..small_cfg() };
+        let mut rng = Pcg64::seed_from_u64(4);
+        let ds = LinRegDataset::generate(&cfg, &mut rng);
+        for w in &ds.workers[1..] {
+            assert_eq!(w.truth, ds.workers[0].truth);
+        }
+        // With no noise the optimum equals the shared truth.
+        assert!(dist2(&ds.optimum, &ds.workers[0].truth) < 1e-3);
+    }
+
+    #[test]
+    fn heterogeneity_spreads_truths() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        let cfg = LinRegGenConfig { sigma2: 5.0, ..small_cfg() };
+        let ds = LinRegDataset::generate(&cfg, &mut rng);
+        let d = dist2(&ds.workers[0].truth, &ds.workers[1].truth);
+        assert!(d > 1.0, "heterogeneous truths should differ, d={d}");
+    }
+
+    #[test]
+    fn local_grad_matches_finite_difference() {
+        let mut rng = Pcg64::seed_from_u64(6);
+        let ds = LinRegDataset::generate(&small_cfg(), &mut rng);
+        let theta: Vec<f32> = rng.normal_vec(8, 0.0, 1.0);
+        let mut resid = Vec::new();
+        let mut grad = vec![0.0f32; 8];
+        ds.local_grad(0, &theta, &mut resid, &mut grad);
+        let h = 1e-3f32;
+        for j in 0..8 {
+            let mut tp = theta.clone();
+            tp[j] += h;
+            let mut tm = theta.clone();
+            tm[j] -= h;
+            let fd = (ds.local_loss(0, &tp) - ds.local_loss(0, &tm)) / (2.0 * h as f64);
+            assert!(
+                (fd - grad[j] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                "j={j}: fd={fd} analytic={}",
+                grad[j]
+            );
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Synthetic workload generators.
+//!
+//! The paper's linear-regression data model (§5.1) is reproduced exactly;
+//! image / token workloads substitute the CIFAR-10 / ImageNette gates (see
+//! DESIGN.md §4) with generators whose *heterogeneity across workers* — the
+//! property the sparsifiers react to — is an explicit knob.
+
+pub mod images;
+pub mod linreg;
+pub mod tokens;
+
+pub use images::{ImageDataset, ImageGenConfig};
+pub use linreg::{LinRegDataset, LinRegGenConfig};
+pub use tokens::{TokenCorpus, TokenGenConfig};

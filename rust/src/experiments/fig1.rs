@@ -1,0 +1,135 @@
+//! Figure 1 — the motivational toy example (§1.3).
+//!
+//! Two-worker logistic regression, J = 2, x_1 = [100, 1], x_2 = [-100, 1],
+//! θ⁰ = [0, 1], η = 0.9. TOP-1 stalls for ~100 iterations because the
+//! dominant first entries cancel at the server; REGTOP-1 tracks the
+//! centralized (non-sparsified) curve.
+
+use super::ExpOpts;
+use crate::config::TrainConfig;
+use crate::coordinator::{train, IterStats};
+use crate::grad::{LogisticGrad, WorkerGrad};
+use crate::metrics::{AsciiPlot, Curves};
+use crate::models::ToyLogistic;
+use crate::sparsify::SparsifierKind;
+
+/// Empirical risk F(θ) = (F_1 + F_2)/2 (eq. 3).
+fn risk(workers: &[ToyLogistic], theta: &[f32]) -> f64 {
+    workers.iter().map(|w| w.loss(theta)).sum::<f64>() / workers.len() as f64
+}
+
+/// One sparsifier run; returns (iter, risk) samples.
+pub fn run_policy(kind: SparsifierKind, iters: usize) -> anyhow::Result<Vec<(usize, f64)>> {
+    let models = ToyLogistic::paper_workers();
+    let cfg = TrainConfig {
+        workers: 2,
+        dim: 2,
+        sparsity: 0.5, // k = 1 of J = 2
+        sparsifier: kind,
+        lr: 0.9,
+        iters,
+        seed: 0,
+        log_every: 1,
+        ..Default::default()
+    };
+    let workers: Vec<Box<dyn WorkerGrad>> = models
+        .iter()
+        .map(|m| Box::new(LogisticGrad::new(m.clone())) as Box<dyn WorkerGrad>)
+        .collect();
+    let mut curve = Vec::with_capacity(iters);
+    let eval_models = models.clone();
+    train(&cfg, vec![0.0, 1.0], workers, &mut |s: IterStats<'_>| {
+        curve.push((s.t, risk(&eval_models, s.theta)));
+    })?;
+    Ok(curve)
+}
+
+/// Run Figure 1 and write `fig1_toy_logistic.csv`.
+pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
+    let iters = if opts.fast { 30 } else { 100 };
+    let mut curves = Curves::new();
+    for (name, kind) in [
+        ("topk", SparsifierKind::TopK),
+        ("regtopk", SparsifierKind::RegTopK { mu: 1.0, y: 1.0 }),
+        ("no_sparsification", SparsifierKind::Dense),
+    ] {
+        let curve = run_policy(kind, iters)?;
+        let s = curves.series_mut(name);
+        for (t, v) in curve {
+            s.push(t, v);
+        }
+    }
+    let path = opts.path("fig1_toy_logistic.csv");
+    curves.write_csv(&path)?;
+    let mut plot = AsciiPlot::new("Fig 1: toy logistic — training loss vs iterations");
+    plot.add('o', curves.get("topk").unwrap());
+    plot.add('x', curves.get("regtopk").unwrap());
+    plot.add('-', curves.get("no_sparsification").unwrap());
+    println!("{}", plot.render());
+    let last = |n: &str| curves.get(n).unwrap().last_value().unwrap();
+    println!(
+        "final risk  topk={:.4}  regtopk={:.4}  dense={:.4}  (wrote {})",
+        last("topk"),
+        last("regtopk"),
+        last("no_sparsification"),
+        path.display()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_stalls_regtopk_tracks_dense() {
+        // The paper's headline toy observation, as a hard assertion:
+        // after 100 iterations TOP-1 has made (almost) no progress while
+        // REGTOP-1 is close to the centralized curve.
+        let topk = run_policy(SparsifierKind::TopK, 100).unwrap();
+        let reg = run_policy(SparsifierKind::RegTopK { mu: 1.0, y: 1.0 }, 100).unwrap();
+        let dense = run_policy(SparsifierKind::Dense, 100).unwrap();
+        let initial = topk.first().unwrap().1;
+        // TOP-1 stalls until the accumulated error at entry 2 outgrows the
+        // (cancelling) entry-1 magnitude — ~|x_1|/grad ≈ 100 iterations —
+        // then takes one enormous accumulated step (the learning-rate
+        // scaling the paper warns about). Assert the stall through t=90.
+        let at_90 = topk.iter().find(|&&(t, _)| t == 90).unwrap().1;
+        let (reg_f, dense_f) = (reg.last().unwrap().1, dense.last().unwrap().1);
+        assert!(
+            at_90 > 0.8 * initial,
+            "TOP-1 should stall near the initial risk: {initial} -> {at_90}"
+        );
+        assert!(reg_f < 0.5 * initial, "REGTOP-1 should make progress: {initial} -> {reg_f}");
+        assert!(
+            (reg_f - dense_f).abs() < 0.2 * initial.max(1e-9),
+            "REGTOP-1 ({reg_f}) should track dense ({dense_f})"
+        );
+    }
+
+    #[test]
+    fn topk_first_entries_cancel_at_server() {
+        // Mechanism check: with TOP-1 the aggregated gradient is ~zero in
+        // the first iterations (paper: 0.736·[-100,0] + 0.736·[100,0]).
+        let models = ToyLogistic::paper_workers();
+        let cfg = TrainConfig {
+            workers: 2,
+            dim: 2,
+            sparsity: 0.5,
+            sparsifier: SparsifierKind::TopK,
+            lr: 0.9,
+            iters: 3,
+            ..Default::default()
+        };
+        let workers: Vec<Box<dyn WorkerGrad>> = models
+            .iter()
+            .map(|m| Box::new(LogisticGrad::new(m.clone())) as Box<dyn WorkerGrad>)
+            .collect();
+        let mut max_agg = 0.0f32;
+        train(&cfg, vec![0.0, 1.0], workers, &mut |s| {
+            max_agg = max_agg.max(s.agg.iter().map(|v| v.abs()).fold(0.0, f32::max));
+        })
+        .unwrap();
+        assert!(max_agg < 1e-5, "TOP-1 aggregate should cancel, got {max_agg}");
+    }
+}

@@ -1,0 +1,165 @@
+//! Figure 3 — optimality gap vs iterations on heterogeneous linear
+//! regression for S ∈ {0.4, 0.5, 0.6, 0.9}.
+//!
+//! Setting (§5.1): N = 20, J = 100, D_n = 500, full-batch GD, η = 0.01,
+//! data model U = 0, σ² = 5, h² = 1, ε² = 0.5. The paper's observation:
+//! REGTOP-k starts tracking the non-sparsified run at S ≈ 0.6 while TOP-k
+//! stalls at a fixed distance from θ*.
+
+use super::ExpOpts;
+use crate::config::TrainConfig;
+use crate::coordinator::{run_linreg_on, LinRegReport, RunOpts};
+use crate::data::linreg::LinRegGenConfig;
+use crate::metrics::{AsciiPlot, Curves};
+use crate::sparsify::SparsifierKind;
+
+/// The paper's Fig. 3 data-generation config.
+pub fn paper_gen(workers: usize, dim: usize, points: usize) -> LinRegGenConfig {
+    LinRegGenConfig {
+        workers,
+        dim,
+        points_per_worker: points,
+        u: 0.0,
+        sigma2: 5.0,
+        h2: 1.0,
+        eps2: 0.5,
+        homogeneous: false,
+    }
+}
+
+/// Problem size (reduced in fast mode).
+pub struct Size {
+    pub workers: usize,
+    pub dim: usize,
+    pub points: usize,
+    pub iters: usize,
+}
+
+impl Size {
+    pub fn of(opts: &ExpOpts) -> Size {
+        if opts.fast {
+            Size { workers: 8, dim: 40, points: 100, iters: 400 }
+        } else {
+            Size { workers: 20, dim: 100, points: 500, iters: 2500 }
+        }
+    }
+}
+
+/// One (sparsifier, S) run on the Fig. 3 problem.
+pub fn run_policy(
+    size: &Size,
+    kind: SparsifierKind,
+    sparsity: f64,
+    seed: u64,
+) -> anyhow::Result<LinRegReport> {
+    let cfg = TrainConfig {
+        workers: size.workers,
+        dim: size.dim,
+        sparsity,
+        sparsifier: kind,
+        lr: 0.01,
+        iters: size.iters,
+        seed,
+        log_every: (size.iters / 100).max(1),
+        ..Default::default()
+    };
+    let gen = paper_gen(size.workers, size.dim, size.points);
+    run_linreg_on(&cfg, &gen, &RunOpts::default())
+}
+
+/// The default REGTOP-k hyperparameter for the linreg experiments.
+pub const MU: f64 = 1.0;
+
+/// Run Figure 3: one CSV + plot per sparsity factor.
+pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
+    let size = Size::of(opts);
+    for &s in &[0.4, 0.5, 0.6, 0.9] {
+        let mut curves = Curves::new();
+        for (name, kind) in [
+            ("topk", SparsifierKind::TopK),
+            ("regtopk", SparsifierKind::RegTopK { mu: MU, y: 1.0 }),
+            ("no_sparsification", SparsifierKind::Dense),
+        ] {
+            // Dense ignores S; run it once per panel anyway for the curve.
+            let report = run_policy(&size, kind, if name == "no_sparsification" { 1.0 } else { s }, 0)?;
+            let series = curves.series_mut(name);
+            for &(t, g) in &report.gap_curve {
+                series.push(t, g);
+            }
+        }
+        let path = opts.path(&format!("fig3_gap_s{:02}.csv", (s * 100.0) as u32));
+        curves.write_csv(&path)?;
+        let mut plot = AsciiPlot::new(format!(
+            "Fig 3 (S = {s}): optimality gap ||theta - theta*|| (log10) vs iterations"
+        ))
+        .log_scale();
+        plot.add('o', curves.get("topk").unwrap());
+        plot.add('x', curves.get("regtopk").unwrap());
+        plot.add('-', curves.get("no_sparsification").unwrap());
+        println!("{}", plot.render());
+        let last = |n: &str| curves.get(n).unwrap().last_value().unwrap();
+        println!(
+            "S={s}: final gap  topk={:.4e}  regtopk={:.4e}  dense={:.4e}  ({})",
+            last("topk"),
+            last("regtopk"),
+            last("no_sparsification"),
+            path.display()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Size {
+        Size { workers: 6, dim: 24, points: 60, iters: 1200 }
+    }
+
+    #[test]
+    fn regtopk_converges_where_topk_stalls() {
+        // Fig. 3's S = 0.6 panel, shrunk: REGTOP-k's final gap must be
+        // well below TOP-k's.
+        let size = small();
+        let topk = run_policy(&size, SparsifierKind::TopK, 0.6, 1).unwrap();
+        let reg =
+            run_policy(&size, SparsifierKind::RegTopK { mu: MU, y: 1.0 }, 0.6, 1).unwrap();
+        assert!(
+            reg.final_gap() < 0.5 * topk.final_gap(),
+            "regtopk {:.4e} vs topk {:.4e}",
+            reg.final_gap(),
+            topk.final_gap()
+        );
+    }
+
+    #[test]
+    fn topk_stalls_at_fixed_distance() {
+        // TOP-k's gap plateaus: the last quarter of the run improves by
+        // less than 50%.
+        let size = small();
+        let topk = run_policy(&size, SparsifierKind::TopK, 0.5, 2).unwrap();
+        let n = topk.gap_curve.len();
+        let three_quarter = topk.gap_curve[3 * n / 4].1;
+        let last = topk.final_gap();
+        assert!(
+            last > 0.3 * three_quarter,
+            "TOP-k should plateau: {three_quarter:.4e} -> {last:.4e}"
+        );
+        // And it has NOT converged (gap well above dense-run levels).
+        let dense = run_policy(&size, SparsifierKind::Dense, 1.0, 2).unwrap();
+        assert!(last > 10.0 * dense.final_gap().max(1e-12));
+    }
+
+    #[test]
+    fn high_sparsity_both_converge() {
+        // At S = 0.9 both sparsifiers track the dense run (paper's bottom
+        // right panel shows both close to baseline; TOP-k still a bit
+        // behind).
+        let size = small();
+        let reg =
+            run_policy(&size, SparsifierKind::RegTopK { mu: MU, y: 1.0 }, 0.9, 3).unwrap();
+        let first = reg.gap_curve.first().unwrap().1;
+        assert!(reg.final_gap() < 0.02 * first, "{} -> {}", first, reg.final_gap());
+    }
+}

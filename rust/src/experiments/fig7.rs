@@ -1,0 +1,78 @@
+//! Figure 7 — tuning the hyperparameter μ: validation accuracy vs μ for
+//! the MobileNetV2 stand-in at the tight sparsity level; μ = 0 is TOP-k.
+//!
+//! Paper observation: REGTOP-k is stable over a broad range of μ and
+//! beats the μ = 0 (TOP-k) point throughout.
+
+use super::finetune::{run_cell, SuiteSize, VARIANTS};
+use super::ExpOpts;
+use crate::metrics::{AsciiPlot, Curves};
+use crate::sparsify::SparsifierKind;
+use crate::stats;
+
+/// Accuracy (mean, std) at one μ.
+pub fn accuracy_at_mu(
+    size: &SuiteSize,
+    mu: f64,
+    sparsity: f64,
+    seeds: &[u64],
+) -> anyhow::Result<(f64, f64)> {
+    let variant = &VARIANTS[2]; // mobilenet_sub
+    let kind = if mu == 0.0 {
+        SparsifierKind::TopK
+    } else {
+        SparsifierKind::RegTopK { mu, y: 1.0 }
+    };
+    let results = run_cell(size, variant, kind, sparsity, seeds)?;
+    let accs: Vec<f64> = results.iter().map(|r| r.val_accuracy).collect();
+    Ok((stats::mean(&accs), stats::std_dev(&accs)))
+}
+
+pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
+    let size = SuiteSize::default_size(opts.fast);
+    let seeds: Vec<u64> = (0..if opts.fast { 2 } else { 5 }).collect();
+    let sparsity = 0.01;
+    let grid: Vec<f64> = if opts.fast {
+        vec![0.0, 1.0, 4.0]
+    } else {
+        vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0, 10.0]
+    };
+    let mut curves = Curves::new();
+    println!("mu     accuracy(mean±std)   [mu=0 is TOP-k]");
+    for &mu in &grid {
+        let (m, sd) = accuracy_at_mu(&size, mu, sparsity, &seeds)?;
+        curves.series_mut("accuracy").push((mu * 10.0) as usize, m);
+        println!("{mu:<5.1}  {:.2}% ± {:.2}%", m * 100.0, sd * 100.0);
+    }
+    let path = opts.path("fig7_mu_sweep.csv");
+    curves.write_csv(&path)?;
+    let mut plot =
+        AsciiPlot::new("Fig 7: validation accuracy vs mu (x-axis: mu*10; mu=0 is TOP-k)");
+    plot.add('*', curves.get("accuracy").unwrap());
+    println!("{}", plot.render());
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_point_runs() {
+        let size = SuiteSize::default_size(true);
+        let (m, sd) = accuracy_at_mu(&size, 2.0, 0.05, &[0, 1]).unwrap();
+        assert!(m.is_finite() && sd.is_finite());
+        assert!((0.0..=1.0).contains(&m));
+    }
+
+    #[test]
+    fn mu_zero_is_exactly_topk() {
+        // The μ = 0 point must be byte-identical to a TOP-k run (same
+        // seeds, same data) — it is the same policy by construction.
+        let size = SuiteSize::default_size(true);
+        let a = accuracy_at_mu(&size, 0.0, 0.05, &[7]).unwrap();
+        let results = run_cell(&size, &VARIANTS[2], SparsifierKind::TopK, 0.05, &[7]).unwrap();
+        assert_eq!(a.0, results[0].val_accuracy);
+    }
+}

@@ -1,0 +1,84 @@
+//! Experiment harnesses — one module per table/figure of the paper's
+//! evaluation (DESIGN.md §4 maps each to its workload and parameters).
+//! Every harness writes a CSV under `results/` and prints an ASCII
+//! rendition of the figure; the `regtopk exp <id>` CLI and the
+//! corresponding bench target both route here.
+
+pub mod fig1;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig8;
+pub mod table2;
+
+pub mod ablations;
+pub mod fig6;
+pub mod fig7;
+pub mod finetune;
+pub mod robustness;
+pub mod table1;
+
+use std::path::PathBuf;
+
+/// Common run options for experiment harnesses.
+#[derive(Clone, Debug)]
+pub struct ExpOpts {
+    /// Output directory for CSVs / reports.
+    pub out_dir: PathBuf,
+    /// Reduced-size smoke mode (CI).
+    pub fast: bool,
+    /// Artifacts directory for HLO-backed experiments.
+    pub artifacts_dir: String,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts {
+            out_dir: PathBuf::from("results"),
+            fast: false,
+            artifacts_dir: crate::runtime::hlo_grad::default_artifacts_dir(),
+        }
+    }
+}
+
+impl ExpOpts {
+    pub fn fast() -> Self {
+        ExpOpts { fast: true, ..Default::default() }
+    }
+
+    /// Path helper.
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.out_dir.join(file)
+    }
+}
+
+/// Registry of experiment ids -> runner, used by the CLI.
+pub fn run(id: &str, opts: &ExpOpts) -> anyhow::Result<()> {
+    match id {
+        "fig1" => fig1::run(opts),
+        "fig3" => fig3::run(opts),
+        "fig4" => fig4::run(opts),
+        "fig5" => fig5::run(opts),
+        "fig6" => fig6::run(opts),
+        "fig7" => fig7::run(opts),
+        "fig8" => fig8::run(opts),
+        "table1" => table1::run(opts),
+        "table2" => table2::run(opts),
+        "ablations" => ablations::run(opts),
+        "robustness" => robustness::run(opts),
+        "all" => {
+            for id in ALL {
+                println!("\n=== experiment {id} ===");
+                run(id, opts)?;
+            }
+            Ok(())
+        }
+        _ => anyhow::bail!("unknown experiment `{id}` (known: {}, all)", ALL.join(", ")),
+    }
+}
+
+/// All experiment ids in paper order, plus the extension studies.
+pub const ALL: &[&str] = &[
+    "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "table1", "table2", "ablations",
+    "robustness",
+];

@@ -1,0 +1,150 @@
+//! Robustness under lossy broadcast — an extension beyond the paper.
+//!
+//! REGTOP-k's posterior statistics depend on the server broadcast g^{t-1}.
+//! The implementation falls back to the TOP-k metric for any round whose
+//! broadcast was lost (`RegTopK::observe` not called — no stale reuse), so
+//! the algorithm should degrade *gracefully* toward TOP-k as the drop
+//! probability rises rather than destabilize. This harness sweeps the
+//! broadcast-loss probability and measures the final optimality gap.
+//!
+//! `regtopk exp robustness` — CSV: results/robustness.csv.
+
+use super::fig3::{paper_gen, Size};
+use super::ExpOpts;
+use crate::collective::Aggregator;
+use crate::config::TrainConfig;
+use crate::data::linreg::LinRegDataset;
+use crate::grad::LinRegGrad;
+use crate::optim;
+use crate::rng::Pcg64;
+use crate::sparsify::{SparseGrad, SparsifierKind};
+use std::sync::Arc;
+
+/// Run one policy with broadcasts independently dropped with probability
+/// `p_loss` per (worker, round). Returns the final optimality gap.
+pub fn run_lossy(
+    size: &Size,
+    kind: SparsifierKind,
+    sparsity: f64,
+    p_loss: f64,
+    seed: u64,
+) -> anyhow::Result<f64> {
+    let cfg = TrainConfig {
+        workers: size.workers,
+        dim: size.dim,
+        sparsity,
+        sparsifier: kind,
+        lr: 0.01,
+        iters: size.iters,
+        seed,
+        ..Default::default()
+    };
+    let gen = paper_gen(size.workers, size.dim, size.points);
+    let data = Arc::new(LinRegDataset::generate(&gen, &mut Pcg64::new(seed, 0xDA7A)));
+    let mut workers = LinRegGrad::all(&data);
+    let dim = size.dim;
+    let mut sparsifiers = crate::coordinator::build_sparsifiers(&cfg, dim);
+    let omega: Vec<f32> = cfg.omega().iter().map(|&w| w as f32).collect();
+    let mut optimizer = optim::build(cfg.optimizer, dim);
+    let mut agg = Aggregator::new(dim);
+    let mut theta = vec![0.0f32; dim];
+    let mut gbuf = vec![0.0f32; dim];
+    let mut msg = SparseGrad::default();
+    let mut dense_copy = vec![0.0f32; dim];
+    let mut net_rng = Pcg64::new(seed ^ 0x10_55, 3);
+    for t in 0..cfg.iters {
+        agg.begin();
+        for n in 0..cfg.workers {
+            workers[n].grad(t, &theta, &mut gbuf);
+            sparsifiers[n].compress(&gbuf, &mut msg);
+            agg.add(omega[n], &msg);
+        }
+        let (dense, _) = agg.finish(cfg.workers);
+        dense_copy.copy_from_slice(dense);
+        for s in sparsifiers.iter_mut() {
+            // Lossy downlink: the worker misses this round's broadcast.
+            if net_rng.f64() >= p_loss {
+                s.observe(&dense_copy);
+            }
+        }
+        optimizer.step(&mut theta, &dense_copy, cfg.lr_schedule.at(cfg.lr, t));
+    }
+    Ok(crate::tensor::dist2(&theta, &data.optimum) as f64)
+}
+
+pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
+    let size = if opts.fast {
+        Size { workers: 8, dim: 40, points: 100, iters: 600 }
+    } else {
+        Size { workers: 20, dim: 100, points: 500, iters: 2000 }
+    };
+    let s = 0.6;
+    let losses = [0.0, 0.1, 0.3, 0.5, 0.9, 1.0];
+    let mut csv = String::from("p_loss,topk,regtopk\n");
+    println!("broadcast-loss sweep at S = {s} (final optimality gap)");
+    println!("{:<8} {:>12} {:>12}", "p_loss", "topk", "regtopk");
+    for &p in &losses {
+        let topk = run_lossy(&size, SparsifierKind::TopK, s, p, 0)?;
+        let reg = run_lossy(&size, SparsifierKind::RegTopK { mu: 1.0, y: 1.0 }, s, p, 0)?;
+        println!("{p:<8} {topk:>12.4e} {reg:>12.4e}");
+        csv.push_str(&format!("{p},{topk},{reg}\n"));
+    }
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let path = opts.path("robustness.csv");
+    std::fs::write(&path, csv)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Size {
+        Size { workers: 6, dim: 24, points: 60, iters: 800 }
+    }
+
+    #[test]
+    fn full_loss_degrades_to_topk() {
+        // p_loss = 1: REGTOP-k never sees a broadcast and must behave
+        // exactly like TOP-k (bit-identical trajectories).
+        let size = small();
+        let reg =
+            run_lossy(&size, SparsifierKind::RegTopK { mu: 1.0, y: 1.0 }, 0.6, 1.0, 1).unwrap();
+        let topk = run_lossy(&size, SparsifierKind::TopK, 0.6, 1.0, 1).unwrap();
+        assert!((reg - topk).abs() <= 1e-12 * (1.0 + topk.abs()), "{reg} vs {topk}");
+    }
+
+    #[test]
+    fn lossless_matches_standard_coordinator() {
+        let size = small();
+        let here =
+            run_lossy(&size, SparsifierKind::RegTopK { mu: 1.0, y: 1.0 }, 0.6, 0.0, 0).unwrap();
+        let std =
+            crate::experiments::ablations::final_gap(&size, SparsifierKind::RegTopK { mu: 1.0, y: 1.0 }, 0.6)
+                .unwrap();
+        // Same protocol, different harness wiring (iters differ only via
+        // Size) — allow tiny float discrepancy.
+        assert!((here - std).abs() <= 1e-6 * (1.0 + std.abs()), "{here} vs {std}");
+    }
+
+    #[test]
+    fn graceful_degradation_with_loss() {
+        // Moderate loss should land between lossless REGTOP-k and TOP-k
+        // (with margin for noise).
+        let size = small();
+        let lossless =
+            run_lossy(&size, SparsifierKind::RegTopK { mu: 1.0, y: 1.0 }, 0.7, 0.0, 2).unwrap();
+        let lossy =
+            run_lossy(&size, SparsifierKind::RegTopK { mu: 1.0, y: 1.0 }, 0.7, 0.5, 2).unwrap();
+        let topk = run_lossy(&size, SparsifierKind::TopK, 0.7, 0.0, 2).unwrap();
+        assert!(
+            lossy <= topk * 2.0,
+            "lossy regtopk ({lossy:.3e}) should not be far worse than topk ({topk:.3e})"
+        );
+        assert!(
+            lossy >= lossless * 0.5,
+            "losing half the broadcasts should not improve things: {lossy:.3e} vs {lossless:.3e}"
+        );
+    }
+}

@@ -1,0 +1,153 @@
+//! Table 1 — REGTOP-k vs TOP-k fine-tuning five model variants at two
+//! sparsity levels, 10 common random seeds, with paired t-tests and
+//! Wilcoxon signed-rank tests (paper threshold: p < 0.01).
+//!
+//! Workload substitution per DESIGN.md §4 (synthetic pretrain→finetune in
+//! place of ImageNette + torchvision checkpoints); the comparison
+//! structure — same seeds, same data, same schedules for both policies —
+//! matches the paper exactly.
+
+use super::finetune::{run_cell, SuiteSize, Variant, VARIANTS};
+use super::ExpOpts;
+use crate::metrics::render_table;
+use crate::sparsify::SparsifierKind;
+use crate::stats::{self, paired_t_test, wilcoxon_signed_rank};
+
+/// REGTOP-k μ used in the suite (tuned via the Fig. 7 sweep).
+pub const MU: f64 = 3.0;
+
+/// One table cell: results for both policies at one (variant, S).
+pub struct Cell {
+    pub variant: &'static str,
+    pub sparsity: f64,
+    pub top_acc: Vec<f64>,
+    pub reg_acc: Vec<f64>,
+    pub top_loss: Vec<f64>,
+    pub reg_loss: Vec<f64>,
+}
+
+impl Cell {
+    pub fn t_test_acc(&self) -> Option<stats::TestResult> {
+        paired_t_test(&self.reg_acc, &self.top_acc)
+    }
+
+    pub fn wilcoxon_acc(&self) -> Option<stats::TestResult> {
+        wilcoxon_signed_rank(&self.reg_acc, &self.top_acc)
+    }
+}
+
+/// Run the full grid.
+pub fn run_suite(
+    size: &SuiteSize,
+    variants: &[Variant],
+    sparsities: &[f64],
+    seeds: &[u64],
+) -> anyhow::Result<Vec<Cell>> {
+    let mut cells = Vec::new();
+    for v in variants {
+        for &s in sparsities {
+            let top = run_cell(size, v, SparsifierKind::TopK, s, seeds)?;
+            let reg = run_cell(size, v, SparsifierKind::RegTopK { mu: MU, y: 1.0 }, s, seeds)?;
+            cells.push(Cell {
+                variant: v.name,
+                sparsity: s,
+                top_acc: top.iter().map(|r| r.val_accuracy).collect(),
+                reg_acc: reg.iter().map(|r| r.val_accuracy).collect(),
+                top_loss: top.iter().map(|r| r.val_loss).collect(),
+                reg_loss: reg.iter().map(|r| r.val_loss).collect(),
+            });
+        }
+    }
+    Ok(cells)
+}
+
+fn pm(xs: &[f64], scale: f64) -> String {
+    format!("{:.2} ± {:.2}", stats::mean(xs) * scale, stats::std_dev(xs) * scale)
+}
+
+pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
+    let size = SuiteSize::default_size(opts.fast);
+    let variants: &[Variant] = if opts.fast { &VARIANTS[..2] } else { &VARIANTS };
+    // Paper sparsities are 1% / 0.1% of multi-million-parameter models
+    // (k in the thousands). Our variants have ~2–20k parameters, so the
+    // matched operating points keep k small but nonzero: 2% and 0.5%.
+    let sparsities = [0.02, 0.005];
+    let seeds: Vec<u64> = (0..if opts.fast { 3 } else { 10 }).collect();
+    let cells = run_suite(&size, variants, &sparsities, &seeds)?;
+    let mut rows = Vec::new();
+    for c in &cells {
+        let t = c.t_test_acc();
+        let w = c.wilcoxon_acc();
+        rows.push(vec![
+            c.variant.to_string(),
+            format!("{}%", c.sparsity * 100.0),
+            pm(&c.top_acc, 100.0),
+            pm(&c.reg_acc, 100.0),
+            pm(&c.top_loss, 1.0),
+            pm(&c.reg_loss, 1.0),
+            t.map(|r| format!("{:.2e}", r.p_value)).unwrap_or_else(|| "-".into()),
+            w.map(|r| format!("{:.2e}", r.p_value)).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    let table = render_table(
+        &[
+            "model",
+            "S",
+            "TOP-k acc%",
+            "REGTOP-k acc%",
+            "TOP-k loss",
+            "REGTOP-k loss",
+            "t-test p",
+            "wilcoxon p",
+        ],
+        &rows,
+    );
+    println!("{table}");
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let path = opts.path("table1_finetune.md");
+    std::fs::write(&path, &table)?;
+    println!("wrote {}", path.display());
+    let wins = cells
+        .iter()
+        .filter(|c| stats::mean(&c.reg_acc) > stats::mean(&c.top_acc))
+        .count();
+    println!("REGTOP-k mean-accuracy wins: {wins}/{} cells", cells.len());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_produces_significance_machinery() {
+        // Smoke the full pipeline at tiny scale and validate the
+        // statistics plumbing end-to-end.
+        let size = SuiteSize::default_size(true);
+        let seeds = [0u64, 1, 2, 3];
+        let cells = run_suite(&size, &VARIANTS[..1], &[0.05], &seeds).unwrap();
+        assert_eq!(cells.len(), 1);
+        let c = &cells[0];
+        assert_eq!(c.top_acc.len(), 4);
+        // Tests may be None if runs are identical — just exercise them.
+        let _ = c.t_test_acc();
+        let _ = c.wilcoxon_acc();
+    }
+
+    #[test]
+    fn regtopk_wins_at_high_compression() {
+        // The paper's Table 1 direction at the tighter operating point:
+        // REGTOP-k's mean accuracy >= TOP-k's mean accuracy over paired
+        // seeds (allowing a small tolerance at this reduced scale).
+        let size = SuiteSize::default_size(true);
+        let seeds: Vec<u64> = (0..4).collect();
+        let cells = run_suite(&size, &VARIANTS[1..2], &[0.02], &seeds).unwrap();
+        let c = &cells[0];
+        let m_reg = stats::mean(&c.reg_acc);
+        let m_top = stats::mean(&c.top_acc);
+        assert!(
+            m_reg >= m_top - 0.02,
+            "regtopk {m_reg:.3} should not lose to topk {m_top:.3}"
+        );
+    }
+}

@@ -1,0 +1,205 @@
+//! Gradient sources — the abstraction that makes the coordinator agnostic
+//! to *where* local gradients come from.
+//!
+//! Two families implement [`WorkerGrad`]:
+//! * native rust models ([`LinRegGrad`], [`LogisticGrad`], [`MlpGrad`]) —
+//!   exact paper workloads and fast sweep backends;
+//! * [`crate::runtime::HloGrad`] — executes the AOT-compiled JAX/Pallas
+//!   artifacts through PJRT (the production path).
+
+use crate::data::linreg::LinRegDataset;
+use crate::data::ImageDataset;
+use crate::models::{Mlp, MlpConfig, ToyLogistic};
+use std::sync::Arc;
+
+/// One worker's local gradient oracle. Owns all worker-local state (data
+/// shard, scratch buffers, PJRT executables ...). Native implementations
+/// are `Send` (usable on the threaded executor); the HLO implementation is
+/// not (the PJRT client is `Rc`-internally) and runs on the sequential
+/// executor.
+pub trait WorkerGrad {
+    /// Model dimension J.
+    fn dim(&self) -> usize;
+
+    /// Compute the local gradient at `theta` for iteration `t` into `out`
+    /// (length J). Returns the local loss (for metrics).
+    fn grad(&mut self, t: usize, theta: &[f32], out: &mut [f32]) -> f64;
+}
+
+/// Full-batch linear-regression gradient (paper §5.1; deterministic GD).
+pub struct LinRegGrad {
+    data: Arc<LinRegDataset>,
+    worker: usize,
+    resid: Vec<f32>,
+}
+
+impl LinRegGrad {
+    pub fn new(data: Arc<LinRegDataset>, worker: usize) -> Self {
+        LinRegGrad { data, worker, resid: Vec::new() }
+    }
+
+    /// Build the full worker set for a dataset.
+    pub fn all(data: &Arc<LinRegDataset>) -> Vec<Box<dyn WorkerGrad + Send>> {
+        (0..data.workers.len())
+            .map(|n| {
+                Box::new(LinRegGrad::new(Arc::clone(data), n)) as Box<dyn WorkerGrad + Send>
+            })
+            .collect()
+    }
+}
+
+impl WorkerGrad for LinRegGrad {
+    fn dim(&self) -> usize {
+        self.data.cfg.dim
+    }
+
+    fn grad(&mut self, _t: usize, theta: &[f32], out: &mut [f32]) -> f64 {
+        self.data.local_grad(self.worker, theta, &mut self.resid, out);
+        self.data.local_loss(self.worker, theta)
+    }
+}
+
+/// Toy logistic gradient (§1.3), optionally with the extra linear term
+/// G(θ_2) = slope·θ_2 from the second scenario.
+pub struct LogisticGrad {
+    model: ToyLogistic,
+    extra_slope: f32,
+}
+
+impl LogisticGrad {
+    pub fn new(model: ToyLogistic) -> Self {
+        LogisticGrad { model, extra_slope: 0.0 }
+    }
+
+    pub fn with_extra_slope(model: ToyLogistic, slope: f32) -> Self {
+        LogisticGrad { model, extra_slope: slope }
+    }
+}
+
+impl WorkerGrad for LogisticGrad {
+    fn dim(&self) -> usize {
+        self.model.dim()
+    }
+
+    fn grad(&mut self, _t: usize, theta: &[f32], out: &mut [f32]) -> f64 {
+        self.model.grad(theta, out);
+        let mut loss = self.model.loss(theta);
+        if self.extra_slope != 0.0 {
+            let last = out.len() - 1;
+            out[last] += self.extra_slope;
+            loss += (self.extra_slope * theta[last]) as f64;
+        }
+        loss
+    }
+}
+
+/// Mini-batch MLP gradient over a worker's image shard.
+pub struct MlpGrad {
+    data: Arc<ImageDataset>,
+    mlp: Mlp,
+    worker: usize,
+    batch: usize,
+    seed: u64,
+}
+
+impl MlpGrad {
+    pub fn new(data: Arc<ImageDataset>, cfg: MlpConfig, worker: usize, batch: usize, seed: u64) -> Self {
+        assert_eq!(cfg.input, data.cfg.pixels(), "MLP input must match image size");
+        MlpGrad { data, mlp: Mlp::new(cfg), worker, batch, seed }
+    }
+
+    pub fn all(
+        data: &Arc<ImageDataset>,
+        cfg: MlpConfig,
+        batch: usize,
+        seed: u64,
+    ) -> Vec<Box<dyn WorkerGrad + Send>> {
+        (0..data.shards.len())
+            .map(|n| {
+                Box::new(MlpGrad::new(Arc::clone(data), cfg, n, batch, seed))
+                    as Box<dyn WorkerGrad + Send>
+            })
+            .collect()
+    }
+
+    /// Validation metrics with the current scratch model.
+    pub fn evaluate(&mut self, theta: &[f32]) -> (f64, f64) {
+        let set: Vec<(&[f32], usize)> =
+            self.data.validation.iter().map(|s| (s.image.as_slice(), s.label)).collect();
+        self.mlp.evaluate(theta, &set)
+    }
+}
+
+impl WorkerGrad for MlpGrad {
+    fn dim(&self) -> usize {
+        self.mlp.cfg.dim()
+    }
+
+    fn grad(&mut self, t: usize, theta: &[f32], out: &mut [f32]) -> f64 {
+        let idx = self.data.batch_indices(self.worker, t, self.batch, self.seed);
+        let shard = &self.data.shards[self.worker];
+        let batch: Vec<(&[f32], usize)> =
+            idx.iter().map(|&i| (shard[i].image.as_slice(), shard[i].label)).collect();
+        let (loss, _) = self.mlp.batch_grad(theta, &batch, out);
+        loss
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::linreg::LinRegGenConfig;
+    use crate::data::ImageGenConfig;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn linreg_grad_runs() {
+        let cfg = LinRegGenConfig {
+            workers: 2,
+            dim: 4,
+            points_per_worker: 20,
+            ..Default::default()
+        };
+        let data = Arc::new(LinRegDataset::generate(&cfg, &mut Pcg64::seed_from_u64(1)));
+        let mut workers = LinRegGrad::all(&data);
+        assert_eq!(workers.len(), 2);
+        let mut g = vec![0.0; 4];
+        let loss = workers[0].grad(0, &vec![0.0; 4], &mut g);
+        assert!(loss > 0.0);
+        assert!(g.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn logistic_extra_slope_adds_to_last_entry() {
+        let base = ToyLogistic { x: vec![1.0, 1.0] };
+        let mut plain = LogisticGrad::new(base.clone());
+        let mut extra = LogisticGrad::with_extra_slope(base, 1.0);
+        let theta = [0.0, 1.0];
+        let mut g0 = vec![0.0; 2];
+        let mut g1 = vec![0.0; 2];
+        plain.grad(0, &theta, &mut g0);
+        extra.grad(0, &theta, &mut g1);
+        assert!((g1[1] - g0[1] - 1.0).abs() < 1e-6);
+        assert_eq!(g1[0], g0[0]);
+    }
+
+    #[test]
+    fn mlp_grad_is_deterministic_per_iteration() {
+        let icfg = ImageGenConfig { per_worker: 32, workers: 2, ..Default::default() };
+        let data = Arc::new(ImageDataset::generate(&icfg, &mut Pcg64::seed_from_u64(2)));
+        let mcfg = MlpConfig { input: icfg.pixels(), hidden: 8, classes: icfg.classes };
+        let mut w = MlpGrad::new(Arc::clone(&data), mcfg, 0, 8, 7);
+        let theta = mcfg.init(&mut Pcg64::seed_from_u64(3));
+        let mut g1 = vec![0.0; mcfg.dim()];
+        let mut g2 = vec![0.0; mcfg.dim()];
+        let l1 = w.grad(5, &theta, &mut g1);
+        let l2 = w.grad(5, &theta, &mut g2);
+        assert_eq!(l1, l2);
+        assert_eq!(g1, g2);
+        // Different iteration -> different batch -> (almost surely)
+        // different gradient.
+        let mut g3 = vec![0.0; mcfg.dim()];
+        w.grad(6, &theta, &mut g3);
+        assert_ne!(g1, g3);
+    }
+}

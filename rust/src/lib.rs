@@ -1,0 +1,49 @@
+//! # regtopk — Regularized Top-k gradient sparsification
+//!
+//! Production-style reproduction of *"Regularized Top-k: A Bayesian
+//! Framework for Gradient Sparsification"* (Bereyhi, Liang, Boudreau,
+//! Afana — IEEE TSP 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — distributed-training coordinator: workers,
+//!   parameter server, sparsifiers ([`sparsify`]), optimizers ([`optim`]),
+//!   simulated network with communication accounting ([`collective`]),
+//!   experiment harnesses ([`experiments`]).
+//! * **L2/L1 (python/, build-time only)** — JAX models and Pallas kernels,
+//!   AOT-lowered to HLO text artifacts executed by [`runtime`] via PJRT.
+//!
+//! Quickstart:
+//!
+//! ```no_run
+//! use regtopk::config::TrainConfig;
+//! use regtopk::coordinator::run_linreg;
+//! use regtopk::sparsify::SparsifierKind;
+//!
+//! let cfg = TrainConfig {
+//!     workers: 20,
+//!     dim: 100,
+//!     sparsity: 0.6,
+//!     sparsifier: SparsifierKind::RegTopK { mu: 1.0, y: 1.0 },
+//!     iters: 2500,
+//!     ..Default::default()
+//! };
+//! let report = run_linreg(&cfg, &Default::default()).unwrap();
+//! println!("final optimality gap: {}", report.final_gap());
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod collective;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod grad;
+pub mod metrics;
+pub mod models;
+pub mod optim;
+pub mod rng;
+pub mod runtime;
+pub mod sparsify;
+pub mod stats;
+pub mod tensor;
+pub mod testing;

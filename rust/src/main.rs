@@ -1,0 +1,121 @@
+//! `regtopk` launcher.
+//!
+//! ```text
+//! regtopk exp <fig1|fig3|fig4|fig5|fig6|fig7|fig8|table1|table2|all>
+//!         [--out results] [--fast] [--artifacts DIR]
+//! regtopk train [--config cfg.toml] [--set key=value ...]   # linreg run
+//! regtopk info [--artifacts DIR]                            # artifact inventory
+//! ```
+
+use regtopk::cli::Args;
+use regtopk::config::{parser::parse_value, ConfigDoc, TrainConfig};
+use regtopk::coordinator::{run_linreg, RunOpts};
+use regtopk::experiments::{self, ExpOpts};
+use regtopk::runtime::Manifest;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!("{e}"))?;
+    match args.command.as_deref() {
+        Some("exp") => cmd_exp(&args),
+        Some("train") => cmd_train(&args),
+        Some("info") => cmd_info(&args),
+        Some(other) => anyhow::bail!("unknown command `{other}`\n{USAGE}"),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "usage:
+  regtopk exp <id|all> [--out DIR] [--fast] [--artifacts DIR]
+      ids: fig1 fig3 fig4 fig5 fig6 fig7 fig8 table1 table2 ablations robustness
+  regtopk train [--config FILE] [--set key=value ...] [--threaded]
+  regtopk info [--artifacts DIR]";
+
+fn cmd_exp(args: &Args) -> anyhow::Result<()> {
+    let id = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("exp requires an experiment id\n{USAGE}"))?;
+    let mut opts = ExpOpts::default();
+    if let Some(out) = args.opt("out") {
+        opts.out_dir = out.into();
+    }
+    if let Some(dir) = args.opt("artifacts") {
+        opts.artifacts_dir = dir.to_string();
+    }
+    opts.fast = args.flag("fast");
+    std::fs::create_dir_all(&opts.out_dir)?;
+    experiments::run(id, &opts)
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = TrainConfig::default();
+    if let Some(path) = args.opt("config") {
+        let doc = ConfigDoc::load(path).map_err(|e| anyhow::anyhow!("{e}"))?;
+        cfg.apply_doc(&doc).map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    for kv in args.opt_all("set") {
+        let (key, raw) = kv
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--set expects key=value, got `{kv}`"))?;
+        let value = parse_value(raw).map_err(|e| anyhow::anyhow!("{e}"))?;
+        cfg.apply_kv(key, &value).map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    cfg.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "training: {} workers={} J={} S={} lr={} iters={}",
+        cfg.sparsifier.name(),
+        cfg.workers,
+        cfg.dim,
+        cfg.sparsity,
+        cfg.lr,
+        cfg.iters
+    );
+    let opts = RunOpts { threaded: args.flag("threaded") };
+    let report = run_linreg(&cfg, &opts)?;
+    for &(t, gap) in report
+        .gap_curve
+        .iter()
+        .step_by((report.gap_curve.len() / 20).max(1))
+    {
+        println!("iter {t:>6}  gap {gap:.6e}");
+    }
+    println!(
+        "final gap {:.6e}   uplink {} B   downlink {} B",
+        report.final_gap(),
+        report.result.comm.uplink_bytes(),
+        report.result.comm.downlink_bytes()
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let dir = args
+        .opt("artifacts")
+        .map(str::to_string)
+        .unwrap_or_else(regtopk::runtime::hlo_grad::default_artifacts_dir);
+    if !Manifest::available(&dir) {
+        println!("no artifacts at `{dir}` — run `make artifacts`");
+        return Ok(());
+    }
+    let manifest = Manifest::load(&dir)?;
+    println!("artifacts at `{dir}`:");
+    for e in &manifest.entries {
+        let ins: Vec<String> =
+            e.inputs.iter().map(|t| format!("{}{:?}", t.name, t.shape)).collect();
+        let outs: Vec<String> =
+            e.outputs.iter().map(|t| format!("{}{:?}", t.name, t.shape)).collect();
+        println!("  {:<20} ({}) -> ({})", e.name, ins.join(", "), outs.join(", "));
+    }
+    Ok(())
+}

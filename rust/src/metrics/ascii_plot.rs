@@ -1,0 +1,161 @@
+//! Terminal line plots. Each figure regenerator prints one of these next to
+//! its CSV so the "shape" of the paper's figure (who wins, where the curves
+//! separate) is visible directly in the run log.
+
+use super::Series;
+
+/// A fixed-size character-grid plot of one or more series.
+pub struct AsciiPlot {
+    pub width: usize,
+    pub height: usize,
+    pub title: String,
+    pub log_y: bool,
+    series: Vec<(char, Series)>,
+}
+
+impl AsciiPlot {
+    pub fn new(title: impl Into<String>) -> Self {
+        AsciiPlot { width: 72, height: 18, title: title.into(), log_y: false, series: Vec::new() }
+    }
+
+    /// Plot y on a log10 scale (optimality-gap figures).
+    pub fn log_scale(mut self) -> Self {
+        self.log_y = true;
+        self
+    }
+
+    pub fn add(&mut self, marker: char, series: &Series) -> &mut Self {
+        self.series.push((marker, series.clone()));
+        self
+    }
+
+    fn transform(&self, v: f64) -> Option<f64> {
+        if self.log_y {
+            if v > 0.0 {
+                Some(v.log10())
+            } else {
+                None // zero/negative values are not representable on log axis
+            }
+        } else {
+            Some(v)
+        }
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let pts: Vec<(f64, f64, char)> = self
+            .series
+            .iter()
+            .flat_map(|(m, s)| {
+                s.points
+                    .iter()
+                    .filter_map(|&(x, y)| self.transform(y).map(|ty| (x as f64, ty, *m)))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        if pts.is_empty() {
+            return format!("{} (no data)\n", self.title);
+        }
+        let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &(x, y, _) in &pts {
+            x0 = x0.min(x);
+            x1 = x1.max(x);
+            y0 = y0.min(y);
+            y1 = y1.max(y);
+        }
+        if (x1 - x0).abs() < 1e-30 {
+            x1 = x0 + 1.0;
+        }
+        if (y1 - y0).abs() < 1e-30 {
+            y1 = y0 + 1.0;
+        }
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for &(x, y, m) in &pts {
+            let cx = ((x - x0) / (x1 - x0) * (self.width - 1) as f64).round() as usize;
+            let cy = ((y - y0) / (y1 - y0) * (self.height - 1) as f64).round() as usize;
+            let row = self.height - 1 - cy;
+            grid[row][cx] = m;
+        }
+        let ylabel = |v: f64| {
+            if self.log_y {
+                format!("1e{v:>6.2}")
+            } else {
+                format!("{v:>8.3}")
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&format!("  {}\n", self.title));
+        for (r, row) in grid.iter().enumerate() {
+            let yv = y1 - (y1 - y0) * r as f64 / (self.height - 1) as f64;
+            let label = if r == 0 || r == self.height - 1 || r == self.height / 2 {
+                ylabel(yv)
+            } else {
+                " ".repeat(8)
+            };
+            out.push_str(&format!("{label} |{}\n", row.iter().collect::<String>()));
+        }
+        out.push_str(&format!(
+            "{} +{}\n{}  {:<w$.0}{:>w2$.0}\n",
+            " ".repeat(8),
+            "-".repeat(self.width),
+            " ".repeat(8),
+            x0,
+            x1,
+            w = self.width / 2,
+            w2 = self.width - self.width / 2,
+        ));
+        let legend: Vec<String> =
+            self.series.iter().map(|(m, s)| format!("{m}={}", s.name)).collect();
+        out.push_str(&format!("  legend: {}\n", legend.join("  ")));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_series(name: &str, pts: &[(usize, f64)]) -> Series {
+        let mut s = Series::new(name);
+        for &(i, v) in pts {
+            s.push(i, v);
+        }
+        s
+    }
+
+    #[test]
+    fn renders_with_legend_and_axes() {
+        let mut p = AsciiPlot::new("test plot");
+        p.add('o', &mk_series("topk", &[(0, 1.0), (50, 0.5), (100, 0.4)]));
+        p.add('x', &mk_series("regtopk", &[(0, 1.0), (50, 0.1), (100, 0.01)]));
+        let r = p.render();
+        assert!(r.contains("test plot"));
+        assert!(r.contains("o=topk"));
+        assert!(r.contains("x=regtopk"));
+        assert!(r.contains('o'));
+        assert!(r.contains('x'));
+    }
+
+    #[test]
+    fn log_scale_drops_nonpositive() {
+        let mut p = AsciiPlot::new("log").log_scale();
+        p.add('*', &mk_series("gap", &[(0, 1.0), (1, 0.0), (2, 0.01)]));
+        let r = p.render();
+        assert!(r.contains("1e")); // log labels
+    }
+
+    #[test]
+    fn empty_plot_does_not_panic() {
+        let p = AsciiPlot::new("empty");
+        assert!(p.render().contains("no data"));
+    }
+
+    #[test]
+    fn constant_series_does_not_divide_by_zero() {
+        let mut p = AsciiPlot::new("flat");
+        p.add('-', &mk_series("c", &[(0, 5.0), (10, 5.0)]));
+        let r = p.render();
+        assert!(r.contains('-'));
+    }
+}

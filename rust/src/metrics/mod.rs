@@ -1,0 +1,221 @@
+//! Metrics collection and reporting: training curves, CSV/JSONL writers,
+//! and terminal line plots (the repo has no plotting stack, so every figure
+//! regenerator emits both a machine-readable CSV and an ASCII rendition).
+
+pub mod ascii_plot;
+pub mod json;
+
+pub use ascii_plot::AsciiPlot;
+
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::Path;
+
+/// One named series of (iteration, value) points.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(usize, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Series { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, iter: usize, value: f64) {
+        self.points.push((iter, value));
+    }
+
+    pub fn last_value(&self) -> Option<f64> {
+        self.points.last().map(|&(_, v)| v)
+    }
+}
+
+/// A collection of aligned series written as one CSV.
+#[derive(Clone, Debug, Default)]
+pub struct Curves {
+    pub series: Vec<Series>,
+}
+
+impl Curves {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get-or-create a series by name.
+    pub fn series_mut(&mut self, name: &str) -> &mut Series {
+        if let Some(pos) = self.series.iter().position(|s| s.name == name) {
+            &mut self.series[pos]
+        } else {
+            self.series.push(Series::new(name));
+            self.series.last_mut().unwrap()
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Series> {
+        self.series.iter().find(|s| s.name == name)
+    }
+
+    /// Write all series to a CSV: `iter,<name1>,<name2>,...`. Iterations
+    /// are the union across series; missing values are left empty.
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        write!(w, "iter")?;
+        for s in &self.series {
+            write!(w, ",{}", s.name)?;
+        }
+        writeln!(w)?;
+        let mut iters: Vec<usize> =
+            self.series.iter().flat_map(|s| s.points.iter().map(|&(i, _)| i)).collect();
+        iters.sort_unstable();
+        iters.dedup();
+        for it in iters {
+            write!(w, "{it}")?;
+            for s in &self.series {
+                match s.points.iter().find(|&&(i, _)| i == it) {
+                    Some(&(_, v)) => write!(w, ",{v}")?,
+                    None => write!(w, ",")?,
+                }
+            }
+            writeln!(w)?;
+        }
+        Ok(())
+    }
+}
+
+/// Communication-cost accounting for one training run. The sparsifier's
+/// whole purpose is reducing these numbers, so the coordinator tracks them
+/// as first-class metrics (paper §2.2: one value + ~log2(J)-bit index per
+/// selected entry).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommStats {
+    /// Total gradient values sent worker->server.
+    pub uplink_values: u64,
+    /// Total index bits sent worker->server.
+    pub uplink_index_bits: u64,
+    /// Total values broadcast server->workers.
+    pub downlink_values: u64,
+    /// Total index bits broadcast server->workers.
+    pub downlink_index_bits: u64,
+}
+
+impl CommStats {
+    /// Total uplink bytes assuming f32 payloads and ceil(log2 J)-bit indices.
+    pub fn uplink_bytes(&self) -> u64 {
+        self.uplink_values * 4 + self.uplink_index_bits.div_ceil(8)
+    }
+
+    pub fn downlink_bytes(&self) -> u64 {
+        self.downlink_values * 4 + self.downlink_index_bits.div_ceil(8)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.uplink_bytes() + self.downlink_bytes()
+    }
+
+    pub fn add(&mut self, other: &CommStats) {
+        self.uplink_values += other.uplink_values;
+        self.uplink_index_bits += other.uplink_index_bits;
+        self.downlink_values += other.downlink_values;
+        self.downlink_index_bits += other.downlink_index_bits;
+    }
+}
+
+/// Render a markdown-style table (used by the Table 1 / Table 2 harnesses).
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            line.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+        }
+        line.push('\n');
+        line
+    };
+    out.push_str(&fmt_row(
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    out.push('|');
+    for w in &widths {
+        out.push_str(&format!("{}|", "-".repeat(w + 2)));
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_collects_points() {
+        let mut c = Curves::new();
+        c.series_mut("loss").push(0, 1.0);
+        c.series_mut("loss").push(10, 0.5);
+        c.series_mut("acc").push(10, 0.9);
+        assert_eq!(c.get("loss").unwrap().points.len(), 2);
+        assert_eq!(c.get("loss").unwrap().last_value(), Some(0.5));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut c = Curves::new();
+        c.series_mut("a").push(0, 1.0);
+        c.series_mut("a").push(1, 2.0);
+        c.series_mut("b").push(1, 3.0);
+        let dir = std::env::temp_dir().join("regtopk_test_metrics");
+        let path = dir.join("curves.csv");
+        c.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "iter,a,b");
+        assert_eq!(lines[1], "0,1,");
+        assert_eq!(lines[2], "1,2,3");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn comm_stats_accounting() {
+        let mut s = CommStats::default();
+        s.uplink_values = 100;
+        s.uplink_index_bits = 700; // -> 88 bytes
+        assert_eq!(s.uplink_bytes(), 400 + 88);
+        let mut t = CommStats::default();
+        t.uplink_values = 1;
+        s.add(&t);
+        assert_eq!(s.uplink_values, 101);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let table = render_table(
+            &["model", "acc"],
+            &[
+                vec!["SqueezeNet".into(), "0.87".into()],
+                vec!["x".into(), "0.9".into()],
+            ],
+        );
+        let lines: Vec<&str> = table.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("model"));
+        assert!(lines.iter().all(|l| l.starts_with('|')));
+        // All rows equal width.
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+}

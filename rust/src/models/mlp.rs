@@ -1,0 +1,298 @@
+//! Native two-layer MLP classifier with softmax cross-entropy.
+//!
+//! Used as (a) the fast backend for the Table-1-style fine-tuning suite
+//! (five architecture variants × 10 seeds × sparsifiers is hundreds of
+//! runs — too many for the PJRT path on one core), and (b) a numerical
+//! cross-check for the HLO MLP artifact (`python/compile/model_mlp.py`
+//! implements the same math in JAX).
+//!
+//! Parameters are stored flattened in one `Vec<f32>` — the layout the
+//! sparsifiers and the PJRT runtime both operate on:
+//! `[W1 (in×hidden) | b1 (hidden) | W2 (hidden×classes) | b2 (classes)]`.
+
+use crate::rng::Pcg64;
+use crate::tensor::softmax_inplace;
+
+/// Architecture description.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MlpConfig {
+    pub input: usize,
+    pub hidden: usize,
+    pub classes: usize,
+}
+
+impl MlpConfig {
+    /// Total flattened parameter count J.
+    pub fn dim(&self) -> usize {
+        self.input * self.hidden + self.hidden + self.hidden * self.classes + self.classes
+    }
+
+    /// Offsets of (w1, b1, w2, b2) in the flat vector.
+    pub fn offsets(&self) -> (usize, usize, usize, usize) {
+        let w1 = 0;
+        let b1 = w1 + self.input * self.hidden;
+        let w2 = b1 + self.hidden;
+        let b2 = w2 + self.hidden * self.classes;
+        (w1, b1, w2, b2)
+    }
+
+    /// He-style initialization of a flat parameter vector.
+    pub fn init(&self, rng: &mut Pcg64) -> Vec<f32> {
+        let mut theta = vec![0.0f32; self.dim()];
+        let (w1, b1, w2, b2) = self.offsets();
+        let s1 = (2.0 / self.input as f64).sqrt();
+        let s2 = (2.0 / self.hidden as f64).sqrt();
+        rng.fill_normal(&mut theta[w1..b1], 0.0, s1);
+        rng.fill_normal(&mut theta[w2..b2], 0.0, s2);
+        theta
+    }
+}
+
+/// Reusable forward/backward scratch (one per worker).
+pub struct Mlp {
+    pub cfg: MlpConfig,
+    hidden_pre: Vec<f32>,
+    hidden_act: Vec<f32>,
+    logits: Vec<f32>,
+    dlogits: Vec<f32>,
+    dhidden: Vec<f32>,
+}
+
+impl Mlp {
+    pub fn new(cfg: MlpConfig) -> Self {
+        Mlp {
+            cfg,
+            hidden_pre: vec![0.0; cfg.hidden],
+            hidden_act: vec![0.0; cfg.hidden],
+            logits: vec![0.0; cfg.classes],
+            dlogits: vec![0.0; cfg.classes],
+            dhidden: vec![0.0; cfg.hidden],
+        }
+    }
+
+    /// Forward pass for one example; returns (loss, predicted class).
+    /// ReLU hidden activation, softmax CE loss.
+    pub fn forward(&mut self, theta: &[f32], x: &[f32], label: usize) -> (f64, usize) {
+        let c = &self.cfg;
+        assert_eq!(x.len(), c.input);
+        assert_eq!(theta.len(), c.dim());
+        let (w1, b1, w2, b2) = c.offsets();
+        // hidden = relu(W1ᵀ x + b1); W1 stored input-major (input × hidden).
+        for h in 0..c.hidden {
+            let mut s = theta[b1 + h];
+            for i in 0..c.input {
+                s += theta[w1 + i * c.hidden + h] * x[i];
+            }
+            self.hidden_pre[h] = s;
+            self.hidden_act[h] = s.max(0.0);
+        }
+        // logits = W2ᵀ hidden + b2; W2 stored hidden-major (hidden × classes).
+        for k in 0..c.classes {
+            let mut s = theta[b2 + k];
+            for h in 0..c.hidden {
+                s += theta[w2 + h * c.classes + k] * self.hidden_act[h];
+            }
+            self.logits[k] = s;
+        }
+        let pred = argmax(&self.logits);
+        softmax_inplace(&mut self.logits);
+        let p = self.logits[label].max(1e-12);
+        (-(p as f64).ln(), pred)
+    }
+
+    /// Accumulate the gradient of the (already forwarded) example into
+    /// `grad` with weight `w`. Call immediately after [`Self::forward`].
+    pub fn backward_into(&mut self, theta: &[f32], x: &[f32], label: usize, w: f32, grad: &mut [f32]) {
+        let c = &self.cfg;
+        let (w1o, b1o, w2o, b2o) = c.offsets();
+        // dlogits = softmax - onehot (softmax already in self.logits).
+        for k in 0..c.classes {
+            self.dlogits[k] = self.logits[k] - if k == label { 1.0 } else { 0.0 };
+        }
+        // W2 / b2 grads; dhidden = W2 · dlogits (masked by ReLU).
+        for h in 0..c.hidden {
+            let act = self.hidden_act[h];
+            let mut s = 0.0f32;
+            for k in 0..c.classes {
+                let dl = self.dlogits[k];
+                grad[w2o + h * c.classes + k] += w * act * dl;
+                s += theta[w2o + h * c.classes + k] * dl;
+            }
+            self.dhidden[h] = if self.hidden_pre[h] > 0.0 { s } else { 0.0 };
+        }
+        for k in 0..c.classes {
+            grad[b2o + k] += w * self.dlogits[k];
+        }
+        // W1 / b1 grads.
+        for i in 0..c.input {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let row = w1o + i * c.hidden;
+            for h in 0..c.hidden {
+                grad[row + h] += w * xi * self.dhidden[h];
+            }
+        }
+        for h in 0..c.hidden {
+            grad[b1o + h] += w * self.dhidden[h];
+        }
+    }
+
+    /// Mean loss + gradient over a batch; returns (mean loss, accuracy).
+    pub fn batch_grad(
+        &mut self,
+        theta: &[f32],
+        batch: &[(&[f32], usize)],
+        grad: &mut [f32],
+    ) -> (f64, f64) {
+        for g in grad.iter_mut() {
+            *g = 0.0;
+        }
+        let w = 1.0 / batch.len() as f32;
+        let mut loss = 0.0;
+        let mut correct = 0usize;
+        for (x, label) in batch {
+            let (l, pred) = self.forward(theta, x, *label);
+            loss += l;
+            if pred == *label {
+                correct += 1;
+            }
+            self.backward_into(theta, x, *label, w, grad);
+        }
+        (loss / batch.len() as f64, correct as f64 / batch.len() as f64)
+    }
+
+    /// Mean loss and accuracy over a set (no gradient).
+    pub fn evaluate(&mut self, theta: &[f32], set: &[(&[f32], usize)]) -> (f64, f64) {
+        let mut loss = 0.0;
+        let mut correct = 0usize;
+        for (x, label) in set {
+            let (l, pred) = self.forward(theta, x, *label);
+            loss += l;
+            if pred == *label {
+                correct += 1;
+            }
+        }
+        (loss / set.len() as f64, correct as f64 / set.len() as f64)
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> MlpConfig {
+        MlpConfig { input: 4, hidden: 6, classes: 3 }
+    }
+
+    #[test]
+    fn dim_and_offsets_consistent() {
+        let c = tiny();
+        let (w1, b1, w2, b2) = c.offsets();
+        assert_eq!(w1, 0);
+        assert_eq!(b1, 24);
+        assert_eq!(w2, 30);
+        assert_eq!(b2, 48);
+        assert_eq!(c.dim(), 51);
+    }
+
+    #[test]
+    fn forward_loss_is_lnc_at_zero_params() {
+        // Zero weights -> uniform softmax -> loss = ln(classes).
+        let c = tiny();
+        let mut m = Mlp::new(c);
+        let theta = vec![0.0; c.dim()];
+        let (loss, _) = m.forward(&theta, &[1.0, -1.0, 0.5, 2.0], 1);
+        assert!((loss - (3.0f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let c = tiny();
+        let mut m = Mlp::new(c);
+        let mut rng = Pcg64::seed_from_u64(1);
+        let theta = c.init(&mut rng);
+        let x: Vec<f32> = rng.normal_vec(c.input, 0.0, 1.0);
+        let label = 2usize;
+        let mut grad = vec![0.0; c.dim()];
+        m.forward(&theta, &x, label);
+        m.backward_into(&theta, &x, label, 1.0, &mut grad);
+        let h = 1e-3f32;
+        // Spot-check a spread of parameter indices.
+        for &j in &[0usize, 5, 23, 25, 31, 47, 49, 50] {
+            let mut tp = theta.clone();
+            tp[j] += h;
+            let mut tm = theta.clone();
+            tm[j] -= h;
+            let (lp, _) = m.forward(&tp, &x, label);
+            let (lm, _) = m.forward(&tm, &x, label);
+            let fd = (lp - lm) / (2.0 * h as f64);
+            assert!(
+                (fd - grad[j] as f64).abs() < 1e-2 * (1.0 + fd.abs()),
+                "j={j} fd={fd} analytic={}",
+                grad[j]
+            );
+        }
+    }
+
+    #[test]
+    fn batch_grad_averages() {
+        let c = tiny();
+        let mut m = Mlp::new(c);
+        let mut rng = Pcg64::seed_from_u64(2);
+        let theta = c.init(&mut rng);
+        let x1: Vec<f32> = rng.normal_vec(4, 0.0, 1.0);
+        let x2: Vec<f32> = rng.normal_vec(4, 0.0, 1.0);
+        let mut g_batch = vec![0.0; c.dim()];
+        m.batch_grad(&theta, &[(&x1, 0), (&x2, 1)], &mut g_batch);
+        let mut g1 = vec![0.0; c.dim()];
+        m.forward(&theta, &x1, 0);
+        m.backward_into(&theta, &x1, 0, 1.0, &mut g1);
+        let mut g2 = vec![0.0; c.dim()];
+        m.forward(&theta, &x2, 1);
+        m.backward_into(&theta, &x2, 1, 1.0, &mut g2);
+        for j in 0..c.dim() {
+            let expect = 0.5 * (g1[j] + g2[j]);
+            assert!((g_batch[j] - expect).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn sgd_learns_separable_problem() {
+        // Two well-separated Gaussian classes must reach high train
+        // accuracy quickly.
+        let c = MlpConfig { input: 2, hidden: 16, classes: 2 };
+        let mut m = Mlp::new(c);
+        let mut rng = Pcg64::seed_from_u64(3);
+        let mut theta = c.init(&mut rng);
+        let mut data: Vec<(Vec<f32>, usize)> = Vec::new();
+        for i in 0..100 {
+            let label = i % 2;
+            let center = if label == 0 { -2.0 } else { 2.0 };
+            data.push((rng.normal_vec(2, center, 0.5), label));
+        }
+        let mut grad = vec![0.0; c.dim()];
+        for _ in 0..200 {
+            let refs: Vec<(&[f32], usize)> =
+                data.iter().map(|(x, l)| (x.as_slice(), *l)).collect();
+            m.batch_grad(&theta, &refs, &mut grad);
+            for (t, g) in theta.iter_mut().zip(grad.iter()) {
+                *t -= 0.5 * g;
+            }
+        }
+        let refs: Vec<(&[f32], usize)> = data.iter().map(|(x, l)| (x.as_slice(), *l)).collect();
+        let (_, acc) = m.evaluate(&theta, &refs);
+        assert!(acc > 0.95, "accuracy {acc}");
+    }
+}

@@ -1,0 +1,13 @@
+//! Native (pure-rust) models.
+//!
+//! These serve three roles: (1) the exact paper workloads that are cheap
+//! enough to run natively (toy logistic of §1.3, linear regression of §5.1
+//! — the latter lives with its data in [`crate::data::linreg`]); (2) fast
+//! backends for the wide experiment sweeps; (3) cross-checks for the
+//! HLO-artifact path (the same math must come out of PJRT).
+
+pub mod logistic;
+pub mod mlp;
+
+pub use logistic::ToyLogistic;
+pub use mlp::{Mlp, MlpConfig};

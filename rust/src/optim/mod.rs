@@ -1,0 +1,181 @@
+//! Server-side optimizers. The server applies the aggregated (sparse,
+//! densified) gradient estimate g^t to the global model:
+//! θ^{t+1} = θ^t − η^t · step(g^t).
+//!
+//! SGD is the paper's §5.1/§5.2 optimizer; distributed Adam is used by the
+//! §5.3 fine-tuning experiments.
+
+use crate::config::OptimizerKind;
+
+/// Server-side optimizer state.
+pub trait Optimizer: Send {
+    /// Apply one update with learning rate `lr`.
+    fn step(&mut self, theta: &mut [f32], grad: &[f32], lr: f64);
+
+    /// Reset internal state (new run).
+    fn reset(&mut self);
+}
+
+/// Plain SGD.
+pub struct Sgd;
+
+impl Optimizer for Sgd {
+    fn step(&mut self, theta: &mut [f32], grad: &[f32], lr: f64) {
+        let lr = lr as f32;
+        for (t, g) in theta.iter_mut().zip(grad.iter()) {
+            *t -= lr * g;
+        }
+    }
+
+    fn reset(&mut self) {}
+}
+
+/// Heavy-ball momentum.
+pub struct Momentum {
+    beta: f32,
+    velocity: Vec<f32>,
+}
+
+impl Momentum {
+    pub fn new(dim: usize, beta: f64) -> Self {
+        Momentum { beta: beta as f32, velocity: vec![0.0; dim] }
+    }
+}
+
+impl Optimizer for Momentum {
+    fn step(&mut self, theta: &mut [f32], grad: &[f32], lr: f64) {
+        let lr = lr as f32;
+        for ((t, g), v) in theta.iter_mut().zip(grad.iter()).zip(self.velocity.iter_mut()) {
+            *v = self.beta * *v + g;
+            *t -= lr * *v;
+        }
+    }
+
+    fn reset(&mut self) {
+        for v in self.velocity.iter_mut() {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Adam (Kingma & Ba) with bias correction.
+pub struct Adam {
+    beta1: f64,
+    beta2: f64,
+    eps: f64,
+    t: u64,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl Adam {
+    pub fn new(dim: usize, beta1: f64, beta2: f64, eps: f64) -> Self {
+        Adam { beta1, beta2, eps, t: 0, m: vec![0.0; dim], v: vec![0.0; dim] }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, theta: &mut [f32], grad: &[f32], lr: f64) {
+        self.t += 1;
+        let b1 = self.beta1;
+        let b2 = self.beta2;
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        for j in 0..theta.len() {
+            let g = grad[j] as f64;
+            let m = b1 * self.m[j] as f64 + (1.0 - b1) * g;
+            let v = b2 * self.v[j] as f64 + (1.0 - b2) * g * g;
+            self.m[j] = m as f32;
+            self.v[j] = v as f32;
+            let mhat = m / bc1;
+            let vhat = v / bc2;
+            theta[j] -= (lr * mhat / (vhat.sqrt() + self.eps)) as f32;
+        }
+    }
+
+    fn reset(&mut self) {
+        self.t = 0;
+        for v in self.m.iter_mut() {
+            *v = 0.0;
+        }
+        for v in self.v.iter_mut() {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Build an optimizer from its config enum.
+pub fn build(kind: OptimizerKind, dim: usize) -> Box<dyn Optimizer> {
+    match kind {
+        OptimizerKind::Sgd => Box::new(Sgd),
+        OptimizerKind::Momentum { beta } => Box::new(Momentum::new(dim, beta)),
+        OptimizerKind::Adam { beta1, beta2, eps } => Box::new(Adam::new(dim, beta1, beta2, eps)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_step() {
+        let mut theta = vec![1.0, 2.0];
+        Sgd.step(&mut theta, &[0.5, -0.5], 0.1);
+        assert_eq!(theta, vec![0.95, 2.05]);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut opt = Momentum::new(1, 0.9);
+        let mut theta = vec![0.0];
+        opt.step(&mut theta, &[1.0], 1.0);
+        assert!((theta[0] + 1.0).abs() < 1e-6); // v=1
+        opt.step(&mut theta, &[1.0], 1.0);
+        assert!((theta[0] + 1.0 + 1.9).abs() < 1e-6); // v=1.9
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // With bias correction, the first Adam step magnitude ≈ lr for any
+        // gradient scale.
+        for scale in [1e-3f32, 1.0, 1e3] {
+            let mut opt = Adam::new(1, 0.9, 0.999, 1e-8);
+            let mut theta = vec![0.0];
+            opt.step(&mut theta, &[scale], 0.01);
+            assert!(
+                (theta[0].abs() - 0.01).abs() < 1e-4,
+                "scale={scale} step={}",
+                theta[0]
+            );
+        }
+    }
+
+    #[test]
+    fn optimizers_minimize_quadratic() {
+        // f(x) = 0.5 x² — every optimizer must drive x toward 0.
+        for kind in [
+            OptimizerKind::Sgd,
+            OptimizerKind::Momentum { beta: 0.9 },
+            OptimizerKind::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+        ] {
+            let mut opt = build(kind, 1);
+            let mut theta = vec![5.0f32];
+            for _ in 0..300 {
+                let g = [theta[0]];
+                opt.step(&mut theta, &g, 0.05);
+            }
+            assert!(theta[0].abs() < 0.5, "{kind:?} ended at {}", theta[0]);
+        }
+    }
+
+    #[test]
+    fn reset_clears_adam_state() {
+        let mut opt = Adam::new(2, 0.9, 0.999, 1e-8);
+        let mut theta = vec![0.0, 0.0];
+        opt.step(&mut theta, &[1.0, -1.0], 0.1);
+        opt.reset();
+        assert_eq!(opt.t, 0);
+        assert!(opt.m.iter().all(|&v| v == 0.0));
+        assert!(opt.v.iter().all(|&v| v == 0.0));
+    }
+}

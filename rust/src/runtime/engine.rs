@@ -1,0 +1,199 @@
+//! PJRT execution engine: one CPU client, compile-once executable cache.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`) — the
+//! image's xla_extension 0.5.1 rejects jax≥0.5 serialized protos (64-bit
+//! instruction ids); the text parser reassigns ids and round-trips
+//! cleanly. See /opt/xla-example/README.md.
+
+use crate::runtime::manifest::{ArtifactEntry, Manifest};
+use std::collections::HashMap;
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// PJRT client + executable cache keyed by entry name.
+pub struct Engine {
+    client: PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, PjRtLoadedExecutable>,
+    /// Cumulative execute() wall time, for the perf ledger.
+    pub exec_nanos: u64,
+    pub exec_calls: u64,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifacts directory.
+    pub fn new(artifacts_dir: &str) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client =
+            PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine { client, manifest, cache: HashMap::new(), exec_nanos: 0, exec_calls: 0 })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Entry metadata by name.
+    pub fn entry(&self, name: &str) -> anyhow::Result<ArtifactEntry> {
+        self.manifest
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("artifact `{name}` not in manifest"))
+    }
+
+    /// Get (compiling and caching on first use) the executable for `name`.
+    pub fn executable(&mut self, name: &str) -> anyhow::Result<&PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let entry = self.entry(name)?;
+            let path = self.manifest.hlo_path(&entry);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute `name` on f32 input buffers (shapes taken from the
+    /// manifest) and return all f32 outputs. The python side lowers with
+    /// `return_tuple=True`, so the single result is a tuple literal.
+    pub fn run_f32(&mut self, name: &str, inputs: &[&[f32]]) -> anyhow::Result<Vec<Vec<f32>>> {
+        let entry = self.entry(name)?;
+        anyhow::ensure!(
+            inputs.len() == entry.inputs.len(),
+            "{name}: expected {} inputs, got {}",
+            entry.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (spec, buf) in entry.inputs.iter().zip(inputs.iter()) {
+            anyhow::ensure!(
+                spec.elements() == buf.len(),
+                "{name}/{}: expected {} elements, got {}",
+                spec.name,
+                spec.elements(),
+                buf.len()
+            );
+            literals.push(literal_f32(buf, &spec.shape)?);
+        }
+        let t0 = std::time::Instant::now();
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
+        self.exec_nanos += t0.elapsed().as_nanos() as u64;
+        self.exec_calls += 1;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == entry.outputs.len(),
+            "{name}: manifest says {} outputs, got {}",
+            entry.outputs.len(),
+            parts.len()
+        );
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow::anyhow!("read {name}: {e:?}")))
+            .collect()
+    }
+
+    /// Mean execute() latency so far.
+    pub fn mean_exec_micros(&self) -> f64 {
+        if self.exec_calls == 0 {
+            0.0
+        } else {
+            self.exec_nanos as f64 / self.exec_calls as f64 / 1e3
+        }
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat buffer.
+pub fn literal_f32(buf: &[f32], shape: &[usize]) -> anyhow::Result<Literal> {
+    let lit = Literal::vec1(buf);
+    if shape.len() == 1 || shape.is_empty() {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape {shape:?}: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests require `make artifacts`; they skip (pass vacuously)
+    /// when the artifacts directory is absent so `cargo test` works on a
+    /// fresh checkout.
+    fn engine() -> Option<Engine> {
+        let dir = crate::runtime::hlo_grad::default_artifacts_dir();
+        if !Manifest::available(&dir) {
+            eprintln!("skipping engine test: no artifacts at {dir}");
+            return None;
+        }
+        Some(Engine::new(&dir).expect("engine"))
+    }
+
+    #[test]
+    fn literal_shapes() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        let back = l.to_vec::<f32>().unwrap();
+        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn linreg_grad_artifact_matches_native() {
+        let Some(mut eng) = engine() else { return };
+        let entry = eng.entry("linreg_grad").expect("linreg_grad artifact");
+        let d = entry.meta_usize("points").unwrap();
+        let j = entry.meta_usize("dim").unwrap();
+        // Build a tiny native problem of the same shape and compare.
+        use crate::rng::Pcg64;
+        use crate::tensor::Matrix;
+        let mut rng = Pcg64::seed_from_u64(1);
+        let x = Matrix::from_vec(d, j, rng.normal_vec(d * j, 0.0, 1.0));
+        let y = rng.normal_vec(d, 0.0, 1.0);
+        let theta = rng.normal_vec(j, 0.0, 1.0);
+        let outs = eng
+            .run_f32("linreg_grad", &[&theta, &x.data, &y])
+            .expect("run linreg_grad");
+        // Native: 2/D Xᵀ(Xθ − y)
+        let mut resid = vec![0.0f32; d];
+        x.matvec(&theta, &mut resid);
+        for (r, yv) in resid.iter_mut().zip(y.iter()) {
+            *r -= *yv;
+        }
+        let mut expect = vec![0.0f32; j];
+        x.matvec_t(&resid, &mut expect);
+        for v in expect.iter_mut() {
+            *v *= 2.0 / d as f32;
+        }
+        for (a, b) in outs[0].iter().zip(expect.iter()) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn executable_cache_compiles_once() {
+        let Some(mut eng) = engine() else { return };
+        let _ = eng.executable("linreg_grad").unwrap();
+        let before = eng.cache.len();
+        let _ = eng.executable("linreg_grad").unwrap();
+        assert_eq!(eng.cache.len(), before);
+    }
+
+    #[test]
+    fn wrong_input_count_rejected() {
+        let Some(mut eng) = engine() else { return };
+        assert!(eng.run_f32("linreg_grad", &[]).is_err());
+    }
+}

@@ -1,0 +1,162 @@
+//! [`WorkerGrad`] backed by AOT-compiled HLO artifacts.
+//!
+//! An [`HloGrad`] executes one manifest entry per iteration:
+//! `entry(theta, data...) -> (grad, loss, aux...)`. The non-theta inputs
+//! are produced by a *feeder* closure — static for full-batch models
+//! (linear regression), per-iteration for mini-batch models (MLP / CNN /
+//! transformer). All workers share one PJRT [`Engine`] (compile-once
+//! cache) through `Rc<RefCell<..>>`; the PJRT client is single-threaded
+//! (`Rc` inside the xla crate), so HLO-backed runs use the sequential
+//! executor — which is also the faster one on this single-core testbed.
+
+use super::engine::Engine;
+use crate::grad::WorkerGrad;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Artifacts directory resolution: `$REGTOPK_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> String {
+    std::env::var("REGTOPK_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+/// Shared engine handle.
+pub type SharedEngine = Rc<RefCell<Engine>>;
+
+/// Open the default engine (convenience for examples).
+pub fn open_engine(dir: &str) -> anyhow::Result<SharedEngine> {
+    Ok(Rc::new(RefCell::new(Engine::new(dir)?)))
+}
+
+/// Produces the non-theta inputs for iteration `t`. Receives the buffer
+/// vector to fill/reuse (empty on first call).
+pub type Feeder = Box<dyn FnMut(usize, &mut Vec<Vec<f32>>)>;
+
+/// A worker whose gradient is one compiled artifact call.
+pub struct HloGrad {
+    engine: SharedEngine,
+    entry: String,
+    dim: usize,
+    feeder: Feeder,
+    bufs: Vec<Vec<f32>>,
+    /// Auxiliary outputs (beyond grad, loss) of the last call.
+    pub last_aux: Vec<f64>,
+}
+
+impl HloGrad {
+    /// `entry` must exist in the manifest with signature
+    /// `(theta[dim], data...) -> (grad[dim], loss[], aux...)`.
+    pub fn new(engine: SharedEngine, entry: &str, feeder: Feeder) -> anyhow::Result<Self> {
+        let e = engine.borrow_mut().entry(entry)?;
+        anyhow::ensure!(
+            !e.inputs.is_empty() && !e.outputs.is_empty(),
+            "entry {entry} has empty signature"
+        );
+        let dim = e.inputs[0].elements();
+        anyhow::ensure!(
+            e.outputs[0].elements() == dim,
+            "entry {entry}: grad output shape {:?} != theta shape {:?}",
+            e.outputs[0].shape,
+            e.inputs[0].shape
+        );
+        Ok(HloGrad {
+            engine,
+            entry: entry.to_string(),
+            dim,
+            feeder,
+            bufs: Vec::new(),
+            last_aux: Vec::new(),
+        })
+    }
+
+    /// Static feeder: the same data inputs every iteration (full-batch).
+    pub fn static_feeder(data: Vec<Vec<f32>>) -> Feeder {
+        let mut filled = false;
+        Box::new(move |_t, bufs| {
+            if !filled {
+                *bufs = data.clone();
+                filled = true;
+            }
+        })
+    }
+}
+
+impl WorkerGrad for HloGrad {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn grad(&mut self, t: usize, theta: &[f32], out: &mut [f32]) -> f64 {
+        (self.feeder)(t, &mut self.bufs);
+        let mut engine = self.engine.borrow_mut();
+        let mut inputs: Vec<&[f32]> = Vec::with_capacity(1 + self.bufs.len());
+        inputs.push(theta);
+        for b in &self.bufs {
+            inputs.push(b);
+        }
+        let outs = engine
+            .run_f32(&self.entry, &inputs)
+            .unwrap_or_else(|e| panic!("HLO grad `{}` failed: {e}", self.entry));
+        out.copy_from_slice(&outs[0]);
+        let loss = outs.get(1).and_then(|l| l.first()).copied().unwrap_or(0.0) as f64;
+        self.last_aux = outs.iter().skip(2).filter_map(|o| o.first()).map(|&v| v as f64).collect();
+        loss
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn engine() -> Option<SharedEngine> {
+        let dir = default_artifacts_dir();
+        if !Manifest::available(&dir) {
+            eprintln!("skipping hlo_grad test: no artifacts at {dir}");
+            return None;
+        }
+        Some(open_engine(&dir).unwrap())
+    }
+
+    #[test]
+    fn hlo_linreg_grad_descends() {
+        let Some(eng) = engine() else { return };
+        let entry = eng.borrow_mut().entry("linreg_grad").unwrap();
+        let d = entry.meta_usize("points").unwrap();
+        let j = entry.meta_usize("dim").unwrap();
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::seed_from_u64(3);
+        let truth = rng.normal_vec(j, 0.0, 1.0);
+        let x = rng.normal_vec(d * j, 0.0, 1.0);
+        // y = X truth
+        let xm = crate::tensor::Matrix::from_vec(d, j, x.clone());
+        let mut y = vec![0.0f32; d];
+        xm.matvec(&truth, &mut y);
+        let feeder = HloGrad::static_feeder(vec![x, y]);
+        let mut w = HloGrad::new(eng, "linreg_grad", feeder).unwrap();
+        let mut theta = vec![0.0f32; j];
+        let mut g = vec![0.0f32; j];
+        let first_loss = w.grad(0, &theta, &mut g);
+        for t in 0..50 {
+            w.grad(t, &theta, &mut g);
+            for (p, gi) in theta.iter_mut().zip(g.iter()) {
+                *p -= 0.01 * gi;
+            }
+        }
+        let last_loss = w.grad(50, &theta, &mut g);
+        assert!(
+            last_loss < 0.5 * first_loss,
+            "GD through the artifact must descend: {first_loss} -> {last_loss}"
+        );
+    }
+
+    #[test]
+    fn static_feeder_fills_once() {
+        let mut f = HloGrad::static_feeder(vec![vec![1.0, 2.0]]);
+        let mut bufs = Vec::new();
+        f(0, &mut bufs);
+        assert_eq!(bufs, vec![vec![1.0, 2.0]]);
+        bufs[0][0] = 9.0;
+        f(1, &mut bufs);
+        assert_eq!(bufs[0][0], 9.0, "must not refill");
+    }
+}

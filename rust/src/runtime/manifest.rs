@@ -1,0 +1,190 @@
+//! The artifact manifest: the contract between the python compile pipeline
+//! (L1/L2) and the rust runtime (L3).
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json`:
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "entries": [
+//!     {"name": "linreg_grad", "file": "linreg_grad.hlo.txt",
+//!      "inputs": [{"name": "theta", "shape": [100], "dtype": "f32"}, ...],
+//!      "outputs": [{"name": "grad", "shape": [100], "dtype": "f32"}, ...],
+//!      "meta": {"dim": 100, "points": 500}}
+//!   ]
+//! }
+//! ```
+
+use crate::metrics::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One named tensor in an entry signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn parse(j: &Json) -> Result<Self, String> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string();
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or("tensor missing shape")?
+            .iter()
+            .map(|v| v.as_usize().ok_or("bad dim"))
+            .collect::<Result<Vec<_>, _>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .unwrap_or("f32")
+            .to_string();
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// One compiled computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// HLO text file, relative to the artifacts directory.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Free-form numeric metadata from the compile side (dims, batch ...).
+    pub meta: BTreeMap<String, f64>,
+}
+
+impl ArtifactEntry {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).filter(|v| **v >= 0.0).map(|v| *v as usize)
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text.
+    pub fn parse(text: &str, dir: PathBuf) -> anyhow::Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let entries_j = j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing `entries`"))?;
+        let mut entries = Vec::with_capacity(entries_j.len());
+        for ej in entries_j {
+            let name = ej
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("entry missing name"))?
+                .to_string();
+            let file = ej
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("entry {name} missing file"))?
+                .to_string();
+            let tensors = |key: &str| -> anyhow::Result<Vec<TensorSpec>> {
+                let name = name.as_str();
+                ej.get(key)
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|t| TensorSpec::parse(t).map_err(|e| anyhow::anyhow!("entry {name}: {e}")))
+                    .collect()
+            };
+            let (inputs, outputs) = (tensors("inputs")?, tensors("outputs")?);
+            let mut meta = BTreeMap::new();
+            if let Some(m) = ej.get("meta").and_then(Json::as_obj) {
+                for (k, v) in m {
+                    if let Some(x) = v.as_f64() {
+                        meta.insert(k.clone(), x);
+                    }
+                }
+            }
+            entries.push(ArtifactEntry { name, file, inputs, outputs, meta });
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// True when the artifacts directory exists with a manifest — used by
+    /// tests to skip gracefully before `make artifacts` has run.
+    pub fn available(dir: impl AsRef<Path>) -> bool {
+        dir.as_ref().join("manifest.json").exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "entries": [
+            {"name": "linreg_grad", "file": "linreg_grad.hlo.txt",
+             "inputs": [
+                {"name": "theta", "shape": [100], "dtype": "f32"},
+                {"name": "x", "shape": [500, 100], "dtype": "f32"},
+                {"name": "y", "shape": [500], "dtype": "f32"}],
+             "outputs": [{"name": "grad", "shape": [100], "dtype": "f32"}],
+             "meta": {"dim": 100, "points": 500}}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.get("linreg_grad").unwrap();
+        assert_eq!(e.inputs.len(), 3);
+        assert_eq!(e.inputs[1].shape, vec![500, 100]);
+        assert_eq!(e.inputs[1].elements(), 50_000);
+        assert_eq!(e.meta_usize("dim"), Some(100));
+        assert_eq!(m.hlo_path(e), PathBuf::from("/tmp/a/linreg_grad.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_entries_is_error() {
+        assert!(Manifest::parse("{}", PathBuf::new()).is_err());
+        assert!(Manifest::parse("{\"entries\": [{}]}", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn unknown_entry_lookup() {
+        let m = Manifest::parse(SAMPLE, PathBuf::new()).unwrap();
+        assert!(m.get("nope").is_none());
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` emitted by
+//! `python/compile/aot.py`) and executes them from the coordinator's hot
+//! path. Python never runs at training time.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (entry names, files,
+//!   input/output shapes) written by the compile pipeline.
+//! * [`engine`] — PJRT client wrapper: compile-once executable cache,
+//!   literal conversion helpers, timed execution.
+//! * [`hlo_grad`] — [`crate::grad::WorkerGrad`] implementations backed by
+//!   compiled artifacts (linreg, MLP, CNN, transformer-LM).
+
+pub mod engine;
+pub mod hlo_grad;
+pub mod manifest;
+
+pub use engine::Engine;
+pub use hlo_grad::HloGrad;
+pub use manifest::{ArtifactEntry, Manifest};

@@ -1,0 +1,248 @@
+//! Baseline compressors the paper's evaluation compares against (or that
+//! its related-work section positions REGTOP-k relative to).
+
+use super::select::top_k_indices_into;
+use super::{SparseGrad, Sparsifier};
+use crate::rng::Pcg64;
+
+/// No sparsification: send the full accumulated gradient (with error
+/// feedback the error is always zero). The paper's red "no sparsification"
+/// curves.
+pub struct Dense {
+    acc: Vec<f32>,
+    eps: Vec<f32>,
+}
+
+impl Dense {
+    pub fn new(dim: usize) -> Self {
+        Dense { acc: vec![0.0; dim], eps: vec![0.0; dim] }
+    }
+}
+
+impl Sparsifier for Dense {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn compress(&mut self, grad: &[f32], out: &mut SparseGrad) {
+        assert_eq!(grad.len(), self.acc.len());
+        out.clear();
+        for (j, &g) in grad.iter().enumerate() {
+            self.acc[j] = g; // eps is always zero
+            out.indices.push(j as u32);
+            out.values.push(g);
+        }
+    }
+
+    fn error(&self) -> &[f32] {
+        &self.eps
+    }
+
+    fn last_accumulated(&self) -> &[f32] {
+        &self.acc
+    }
+
+    fn reset(&mut self) {
+        for v in self.acc.iter_mut() {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Hard-threshold sparsifier (Sahu et al., NeurIPS 2021 [27]): send every
+/// accumulated entry with |a_j| > λ. Communication-optimal for *total*
+/// error rather than per-iteration budget; k varies per round. With respect
+/// to learning-rate scaling it behaves like TOP-k (paper §1.5), which is
+/// exactly what the Fig. 3/5-style benches demonstrate.
+pub struct HardThreshold {
+    lambda: f32,
+    eps: Vec<f32>,
+    acc: Vec<f32>,
+}
+
+impl HardThreshold {
+    pub fn new(dim: usize, lambda: f32) -> Self {
+        assert!(lambda >= 0.0);
+        HardThreshold { lambda, eps: vec![0.0; dim], acc: vec![0.0; dim] }
+    }
+}
+
+impl Sparsifier for HardThreshold {
+    fn name(&self) -> &'static str {
+        "hard_threshold"
+    }
+
+    fn compress(&mut self, grad: &[f32], out: &mut SparseGrad) {
+        assert_eq!(grad.len(), self.eps.len());
+        out.clear();
+        for j in 0..grad.len() {
+            let a = self.eps[j] + grad[j];
+            self.acc[j] = a;
+            if a.abs() > self.lambda {
+                out.indices.push(j as u32);
+                out.values.push(a);
+                self.eps[j] = 0.0;
+            } else {
+                self.eps[j] = a;
+            }
+        }
+    }
+
+    fn error(&self) -> &[f32] {
+        &self.eps
+    }
+
+    fn last_accumulated(&self) -> &[f32] {
+        &self.acc
+    }
+
+    fn reset(&mut self) {
+        for v in self.eps.iter_mut() {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Random-k with error feedback: selects k uniformly random coordinates.
+/// The classical unbiased-compressor baseline; included for the ablation
+/// benches (it needs no magnitude information at all).
+pub struct RandK {
+    k: usize,
+    rng: Pcg64,
+    eps: Vec<f32>,
+    acc: Vec<f32>,
+    scores: Vec<f32>,
+    scratch: Vec<u32>,
+    selected: Vec<u32>,
+}
+
+impl RandK {
+    pub fn new(dim: usize, k: usize, seed: u64) -> Self {
+        assert!(k >= 1);
+        RandK {
+            k,
+            rng: Pcg64::new(seed, 0x5EED),
+            eps: vec![0.0; dim],
+            acc: vec![0.0; dim],
+            scores: vec![0.0; dim],
+            scratch: Vec::new(),
+            selected: Vec::new(),
+        }
+    }
+}
+
+impl Sparsifier for RandK {
+    fn name(&self) -> &'static str {
+        "randk"
+    }
+
+    fn compress(&mut self, grad: &[f32], out: &mut SparseGrad) {
+        assert_eq!(grad.len(), self.eps.len());
+        out.clear();
+        // Random scores -> top-k of noise == uniform random k-subset.
+        for j in 0..grad.len() {
+            self.acc[j] = self.eps[j] + grad[j];
+            self.scores[j] = self.rng.f32();
+        }
+        top_k_indices_into(&self.scores, self.k, &mut self.scratch, &mut self.selected);
+        self.eps.copy_from_slice(&self.acc);
+        for &i in &self.selected {
+            let i = i as usize;
+            out.indices.push(i as u32);
+            out.values.push(self.acc[i]);
+            self.eps[i] = 0.0;
+        }
+    }
+
+    fn error(&self) -> &[f32] {
+        &self.eps
+    }
+
+    fn last_accumulated(&self) -> &[f32] {
+        &self.acc
+    }
+
+    fn reset(&mut self) {
+        for v in self.eps.iter_mut() {
+            *v = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+
+    #[test]
+    fn dense_sends_everything_with_zero_error() {
+        let mut s = Dense::new(3);
+        let mut out = SparseGrad::default();
+        s.compress(&[1.0, -2.0, 3.0], &mut out);
+        assert_eq!(out.indices, vec![0, 1, 2]);
+        assert_eq!(out.values, vec![1.0, -2.0, 3.0]);
+        assert!(s.error().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn hard_threshold_selects_above_lambda() {
+        let mut s = HardThreshold::new(4, 1.5);
+        let mut out = SparseGrad::default();
+        s.compress(&[1.0, -2.0, 0.5, 3.0], &mut out);
+        assert_eq!(out.indices, vec![1, 3]);
+        assert_eq!(s.error(), &[1.0, 0.0, 0.5, 0.0]);
+        // Accumulation pushes small entries over the threshold.
+        s.compress(&[1.0, 0.0, 0.5, 0.0], &mut out);
+        assert_eq!(out.indices, vec![0]);
+        assert_eq!(out.values, vec![2.0]);
+    }
+
+    #[test]
+    fn hard_threshold_conservation() {
+        check(50, |g| {
+            let grad = g.vec_normal(1..=128);
+            let mut s = HardThreshold::new(grad.len(), g.f32_in(0.0, 2.0));
+            let mut out = SparseGrad::default();
+            s.compress(&grad, &mut out);
+            let dense = out.to_dense(grad.len());
+            for j in 0..grad.len() {
+                assert!((dense[j] + s.error()[j] - s.last_accumulated()[j]).abs() <= 1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn randk_selects_exactly_k_distinct() {
+        check(50, |g| {
+            let dim = g.usize_in(1..=256);
+            let k = g.usize_in(1..=dim);
+            let mut s = RandK::new(dim, k, 9);
+            let mut out = SparseGrad::default();
+            s.compress(&vec![1.0; dim], &mut out);
+            assert_eq!(out.len(), k);
+            assert!(out.indices.windows(2).all(|w| w[0] < w[1]));
+        });
+    }
+
+    #[test]
+    fn randk_selection_varies_across_rounds() {
+        let mut s = RandK::new(100, 5, 1);
+        let mut a = SparseGrad::default();
+        let mut b = SparseGrad::default();
+        s.compress(&vec![1.0; 100], &mut a);
+        s.compress(&vec![1.0; 100], &mut b);
+        assert_ne!(a.indices, b.indices);
+    }
+
+    #[test]
+    fn randk_conservation() {
+        let mut s = RandK::new(10, 3, 2);
+        let mut out = SparseGrad::default();
+        let grad: Vec<f32> = (0..10).map(|i| i as f32 - 5.0).collect();
+        s.compress(&grad, &mut out);
+        let dense = out.to_dense(10);
+        for j in 0..10 {
+            assert!((dense[j] + s.error()[j] - s.last_accumulated()[j]).abs() <= 1e-6);
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! Gradient sparsification — the paper's contribution lives here.
+//!
+//! Every worker owns one [`Sparsifier`]. Per iteration the coordinator
+//! calls [`Sparsifier::compress`] with the fresh local gradient `g_n^t`;
+//! the sparsifier applies error accumulation and its selection rule and
+//! returns the sparse message `ĝ_n^t` sent to the server. After
+//! aggregation the coordinator feeds the broadcast `g^t` back through
+//! [`Sparsifier::observe`] — REGTOP-k uses it to form the posterior
+//! distortion for the next round (Algorithm 2, line 8).
+//!
+//! Implemented selection rules:
+//! - [`topk::TopK`] — classical TOP-k with error feedback (Algorithm 1)
+//! - [`regtopk::RegTopK`] — the paper's Bayesian regularized TOP-k
+//!   (Algorithm 2), with the optional prior exponent `y` of Remark 4
+//! - [`baselines::HardThreshold`] — the total-error-minimizing hard
+//!   threshold sparsifier of Sahu et al. [27] (variable k)
+//! - [`baselines::RandK`] — random-k with error feedback
+//! - [`baselines::Dense`] — no sparsification (the paper's red curves)
+//!
+//! The genie-aided *global TOP-k* of §3.1 needs cross-worker information
+//! and is implemented in the coordinator (`coordinator::genie`), not here.
+
+pub mod baselines;
+pub mod dgc;
+pub mod regtopk;
+pub mod select;
+pub mod topk;
+
+use crate::config::ConfigError;
+
+/// A sparsified gradient message: parallel arrays of entry indices and the
+/// (accumulated-)gradient values at those indices.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseGrad {
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl SparseGrad {
+    pub fn with_capacity(k: usize) -> Self {
+        SparseGrad { indices: Vec::with_capacity(k), values: Vec::with_capacity(k) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.indices.clear();
+        self.values.clear();
+    }
+
+    /// Scatter `alpha * values` into a dense buffer.
+    pub fn scatter_into(&self, alpha: f32, dense: &mut [f32]) {
+        for (&i, &v) in self.indices.iter().zip(self.values.iter()) {
+            dense[i as usize] += alpha * v;
+        }
+    }
+
+    /// Densify into a fresh vector of length `dim`.
+    pub fn to_dense(&self, dim: usize) -> Vec<f32> {
+        let mut out = vec![0.0; dim];
+        self.scatter_into(1.0, &mut out);
+        out
+    }
+}
+
+/// Sparsifier selection + hyperparameters (config-level enum).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SparsifierKind {
+    TopK,
+    RegTopK { mu: f64, y: f64 },
+    HardThreshold { lambda: f64 },
+    RandK,
+    Dense,
+    /// Genie-aided global TOP-k (§3.1) — resolved by the coordinator.
+    GlobalTopK,
+    /// Deep Gradient Compression (momentum-corrected TOP-k, [26]).
+    Dgc { momentum: f64 },
+}
+
+impl SparsifierKind {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "topk" => Ok(SparsifierKind::TopK),
+            "regtopk" => Ok(SparsifierKind::RegTopK { mu: 1.0, y: 1.0 }),
+            "hard_threshold" => Ok(SparsifierKind::HardThreshold { lambda: 1e-3 }),
+            "randk" => Ok(SparsifierKind::RandK),
+            "dense" | "none" => Ok(SparsifierKind::Dense),
+            "global_topk" => Ok(SparsifierKind::GlobalTopK),
+            "dgc" => Ok(SparsifierKind::Dgc { momentum: 0.9 }),
+            _ => Err(ConfigError::new(format!("unknown sparsifier `{s}`"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SparsifierKind::TopK => "topk",
+            SparsifierKind::RegTopK { .. } => "regtopk",
+            SparsifierKind::HardThreshold { .. } => "hard_threshold",
+            SparsifierKind::RandK => "randk",
+            SparsifierKind::Dense => "dense",
+            SparsifierKind::GlobalTopK => "global_topk",
+            SparsifierKind::Dgc { .. } => "dgc",
+        }
+    }
+
+    /// Instantiate a worker-side sparsifier. `dim` = J, `k` = entries per
+    /// message, `omega` = this worker's aggregation weight, `seed` feeds
+    /// the stochastic baselines.
+    pub fn build(&self, dim: usize, k: usize, omega: f64, seed: u64) -> Box<dyn Sparsifier> {
+        match *self {
+            SparsifierKind::TopK => Box::new(topk::TopK::new(dim, k)),
+            SparsifierKind::RegTopK { mu, y } => {
+                Box::new(regtopk::RegTopK::new(dim, k, omega as f32, mu as f32, y as f32))
+            }
+            SparsifierKind::HardThreshold { lambda } => {
+                Box::new(baselines::HardThreshold::new(dim, lambda as f32))
+            }
+            SparsifierKind::RandK => Box::new(baselines::RandK::new(dim, k, seed)),
+            SparsifierKind::Dense | SparsifierKind::GlobalTopK => {
+                Box::new(baselines::Dense::new(dim))
+            }
+            SparsifierKind::Dgc { momentum } => {
+                Box::new(dgc::Dgc::new(dim, k, momentum as f32))
+            }
+        }
+    }
+}
+
+/// Worker-side gradient compressor with error feedback.
+pub trait Sparsifier: Send {
+    /// Human-readable name for logs.
+    fn name(&self) -> &'static str;
+
+    /// Compress the fresh local gradient `grad` (length J), updating the
+    /// internal error accumulator, and append the message into `out`
+    /// (cleared first). Equivalent to Algorithm 1/2 lines 2–7 / 6–12.
+    fn compress(&mut self, grad: &[f32], out: &mut SparseGrad);
+
+    /// Feed back the server broadcast `g^t` (dense, zero where nothing was
+    /// aggregated). REGTOP-k consumes this; others may ignore it.
+    fn observe(&mut self, _agg: &[f32]) {}
+
+    /// Current error accumulator (for tests/diagnostics).
+    fn error(&self) -> &[f32];
+
+    /// The accumulated gradient a^t = eps^t + g^t computed during the last
+    /// `compress` call (for diagnostics such as Table 2).
+    fn last_accumulated(&self) -> &[f32];
+
+    /// Reset all state (new run).
+    fn reset(&mut self);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_grad_scatter_and_densify() {
+        let g = SparseGrad { indices: vec![1, 3], values: vec![2.0, -1.0] };
+        let mut dense = vec![0.0; 4];
+        g.scatter_into(0.5, &mut dense);
+        assert_eq!(dense, vec![0.0, 1.0, 0.0, -0.5]);
+        assert_eq!(g.to_dense(4), vec![0.0, 2.0, 0.0, -1.0]);
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for name in ["topk", "regtopk", "hard_threshold", "randk", "dense", "global_topk", "dgc"] {
+            let kind = SparsifierKind::parse(name).unwrap();
+            assert_eq!(kind.name(), if name == "none" { "dense" } else { name });
+        }
+        assert!(SparsifierKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn build_constructs_each_kind() {
+        for kind in [
+            SparsifierKind::TopK,
+            SparsifierKind::RegTopK { mu: 1.0, y: 1.0 },
+            SparsifierKind::HardThreshold { lambda: 0.5 },
+            SparsifierKind::RandK,
+            SparsifierKind::Dense,
+            SparsifierKind::Dgc { momentum: 0.9 },
+        ] {
+            let mut s = kind.build(10, 3, 0.5, 7);
+            let mut out = SparseGrad::default();
+            s.compress(&vec![1.0; 10], &mut out);
+            assert!(!out.is_empty());
+        }
+    }
+}

@@ -1,0 +1,412 @@
+//! REGTOP-k — the paper's Bayesian regularized TOP-k (Algorithm 2).
+//!
+//! Selection metric (eq. 43/46 + Remark 4's prior exponent `y`):
+//!
+//! ```text
+//! score_j = |a_j|^y * tanh(|1 + Δ_j| / μ)        j ∈ S^{t-1}
+//! score_j = |a_j|^y * C                           j ∉ S^{t-1}
+//! Δ_j     = (g^{t-1}_j − ω_n a^{t-1}_j) / (ω_n a^{t-1}_j)   (posterior distortion)
+//! ```
+//!
+//! **Reproduction note (DESIGN.md §2).** Eq. (24) of the paper prints the
+//! *current* accumulated gradient a^t in the Δ denominator. With that
+//! literal form, neither this implementation nor an independent NumPy
+//! transcription reproduces Figs. 3–5: near the optimum a^t fluctuates,
+//! |Δ| blows up, tanh saturates to 1 and the regularization vanishes —
+//! both policies stall identically. Normalizing by the *previous*
+//! accumulated gradient a^{t-1} (so |1 + Δ| = |g^{t-1}/(ω_n a^{t-1})|
+//! measures how much of the worker's last contribution survived
+//! aggregation) reproduces the paper's figures exactly: linear
+//! convergence from S ≈ 0.6 while TOP-k stalls at a fixed distance. Both
+//! forms coincide in the paper's §1.3/§4 toy analyses where a^t = a^{t-1}
+//! at the stall point.
+//!
+//! * `Δ_j → -1` means this worker's entry was cancelled by the other
+//!   workers in the last aggregation ⇒ score is damped toward zero,
+//!   suppressing destructive entries and thereby *controlling the learning
+//!   rate scaling* of error accumulation.
+//! * `μ → 0` makes tanh saturate at 1 for any nonzero argument ⇒ REGTOP-k
+//!   degenerates to TOP-k (tested invariant below).
+//! * The first round (t = 0) has no aggregation history and runs plain
+//!   TOP-k, exactly as Algorithm 2 prescribes.
+//!
+//! Numerical guards not spelled out in the paper but required in practice:
+//! `|ω_n a_j|` below [`DELTA_GUARD`] would blow up the division — such
+//! entries are treated as "no information" (Δ = Q → regularizer = C).
+
+use super::select::top_k_indices_into;
+use super::{SparseGrad, Sparsifier};
+
+/// Threshold below which ω_n·a_j is considered zero for the Δ division.
+pub const DELTA_GUARD: f32 = 1e-30;
+
+/// REGTOP-k worker state.
+pub struct RegTopK {
+    k: usize,
+    omega: f32,
+    mu: f32,
+    /// Prior exponent y ∈ (0, 1] (Remark 4); y = 1 recovers Definition 2.
+    y: f32,
+    /// Likelihood constant C for entries outside S^{t-1} (paper: C = 1).
+    c: f32,
+    /// Iteration counter (t = 0 runs plain TOP-k).
+    t: usize,
+    /// Sparsification error eps_n^t.
+    eps: Vec<f32>,
+    /// a_n^t (last compress).
+    acc: Vec<f32>,
+    /// a_n^{t-1}.
+    acc_prev: Vec<f32>,
+    /// Mask s_n^{t-1} as a dense bool vector (branch-friendly at J ~ 1e5).
+    mask_prev: Vec<bool>,
+    /// Last observed broadcast g^{t-1}.
+    agg_prev: Vec<f32>,
+    /// Whether `observe` was called since the last compress.
+    has_agg: bool,
+    scores: Vec<f32>,
+    scratch: Vec<u32>,
+    selected: Vec<u32>,
+}
+
+impl RegTopK {
+    pub fn new(dim: usize, k: usize, omega: f32, mu: f32, y: f32) -> Self {
+        assert!(k >= 1, "k must be >= 1");
+        assert!(omega > 0.0, "aggregation weight must be positive");
+        assert!(mu >= 0.0, "mu must be non-negative");
+        assert!(y > 0.0 && y <= 1.0, "prior exponent y must be in (0, 1]");
+        RegTopK {
+            k,
+            omega,
+            mu,
+            y,
+            c: 1.0,
+            t: 0,
+            eps: vec![0.0; dim],
+            acc: vec![0.0; dim],
+            acc_prev: vec![0.0; dim],
+            mask_prev: vec![false; dim],
+            agg_prev: vec![0.0; dim],
+            has_agg: false,
+            scores: vec![0.0; dim],
+            scratch: Vec::new(),
+            selected: Vec::new(),
+        }
+    }
+
+    /// Override the out-of-mask likelihood constant C (default 1).
+    pub fn with_c(mut self, c: f32) -> Self {
+        self.c = c;
+        self
+    }
+
+    /// The regularizer u_mu(|1 + Δ|) = tanh(|1 + Δ| / μ) of eq. (46).
+    /// μ = 0 is the TOP-k limit: u ≡ 1.
+    #[inline]
+    pub fn regularizer(&self, one_plus_delta_abs: f32) -> f32 {
+        if self.mu == 0.0 {
+            1.0
+        } else {
+            (one_plus_delta_abs / self.mu).tanh()
+        }
+    }
+
+    /// Posterior distortion Δ_j for a selected entry, with the
+    /// zero-division guard. Returns `None` when no information is
+    /// available (treated as Δ = Q → regularizer C). Normalized by the
+    /// previous accumulated gradient — see the module-level reproduction
+    /// note.
+    #[inline]
+    fn delta(&self, j: usize) -> Option<f32> {
+        let denom = self.omega * self.acc_prev[j];
+        if denom.abs() < DELTA_GUARD {
+            return None;
+        }
+        Some((self.agg_prev[j] - denom) / denom)
+    }
+
+    /// Apply the prior exponent: |a|^y, specialized for the common y = 1.
+    #[inline]
+    fn prior(&self, a_abs: f32) -> f32 {
+        if self.y == 1.0 {
+            a_abs
+        } else {
+            a_abs.powf(self.y)
+        }
+    }
+}
+
+impl Sparsifier for RegTopK {
+    fn name(&self) -> &'static str {
+        "regtopk"
+    }
+
+    fn compress(&mut self, grad: &[f32], out: &mut SparseGrad) {
+        assert_eq!(grad.len(), self.eps.len(), "gradient dimension mismatch");
+        out.clear();
+        let regularized = self.t > 0 && self.has_agg;
+        // Fused a / Δ / score pass — one sweep over J, no temporaries.
+        for j in 0..grad.len() {
+            let a = self.eps[j] + grad[j];
+            self.acc[j] = a;
+            let prior = self.prior(a.abs());
+            let u = if regularized && self.mask_prev[j] {
+                match self.delta(j) {
+                    Some(delta) => self.regularizer((1.0 + delta).abs()),
+                    None => self.c,
+                }
+            } else {
+                // j ∉ S^{t-1} (or no history yet): likelihood constant C.
+                // At t = 0 this makes the metric C·|a|^y — plain TOP-k.
+                self.c
+            };
+            self.scores[j] = prior * u;
+        }
+        top_k_indices_into(&self.scores, self.k, &mut self.scratch, &mut self.selected);
+        // ĝ = s ⊙ a ; eps' = a − ĝ ; roll state forward.
+        self.eps.copy_from_slice(&self.acc);
+        for m in self.mask_prev.iter_mut() {
+            *m = false;
+        }
+        for &i in &self.selected {
+            let i = i as usize;
+            out.indices.push(i as u32);
+            out.values.push(self.acc[i]);
+            self.eps[i] = 0.0;
+            self.mask_prev[i] = true;
+        }
+        self.acc_prev.copy_from_slice(&self.acc);
+        self.has_agg = false;
+        self.t += 1;
+    }
+
+    fn observe(&mut self, agg: &[f32]) {
+        assert_eq!(agg.len(), self.agg_prev.len());
+        self.agg_prev.copy_from_slice(agg);
+        self.has_agg = true;
+    }
+
+    fn error(&self) -> &[f32] {
+        &self.eps
+    }
+
+    fn last_accumulated(&self) -> &[f32] {
+        &self.acc
+    }
+
+    fn reset(&mut self) {
+        self.t = 0;
+        self.has_agg = false;
+        for v in self.eps.iter_mut() {
+            *v = 0.0;
+        }
+        for v in self.acc.iter_mut() {
+            *v = 0.0;
+        }
+        for v in self.acc_prev.iter_mut() {
+            *v = 0.0;
+        }
+        for v in self.agg_prev.iter_mut() {
+            *v = 0.0;
+        }
+        for m in self.mask_prev.iter_mut() {
+            *m = false;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsify::topk::TopK;
+    use crate::testing::check;
+
+    /// Drive two sparsifiers with identical gradient/aggregate streams and
+    /// compare selections.
+    fn run_pair(
+        a: &mut dyn Sparsifier,
+        b: &mut dyn Sparsifier,
+        grads: &[Vec<f32>],
+        aggs: &[Vec<f32>],
+    ) -> bool {
+        let mut oa = SparseGrad::default();
+        let mut ob = SparseGrad::default();
+        for (g, agg) in grads.iter().zip(aggs.iter()) {
+            a.compress(g, &mut oa);
+            b.compress(g, &mut ob);
+            if oa != ob {
+                return false;
+            }
+            a.observe(agg);
+            b.observe(agg);
+        }
+        true
+    }
+
+    #[test]
+    fn first_round_is_plain_topk() {
+        let mut reg = RegTopK::new(5, 2, 0.5, 1.0, 1.0);
+        let mut top = TopK::new(5, 2);
+        let g = vec![0.1, -3.0, 2.0, 0.5, -1.0];
+        let mut o1 = SparseGrad::default();
+        let mut o2 = SparseGrad::default();
+        reg.compress(&g, &mut o1);
+        top.compress(&g, &mut o2);
+        assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn mu_zero_reduces_to_topk_property() {
+        // Paper §4 limiting case (1): μ → 0 ⇒ REGTOP-k ≡ TOP-k,
+        // for arbitrary gradient and aggregate streams.
+        check(50, |g| {
+            let dim = g.usize_in(2..=128);
+            let k = g.usize_in(1..=dim);
+            let mut reg = RegTopK::new(dim, k, 0.5, 0.0, 1.0);
+            let mut top = TopK::new(dim, k);
+            let rounds = g.usize_in(1..=5);
+            let grads: Vec<Vec<f32>> =
+                (0..rounds).map(|_| (0..dim).map(|_| g.normal_f32()).collect()).collect();
+            let aggs: Vec<Vec<f32>> =
+                (0..rounds).map(|_| (0..dim).map(|_| g.normal_f32()).collect()).collect();
+            assert!(run_pair(&mut reg, &mut top, &grads, &aggs));
+        });
+    }
+
+    #[test]
+    fn cancellation_is_damped() {
+        // Paper §4 limiting case (2): two workers whose first entry cancels.
+        // After the first aggregation, Δ = -1 ⇒ regularizer tanh(0) = 0 ⇒
+        // the cancelled entry must NOT be selected again, even though its
+        // magnitude is the largest.
+        let omega = 0.5;
+        let mut w = RegTopK::new(2, 1, omega, 1.0, 1.0);
+        let mut out = SparseGrad::default();
+        // t=0: worker sees g = [100, 1]: selects entry 0.
+        w.compress(&[100.0, 1.0], &mut out);
+        assert_eq!(out.indices, vec![0]);
+        // Server: other worker sent -100 at entry 0 -> aggregate is 0 there;
+        // nothing at entry 1.
+        w.observe(&[0.0, 0.0]);
+        // t=1: same gradient again. TOP-k would pick entry 0 forever;
+        // REGTOP-k damps it (Δ_0 = (0 - 0.5*100)/(0.5*200) = -0.5 ... )
+        w.compress(&[100.0, 1.0], &mut out);
+        assert_eq!(out.indices, vec![1], "cancelled entry must be damped");
+    }
+
+    #[test]
+    fn exact_delta_cancellation_zeroes_score() {
+        // Engineered so Δ = -1 exactly: same accumulated value two rounds.
+        let omega = 0.5;
+        let mut w = RegTopK::new(2, 1, omega, 1.0, 1.0);
+        let mut out = SparseGrad::default();
+        w.compress(&[10.0, 0.1], &mut out);
+        assert_eq!(out.indices, vec![0]);
+        w.observe(&[0.0, 0.0]); // cancelled at server
+        // Error at 0 is 0 (was sent); fresh gradient again 10 => a0 = 10.
+        // Δ_0 = (0 - ω·10)/(ω·10) = -1 ⇒ u = tanh(0) = 0 ⇒ score 0.
+        w.compress(&[10.0, 0.1], &mut out);
+        assert_eq!(out.indices, vec![1]);
+    }
+
+    #[test]
+    fn constructive_aggregation_keeps_entry() {
+        // If the other workers agree (aggregate ≈ 2·ω·a), Δ = +1 and the
+        // regularizer is near its maximum ⇒ the entry stays selected.
+        let omega = 0.5;
+        let mut w = RegTopK::new(2, 1, omega, 1.0, 1.0);
+        let mut out = SparseGrad::default();
+        w.compress(&[10.0, 0.1], &mut out);
+        assert_eq!(out.indices, vec![0]);
+        w.observe(&[10.0, 0.0]); // both workers sent 10 => agg = 10
+        w.compress(&[10.0, 0.1], &mut out);
+        assert_eq!(out.indices, vec![0]);
+    }
+
+    #[test]
+    fn conservation_property() {
+        check(50, |g| {
+            let dim = g.usize_in(1..=256);
+            let k = g.usize_in(1..=dim);
+            let mut s = RegTopK::new(dim, k, 0.25, g.f32_in(0.1, 5.0), 1.0);
+            let mut out = SparseGrad::default();
+            for _ in 0..4 {
+                let grad: Vec<f32> = (0..dim).map(|_| g.normal_f32()).collect();
+                s.compress(&grad, &mut out);
+                let dense = out.to_dense(dim);
+                for j in 0..dim {
+                    let recon = dense[j] + s.error()[j];
+                    assert!((recon - s.last_accumulated()[j]).abs() <= 1e-6);
+                }
+                let agg: Vec<f32> = (0..dim).map(|_| g.normal_f32()).collect();
+                s.observe(&agg);
+            }
+        });
+    }
+
+    #[test]
+    fn scores_are_nonnegative_and_bounded_by_prior() {
+        // u = tanh(·) ∈ [0, 1] and C = 1 ⇒ score_j ≤ |a_j|^y always.
+        check(50, |g| {
+            let dim = g.usize_in(1..=128);
+            let k = g.usize_in(1..=dim);
+            let y = g.f64_in(0.2, 1.0) as f32;
+            let mut s = RegTopK::new(dim, k, 0.5, 1.0, y);
+            let mut out = SparseGrad::default();
+            for _ in 0..3 {
+                let grad: Vec<f32> = (0..dim).map(|_| g.normal_f32()).collect();
+                s.compress(&grad, &mut out);
+                for j in 0..dim {
+                    let bound = s.last_accumulated()[j].abs().powf(y) + 1e-6;
+                    assert!(s.scores[j] >= 0.0);
+                    assert!(s.scores[j] <= bound, "score exceeds prior bound");
+                }
+                let agg: Vec<f32> = (0..dim).map(|_| g.normal_f32()).collect();
+                s.observe(&agg);
+            }
+        });
+    }
+
+    #[test]
+    fn zero_accumulated_entry_is_guarded() {
+        let mut w = RegTopK::new(2, 1, 0.5, 1.0, 1.0);
+        let mut out = SparseGrad::default();
+        w.compress(&[1.0, 0.5], &mut out);
+        w.observe(&[1.0, 0.0]);
+        // Entry 0 selected last round but fresh a_0 = 0 → guard kicks in,
+        // no NaN/Inf anywhere.
+        w.compress(&[0.0, 0.5], &mut out);
+        assert!(w.scores.iter().all(|s| s.is_finite()));
+        assert_eq!(out.indices, vec![1]);
+    }
+
+    #[test]
+    fn missing_observe_falls_back_to_topk_metric() {
+        // If the server broadcast is lost, the worker must not reuse stale
+        // aggregates silently.
+        let mut w = RegTopK::new(3, 1, 0.5, 1.0, 1.0);
+        let mut top = TopK::new(3, 1);
+        let mut o1 = SparseGrad::default();
+        let mut o2 = SparseGrad::default();
+        w.compress(&[1.0, 2.0, 3.0], &mut o1);
+        top.compress(&[1.0, 2.0, 3.0], &mut o2);
+        // no observe() — next round must equal TOP-k
+        w.compress(&[3.0, 2.0, 1.0], &mut o1);
+        top.compress(&[3.0, 2.0, 1.0], &mut o2);
+        assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn reset_restores_initial_behaviour() {
+        let g = vec![1.0, -2.0, 3.0];
+        let mut w = RegTopK::new(3, 1, 0.5, 1.0, 1.0);
+        let mut first = SparseGrad::default();
+        w.compress(&g, &mut first);
+        w.observe(&[0.5, 0.5, 0.5]);
+        let mut dummy = SparseGrad::default();
+        w.compress(&g, &mut dummy);
+        w.reset();
+        let mut again = SparseGrad::default();
+        w.compress(&g, &mut again);
+        assert_eq!(first, again);
+    }
+}

@@ -1,0 +1,183 @@
+//! Top-k index selection.
+//!
+//! The hot operation behind both TOP-k and REGTOP-k: given J scores, find
+//! the indices of the k largest. A full sort is O(J log J); we use an
+//! iterative quickselect (Hoare partition over an index buffer) for
+//! expected O(J), falling back to a deterministic pivot pattern that also
+//! handles adversarial inputs well. Ties break toward the lower index so
+//! results are deterministic and platform-independent.
+
+/// Select the indices of the `k` largest `scores` (by value, ties to the
+/// smaller index). Returns indices in ascending index order.
+///
+/// `scratch` is an index buffer reused across calls to avoid per-iteration
+/// allocation in the training loop; it is resized as needed.
+pub fn top_k_indices_into(scores: &[f32], k: usize, scratch: &mut Vec<u32>, out: &mut Vec<u32>) {
+    out.clear();
+    let n = scores.len();
+    if k == 0 || n == 0 {
+        return;
+    }
+    if k >= n {
+        out.extend(0..n as u32);
+        return;
+    }
+    scratch.clear();
+    scratch.extend(0..n as u32);
+    // Order: higher score first; tie -> lower index first.
+    let better = |a: u32, b: u32| -> bool {
+        let (sa, sb) = (scores[a as usize], scores[b as usize]);
+        sa > sb || (sa == sb && a < b)
+    };
+    // Iterative quickselect partitioning the first k "better" elements.
+    let (mut lo, mut hi) = (0usize, n);
+    let mut need = k;
+    loop {
+        debug_assert!(need >= 1 && lo + need <= hi);
+        if hi - lo <= need {
+            break;
+        }
+        // Median-of-three pivot on (lo, mid, hi-1) for robustness against
+        // sorted/constant inputs.
+        let mid = lo + (hi - lo) / 2;
+        let (a, b, c) = (scratch[lo], scratch[mid], scratch[hi - 1]);
+        let pivot = {
+            // median of a, b, c under `better`
+            if better(a, b) ^ better(a, c) {
+                a
+            } else if better(b, a) ^ better(b, c) {
+                b
+            } else {
+                c
+            }
+        };
+        // Partition: [lo, p) strictly better than pivot, [p, hi) the rest.
+        let mut p = lo;
+        // Move pivot out of the way by value comparison (indices unique).
+        for i in lo..hi {
+            if better(scratch[i], pivot) {
+                scratch.swap(i, p);
+                p += 1;
+            }
+        }
+        let left = p - lo;
+        if left == need {
+            break;
+        } else if left > need {
+            hi = p;
+        } else {
+            // Pivot itself belongs to the selection boundary; locate it.
+            // All of [lo, p) selected; continue right of p.
+            need -= left;
+            lo = p;
+            // Guard: if nothing was better than the pivot, the pivot is the
+            // single best remaining element — select it directly to ensure
+            // progress.
+            if left == 0 {
+                let pos = scratch[lo..hi].iter().position(|&x| x == pivot).unwrap() + lo;
+                scratch.swap(lo, pos);
+                lo += 1;
+                need -= 1;
+                if need == 0 {
+                    break;
+                }
+            }
+        }
+    }
+    out.extend_from_slice(&scratch[..k]);
+    out.sort_unstable();
+}
+
+/// Allocating convenience wrapper.
+pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<u32> {
+    let mut scratch = Vec::new();
+    let mut out = Vec::new();
+    top_k_indices_into(scores, k, &mut scratch, &mut out);
+    out
+}
+
+/// Reference O(J log J) implementation used by tests.
+pub fn top_k_indices_sort(scores: &[f32], k: usize) -> Vec<u32> {
+    let n = scores.len();
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    idx.sort_by(|&a, &b| {
+        scores[b as usize]
+            .partial_cmp(&scores[a as usize])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k.min(n));
+    idx.sort_unstable();
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+
+    #[test]
+    fn basic_selection() {
+        let scores = [1.0, 5.0, 3.0, 2.0, 4.0];
+        assert_eq!(top_k_indices(&scores, 2), vec![1, 4]);
+        assert_eq!(top_k_indices(&scores, 1), vec![1]);
+        assert_eq!(top_k_indices(&scores, 5), vec![0, 1, 2, 3, 4]);
+        assert_eq!(top_k_indices(&scores, 0), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn ties_break_to_lower_index() {
+        let scores = [2.0, 2.0, 2.0, 2.0];
+        assert_eq!(top_k_indices(&scores, 2), vec![0, 1]);
+        let scores = [1.0, 3.0, 3.0, 0.0];
+        assert_eq!(top_k_indices(&scores, 1), vec![1]);
+    }
+
+    #[test]
+    fn k_larger_than_len() {
+        assert_eq!(top_k_indices(&[1.0, 2.0], 10), vec![0, 1]);
+    }
+
+    #[test]
+    fn sorted_and_reverse_sorted_inputs() {
+        let asc: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        assert_eq!(top_k_indices(&asc, 3), vec![997, 998, 999]);
+        let desc: Vec<f32> = (0..1000).map(|i| (1000 - i) as f32).collect();
+        assert_eq!(top_k_indices(&desc, 3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn matches_sort_reference_property() {
+        check(200, |g| {
+            let scores = g.vec_normal(1..=512);
+            let k = g.usize_in(0..=scores.len());
+            let fast = top_k_indices(&scores, k);
+            let slow = top_k_indices_sort(&scores, k);
+            assert_eq!(fast, slow, "scores={scores:?} k={k}");
+        });
+    }
+
+    #[test]
+    fn matches_sort_reference_with_heavy_ties() {
+        check(100, |g| {
+            // Scores drawn from a tiny set force many ties.
+            let n = g.usize_in(1..=256);
+            let scores: Vec<f32> =
+                (0..n).map(|_| [0.0f32, 1.0, 2.0][g.usize_in(0..=2)]).collect();
+            let k = g.usize_in(0..=n);
+            assert_eq!(top_k_indices(&scores, k), top_k_indices_sort(&scores, k));
+        });
+    }
+
+    #[test]
+    fn scratch_reuse_is_consistent() {
+        let mut scratch = Vec::new();
+        let mut out = Vec::new();
+        let a = [5.0, 1.0, 4.0];
+        let b = [0.5, 0.9, 0.1, 0.7];
+        top_k_indices_into(&a, 2, &mut scratch, &mut out);
+        assert_eq!(out, vec![0, 2]);
+        top_k_indices_into(&b, 2, &mut scratch, &mut out);
+        assert_eq!(out, vec![1, 3]);
+    }
+}

@@ -1,0 +1,158 @@
+//! Classical TOP-k sparsification with error feedback (Algorithm 1).
+
+use super::select::top_k_indices_into;
+use super::{SparseGrad, Sparsifier};
+
+/// TOP-k state for one worker: the sparsification error `eps` and reusable
+/// scratch buffers so `compress` allocates nothing after warmup.
+pub struct TopK {
+    k: usize,
+    /// Sparsification error eps_n^t (carried across iterations).
+    eps: Vec<f32>,
+    /// Accumulated gradient a_n^t = eps + g (last compress call).
+    acc: Vec<f32>,
+    /// |a| scores scratch.
+    scores: Vec<f32>,
+    scratch: Vec<u32>,
+    selected: Vec<u32>,
+}
+
+impl TopK {
+    pub fn new(dim: usize, k: usize) -> Self {
+        assert!(k >= 1, "k must be >= 1");
+        TopK {
+            k,
+            eps: vec![0.0; dim],
+            acc: vec![0.0; dim],
+            scores: vec![0.0; dim],
+            scratch: Vec::new(),
+            selected: Vec::new(),
+        }
+    }
+}
+
+impl Sparsifier for TopK {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn compress(&mut self, grad: &[f32], out: &mut SparseGrad) {
+        assert_eq!(grad.len(), self.eps.len(), "gradient dimension mismatch");
+        out.clear();
+        // a = eps + g; score = |a|   (Algorithm 1, lines 3-4)
+        for j in 0..grad.len() {
+            let a = self.eps[j] + grad[j];
+            self.acc[j] = a;
+            self.scores[j] = a.abs();
+        }
+        top_k_indices_into(&self.scores, self.k, &mut self.scratch, &mut self.selected);
+        // ĝ = s ⊙ a ; eps' = a - ĝ   (lines 5-7)
+        self.eps.copy_from_slice(&self.acc);
+        for &i in &self.selected {
+            let i = i as usize;
+            out.indices.push(i as u32);
+            out.values.push(self.acc[i]);
+            self.eps[i] = 0.0;
+        }
+    }
+
+    fn error(&self) -> &[f32] {
+        &self.eps
+    }
+
+    fn last_accumulated(&self) -> &[f32] {
+        &self.acc
+    }
+
+    fn reset(&mut self) {
+        for v in self.eps.iter_mut() {
+            *v = 0.0;
+        }
+        for v in self.acc.iter_mut() {
+            *v = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+
+    #[test]
+    fn selects_largest_magnitudes() {
+        let mut s = TopK::new(4, 2);
+        let mut out = SparseGrad::default();
+        s.compress(&[1.0, -5.0, 3.0, -2.0], &mut out);
+        assert_eq!(out.indices, vec![1, 2]);
+        assert_eq!(out.values, vec![-5.0, 3.0]);
+        // Error keeps the unselected entries.
+        assert_eq!(s.error(), &[1.0, 0.0, 0.0, -2.0]);
+    }
+
+    #[test]
+    fn error_accumulation_promotes_entries() {
+        // The toy-example mechanism: a small entry is eventually selected
+        // once its accumulated error outgrows fresh large entries.
+        let mut s = TopK::new(2, 1);
+        let mut out = SparseGrad::default();
+        // g = [3, 1] repeatedly: entry 0 wins first, error on 1 grows.
+        s.compress(&[3.0, 1.0], &mut out);
+        assert_eq!(out.indices, vec![0]);
+        s.compress(&[3.0, 1.0], &mut out);
+        assert_eq!(out.indices, vec![0]); // eps1 = 2 < 3
+        s.compress(&[3.0, 1.0], &mut out);
+        assert_eq!(out.indices, vec![0]); // eps1 = 3 ties, index 0 wins
+        s.compress(&[3.0, 1.0], &mut out);
+        assert_eq!(out.indices, vec![1]); // eps1 = 4 > 3 — selected
+        assert_eq!(out.values, vec![4.0]); // learning-rate scaling: 4x
+    }
+
+    #[test]
+    fn conservation_property() {
+        // eps_{t+1} + ĝ_t == a_t  (no gradient mass is lost)
+        check(100, |g| {
+            let grad = g.vec_normal(1..=256);
+            let k = g.usize_in(1..=grad.len());
+            let mut s = TopK::new(grad.len(), k);
+            let mut out = SparseGrad::default();
+            // A couple of rounds with fresh gradients.
+            for _ in 0..3 {
+                let grad: Vec<f32> = grad.iter().map(|v| v * g.f32_in(0.5, 1.5)).collect();
+                s.compress(&grad, &mut out);
+                let dense = out.to_dense(grad.len());
+                for j in 0..grad.len() {
+                    let recon = dense[j] + s.error()[j];
+                    assert!(
+                        (recon - s.last_accumulated()[j]).abs() <= 1e-6,
+                        "j={j} recon={recon} acc={}",
+                        s.last_accumulated()[j]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn mask_has_exactly_k_entries() {
+        check(100, |g| {
+            let grad = g.vec_normal(1..=512);
+            let k = g.usize_in(1..=grad.len());
+            let mut s = TopK::new(grad.len(), k);
+            let mut out = SparseGrad::default();
+            s.compress(&grad, &mut out);
+            assert_eq!(out.len(), k.min(grad.len()));
+            // Indices sorted and unique.
+            assert!(out.indices.windows(2).all(|w| w[0] < w[1]));
+        });
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut s = TopK::new(3, 1);
+        let mut out = SparseGrad::default();
+        s.compress(&[1.0, 2.0, 3.0], &mut out);
+        s.reset();
+        assert!(s.error().iter().all(|&v| v == 0.0));
+    }
+}

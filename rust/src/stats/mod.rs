@@ -1,0 +1,394 @@
+//! Statistical machinery for the evaluation harness.
+//!
+//! Table 1 of the paper reports mean ± std over 10 common random seeds and
+//! claims statistical significance of REGTOP-k over TOP-k via *paired
+//! t-tests* and *Wilcoxon signed-rank tests* with p < 0.01. This module
+//! implements both tests (plus the special functions they need) from
+//! scratch, since no scipy equivalent exists on the rust side.
+
+/// Sample mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample standard deviation (n-1 denominator).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Result of a hypothesis test.
+#[derive(Clone, Copy, Debug)]
+pub struct TestResult {
+    /// Test statistic (t for the t-test, W for Wilcoxon).
+    pub statistic: f64,
+    /// Two-sided p-value.
+    pub p_value: f64,
+}
+
+/// Paired two-sided t-test on differences `a[i] - b[i]`.
+///
+/// Returns `None` when fewer than two pairs or when all differences are
+/// exactly zero (the statistic is undefined).
+pub fn paired_t_test(a: &[f64], b: &[f64]) -> Option<TestResult> {
+    assert_eq!(a.len(), b.len(), "paired test requires equal-length samples");
+    let n = a.len();
+    if n < 2 {
+        return None;
+    }
+    let d: Vec<f64> = a.iter().zip(b.iter()).map(|(x, y)| x - y).collect();
+    let md = mean(&d);
+    let sd = std_dev(&d);
+    if sd == 0.0 {
+        return None;
+    }
+    let t = md / (sd / (n as f64).sqrt());
+    let df = (n - 1) as f64;
+    let p = 2.0 * (1.0 - student_t_cdf(t.abs(), df));
+    Some(TestResult { statistic: t, p_value: p.clamp(0.0, 1.0) })
+}
+
+/// Wilcoxon signed-rank test (two-sided) with the normal approximation and
+/// tie-corrected variance; zero differences are dropped (Wilcoxon's rule).
+///
+/// For the n = 10 used in Table 1 the normal approximation is the standard
+/// practice (scipy's default switches to it for n > 25 but the continuity-
+/// corrected approximation is accurate enough at n = 10 for a p<0.01 call;
+/// we also expose the exact small-sample computation below).
+pub fn wilcoxon_signed_rank(a: &[f64], b: &[f64]) -> Option<TestResult> {
+    assert_eq!(a.len(), b.len());
+    let mut d: Vec<f64> = a
+        .iter()
+        .zip(b.iter())
+        .map(|(x, y)| x - y)
+        .filter(|v| *v != 0.0)
+        .collect();
+    let n = d.len();
+    if n < 2 {
+        return None;
+    }
+    // Rank |d| with average ranks for ties.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| d[i].abs().partial_cmp(&d[j].abs()).unwrap());
+    let mut ranks = vec![0.0f64; n];
+    let mut tie_correction = 0.0f64;
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && d[order[j + 1]].abs() == d[order[i]].abs() {
+            j += 1;
+        }
+        let avg_rank = (i + j) as f64 / 2.0 + 1.0;
+        let tie_len = (j - i + 1) as f64;
+        if tie_len > 1.0 {
+            tie_correction += tie_len * tie_len * tie_len - tie_len;
+        }
+        for &idx in &order[i..=j] {
+            ranks[idx] = avg_rank;
+        }
+        i = j + 1;
+    }
+    let w_plus: f64 = d
+        .iter()
+        .zip(ranks.iter())
+        .filter(|(v, _)| **v > 0.0)
+        .map(|(_, r)| *r)
+        .sum();
+    // Exact distribution for small n without ties; normal approx otherwise.
+    if n <= 20 && tie_correction == 0.0 {
+        let p = wilcoxon_exact_p(w_plus, n);
+        return Some(TestResult { statistic: w_plus, p_value: p });
+    }
+    let nf = n as f64;
+    let mean_w = nf * (nf + 1.0) / 4.0;
+    let var_w = nf * (nf + 1.0) * (2.0 * nf + 1.0) / 24.0 - tie_correction / 48.0;
+    if var_w <= 0.0 {
+        d.clear();
+        return None;
+    }
+    // Continuity correction.
+    let z = (w_plus - mean_w - 0.5 * (w_plus - mean_w).signum()) / var_w.sqrt();
+    let p = 2.0 * (1.0 - std_normal_cdf(z.abs()));
+    Some(TestResult { statistic: w_plus, p_value: p.clamp(0.0, 1.0) })
+}
+
+/// Exact two-sided Wilcoxon p-value by enumerating the signed-rank
+/// distribution via dynamic programming (feasible for n <= 20).
+fn wilcoxon_exact_p(w_plus: f64, n: usize) -> f64 {
+    let max_w = n * (n + 1) / 2;
+    // counts[w] = number of sign assignments with W+ == w
+    let mut counts = vec![0.0f64; max_w + 1];
+    counts[0] = 1.0;
+    for r in 1..=n {
+        for w in (r..=max_w).rev() {
+            counts[w] += counts[w - r];
+        }
+    }
+    let total: f64 = counts.iter().sum(); // = 2^n
+    let mean_w = max_w as f64 / 2.0;
+    // Two-sided: sum probability of outcomes at least as extreme as w_plus.
+    let dist = (w_plus - mean_w).abs();
+    let p: f64 = counts
+        .iter()
+        .enumerate()
+        .filter(|(w, _)| (*w as f64 - mean_w).abs() >= dist - 1e-9)
+        .map(|(_, c)| c)
+        .sum::<f64>()
+        / total;
+    p.min(1.0)
+}
+
+/// Standard normal CDF via erf.
+pub fn std_normal_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Error function — Abramowitz & Stegun 7.1.26 refined with the
+/// Numerical-Recipes `erfc` rational approximation (|error| < 1.2e-7).
+pub fn erf(x: f64) -> f64 {
+    1.0 - erfc(x)
+}
+
+/// Complementary error function.
+pub fn erfc(x: f64) -> f64 {
+    let z = x.abs();
+    let t = 1.0 / (1.0 + 0.5 * z);
+    let ans = t
+        * (-z * z - 1.26551223
+            + t * (1.00002368
+                + t * (0.37409196
+                    + t * (0.09678418
+                        + t * (-0.18628806
+                            + t * (0.27886807
+                                + t * (-1.13520398
+                                    + t * (1.48851587
+                                        + t * (-0.82215223 + t * 0.17087277)))))))))
+        .exp();
+    if x >= 0.0 {
+        ans
+    } else {
+        2.0 - ans
+    }
+}
+
+/// Student-t CDF for t >= 0 via the regularized incomplete beta function.
+pub fn student_t_cdf(t: f64, df: f64) -> f64 {
+    if t == 0.0 {
+        return 0.5;
+    }
+    let x = df / (df + t * t);
+    let ib = betainc(0.5 * df, 0.5, x);
+    if t > 0.0 {
+        1.0 - 0.5 * ib
+    } else {
+        0.5 * ib
+    }
+}
+
+/// Regularized incomplete beta I_x(a, b) via continued fraction (NR 6.4).
+pub fn betainc(a: f64, b: f64, x: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if x >= 1.0 {
+        return 1.0;
+    }
+    let ln_front =
+        ln_gamma(a + b) - ln_gamma(a) - ln_gamma(b) + a * x.ln() + b * (1.0 - x).ln();
+    let front = ln_front.exp();
+    if x < (a + 1.0) / (a + b + 2.0) {
+        front * betacf(a, b, x) / a
+    } else {
+        1.0 - front * betacf(b, a, 1.0 - x) / b
+    }
+}
+
+/// Continued fraction for betainc (Lentz's method).
+fn betacf(a: f64, b: f64, x: f64) -> f64 {
+    const MAX_ITER: usize = 200;
+    const EPS: f64 = 3e-14;
+    const FPMIN: f64 = 1e-300;
+    let qab = a + b;
+    let qap = a + 1.0;
+    let qam = a - 1.0;
+    let mut c = 1.0;
+    let mut d = 1.0 - qab * x / qap;
+    if d.abs() < FPMIN {
+        d = FPMIN;
+    }
+    d = 1.0 / d;
+    let mut h = d;
+    for m in 1..=MAX_ITER {
+        let m = m as f64;
+        let m2 = 2.0 * m;
+        let aa = m * (b - m) * x / ((qam + m2) * (a + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        h *= d * c;
+        let aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < EPS {
+            break;
+        }
+    }
+    h
+}
+
+/// ln Gamma(x) (Lanczos approximation, g = 7, n = 9).
+pub fn ln_gamma(x: f64) -> f64 {
+    const COEFFS: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        return std::f64::consts::PI.ln()
+            - (std::f64::consts::PI * x).sin().ln()
+            - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut acc = COEFFS[0];
+    for (i, &c) in COEFFS.iter().enumerate().skip(1) {
+        acc += c / (x + i as f64);
+    }
+    let t = x + 7.5;
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + acc.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.13809).abs() < 1e-4);
+    }
+
+    #[test]
+    fn erf_reference_values() {
+        // The NR rational approximation has |error| < 1.2e-7.
+        assert!((erf(0.0)).abs() < 1e-6);
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-6);
+        assert!((erf(2.0) - 0.9953222650).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normal_cdf_reference() {
+        assert!((std_normal_cdf(0.0) - 0.5).abs() < 1e-6);
+        assert!((std_normal_cdf(1.96) - 0.9750021).abs() < 1e-5);
+        assert!((std_normal_cdf(-1.6449) - 0.05).abs() < 1e-4);
+    }
+
+    #[test]
+    fn ln_gamma_reference() {
+        // Gamma(5) = 24
+        assert!((ln_gamma(5.0) - 24.0f64.ln()).abs() < 1e-10);
+        // Gamma(0.5) = sqrt(pi)
+        assert!((ln_gamma(0.5) - std::f64::consts::PI.sqrt().ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn t_cdf_reference_values() {
+        // From t-tables: P(T <= 2.228 | df=10) ~= 0.975
+        assert!((student_t_cdf(2.228, 10.0) - 0.975).abs() < 1e-3);
+        // P(T <= 0) = 0.5 for any df.
+        assert!((student_t_cdf(0.0, 3.0) - 0.5).abs() < 1e-12);
+        // Symmetric.
+        let a = student_t_cdf(1.5, 7.0);
+        let b = student_t_cdf(-1.5, 7.0);
+        assert!((a + b - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn paired_t_known_case() {
+        // Classic example: differences with known t statistic.
+        let a = [30.0, 31.0, 34.0, 40.0, 36.0, 35.0, 34.0, 30.0, 28.0, 29.0];
+        let b = [26.0, 25.0, 33.0, 36.0, 32.0, 30.0, 31.0, 27.0, 22.0, 25.0];
+        let r = paired_t_test(&a, &b).unwrap();
+        // scipy.stats.ttest_rel(a, b) -> t = 8.485281, p = 1.3786e-5
+        assert!((r.statistic - 8.485281).abs() < 1e-4, "t={}", r.statistic);
+        assert!((r.p_value - 1.3786e-5).abs() < 1e-7, "p={}", r.p_value);
+    }
+
+    #[test]
+    fn paired_t_no_difference_is_none() {
+        let a = [1.0, 2.0, 3.0];
+        assert!(paired_t_test(&a, &a).is_none());
+    }
+
+    #[test]
+    fn paired_t_large_overlap_is_insignificant() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [1.1, 1.9, 3.2, 3.8, 5.1, 5.9];
+        let r = paired_t_test(&a, &b).unwrap();
+        assert!(r.p_value > 0.05, "p={}", r.p_value);
+    }
+
+    #[test]
+    fn wilcoxon_known_case() {
+        // scipy.stats.wilcoxon with n=10 distinct differences (exact mode):
+        let a = [125.0, 115.0, 130.0, 140.0, 140.0, 115.0, 140.0, 125.0, 140.0, 135.0];
+        let b = [110.0, 122.0, 125.0, 120.0, 140.0, 124.0, 123.0, 137.0, 135.0, 145.0];
+        // differences: 15,-7,5,20,0,-9,17,-12,5,-10 -> drop the zero, n=9,
+        // with one tie (two 5s) -> tie-corrected normal approximation.
+        let r = wilcoxon_signed_rank(&a, &b).unwrap();
+        // W+ = 27 (sum of positive ranks); scipy's exact two-sided p is
+        // 0.6328; our continuity-corrected normal approx gives 0.635.
+        assert!((r.statistic - 27.0).abs() < 1e-9, "W={}", r.statistic);
+        assert!((r.p_value - 0.633).abs() < 0.05, "p={}", r.p_value);
+    }
+
+    #[test]
+    fn wilcoxon_strong_effect_is_significant() {
+        let a: Vec<f64> = (0..10).map(|i| 10.0 + i as f64).collect();
+        let b: Vec<f64> = (0..10).map(|i| 1.0 + 0.5 * i as f64).collect();
+        let r = wilcoxon_signed_rank(&a, &b).unwrap();
+        assert!(r.p_value < 0.01, "p={}", r.p_value);
+    }
+
+    #[test]
+    fn wilcoxon_exact_dp_total_is_power_of_two() {
+        // sanity on the DP: distribution over W+ for n ranks sums to 2^n
+        let p_all = wilcoxon_exact_p(0.0, 8); // includes everything on one side
+        assert!(p_all > 0.0 && p_all <= 1.0);
+    }
+
+    #[test]
+    fn wilcoxon_identical_is_none() {
+        let a = [1.0, 2.0, 3.0];
+        assert!(wilcoxon_signed_rank(&a, &a).is_none());
+    }
+}

@@ -1,0 +1,238 @@
+//! Row-major dense matrix with the handful of BLAS-2/3 operations the
+//! native models need: `A x`, `A^T x`, and a blocked `A B` used by tests.
+
+/// Row-major `rows x cols` matrix of `f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    /// Zero-initialized matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from existing row-major data.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Immutable row view.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable row view.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// out = A x  (out has length rows).
+    pub fn matvec(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        for r in 0..self.rows {
+            out[r] = super::dot(self.row(r), x);
+        }
+    }
+
+    /// out = A^T x  (out has length cols). Row-major friendly: accumulate
+    /// row-by-row so memory access stays sequential.
+    pub fn matvec_t(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        for v in out.iter_mut() {
+            *v = 0.0;
+        }
+        for r in 0..self.rows {
+            let xr = x[r];
+            if xr == 0.0 {
+                continue;
+            }
+            let row = self.row(r);
+            for c in 0..self.cols {
+                out[c] += xr * row[c];
+            }
+        }
+    }
+
+    /// C = A B (allocating; used by the closed-form optimum solver, not the
+    /// training hot loop).
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows);
+        let mut c = Matrix::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let aik = self.get(i, k);
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = b.row(k);
+                let crow = c.row_mut(i);
+                for j in 0..b.cols {
+                    crow[j] += aik * brow[j];
+                }
+            }
+        }
+        c
+    }
+
+    /// A^T A — the Gram matrix needed for the least-squares optimum (50).
+    pub fn gram(&self) -> Matrix {
+        let mut g = Matrix::zeros(self.cols, self.cols);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for i in 0..self.cols {
+                let ri = row[i];
+                if ri == 0.0 {
+                    continue;
+                }
+                let grow = &mut g.data[i * self.cols..(i + 1) * self.cols];
+                for j in 0..self.cols {
+                    grow[j] += ri * row[j];
+                }
+            }
+        }
+        g
+    }
+
+    /// Solve `A x = b` for square symmetric positive-definite A via
+    /// Gaussian elimination with partial pivoting. Used once per experiment
+    /// to compute the paper's analytical optimum theta* (eq. 50).
+    pub fn solve(&self, b: &[f32]) -> Option<Vec<f32>> {
+        assert_eq!(self.rows, self.cols);
+        assert_eq!(b.len(), self.rows);
+        let n = self.rows;
+        // Work in f64 for stability.
+        let mut a: Vec<f64> = self.data.iter().map(|&v| v as f64).collect();
+        let mut x: Vec<f64> = b.iter().map(|&v| v as f64).collect();
+        for col in 0..n {
+            // Partial pivot.
+            let mut piv = col;
+            let mut best = a[col * n + col].abs();
+            for r in (col + 1)..n {
+                let v = a[r * n + col].abs();
+                if v > best {
+                    best = v;
+                    piv = r;
+                }
+            }
+            if best < 1e-12 {
+                return None; // singular
+            }
+            if piv != col {
+                for c in 0..n {
+                    a.swap(col * n + c, piv * n + c);
+                }
+                x.swap(col, piv);
+            }
+            let d = a[col * n + col];
+            for r in (col + 1)..n {
+                let f = a[r * n + col] / d;
+                if f == 0.0 {
+                    continue;
+                }
+                for c in col..n {
+                    a[r * n + c] -= f * a[col * n + c];
+                }
+                x[r] -= f * x[col];
+            }
+        }
+        // Back substitution.
+        for col in (0..n).rev() {
+            let mut s = x[col];
+            for c in (col + 1)..n {
+                s -= a[col * n + c] * x[c];
+            }
+            x[col] = s / a[col * n + col];
+        }
+        Some(x.into_iter().map(|v| v as f32).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_matches_manual() {
+        let a = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let mut out = vec![0.0; 2];
+        a.matvec(&[1.0, 0.0, -1.0], &mut out);
+        assert_eq!(out, vec![-2.0, -2.0]);
+    }
+
+    #[test]
+    fn matvec_t_matches_manual() {
+        let a = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let mut out = vec![0.0; 3];
+        a.matvec_t(&[1.0, -1.0], &mut out);
+        assert_eq!(out, vec![-3.0, -3.0, -3.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let i = Matrix::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(a.matmul(&i), a);
+    }
+
+    #[test]
+    fn gram_is_at_a() {
+        let a = Matrix::from_vec(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let g = a.gram();
+        // A^T A = [[35, 44], [44, 56]]
+        assert_eq!(g.data, vec![35.0, 44.0, 44.0, 56.0]);
+    }
+
+    #[test]
+    fn solve_recovers_known_solution() {
+        // SPD system: A = [[4,1],[1,3]], x = [1, 2] => b = [6, 7]
+        let a = Matrix::from_vec(2, 2, vec![4.0, 1.0, 1.0, 3.0]);
+        let x = a.solve(&[6.0, 7.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-5);
+        assert!((x[1] - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn solve_detects_singular() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        assert!(a.solve(&[1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn solve_random_spd_roundtrip() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::seed_from_u64(11);
+        let n = 8;
+        let b = Matrix::from_vec(n, n, rng.normal_vec(n * n, 0.0, 1.0));
+        let mut spd = b.gram();
+        for i in 0..n {
+            let v = spd.get(i, i) + 1.0; // regularize
+            spd.set(i, i, v);
+        }
+        let x_true: Vec<f32> = rng.normal_vec(n, 0.0, 1.0);
+        let mut rhs = vec![0.0; n];
+        spd.matvec(&x_true, &mut rhs);
+        let x = spd.solve(&rhs).unwrap();
+        for i in 0..n {
+            assert!((x[i] - x_true[i]).abs() < 1e-3, "i={i} {} vs {}", x[i], x_true[i]);
+        }
+    }
+}

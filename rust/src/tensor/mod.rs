@@ -1,0 +1,194 @@
+//! Dense tensor substrate: flat `f32` vectors and row-major matrices.
+//!
+//! The environment vendors no `ndarray`, so the native compute path (used
+//! by the linear-regression / logistic experiments and by the coordinator's
+//! hot loop) is built on this module. Kept deliberately small: vectors are
+//! plain `Vec<f32>` and matrices are a thin row-major wrapper; all hot
+//! operations take `&mut` output buffers so the training loop allocates
+//! nothing per iteration.
+
+pub mod matrix;
+
+pub use matrix::Matrix;
+
+/// y += alpha * x
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Inner product <x; y>.
+///
+/// Eight independent f32 lanes: auto-vectorizes to SIMD FMAs and the
+/// lane-split accumulation keeps rounding error O(log n)-ish in practice —
+/// measured ~8x faster than the naive f64-upcast loop it replaced
+/// (EXPERIMENTS.md §Perf), which dominated the linreg experiment sweeps.
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    const LANES: usize = 8;
+    let chunks = x.len() / LANES;
+    let mut acc = [0.0f32; LANES];
+    for c in 0..chunks {
+        let xs = &x[c * LANES..(c + 1) * LANES];
+        let ys = &y[c * LANES..(c + 1) * LANES];
+        for l in 0..LANES {
+            acc[l] += xs[l] * ys[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * LANES..x.len() {
+        tail += x[i] * y[i];
+    }
+    // Pairwise lane reduction.
+    let s01 = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    let s23 = (acc[4] + acc[5]) + (acc[6] + acc[7]);
+    s01 + s23 + tail
+}
+
+/// Euclidean norm ||x||_2.
+pub fn norm2(x: &[f32]) -> f32 {
+    x.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt() as f32
+}
+
+/// L1 norm ||x||_1.
+pub fn norm1(x: &[f32]) -> f32 {
+    x.iter().map(|v| (*v as f64).abs()).sum::<f64>() as f32
+}
+
+/// ||x - y||_2 — the optimality-gap metric delta^t = ||theta^t - theta*||.
+pub fn dist2(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter()
+        .zip(y.iter())
+        .map(|(a, b)| {
+            let d = (*a as f64) - (*b as f64);
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt() as f32
+}
+
+/// out = x - y (elementwise).
+pub fn sub(x: &[f32], y: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    for i in 0..x.len() {
+        out[i] = x[i] - y[i];
+    }
+}
+
+/// x *= alpha.
+pub fn scale(x: &mut [f32], alpha: f32) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// Set all entries to zero (reuse buffers rather than reallocating).
+pub fn zero(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = 0.0;
+    }
+}
+
+/// Stable softmax over a slice, in place.
+pub fn softmax_inplace(x: &mut [f32]) {
+    let max = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f64;
+    for v in x.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v as f64;
+    }
+    let inv = (1.0 / sum) as f32;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Numerically-stable sigmoid.
+pub fn sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// log(1 + exp(-x)) without overflow — the logistic loss of the toy example.
+pub fn log1p_exp_neg(x: f32) -> f32 {
+    if x >= 0.0 {
+        (-x).exp().ln_1p()
+    } else {
+        -x + x.exp().ln_1p()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_accumulates() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [10.0, 10.0, 10.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 14.0, 16.0]);
+    }
+
+    #[test]
+    fn dot_and_norms() {
+        let x = [3.0, 4.0];
+        assert_eq!(dot(&x, &x), 25.0);
+        assert_eq!(norm2(&x), 5.0);
+        assert_eq!(norm1(&x), 7.0);
+    }
+
+    #[test]
+    fn dist2_is_symmetric() {
+        let x = [1.0, 2.0, 3.0];
+        let y = [4.0, 6.0, 3.0];
+        assert_eq!(dist2(&x, &y), 5.0);
+        assert_eq!(dist2(&y, &x), 5.0);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut x = [1.0, 2.0, 3.0, 4.0];
+        softmax_inplace(&mut x);
+        let s: f32 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(x.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant_and_stable() {
+        let mut a = [1000.0, 1001.0];
+        softmax_inplace(&mut a);
+        let mut b = [0.0, 1.0];
+        softmax_inplace(&mut b);
+        assert!((a[0] - b[0]).abs() < 1e-6);
+        assert!(a.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn sigmoid_extremes() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!(sigmoid(100.0) > 0.999_999);
+        assert!(sigmoid(-100.0) < 1e-6);
+        assert!(sigmoid(-1000.0).is_finite());
+    }
+
+    #[test]
+    fn log1p_exp_neg_matches_naive_in_safe_range() {
+        for x in [-5.0f32, -1.0, 0.0, 1.0, 5.0] {
+            let naive = (1.0 + (-x).exp()).ln();
+            assert!((log1p_exp_neg(x) - naive).abs() < 1e-5, "x={x}");
+        }
+        // And survives where the naive form overflows:
+        assert!(log1p_exp_neg(-200.0).is_finite());
+        assert!((log1p_exp_neg(-200.0) - 200.0).abs() < 1e-3);
+    }
+}

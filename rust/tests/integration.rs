@@ -1,0 +1,196 @@
+//! Cross-module integration tests: full training runs, paper-level
+//! behaviour at realistic scale, config plumbing, and the cross-language
+//! gradient check (native rust MLP vs the JAX-compiled artifact).
+
+use regtopk::config::{ConfigDoc, TrainConfig};
+use regtopk::coordinator::{run_linreg_on, RunOpts};
+use regtopk::data::linreg::LinRegGenConfig;
+use regtopk::runtime::Manifest;
+use regtopk::sparsify::SparsifierKind;
+
+fn paper_gen(workers: usize, dim: usize, points: usize) -> LinRegGenConfig {
+    LinRegGenConfig {
+        workers,
+        dim,
+        points_per_worker: points,
+        u: 0.0,
+        sigma2: 5.0,
+        h2: 1.0,
+        eps2: 0.5,
+        homogeneous: false,
+    }
+}
+
+/// The paper's headline (Fig. 3, S = 0.6) at full scale: REGTOP-k reaches
+/// the optimum (gap < 1e-3) while TOP-k plateaus orders of magnitude away.
+#[test]
+fn paper_scale_fig3_separation() {
+    let gen = paper_gen(20, 100, 500);
+    let mk = |kind| TrainConfig {
+        workers: 20,
+        dim: 100,
+        sparsity: 0.6,
+        sparsifier: kind,
+        lr: 0.01,
+        iters: 2500,
+        seed: 0,
+        log_every: 250,
+        ..Default::default()
+    };
+    let topk = run_linreg_on(&mk(SparsifierKind::TopK), &gen, &RunOpts::default()).unwrap();
+    let reg = run_linreg_on(
+        &mk(SparsifierKind::RegTopK { mu: 1.0, y: 1.0 }),
+        &gen,
+        &RunOpts::default(),
+    )
+    .unwrap();
+    assert!(
+        reg.final_gap() < 1e-3,
+        "REGTOP-k must converge at S=0.6, gap={:.3e}",
+        reg.final_gap()
+    );
+    assert!(
+        topk.final_gap() > 100.0 * reg.final_gap(),
+        "TOP-k must stall: topk={:.3e} regtopk={:.3e}",
+        topk.final_gap(),
+        reg.final_gap()
+    );
+}
+
+/// Config file -> training run plumbing.
+#[test]
+fn train_from_config_document() {
+    let doc = ConfigDoc::parse(
+        "workers = 4\ndim = 16\nsparsity = 0.5\nsparsifier = regtopk\nmu = 2.0\n\
+         lr = 0.01\niters = 50\nseed = 3\n",
+    )
+    .unwrap();
+    let mut cfg = TrainConfig::default();
+    cfg.apply_doc(&doc).unwrap();
+    assert_eq!(cfg.workers, 4);
+    assert_eq!(cfg.sparsifier, SparsifierKind::RegTopK { mu: 2.0, y: 1.0 });
+    let gen = LinRegGenConfig {
+        workers: 4,
+        dim: 16,
+        points_per_worker: 50,
+        ..Default::default()
+    };
+    let report = run_linreg_on(&cfg, &gen, &RunOpts::default()).unwrap();
+    assert_eq!(report.result.iters, 50);
+}
+
+/// Cross-language check: the AOT-compiled JAX MLP gradient must match the
+/// native rust MLP gradient on the same flat parameter vector.
+#[test]
+fn hlo_mlp_gradient_matches_native() {
+    let dir = regtopk::runtime::hlo_grad::default_artifacts_dir();
+    if !Manifest::available(&dir) {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    use regtopk::models::{Mlp, MlpConfig};
+    use regtopk::rng::Pcg64;
+    let mut engine = regtopk::runtime::Engine::new(&dir).unwrap();
+    let entry = engine.entry("mlp_grad").unwrap();
+    let (input, hidden, classes, batch) = (
+        entry.meta_usize("input").unwrap(),
+        entry.meta_usize("hidden").unwrap(),
+        entry.meta_usize("classes").unwrap(),
+        entry.meta_usize("batch").unwrap(),
+    );
+    let cfg = MlpConfig { input, hidden, classes };
+    let mut rng = Pcg64::seed_from_u64(9);
+    let theta = cfg.init(&mut rng);
+    // Random batch with one-hot labels.
+    let mut x = vec![0.0f32; batch * input];
+    rng.fill_normal(&mut x, 0.0, 1.0);
+    let labels: Vec<usize> = (0..batch).map(|b| b % classes).collect();
+    let mut y_onehot = vec![0.0f32; batch * classes];
+    for (b, &l) in labels.iter().enumerate() {
+        y_onehot[b * classes + l] = 1.0;
+    }
+    let outs = engine.run_f32("mlp_grad", &[&theta, &x, &y_onehot]).unwrap();
+    // Native gradient on the identical batch.
+    let mut mlp = Mlp::new(cfg);
+    let refs: Vec<(&[f32], usize)> = labels
+        .iter()
+        .enumerate()
+        .map(|(b, &l)| (&x[b * input..(b + 1) * input], l))
+        .collect();
+    let mut native = vec![0.0f32; cfg.dim()];
+    let (native_loss, _) = mlp.batch_grad(&theta, &refs, &mut native);
+    let hlo_loss = outs[1][0] as f64;
+    assert!(
+        (native_loss - hlo_loss).abs() < 1e-4 * (1.0 + native_loss.abs()),
+        "loss: native {native_loss} vs hlo {hlo_loss}"
+    );
+    let mut max_rel = 0.0f32;
+    for (j, (a, b)) in outs[0].iter().zip(native.iter()).enumerate() {
+        let rel = (a - b).abs() / (1e-4 + b.abs());
+        if rel > max_rel {
+            max_rel = rel;
+        }
+        assert!(
+            rel < 1e-2,
+            "grad[{j}]: hlo {a} vs native {b} (rel {rel})"
+        );
+    }
+    println!("max relative gradient deviation: {max_rel:.2e}");
+}
+
+/// Failure injection: a missing artifact directory errors cleanly (no
+/// panic), and an unknown entry name is a descriptive error.
+#[test]
+fn runtime_failure_modes() {
+    let err = match regtopk::runtime::Engine::new("/nonexistent/path") {
+        Ok(_) => panic!("missing artifacts dir must be an error"),
+        Err(e) => e,
+    };
+    assert!(err.to_string().contains("make artifacts"), "{err}");
+    let dir = regtopk::runtime::hlo_grad::default_artifacts_dir();
+    if Manifest::available(&dir) {
+        let mut engine = regtopk::runtime::Engine::new(&dir).unwrap();
+        let err = engine.run_f32("not_an_entry", &[]).unwrap_err();
+        assert!(err.to_string().contains("not in manifest"), "{err}");
+    }
+}
+
+/// Hard-threshold baseline stalls like TOP-k on the heterogeneous problem
+/// (the paper's §1.5 claim that existing TOP-k extensions behave the same
+/// with respect to learning-rate scaling).
+#[test]
+fn hard_threshold_behaves_like_topk_wrt_scaling() {
+    let gen = paper_gen(8, 40, 120);
+    let mk = |kind| TrainConfig {
+        workers: 8,
+        dim: 40,
+        sparsity: 0.6,
+        sparsifier: kind,
+        lr: 0.01,
+        iters: 1200,
+        seed: 1,
+        log_every: 200,
+        ..Default::default()
+    };
+    // λ = 1.0 is restrictive near the optimum (gradient entries < λ reach
+    // the server only after error accumulation — the scaled-learning-rate
+    // regime); a loose λ would simply degenerate to dense sending.
+    let ht = run_linreg_on(
+        &mk(SparsifierKind::HardThreshold { lambda: 1.0 }),
+        &gen,
+        &RunOpts::default(),
+    )
+    .unwrap();
+    let reg = run_linreg_on(
+        &mk(SparsifierKind::RegTopK { mu: 1.0, y: 1.0 }),
+        &gen,
+        &RunOpts::default(),
+    )
+    .unwrap();
+    assert!(
+        reg.final_gap() < ht.final_gap(),
+        "regtopk {:.3e} should beat hard-threshold {:.3e}",
+        reg.final_gap(),
+        ht.final_gap()
+    );
+}
