@@ -1,22 +1,195 @@
 //! Hot-path micro-benchmarks: the per-worker per-iteration sparsifier
-//! cost (score + select + error update), the selection kernel itself, and
-//! the native-vs-HLO score ablation.
+//! cost (score + select + error update + sparse-broadcast observe), the
+//! selection kernel itself, and the native-vs-HLO score ablation.
+//!
+//! The headline comparison is `regtopk` (current: branchless sweep +
+//! O(k) patch/state-roll + sparse union observe) vs `regtopk_seed_fused`
+//! — a verbatim port of the seed's implementation (fused branchy sweep,
+//! two J-sized state copies, J-sized mask clear, dense J-sized observe) —
+//! at the paper's practical regime k = 0.1% of J.
 //!
 //! `cargo bench --bench sparsify_hot` (REGTOPK_BENCH_FAST=1 for smoke).
+//! Results are also written to `BENCH_sparsify_hot.json` for PR-over-PR
+//! perf diffing.
 
 use regtopk::bench::{black_box, Bencher};
 use regtopk::rng::Pcg64;
 use regtopk::sparsify::select::{top_k_indices_into, top_k_indices_sort};
-use regtopk::sparsify::{SparseGrad, SparsifierKind};
+use regtopk::sparsify::{SparseGrad, SparseView, SparsifierKind};
+
+/// The seed's full-range quickselect (no sampling pre-filter) — the
+/// selection the seed's hot loop actually ran, ported verbatim so the
+/// baseline below is faithful.
+fn seed_top_k_indices_into(scores: &[f32], k: usize, scratch: &mut Vec<u32>, out: &mut Vec<u32>) {
+    out.clear();
+    let n = scores.len();
+    if k == 0 || n == 0 {
+        return;
+    }
+    if k >= n {
+        out.extend(0..n as u32);
+        return;
+    }
+    scratch.clear();
+    scratch.extend(0..n as u32);
+    let better = |a: u32, b: u32| -> bool {
+        let (sa, sb) = (scores[a as usize], scores[b as usize]);
+        sa > sb || (sa == sb && a < b)
+    };
+    let (mut lo, mut hi) = (0usize, n);
+    let mut need = k;
+    loop {
+        if hi - lo <= need {
+            break;
+        }
+        let mid = lo + (hi - lo) / 2;
+        let (a, b, c) = (scratch[lo], scratch[mid], scratch[hi - 1]);
+        let pivot = {
+            if better(a, b) ^ better(a, c) {
+                a
+            } else if better(b, a) ^ better(b, c) {
+                b
+            } else {
+                c
+            }
+        };
+        let mut p = lo;
+        for i in lo..hi {
+            if better(scratch[i], pivot) {
+                scratch.swap(i, p);
+                p += 1;
+            }
+        }
+        let left = p - lo;
+        if left == need {
+            break;
+        } else if left > need {
+            hi = p;
+        } else {
+            need -= left;
+            lo = p;
+            if left == 0 {
+                let pos = scratch[lo..hi].iter().position(|&x| x == pivot).unwrap() + lo;
+                scratch.swap(lo, pos);
+                lo += 1;
+                need -= 1;
+                if need == 0 {
+                    break;
+                }
+            }
+        }
+    }
+    out.extend_from_slice(&scratch[..k]);
+    out.sort_unstable();
+}
+
+/// The seed's REGTOP-k hot loop, kept verbatim as the baseline this PR's
+/// acceptance criterion measures against: dense `observe` (full J copy),
+/// branchy fused score sweep reading a J-sized mask, a state roll of
+/// two `copy_from_slice` over J plus a J-sized mask clear, and the seed's
+/// full-range quickselect.
+struct SeedRegTopK {
+    k: usize,
+    omega: f32,
+    mu: f32,
+    c: f32,
+    t: usize,
+    eps: Vec<f32>,
+    acc: Vec<f32>,
+    acc_prev: Vec<f32>,
+    mask_prev: Vec<bool>,
+    agg_prev: Vec<f32>,
+    has_agg: bool,
+    scores: Vec<f32>,
+    scratch: Vec<u32>,
+    selected: Vec<u32>,
+}
+
+impl SeedRegTopK {
+    fn new(dim: usize, k: usize, omega: f32, mu: f32) -> Self {
+        SeedRegTopK {
+            k,
+            omega,
+            mu,
+            c: 1.0,
+            t: 0,
+            eps: vec![0.0; dim],
+            acc: vec![0.0; dim],
+            acc_prev: vec![0.0; dim],
+            mask_prev: vec![false; dim],
+            agg_prev: vec![0.0; dim],
+            has_agg: false,
+            scores: vec![0.0; dim],
+            scratch: Vec::new(),
+            selected: Vec::new(),
+        }
+    }
+
+    fn compress(&mut self, grad: &[f32], out: &mut SparseGrad) {
+        out.clear();
+        let regularized = self.t > 0 && self.has_agg;
+        for j in 0..grad.len() {
+            let a = self.eps[j] + grad[j];
+            self.acc[j] = a;
+            let prior = a.abs();
+            let u = if regularized && self.mask_prev[j] {
+                let denom = self.omega * self.acc_prev[j];
+                if denom.abs() < 1e-30 {
+                    self.c
+                } else {
+                    let delta = (self.agg_prev[j] - denom) / denom;
+                    ((1.0 + delta).abs() / self.mu).tanh()
+                }
+            } else {
+                self.c
+            };
+            self.scores[j] = prior * u;
+        }
+        seed_top_k_indices_into(&self.scores, self.k, &mut self.scratch, &mut self.selected);
+        self.eps.copy_from_slice(&self.acc);
+        for m in self.mask_prev.iter_mut() {
+            *m = false;
+        }
+        for &i in &self.selected {
+            let i = i as usize;
+            out.indices.push(i as u32);
+            out.values.push(self.acc[i]);
+            self.eps[i] = 0.0;
+            self.mask_prev[i] = true;
+        }
+        self.acc_prev.copy_from_slice(&self.acc);
+        self.has_agg = false;
+        self.t += 1;
+    }
+
+    fn observe_dense(&mut self, agg: &[f32]) {
+        self.agg_prev.copy_from_slice(agg);
+        self.has_agg = true;
+    }
+}
+
+/// A synthetic broadcast union of roughly `workers * k` sorted indices
+/// (as a 20-worker server round would produce).
+fn synth_union(j: usize, k: usize, workers: usize, rng: &mut Pcg64) -> SparseGrad {
+    let want = (workers * k).min(j);
+    let mut indices: Vec<u32> =
+        rng.sample_indices(j, want).into_iter().map(|i| i as u32).collect();
+    indices.sort_unstable();
+    indices.dedup();
+    let values = rng.normal_vec(indices.len(), 0.0, 0.1);
+    SparseGrad { indices, values }
+}
 
 fn main() {
     let b = Bencher::from_env();
-    println!("== sparsifier compress() latency (per worker per iteration) ==");
+    println!("== sparsifier compress() + observe() latency (per worker per iteration) ==");
+    let mut speedups: Vec<(usize, f64)> = Vec::new();
     for &j in &[10_000usize, 100_000, 1_000_000] {
         let k = (j / 1000).max(1); // 0.1% — the paper's practical regime
         let mut rng = Pcg64::seed_from_u64(1);
         let grad = rng.normal_vec(j, 0.0, 1.0);
-        let agg = rng.normal_vec(j, 0.0, 0.1);
+        let union = synth_union(j, k, 20, &mut rng);
+        let union_dense = union.to_dense(j);
         for kind in [
             SparsifierKind::TopK,
             SparsifierKind::RegTopK { mu: 1.0, y: 1.0 },
@@ -27,11 +200,28 @@ fn main() {
             let mut out = SparseGrad::default();
             // Warm the history so REGTOP-k runs its regularized path.
             s.compress(&grad, &mut out);
-            s.observe(&agg);
+            s.observe(union.view());
             b.report_throughput(&format!("{}/J={j}/k={k}", kind.name()), j, || {
                 s.compress(black_box(&grad), &mut out);
-                s.observe(black_box(&agg));
+                s.observe(black_box(union.view()));
             });
+        }
+        // The seed's dense-feedback REGTOP-k loop, for the speedup ratio.
+        let mut seed = SeedRegTopK::new(j, k, 0.1, 1.0);
+        let mut out = SparseGrad::default();
+        seed.compress(&grad, &mut out);
+        seed.observe_dense(&union_dense);
+        let seed_stats =
+            b.report_throughput(&format!("regtopk_seed_fused/J={j}/k={k}"), j, || {
+                seed.compress(black_box(&grad), &mut out);
+                seed.observe_dense(black_box(&union_dense));
+            });
+        // Ratio vs the sparse-feedback regtopk measured just above.
+        let recs = b.records.borrow();
+        if let Some(new) = recs.iter().rev().find(|r| r.name.starts_with("regtopk/") && r.name.contains(&format!("J={j}/"))) {
+            let ratio = seed_stats.median.as_secs_f64() / (new.median_ns as f64 * 1e-9);
+            println!("{:<44} speedup vs seed {ratio:.2}x", "");
+            speedups.push((j, ratio));
         }
     }
 
@@ -44,6 +234,9 @@ fn main() {
         let mut out = Vec::new();
         b.report(&format!("quickselect/J={j}/k={k}"), || {
             top_k_indices_into(black_box(&scores), k, &mut scratch, &mut out);
+        });
+        b.report(&format!("seed_quickselect/J={j}/k={k}"), || {
+            seed_top_k_indices_into(black_box(&scores), k, &mut scratch, &mut out);
         });
         b.report(&format!("full_sort/J={j}/k={k}"), || {
             black_box(top_k_indices_sort(black_box(&scores), k));
@@ -90,5 +283,24 @@ fn main() {
                 });
             }
         }
+    }
+
+    for (j, ratio) in &speedups {
+        println!("regtopk compress+observe speedup vs seed at J={j}: {ratio:.2}x");
+    }
+    let speedup_json = regtopk::metrics::json::Json::Obj(
+        speedups
+            .iter()
+            .map(|(j, r)| (format!("J={j}"), regtopk::metrics::json::Json::Num(*r)))
+            .collect(),
+    );
+    if let Err(e) = b.write_json_with(
+        "sparsify_hot",
+        vec![("speedup_regtopk_vs_seed", speedup_json)],
+        "BENCH_sparsify_hot.json",
+    ) {
+        eprintln!("could not write BENCH_sparsify_hot.json: {e}");
+    } else {
+        println!("wrote BENCH_sparsify_hot.json");
     }
 }

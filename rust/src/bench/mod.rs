@@ -3,7 +3,14 @@
 //! Provides warmed-up, repeated timing with robust statistics (median,
 //! p10/p90, mean) and a `criterion`-like reporting format. Used by every
 //! `rust/benches/*.rs` target (declared with `harness = false`).
+//!
+//! Every `report*` call is also recorded; [`Bencher::write_json`] dumps
+//! the records as machine-readable JSON (name → ns/iter + throughput) so
+//! the perf trajectory can be diffed across PRs (e.g.
+//! `BENCH_sparsify_hot.json` at the repo root).
 
+use std::cell::RefCell;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 /// Timing statistics over repeated runs of a closure.
@@ -49,17 +56,38 @@ pub fn fmt_duration(d: Duration) -> String {
     }
 }
 
+/// One recorded `report*` result, for machine-readable output.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    pub name: String,
+    pub median_ns: u64,
+    pub mean_ns: u64,
+    pub p10_ns: u64,
+    pub p90_ns: u64,
+    pub samples: usize,
+    /// Melem/s, present for `report_throughput` entries.
+    pub throughput_melem_s: Option<f64>,
+}
+
 /// Bench runner: fixed warmup, then either `target_samples` runs or as many
 /// as fit in `budget`.
 pub struct Bencher {
     pub warmup: usize,
     pub target_samples: usize,
     pub budget: Duration,
+    /// Records of every `report*` call (interior mutability so the
+    /// reporting API stays `&self`).
+    pub records: RefCell<Vec<BenchRecord>>,
 }
 
 impl Default for Bencher {
     fn default() -> Self {
-        Bencher { warmup: 3, target_samples: 30, budget: Duration::from_secs(10) }
+        Bencher {
+            warmup: 3,
+            target_samples: 30,
+            budget: Duration::from_secs(10),
+            records: RefCell::new(Vec::new()),
+        }
     }
 }
 
@@ -73,7 +101,12 @@ impl Bencher {
     /// Fast profile for CI / smoke runs (REGTOPK_BENCH_FAST=1).
     pub fn from_env() -> Self {
         if std::env::var("REGTOPK_BENCH_FAST").is_ok() {
-            Bencher { warmup: 1, target_samples: 5, budget: Duration::from_secs(2) }
+            Bencher {
+                warmup: 1,
+                target_samples: 5,
+                budget: Duration::from_secs(2),
+                ..Bencher::default()
+            }
         } else {
             Bencher::default()
         }
@@ -98,7 +131,8 @@ impl Bencher {
     }
 
     /// Run and print a one-line criterion-style report. Returns the stats
-    /// so callers can derive throughput numbers.
+    /// so callers can derive throughput numbers. The result is also
+    /// recorded for [`Bencher::write_json`].
     pub fn report<F: FnMut()>(&self, name: &str, f: F) -> BenchStats {
         let stats = self.run(f);
         println!(
@@ -109,6 +143,15 @@ impl Bencher {
             fmt_duration(stats.p90),
             stats.samples,
         );
+        self.records.borrow_mut().push(BenchRecord {
+            name: name.to_string(),
+            median_ns: stats.median.as_nanos() as u64,
+            mean_ns: stats.mean.as_nanos() as u64,
+            p10_ns: stats.p10.as_nanos() as u64,
+            p90_ns: stats.p90.as_nanos() as u64,
+            samples: stats.samples,
+            throughput_melem_s: None,
+        });
         stats
     }
 
@@ -117,7 +160,56 @@ impl Bencher {
         let stats = self.report(name, f);
         let eps = elems as f64 / stats.median.as_secs_f64();
         println!("{:<44} throughput {:.3} Melem/s", "", eps / 1e6);
+        if let Some(rec) = self.records.borrow_mut().last_mut() {
+            rec.throughput_melem_s = Some(eps / 1e6);
+        }
         stats
+    }
+
+    /// Write every recorded report as machine-readable JSON:
+    /// `{bench, harness, entries: [{name, median_ns, ..., throughput_melem_s}]}`.
+    pub fn write_json(&self, bench: &str, path: impl AsRef<Path>) -> std::io::Result<()> {
+        self.write_json_with(bench, Vec::new(), path)
+    }
+
+    /// Same, with extra top-level fields (e.g. computed speedup ratios)
+    /// merged into the document.
+    pub fn write_json_with(
+        &self,
+        bench: &str,
+        extras: Vec<(&str, crate::metrics::json::Json)>,
+        path: impl AsRef<Path>,
+    ) -> std::io::Result<()> {
+        use crate::metrics::json::Json;
+        let records = self.records.borrow();
+        let entries: Vec<Json> = records
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("median_ns", Json::Num(r.median_ns as f64)),
+                    ("mean_ns", Json::Num(r.mean_ns as f64)),
+                    ("p10_ns", Json::Num(r.p10_ns as f64)),
+                    ("p90_ns", Json::Num(r.p90_ns as f64)),
+                    ("samples", Json::Num(r.samples as f64)),
+                    (
+                        "throughput_melem_s",
+                        match r.throughput_melem_s {
+                            Some(v) => Json::Num(v),
+                            None => Json::Null,
+                        },
+                    ),
+                ])
+            })
+            .collect();
+        let mut fields = vec![
+            ("bench", Json::Str(bench.to_string())),
+            ("harness", Json::Str("cargo-bench".to_string())),
+            ("entries", Json::Arr(entries)),
+        ];
+        fields.extend(extras);
+        let doc = Json::obj(fields);
+        std::fs::write(path, doc.to_string() + "\n")
     }
 }
 
@@ -127,7 +219,12 @@ mod tests {
 
     #[test]
     fn stats_ordering_invariants() {
-        let b = Bencher { warmup: 1, target_samples: 10, budget: Duration::from_secs(5) };
+        let b = Bencher {
+            warmup: 1,
+            target_samples: 10,
+            budget: Duration::from_secs(5),
+            ..Bencher::default()
+        };
         let mut acc = 0u64;
         let stats = b.run(|| {
             for i in 0..10_000u64 {
@@ -139,6 +236,38 @@ mod tests {
         assert!(stats.median <= stats.p90);
         assert!(stats.p90 <= stats.max);
         assert_eq!(stats.samples, 10);
+    }
+
+    #[test]
+    fn reports_are_recorded_and_serialized() {
+        let b = Bencher {
+            warmup: 0,
+            target_samples: 2,
+            budget: Duration::from_secs(1),
+            ..Bencher::default()
+        };
+        b.report("plain", || {
+            black_box(1 + 1);
+        });
+        b.report_throughput("with_throughput", 1000, || {
+            black_box(2 + 2);
+        });
+        {
+            let recs = b.records.borrow();
+            assert_eq!(recs.len(), 2);
+            assert_eq!(recs[0].name, "plain");
+            assert!(recs[0].throughput_melem_s.is_none());
+            assert_eq!(recs[1].name, "with_throughput");
+            assert!(recs[1].throughput_melem_s.is_some());
+        }
+        let path = std::env::temp_dir().join("regtopk_bench_test.json");
+        b.write_json("unit_test", &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::metrics::json::Json::parse(&text).unwrap();
+        assert_eq!(doc.get("bench").and_then(|v| v.as_str()), Some("unit_test"));
+        assert_eq!(doc.get("harness").and_then(|v| v.as_str()), Some("cargo-bench"));
+        assert_eq!(doc.get("entries").and_then(|v| v.as_arr()).map(|a| a.len()), Some(2));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]
@@ -154,6 +283,7 @@ mod tests {
             warmup: 0,
             target_samples: 1000,
             budget: Duration::from_millis(50),
+            ..Bencher::default()
         };
         let stats = b.run(|| std::thread::sleep(Duration::from_millis(10)));
         assert!(stats.samples < 1000);

@@ -3,16 +3,18 @@
 //!
 //! The server receives one [`SparseGrad`] per worker, scatter-adds them
 //! with the aggregation weights ω_n (eq. 8), and broadcasts the sparse
-//! union back. [`Aggregator`] reuses its dense buffer across iterations —
-//! only previously-touched entries are cleared — so aggregation is
-//! O(Σ message sizes), not O(J), per round.
+//! union back as a [`SparseView`] (sorted union indices + aggregated
+//! values) — the first-class wire object of the sparse-feedback protocol.
+//! [`Aggregator`] reuses its dense buffer across iterations — only
+//! previously-touched entries are cleared — so aggregation *and* the
+//! broadcast are O(Σ message sizes) = O(N·k), never O(J), per round.
 //!
 //! Communication accounting follows §2.2: each sparse entry costs one f32
 //! value plus a ⌈log2 J⌉-bit index; the broadcast costs the union size
 //! per worker.
 
 use crate::metrics::CommStats;
-use crate::sparsify::SparseGrad;
+use crate::sparsify::{SparseGrad, SparseView};
 
 /// Sparse weighted-sum aggregator with comm accounting.
 pub struct Aggregator {
@@ -23,6 +25,9 @@ pub struct Aggregator {
     /// Entries touched this round (the broadcast union, kept sorted at
     /// `finish`).
     touched: Vec<u32>,
+    /// Aggregated values at `touched` (gathered at `finish`) — the
+    /// broadcast payload.
+    union_values: Vec<f32>,
     /// Dirty flags to avoid duplicate entries in `touched`.
     dirty: Vec<bool>,
     /// Number of messages added this round.
@@ -38,6 +43,7 @@ impl Aggregator {
             index_bits: (usize::BITS - (dim.max(2) - 1).leading_zeros()) as u64,
             dense: vec![0.0; dim],
             touched: Vec::new(),
+            union_values: Vec::new(),
             dirty: vec![false; dim],
             messages: 0,
             comm: CommStats::default(),
@@ -84,19 +90,31 @@ impl Aggregator {
         self.messages += 1;
     }
 
-    /// Finish the round: account the broadcast to `workers` receivers and
-    /// return the dense aggregate view plus the sorted union of indices.
-    pub fn finish(&mut self, workers: usize) -> (&[f32], &[u32]) {
+    /// Finish the round: sort the union, gather the broadcast values, and
+    /// account the broadcast to `workers` receivers. Building the
+    /// broadcast is O(|union| log |union|) for the sort + O(|union|) for
+    /// the gather; no J-sized copy happens anywhere on this path. Read
+    /// the results through [`Aggregator::dense`] / [`Aggregator::broadcast`]
+    /// (shared borrows, so they coexist with reading `comm`).
+    pub fn finish(&mut self, workers: usize) {
         self.touched.sort_unstable();
+        let dense = &self.dense;
+        self.union_values.clear();
+        self.union_values.extend(self.touched.iter().map(|&i| dense[i as usize]));
         let union = self.touched.len() as u64;
         self.comm.downlink_values += union * workers as u64;
         self.comm.downlink_index_bits += union * self.index_bits * workers as u64;
-        (&self.dense, &self.touched)
     }
 
     /// Dense aggregate view (valid between `finish` and the next `begin`).
     pub fn dense(&self) -> &[f32] {
         &self.dense
+    }
+
+    /// The sparse broadcast union — sorted indices + aggregated values
+    /// (valid between `finish` and the next `begin`).
+    pub fn broadcast(&self) -> SparseView<'_> {
+        SparseView::new(&self.touched, &self.union_values)
     }
 
     /// Reset all statistics and buffers.
@@ -106,6 +124,7 @@ impl Aggregator {
             self.dirty[i as usize] = false;
         }
         self.touched.clear();
+        self.union_values.clear();
         self.comm = CommStats::default();
         self.messages = 0;
     }
@@ -126,9 +145,13 @@ mod tests {
         agg.begin();
         agg.add(0.5, &msg(vec![0, 2], vec![2.0, 4.0]));
         agg.add(0.5, &msg(vec![2, 4], vec![-4.0, 6.0]));
-        let (dense, union) = agg.finish(2);
+        agg.finish(2);
+        let (dense, bcast) = (agg.dense(), agg.broadcast());
         assert_eq!(dense, &[1.0, 0.0, 0.0, 0.0, 3.0]);
-        assert_eq!(union, &[0, 2, 4]);
+        assert_eq!(bcast.indices, &[0, 2, 4]);
+        // The broadcast carries the aggregated values at the union —
+        // including entries that cancelled to zero.
+        assert_eq!(bcast.values, &[1.0, 0.0, 3.0]);
     }
 
     #[test]
@@ -139,9 +162,11 @@ mod tests {
         agg.finish(1);
         agg.begin();
         agg.add(1.0, &msg(vec![2], vec![7.0]));
-        let (dense, union) = agg.finish(1);
+        agg.finish(1);
+        let (dense, bcast) = (agg.dense(), agg.broadcast());
         assert_eq!(dense, &[0.0, 0.0, 7.0, 0.0], "stale entry must be cleared");
-        assert_eq!(union, &[2]);
+        assert_eq!(bcast.indices, &[2]);
+        assert_eq!(bcast.values, &[7.0]);
     }
 
     #[test]
@@ -192,19 +217,24 @@ mod tests {
             agg.begin();
             agg.add(w1, &m1);
             agg.add(w2, &m2);
-            let (dense, union) = agg.finish(1);
+            agg.finish(1);
+            let (dense, bcast) = (agg.dense(), agg.broadcast());
             let mut expect = vec![0.0f32; dim];
             m1.scatter_into(w1, &mut expect);
             m2.scatter_into(w2, &mut expect);
             for j in 0..dim {
                 assert!((dense[j] - expect[j]).abs() <= 1e-5);
             }
-            // Union is sorted, unique, covers exactly the touched entries.
-            assert!(union.windows(2).all(|w| w[0] < w[1]));
+            // Union is sorted, unique, covers exactly the touched entries,
+            // and its values are the dense aggregate at those positions.
+            assert!(bcast.indices.windows(2).all(|w| w[0] < w[1]));
             let mut all: Vec<u32> = m1.indices.iter().chain(m2.indices.iter()).cloned().collect();
             all.sort_unstable();
             all.dedup();
-            assert_eq!(union, all.as_slice());
+            assert_eq!(bcast.indices, all.as_slice());
+            for (p, &i) in bcast.indices.iter().enumerate() {
+                assert_eq!(bcast.values[p], dense[i as usize]);
+            }
         });
     }
 }

@@ -42,10 +42,11 @@ pub fn train_global_topk<W: WorkerGrad + ?Sized>(
     let mut scratch: Vec<u32> = Vec::new();
     let mut selected: Vec<u32> = Vec::new();
     let mut msg = SparseGrad::default();
-    let mut dense_copy = vec![0.0f32; dim];
     for t in 0..cfg.iters {
         let lr = cfg.lr_schedule.at(cfg.lr, t);
-        // Phase 1 (genie): aggregate the *accumulated* gradients.
+        // Phase 1 (genie): aggregate the *accumulated* gradients. The
+        // error accumulator rolls in place during the same sweep (eps'
+        // equals a everywhere except the entries zeroed in phase 3).
         for v in target.iter_mut() {
             *v = 0.0;
         }
@@ -53,8 +54,10 @@ pub fn train_global_topk<W: WorkerGrad + ?Sized>(
         for n in 0..cfg.workers {
             loss_sum += workers[n].grad(t, &theta, &mut gbuf);
             for j in 0..dim {
-                acc[n][j] = eps[n][j] + gbuf[j];
-                target[j] += omega[n] * acc[n][j];
+                let a = eps[n][j] + gbuf[j];
+                acc[n][j] = a;
+                eps[n][j] = a;
+                target[j] += omega[n] * a;
             }
         }
         // Phase 2: global TOP-k mask of the aggregate.
@@ -63,31 +66,26 @@ pub fn train_global_topk<W: WorkerGrad + ?Sized>(
         }
         top_k_indices_into(&scores, k, &mut scratch, &mut selected);
         // Phase 3: workers transmit exactly the masked entries (this is
-        // the accounted communication), server aggregates them.
+        // the accounted communication), server aggregates them; the
+        // selected entries leave each worker's accumulator (O(k)).
         agg.begin();
         for n in 0..cfg.workers {
             msg.clear();
             for &i in &selected {
                 msg.indices.push(i);
                 msg.values.push(acc[n][i as usize]);
-            }
-            agg.add(omega[n], &msg);
-            // Error feedback: selected entries leave the accumulator.
-            for j in 0..dim {
-                eps[n][j] = acc[n][j];
-            }
-            for &i in &selected {
                 eps[n][i as usize] = 0.0;
             }
+            agg.add(omega[n], &msg);
         }
-        let (dense, _) = agg.finish(cfg.workers);
-        dense_copy.copy_from_slice(dense);
-        optimizer.step(&mut theta, &dense_copy, lr);
+        agg.finish(cfg.workers);
+        let dense = agg.dense();
+        optimizer.step(&mut theta, dense, lr);
         probe(IterStats {
             t,
             theta: &theta,
             mean_loss: loss_sum / cfg.workers as f64,
-            agg: &dense_copy,
+            agg: dense,
             comm: &agg.comm,
         });
     }

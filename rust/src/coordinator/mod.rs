@@ -90,7 +90,6 @@ pub fn train<W: WorkerGrad + ?Sized>(
     let mut agg = Aggregator::new(dim);
     let mut theta = theta0;
     let mut gbuf = vec![0.0f32; dim];
-    let mut dense_copy = vec![0.0f32; dim];
     let mut msg = SparseGrad::default();
     for t in 0..cfg.iters {
         let lr = cfg.lr_schedule.at(cfg.lr, t);
@@ -101,17 +100,19 @@ pub fn train<W: WorkerGrad + ?Sized>(
             sparsifiers[n].compress(&gbuf, &mut msg);
             agg.add(omega[n], &msg);
         }
-        let (dense, _union) = agg.finish(cfg.workers);
-        dense_copy.copy_from_slice(dense);
+        // Broadcast the sparse union — O(N·k); the dense view is only
+        // borrowed (never copied) for the server-side optimizer step.
+        agg.finish(cfg.workers);
+        let (dense, bcast) = (agg.dense(), agg.broadcast());
         for s in sparsifiers.iter_mut() {
-            s.observe(&dense_copy);
+            s.observe(bcast);
         }
-        optimizer.step(&mut theta, &dense_copy, lr);
+        optimizer.step(&mut theta, dense, lr);
         probe(IterStats {
             t,
             theta: &theta,
             mean_loss: loss_sum / cfg.workers as f64,
-            agg: &dense_copy,
+            agg: dense,
             comm: &agg.comm,
         });
     }

@@ -7,15 +7,19 @@
 //! ```text
 //! leader --Step{t, θ}-->   worker n      (broadcast, Arc-shared)
 //! leader <--(loss, ĝ_n)--  worker n      (uplink)
-//! leader --Observe{g^t}--> worker n      (broadcast, Arc-shared)
+//! leader --Observe{union}--> worker n    (sparse broadcast, Arc-shared)
 //! ```
+//!
+//! The observe broadcast carries the sparse union (sorted indices +
+//! aggregated values, O(N·k) entries), never a dense J-vector — matching
+//! the wire protocol a real parameter server would use.
 
 use super::{IterStats, TrainResult};
 use crate::collective::Aggregator;
 use crate::config::TrainConfig;
 use crate::grad::WorkerGrad;
 use crate::optim;
-use crate::sparsify::{SparseGrad, Sparsifier, SparsifierKind};
+use crate::sparsify::{SparseGrad, SparseView, Sparsifier, SparsifierKind};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
@@ -23,7 +27,8 @@ use std::thread;
 /// Leader -> worker messages.
 enum ToWorker {
     Step { t: usize, theta: Arc<Vec<f32>> },
-    Observe { agg: Arc<Vec<f32>> },
+    /// Sparse broadcast union: (sorted indices, aggregated values).
+    Observe { bcast: Arc<(Vec<u32>, Vec<f32>)> },
     Stop,
 }
 
@@ -60,7 +65,9 @@ fn spawn_worker(
                         return;
                     }
                 }
-                ToWorker::Observe { agg } => sparsifier.observe(&agg),
+                ToWorker::Observe { bcast } => {
+                    sparsifier.observe(SparseView::new(&bcast.0, &bcast.1))
+                }
                 ToWorker::Stop => return,
             }
         }
@@ -94,7 +101,6 @@ pub fn train_threaded(
     let mut optimizer = optim::build(cfg.optimizer, dim);
     let mut agg = Aggregator::new(dim);
     let mut theta = theta0;
-    let mut dense_copy = vec![0.0f32; dim];
     let mut result: anyhow::Result<()> = Ok(());
     'outer: for t in 0..cfg.iters {
         let lr = cfg.lr_schedule.at(cfg.lr, t);
@@ -120,18 +126,19 @@ pub fn train_threaded(
                 }
             }
         }
-        let (dense, _) = agg.finish(cfg.workers);
-        dense_copy.copy_from_slice(dense);
-        let shared_agg = Arc::new(dense_copy.clone());
+        agg.finish(cfg.workers);
+        let (dense, bcast) = (agg.dense(), agg.broadcast());
+        // Ship only the union down the channels — O(N·k), not O(N·J).
+        let shared_bcast = Arc::new((bcast.indices.to_vec(), bcast.values.to_vec()));
         for h in &handles {
-            let _ = h.tx.send(ToWorker::Observe { agg: Arc::clone(&shared_agg) });
+            let _ = h.tx.send(ToWorker::Observe { bcast: Arc::clone(&shared_bcast) });
         }
-        optimizer.step(&mut theta, &dense_copy, lr);
+        optimizer.step(&mut theta, dense, lr);
         probe(IterStats {
             t,
             theta: &theta,
             mean_loss: loss_sum / cfg.workers as f64,
-            agg: &dense_copy,
+            agg: dense,
             comm: &agg.comm,
         });
     }
@@ -170,6 +177,9 @@ mod tests {
             SparsifierKind::TopK,
             SparsifierKind::RegTopK { mu: 1.0, y: 1.0 },
             SparsifierKind::Dense,
+            SparsifierKind::HardThreshold { lambda: 0.05 },
+            SparsifierKind::RandK,
+            SparsifierKind::Dgc { momentum: 0.9 },
         ] {
             let c = cfg(kind);
             let seq = run_linreg(&c, &RunOpts { threaded: false }).unwrap();

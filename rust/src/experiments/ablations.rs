@@ -110,7 +110,6 @@ pub fn final_gap_with_c(size: &Size, c: f32, sparsity: f64) -> anyhow::Result<f6
     let mut theta = vec![0.0f32; dim];
     let mut gbuf = vec![0.0f32; dim];
     let mut msg = SparseGrad::default();
-    let mut dense_copy = vec![0.0f32; dim];
     for t in 0..size.iters {
         agg.begin();
         for n in 0..size.workers {
@@ -118,12 +117,12 @@ pub fn final_gap_with_c(size: &Size, c: f32, sparsity: f64) -> anyhow::Result<f6
             sparsifiers[n].compress(&gbuf, &mut msg);
             agg.add(omega, &msg);
         }
-        let (dense, _) = agg.finish(size.workers);
-        dense_copy.copy_from_slice(dense);
+        agg.finish(size.workers);
+        let (dense, bcast) = (agg.dense(), agg.broadcast());
         for s in sparsifiers.iter_mut() {
-            s.observe(&dense_copy);
+            s.observe(bcast);
         }
-        optimizer.step(&mut theta, &dense_copy, 0.01);
+        optimizer.step(&mut theta, dense, 0.01);
     }
     Ok(crate::tensor::dist2(&theta, &data.optimum) as f64)
 }

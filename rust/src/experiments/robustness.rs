@@ -50,7 +50,6 @@ pub fn run_lossy(
     let mut theta = vec![0.0f32; dim];
     let mut gbuf = vec![0.0f32; dim];
     let mut msg = SparseGrad::default();
-    let mut dense_copy = vec![0.0f32; dim];
     let mut net_rng = Pcg64::new(seed ^ 0x10_55, 3);
     for t in 0..cfg.iters {
         agg.begin();
@@ -59,15 +58,15 @@ pub fn run_lossy(
             sparsifiers[n].compress(&gbuf, &mut msg);
             agg.add(omega[n], &msg);
         }
-        let (dense, _) = agg.finish(cfg.workers);
-        dense_copy.copy_from_slice(dense);
+        agg.finish(cfg.workers);
+        let (dense, bcast) = (agg.dense(), agg.broadcast());
         for s in sparsifiers.iter_mut() {
             // Lossy downlink: the worker misses this round's broadcast.
             if net_rng.f64() >= p_loss {
-                s.observe(&dense_copy);
+                s.observe(bcast);
             }
         }
-        optimizer.step(&mut theta, &dense_copy, cfg.lr_schedule.at(cfg.lr, t));
+        optimizer.step(&mut theta, dense, cfg.lr_schedule.at(cfg.lr, t));
     }
     Ok(crate::tensor::dist2(&theta, &data.optimum) as f64)
 }

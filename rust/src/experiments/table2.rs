@@ -76,7 +76,6 @@ pub fn trace(kind: SparsifierKind, iters: usize, seed: u64) -> anyhow::Result<Ve
     let mut theta = vec![0.0f32; 4];
     let mut gbuf = vec![0.0f32; 4];
     let mut msg = SparseGrad::default();
-    let mut dense_copy = vec![0.0f32; 4];
     let mut rows = Vec::with_capacity(iters);
     for t in 0..iters {
         agg.begin();
@@ -91,12 +90,12 @@ pub fn trace(kind: SparsifierKind, iters: usize, seed: u64) -> anyhow::Result<Ve
             sent.push(msg.to_dense(4));
             agg.add(omega[n], &msg);
         }
-        let (dense, _) = agg.finish(2);
-        dense_copy.copy_from_slice(dense);
+        agg.finish(2);
+        let (dense, bcast) = (agg.dense(), agg.broadcast());
         for s in sparsifiers.iter_mut() {
-            s.observe(&dense_copy);
+            s.observe(bcast);
         }
-        optimizer.step(&mut theta, &dense_copy, cfg.lr);
+        optimizer.step(&mut theta, dense, cfg.lr);
         rows.push(TraceRow { t, target, sent });
     }
     Ok(rows)

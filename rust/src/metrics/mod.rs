@@ -91,7 +91,7 @@ impl Curves {
 /// whole purpose is reducing these numbers, so the coordinator tracks them
 /// as first-class metrics (paper §2.2: one value + ~log2(J)-bit index per
 /// selected entry).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CommStats {
     /// Total gradient values sent worker->server.
     pub uplink_values: u64,

@@ -140,12 +140,14 @@ impl Sparsifier for RandK {
         assert_eq!(grad.len(), self.eps.len());
         out.clear();
         // Random scores -> top-k of noise == uniform random k-subset.
+        // `eps` rolls in place (selected entries re-zeroed below, O(k)).
         for j in 0..grad.len() {
-            self.acc[j] = self.eps[j] + grad[j];
+            let a = self.eps[j] + grad[j];
+            self.eps[j] = a;
+            self.acc[j] = a;
             self.scores[j] = self.rng.f32();
         }
         top_k_indices_into(&self.scores, self.k, &mut self.scratch, &mut self.selected);
-        self.eps.copy_from_slice(&self.acc);
         for &i in &self.selected {
             let i = i as usize;
             out.indices.push(i as u32);

@@ -8,6 +8,28 @@
 //! [`Sparsifier::observe`] — REGTOP-k uses it to form the posterior
 //! distortion for the next round (Algorithm 2, line 8).
 //!
+//! # Sparse-feedback protocol
+//!
+//! The broadcast is the *sparse union* of the workers' messages — sorted
+//! unique indices plus the aggregated values at those indices, packaged as
+//! a borrowed [`SparseView`] — never a dense J-vector. RegTop-k's
+//! posterior Δ_j (eq. 43/46) only reads the broadcast at its ≤k
+//! previously-selected indices, so `observe` gathers O(k) entries instead
+//! of copying all J. Entries absent from the union aggregated to nothing
+//! and read as 0.0, exactly like the dense form. Per-iteration asymptotics
+//! of the full protocol (N workers, dimension J, k ≪ J kept entries):
+//!
+//! | stage                         | dense feedback (seed) | sparse feedback |
+//! |-------------------------------|-----------------------|-----------------|
+//! | worker score/accumulate sweep | O(J)                  | O(J)            |
+//! | worker state roll             | O(J) (2 copies+clear) | O(k)            |
+//! | server aggregate + union      | O(N·k)                | O(N·k)          |
+//! | broadcast + `observe` × N     | O(N·J)                | O(N·k)          |
+//!
+//! Total: O(N·J) → O(J + N·k) outside the unavoidable per-worker score
+//! sweep. [`SparseGrad::from_dense`] is the compatibility shim (all J
+//! indices) used by tests to pin the two forms bit-identical.
+//!
 //! Implemented selection rules:
 //! - [`topk::TopK`] — classical TOP-k with error feedback (Algorithm 1)
 //! - [`regtopk::RegTopK`] — the paper's Bayesian regularized TOP-k
@@ -66,6 +88,65 @@ impl SparseGrad {
         let mut out = vec![0.0; dim];
         self.scatter_into(1.0, &mut out);
         out
+    }
+
+    /// Dense-broadcast compatibility shim: a message carrying *every*
+    /// index `0..J` (zeros included). Feeding `from_dense(g).view()` to
+    /// [`Sparsifier::observe`] is bit-equivalent to the sparse union form
+    /// — the reference the protocol-equivalence tests pin against.
+    pub fn from_dense(values: &[f32]) -> SparseGrad {
+        SparseGrad { indices: (0..values.len() as u32).collect(), values: values.to_vec() }
+    }
+
+    /// Borrow as a [`SparseView`]. Indices must already be sorted, which
+    /// every producer in this crate guarantees.
+    pub fn view(&self) -> SparseView<'_> {
+        SparseView::new(&self.indices, &self.values)
+    }
+}
+
+/// Borrowed view of a sparse vector: sorted unique `indices` with the
+/// parallel `values` at those positions — the wire format of the server
+/// broadcast. Entries not listed are implicitly 0.0.
+#[derive(Clone, Copy, Debug)]
+pub struct SparseView<'a> {
+    pub indices: &'a [u32],
+    pub values: &'a [f32],
+}
+
+impl<'a> SparseView<'a> {
+    pub fn new(indices: &'a [u32], values: &'a [f32]) -> Self {
+        debug_assert_eq!(indices.len(), values.len());
+        debug_assert!(indices.windows(2).all(|w| w[0] < w[1]), "indices must be sorted unique");
+        SparseView { indices, values }
+    }
+
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Gather the values at `query` positions (which must be sorted
+    /// ascending) into `out`, writing 0.0 where a position is absent.
+    /// Two-pointer merge: O(|query| + |view|), no dense materialization.
+    pub fn gather_sorted_into(&self, query: &[u32], out: &mut Vec<f32>) {
+        debug_assert!(query.windows(2).all(|w| w[0] < w[1]), "query must be sorted unique");
+        out.clear();
+        out.reserve(query.len());
+        let mut p = 0usize;
+        for &q in query {
+            while p < self.indices.len() && self.indices[p] < q {
+                p += 1;
+            }
+            if p < self.indices.len() && self.indices[p] == q {
+                out.push(self.values[p]);
+            } else {
+                out.push(0.0);
+            }
+        }
     }
 }
 
@@ -142,9 +223,11 @@ pub trait Sparsifier: Send {
     /// (cleared first). Equivalent to Algorithm 1/2 lines 2–7 / 6–12.
     fn compress(&mut self, grad: &[f32], out: &mut SparseGrad);
 
-    /// Feed back the server broadcast `g^t` (dense, zero where nothing was
-    /// aggregated). REGTOP-k consumes this; others may ignore it.
-    fn observe(&mut self, _agg: &[f32]) {}
+    /// Feed back the server broadcast `g^t` as the sparse union of the
+    /// round's messages (sorted indices + aggregated values; absent
+    /// entries are 0.0). REGTOP-k gathers its ≤k previously-selected
+    /// entries in O(k); others may ignore it.
+    fn observe(&mut self, _agg: SparseView<'_>) {}
 
     /// Current error accumulator (for tests/diagnostics).
     fn error(&self) -> &[f32];
@@ -168,6 +251,52 @@ mod tests {
         g.scatter_into(0.5, &mut dense);
         assert_eq!(dense, vec![0.0, 1.0, 0.0, -0.5]);
         assert_eq!(g.to_dense(4), vec![0.0, 2.0, 0.0, -1.0]);
+    }
+
+    #[test]
+    fn from_dense_roundtrips() {
+        let dense = vec![0.0f32, 2.5, 0.0, -1.0];
+        let g = SparseGrad::from_dense(&dense);
+        assert_eq!(g.indices, vec![0, 1, 2, 3]);
+        assert_eq!(g.to_dense(4), dense);
+    }
+
+    #[test]
+    fn view_gather_sorted() {
+        let g = SparseGrad { indices: vec![2, 5, 9], values: vec![1.0, -2.0, 3.0] };
+        let v = g.view();
+        let mut out = Vec::new();
+        v.gather_sorted_into(&[0, 2, 5, 7, 9, 11], &mut out);
+        assert_eq!(out, vec![0.0, 1.0, -2.0, 0.0, 3.0, 0.0]);
+        v.gather_sorted_into(&[], &mut out);
+        assert!(out.is_empty());
+        // Query disjoint from the view.
+        v.gather_sorted_into(&[0, 1, 3], &mut out);
+        assert_eq!(out, vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn view_gather_matches_dense_lookup_property() {
+        crate::testing::check(100, |g| {
+            let dim = g.usize_in(1..=128);
+            // Random sparse subset with random values.
+            let mut idx: Vec<u32> = (0..dim as u32).collect();
+            g.rng().shuffle(&mut idx);
+            idx.truncate(g.usize_in(0..=dim));
+            idx.sort_unstable();
+            let values: Vec<f32> = idx.iter().map(|_| g.normal_f32()).collect();
+            let msg = SparseGrad { indices: idx, values };
+            let dense = msg.to_dense(dim);
+            // Random sorted query set.
+            let mut query: Vec<u32> = (0..dim as u32).collect();
+            g.rng().shuffle(&mut query);
+            query.truncate(g.usize_in(0..=dim));
+            query.sort_unstable();
+            let mut got = Vec::new();
+            msg.view().gather_sorted_into(&query, &mut got);
+            let expect: Vec<f32> = query.iter().map(|&q| dense[q as usize]).collect();
+            assert_eq!(got, expect);
+        });
     }
 
     #[test]

@@ -30,12 +30,33 @@
 //! * The first round (t = 0) has no aggregation history and runs plain
 //!   TOP-k, exactly as Algorithm 2 prescribes.
 //!
+//! # Hot-path layout (O(J + k) per compress, O(k) per observe)
+//!
+//! The posterior only involves j ∈ S^{t-1} (≤ k indices), so no per-round
+//! state is J-sized except the three resident arrays (eps, acc, scores)
+//! that the single accumulation sweep updates in place:
+//!
+//! 1. **Branchless O(J) sweep** — `a = eps + g` written simultaneously
+//!    into `eps` (the next round's error, selected entries re-zeroed in
+//!    step 3) and `acc` (diagnostics), scoring *everything* with the
+//!    out-of-mask metric `C·|a|^y`. No mask lookup, no branch, so the
+//!    loop auto-vectorizes.
+//! 2. **O(k) patch pass** — overwrite the ≤ k scores at j ∈ S^{t-1} with
+//!    the regularized metric using the previous selection's accumulated
+//!    values and the broadcast entries gathered by `observe`.
+//! 3. **O(k) state roll** — zero `eps` at the new selection and snapshot
+//!    the selected a_j values (the selection list itself is kept as
+//!    S^{t-1}); no `copy_from_slice`/`clear` over J anywhere.
+//!
+//! `observe` receives the broadcast as a sparse union and gathers only
+//! this worker's ≤ k previously-selected entries (two-pointer merge).
+//!
 //! Numerical guards not spelled out in the paper but required in practice:
 //! `|ω_n a_j|` below [`DELTA_GUARD`] would blow up the division — such
 //! entries are treated as "no information" (Δ = Q → regularizer = C).
 
 use super::select::top_k_indices_into;
-use super::{SparseGrad, Sparsifier};
+use super::{SparseGrad, SparseView, Sparsifier};
 
 /// Threshold below which ω_n·a_j is considered zero for the Δ division.
 pub const DELTA_GUARD: f32 = 1e-30;
@@ -55,16 +76,17 @@ pub struct RegTopK {
     eps: Vec<f32>,
     /// a_n^t (last compress).
     acc: Vec<f32>,
-    /// a_n^{t-1}.
-    acc_prev: Vec<f32>,
-    /// Mask s_n^{t-1} as a dense bool vector (branch-friendly at J ~ 1e5).
-    mask_prev: Vec<bool>,
-    /// Last observed broadcast g^{t-1}.
-    agg_prev: Vec<f32>,
+    /// a_n^{t-1} at S^{t-1} (parallel to `selected`, which doubles as
+    /// the S^{t-1} list between compress calls).
+    acc_sel_prev: Vec<f32>,
+    /// g^{t-1} at S^{t-1} (gathered from the broadcast union by `observe`).
+    agg_sel: Vec<f32>,
     /// Whether `observe` was called since the last compress.
     has_agg: bool,
     scores: Vec<f32>,
     scratch: Vec<u32>,
+    /// Last selection S^t, sorted ascending. Read as S^{t-1} by the next
+    /// compress's patch pass and by `observe` before being overwritten.
     selected: Vec<u32>,
 }
 
@@ -83,13 +105,12 @@ impl RegTopK {
             t: 0,
             eps: vec![0.0; dim],
             acc: vec![0.0; dim],
-            acc_prev: vec![0.0; dim],
-            mask_prev: vec![false; dim],
-            agg_prev: vec![0.0; dim],
+            acc_sel_prev: Vec::with_capacity(k),
+            agg_sel: Vec::with_capacity(k),
             has_agg: false,
             scores: vec![0.0; dim],
             scratch: Vec::new(),
-            selected: Vec::new(),
+            selected: Vec::with_capacity(k),
         }
     }
 
@@ -108,20 +129,6 @@ impl RegTopK {
         } else {
             (one_plus_delta_abs / self.mu).tanh()
         }
-    }
-
-    /// Posterior distortion Δ_j for a selected entry, with the
-    /// zero-division guard. Returns `None` when no information is
-    /// available (treated as Δ = Q → regularizer C). Normalized by the
-    /// previous accumulated gradient — see the module-level reproduction
-    /// note.
-    #[inline]
-    fn delta(&self, j: usize) -> Option<f32> {
-        let denom = self.omega * self.acc_prev[j];
-        if denom.abs() < DELTA_GUARD {
-            return None;
-        }
-        Some((self.agg_prev[j] - denom) / denom)
     }
 
     /// Apply the prior exponent: |a|^y, specialized for the common y = 1.
@@ -143,45 +150,66 @@ impl Sparsifier for RegTopK {
     fn compress(&mut self, grad: &[f32], out: &mut SparseGrad) {
         assert_eq!(grad.len(), self.eps.len(), "gradient dimension mismatch");
         out.clear();
-        let regularized = self.t > 0 && self.has_agg;
-        // Fused a / Δ / score pass — one sweep over J, no temporaries.
-        for j in 0..grad.len() {
-            let a = self.eps[j] + grad[j];
-            self.acc[j] = a;
-            let prior = self.prior(a.abs());
-            let u = if regularized && self.mask_prev[j] {
-                match self.delta(j) {
-                    Some(delta) => self.regularizer((1.0 + delta).abs()),
-                    None => self.c,
-                }
-            } else {
-                // j ∉ S^{t-1} (or no history yet): likelihood constant C.
-                // At t = 0 this makes the metric C·|a|^y — plain TOP-k.
-                self.c
-            };
-            self.scores[j] = prior * u;
+        // 1. Branchless a/score sweep — the only O(J) work. `eps` is
+        // updated in place (it IS a^t until the selected entries are
+        // zeroed below), `acc` keeps the full a^t for diagnostics. Zip
+        // iteration keeps bounds checks out of the vectorized loop.
+        let c = self.c;
+        if self.y == 1.0 {
+            for (((e, a), s), &g) in
+                self.eps.iter_mut().zip(self.acc.iter_mut()).zip(self.scores.iter_mut()).zip(grad)
+            {
+                let v = *e + g;
+                *e = v;
+                *a = v;
+                *s = v.abs() * c;
+            }
+        } else {
+            let y = self.y;
+            for (((e, a), s), &g) in
+                self.eps.iter_mut().zip(self.acc.iter_mut()).zip(self.scores.iter_mut()).zip(grad)
+            {
+                let v = *e + g;
+                *e = v;
+                *a = v;
+                *s = v.abs().powf(y) * c;
+            }
+        }
+        // 2. O(k) patch pass: regularized scores for j ∈ S^{t-1} (only
+        // when a broadcast for the previous round actually arrived).
+        // `selected` still holds S^{t-1} here.
+        if self.t > 0 && self.has_agg {
+            for (p, &jv) in self.selected.iter().enumerate() {
+                let j = jv as usize;
+                let denom = self.omega * self.acc_sel_prev[p];
+                let u = if denom.abs() < DELTA_GUARD {
+                    self.c
+                } else {
+                    let delta = (self.agg_sel[p] - denom) / denom;
+                    self.regularizer((1.0 + delta).abs())
+                };
+                let prior = self.prior(self.acc[j].abs());
+                self.scores[j] = prior * u;
+            }
         }
         top_k_indices_into(&self.scores, self.k, &mut self.scratch, &mut self.selected);
-        // ĝ = s ⊙ a ; eps' = a − ĝ ; roll state forward.
-        self.eps.copy_from_slice(&self.acc);
-        for m in self.mask_prev.iter_mut() {
-            *m = false;
-        }
+        // 3. ĝ = s ⊙ a ; eps' = a − ĝ ; snapshot a^t|_{S^t} — O(k).
+        self.acc_sel_prev.clear();
         for &i in &self.selected {
             let i = i as usize;
             out.indices.push(i as u32);
             out.values.push(self.acc[i]);
             self.eps[i] = 0.0;
-            self.mask_prev[i] = true;
+            self.acc_sel_prev.push(self.acc[i]);
         }
-        self.acc_prev.copy_from_slice(&self.acc);
         self.has_agg = false;
         self.t += 1;
     }
 
-    fn observe(&mut self, agg: &[f32]) {
-        assert_eq!(agg.len(), self.agg_prev.len());
-        self.agg_prev.copy_from_slice(agg);
+    fn observe(&mut self, agg: SparseView<'_>) {
+        // Gather g^t at this worker's ≤ k selected indices — O(k + |union|)
+        // via a two-pointer merge; absent entries aggregated to 0.0.
+        agg.gather_sorted_into(&self.selected, &mut self.agg_sel);
         self.has_agg = true;
     }
 
@@ -202,15 +230,9 @@ impl Sparsifier for RegTopK {
         for v in self.acc.iter_mut() {
             *v = 0.0;
         }
-        for v in self.acc_prev.iter_mut() {
-            *v = 0.0;
-        }
-        for v in self.agg_prev.iter_mut() {
-            *v = 0.0;
-        }
-        for m in self.mask_prev.iter_mut() {
-            *m = false;
-        }
+        self.selected.clear();
+        self.acc_sel_prev.clear();
+        self.agg_sel.clear();
     }
 }
 
@@ -219,6 +241,12 @@ mod tests {
     use super::*;
     use crate::sparsify::topk::TopK;
     use crate::testing::check;
+
+    /// Dense-broadcast observe shim (the seed protocol's wire format).
+    fn observe_dense(s: &mut dyn Sparsifier, agg: &[f32]) {
+        let shim = SparseGrad::from_dense(agg);
+        s.observe(shim.view());
+    }
 
     /// Drive two sparsifiers with identical gradient/aggregate streams and
     /// compare selections.
@@ -236,8 +264,8 @@ mod tests {
             if oa != ob {
                 return false;
             }
-            a.observe(agg);
-            b.observe(agg);
+            observe_dense(a, agg);
+            observe_dense(b, agg);
         }
         true
     }
@@ -273,6 +301,41 @@ mod tests {
     }
 
     #[test]
+    fn sparse_union_observe_matches_dense_observe() {
+        // The protocol change itself: feeding the broadcast as the sparse
+        // union (touched indices only) must be bit-identical to the dense
+        // form with zeros elsewhere.
+        check(50, |g| {
+            let dim = g.usize_in(2..=96);
+            let k = g.usize_in(1..=dim);
+            let mut a = RegTopK::new(dim, k, 0.3, g.f32_in(0.1, 3.0), 1.0);
+            let mut b = RegTopK::new(dim, k, 0.3, a.mu, 1.0);
+            let mut oa = SparseGrad::default();
+            let mut ob = SparseGrad::default();
+            for _ in 0..4 {
+                let grad: Vec<f32> = (0..dim).map(|_| g.normal_f32()).collect();
+                a.compress(&grad, &mut oa);
+                b.compress(&grad, &mut ob);
+                assert_eq!(oa, ob);
+                // A random sparse union that includes the worker's own
+                // selection (as the real server guarantees) plus noise.
+                let mut idx: Vec<u32> = oa.indices.clone();
+                for j in 0..dim as u32 {
+                    if g.bool_with(0.3) {
+                        idx.push(j);
+                    }
+                }
+                idx.sort_unstable();
+                idx.dedup();
+                let values: Vec<f32> = idx.iter().map(|_| g.normal_f32()).collect();
+                let union = SparseGrad { indices: idx, values };
+                a.observe(union.view());
+                observe_dense(&mut b, &union.to_dense(dim));
+            }
+        });
+    }
+
+    #[test]
     fn cancellation_is_damped() {
         // Paper §4 limiting case (2): two workers whose first entry cancels.
         // After the first aggregation, Δ = -1 ⇒ regularizer tanh(0) = 0 ⇒
@@ -286,7 +349,7 @@ mod tests {
         assert_eq!(out.indices, vec![0]);
         // Server: other worker sent -100 at entry 0 -> aggregate is 0 there;
         // nothing at entry 1.
-        w.observe(&[0.0, 0.0]);
+        observe_dense(&mut w, &[0.0, 0.0]);
         // t=1: same gradient again. TOP-k would pick entry 0 forever;
         // REGTOP-k damps it (Δ_0 = (0 - 0.5*100)/(0.5*200) = -0.5 ... )
         w.compress(&[100.0, 1.0], &mut out);
@@ -301,7 +364,7 @@ mod tests {
         let mut out = SparseGrad::default();
         w.compress(&[10.0, 0.1], &mut out);
         assert_eq!(out.indices, vec![0]);
-        w.observe(&[0.0, 0.0]); // cancelled at server
+        observe_dense(&mut w, &[0.0, 0.0]); // cancelled at server
         // Error at 0 is 0 (was sent); fresh gradient again 10 => a0 = 10.
         // Δ_0 = (0 - ω·10)/(ω·10) = -1 ⇒ u = tanh(0) = 0 ⇒ score 0.
         w.compress(&[10.0, 0.1], &mut out);
@@ -317,7 +380,7 @@ mod tests {
         let mut out = SparseGrad::default();
         w.compress(&[10.0, 0.1], &mut out);
         assert_eq!(out.indices, vec![0]);
-        w.observe(&[10.0, 0.0]); // both workers sent 10 => agg = 10
+        observe_dense(&mut w, &[10.0, 0.0]); // both workers sent 10 => agg = 10
         w.compress(&[10.0, 0.1], &mut out);
         assert_eq!(out.indices, vec![0]);
     }
@@ -338,7 +401,7 @@ mod tests {
                     assert!((recon - s.last_accumulated()[j]).abs() <= 1e-6);
                 }
                 let agg: Vec<f32> = (0..dim).map(|_| g.normal_f32()).collect();
-                s.observe(&agg);
+                observe_dense(&mut s, &agg);
             }
         });
     }
@@ -361,7 +424,7 @@ mod tests {
                     assert!(s.scores[j] <= bound, "score exceeds prior bound");
                 }
                 let agg: Vec<f32> = (0..dim).map(|_| g.normal_f32()).collect();
-                s.observe(&agg);
+                observe_dense(&mut s, &agg);
             }
         });
     }
@@ -371,7 +434,7 @@ mod tests {
         let mut w = RegTopK::new(2, 1, 0.5, 1.0, 1.0);
         let mut out = SparseGrad::default();
         w.compress(&[1.0, 0.5], &mut out);
-        w.observe(&[1.0, 0.0]);
+        observe_dense(&mut w, &[1.0, 0.0]);
         // Entry 0 selected last round but fresh a_0 = 0 → guard kicks in,
         // no NaN/Inf anywhere.
         w.compress(&[0.0, 0.5], &mut out);
@@ -401,7 +464,7 @@ mod tests {
         let mut w = RegTopK::new(3, 1, 0.5, 1.0, 1.0);
         let mut first = SparseGrad::default();
         w.compress(&g, &mut first);
-        w.observe(&[0.5, 0.5, 0.5]);
+        observe_dense(&mut w, &[0.5, 0.5, 0.5]);
         let mut dummy = SparseGrad::default();
         w.compress(&g, &mut dummy);
         w.reset();

@@ -3,12 +3,172 @@
 //! The hot operation behind both TOP-k and REGTOP-k: given J scores, find
 //! the indices of the k largest. A full sort is O(J log J); we use an
 //! iterative quickselect (Hoare partition over an index buffer) for
-//! expected O(J), falling back to a deterministic pivot pattern that also
-//! handles adversarial inputs well. Ties break toward the lower index so
-//! results are deterministic and platform-independent.
+//! expected O(J). In the paper's extreme-sparsity regime (k ≈ 0.1% of J)
+//! a sampling-based threshold pre-filter first estimates the k-th score
+//! from a deterministic strided sample, collects the candidates above the
+//! threshold in one pass, and runs the exact quickselect on that small
+//! candidate set only — falling back to the full quickselect whenever the
+//! estimate under-collects, so the result is always exact.
+//!
+//! Ordering is a *total* order shared by every path: higher score first,
+//! ties toward the lower index, and NaN sorts last (ties among NaNs again
+//! by index). The NaN rule matters because a zero-gradient + `powf`
+//! corner can produce NaN scores upstream; selection must stay
+//! deterministic and panic-free instead of `partial_cmp(..).unwrap()`ing.
+//! All three implementations (`top_k_indices_into`, the sampled path, and
+//! [`top_k_indices_sort`]) are bit-identical by construction and by the
+//! property tests below.
+
+use std::cmp::Ordering;
+
+/// Minimum input length before the sampling pre-filter engages.
+const SAMPLE_MIN_LEN: usize = 1 << 14;
+/// Deterministic strided sample size used to estimate the k-th score.
+const SAMPLE_SIZE: usize = 512;
+/// The pre-filter only pays off when k is a small fraction of J.
+const SAMPLE_MAX_K_FRACTION: usize = 8; // engage when k * 8 <= n
+
+/// The shared total order: `true` iff index `a` ranks strictly before `b`.
+/// Higher score first; NaN after every number; ties to the lower index.
+#[inline]
+fn better(scores: &[f32], a: u32, b: u32) -> bool {
+    let (sa, sb) = (scores[a as usize], scores[b as usize]);
+    if sa.is_nan() {
+        sb.is_nan() && a < b
+    } else if sb.is_nan() {
+        true
+    } else {
+        sa > sb || (sa == sb && a < b)
+    }
+}
+
+/// Descending score comparison on raw values with NaN-last semantics
+/// (used for the sample threshold, where indices don't matter).
+#[inline]
+fn cmp_score_desc(a: f32, b: f32) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => b.partial_cmp(&a).unwrap(),
+    }
+}
+
+/// Partition `idx` in place so its first `need` entries are the top ranked
+/// under the shared total order (in arbitrary internal order). Iterative
+/// quickselect with a median-of-three pivot; expected O(|idx|). Requires
+/// `0 < need < idx.len()`.
+fn quickselect_top_k(scores: &[f32], idx: &mut [u32], need: usize) {
+    debug_assert!(need >= 1 && need < idx.len());
+    let (mut lo, mut hi) = (0usize, idx.len());
+    let mut need = need;
+    loop {
+        debug_assert!(need >= 1 && lo + need <= hi);
+        if hi - lo <= need {
+            break;
+        }
+        // Median-of-three pivot on (lo, mid, hi-1) for robustness against
+        // sorted/constant inputs.
+        let mid = lo + (hi - lo) / 2;
+        let (a, b, c) = (idx[lo], idx[mid], idx[hi - 1]);
+        let pivot = {
+            // median of a, b, c under `better`
+            if better(scores, a, b) ^ better(scores, a, c) {
+                a
+            } else if better(scores, b, a) ^ better(scores, b, c) {
+                b
+            } else {
+                c
+            }
+        };
+        // Partition: [lo, p) strictly better than pivot, [p, hi) the rest.
+        let mut p = lo;
+        for i in lo..hi {
+            if better(scores, idx[i], pivot) {
+                idx.swap(i, p);
+                p += 1;
+            }
+        }
+        let left = p - lo;
+        if left == need {
+            break;
+        } else if left > need {
+            hi = p;
+        } else {
+            // Pivot itself belongs to the selection boundary; continue to
+            // the right of the partition point.
+            need -= left;
+            lo = p;
+            // Guard: if nothing was better than the pivot, the pivot is the
+            // single best remaining element — select it directly to ensure
+            // progress.
+            if left == 0 {
+                let pos = idx[lo..hi].iter().position(|&x| x == pivot).unwrap() + lo;
+                idx.swap(lo, pos);
+                lo += 1;
+                need -= 1;
+                if need == 0 {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Sampling-based pre-filter: estimate the k-th score from a strided
+/// sample, collect candidates above the estimate in one pass, and run the
+/// exact quickselect on that candidate set. Returns `false` (leaving `out`
+/// empty) when the estimate under-collects — the caller then takes the
+/// full path. Any run that returns `true` is exact: the candidate set
+/// {j : score_j ≥ τ} with ≥ k members provably contains every index the
+/// full selection could pick (all of which score ≥ the k-th value ≥ τ),
+/// and the shared total order ranks the subset identically.
+fn try_sampled_select(
+    scores: &[f32],
+    k: usize,
+    scratch: &mut Vec<u32>,
+    out: &mut Vec<u32>,
+) -> bool {
+    let n = scores.len();
+    // Deterministic strided sample — reproducible across runs and
+    // platforms (no RNG involved in selection).
+    let step = n / SAMPLE_SIZE;
+    let mut sample = [0.0f32; SAMPLE_SIZE];
+    for (i, s) in sample.iter_mut().enumerate() {
+        *s = scores[i * step];
+    }
+    // Aim ~3x above the expected sample rank of the k-th score (plus slack
+    // for small k) so benign inputs over-collect slightly instead of
+    // falling back.
+    let rank = (3 * k * SAMPLE_SIZE) / n + 4;
+    if rank >= SAMPLE_SIZE {
+        return false;
+    }
+    sample.select_nth_unstable_by(rank - 1, |a, b| cmp_score_desc(*a, *b));
+    let tau = sample[rank - 1];
+    if tau.is_nan() {
+        // Fewer than `rank` numeric samples — no usable estimate.
+        return false;
+    }
+    scratch.clear();
+    for (j, &s) in scores.iter().enumerate() {
+        if s >= tau {
+            scratch.push(j as u32);
+        }
+    }
+    if scratch.len() < k {
+        return false;
+    }
+    if scratch.len() > k {
+        quickselect_top_k(scores, scratch, k);
+    }
+    out.extend_from_slice(&scratch[..k]);
+    out.sort_unstable();
+    true
+}
 
 /// Select the indices of the `k` largest `scores` (by value, ties to the
-/// smaller index). Returns indices in ascending index order.
+/// smaller index, NaN last). Returns indices in ascending index order.
 ///
 /// `scratch` is an index buffer reused across calls to avoid per-iteration
 /// allocation in the training loop; it is resized as needed.
@@ -22,68 +182,15 @@ pub fn top_k_indices_into(scores: &[f32], k: usize, scratch: &mut Vec<u32>, out:
         out.extend(0..n as u32);
         return;
     }
+    if n >= SAMPLE_MIN_LEN
+        && k.saturating_mul(SAMPLE_MAX_K_FRACTION) <= n
+        && try_sampled_select(scores, k, scratch, out)
+    {
+        return;
+    }
     scratch.clear();
     scratch.extend(0..n as u32);
-    // Order: higher score first; tie -> lower index first.
-    let better = |a: u32, b: u32| -> bool {
-        let (sa, sb) = (scores[a as usize], scores[b as usize]);
-        sa > sb || (sa == sb && a < b)
-    };
-    // Iterative quickselect partitioning the first k "better" elements.
-    let (mut lo, mut hi) = (0usize, n);
-    let mut need = k;
-    loop {
-        debug_assert!(need >= 1 && lo + need <= hi);
-        if hi - lo <= need {
-            break;
-        }
-        // Median-of-three pivot on (lo, mid, hi-1) for robustness against
-        // sorted/constant inputs.
-        let mid = lo + (hi - lo) / 2;
-        let (a, b, c) = (scratch[lo], scratch[mid], scratch[hi - 1]);
-        let pivot = {
-            // median of a, b, c under `better`
-            if better(a, b) ^ better(a, c) {
-                a
-            } else if better(b, a) ^ better(b, c) {
-                b
-            } else {
-                c
-            }
-        };
-        // Partition: [lo, p) strictly better than pivot, [p, hi) the rest.
-        let mut p = lo;
-        // Move pivot out of the way by value comparison (indices unique).
-        for i in lo..hi {
-            if better(scratch[i], pivot) {
-                scratch.swap(i, p);
-                p += 1;
-            }
-        }
-        let left = p - lo;
-        if left == need {
-            break;
-        } else if left > need {
-            hi = p;
-        } else {
-            // Pivot itself belongs to the selection boundary; locate it.
-            // All of [lo, p) selected; continue right of p.
-            need -= left;
-            lo = p;
-            // Guard: if nothing was better than the pivot, the pivot is the
-            // single best remaining element — select it directly to ensure
-            // progress.
-            if left == 0 {
-                let pos = scratch[lo..hi].iter().position(|&x| x == pivot).unwrap() + lo;
-                scratch.swap(lo, pos);
-                lo += 1;
-                need -= 1;
-                if need == 0 {
-                    break;
-                }
-            }
-        }
-    }
+    quickselect_top_k(scores, scratch, k);
     out.extend_from_slice(&scratch[..k]);
     out.sort_unstable();
 }
@@ -96,15 +203,13 @@ pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<u32> {
     out
 }
 
-/// Reference O(J log J) implementation used by tests.
+/// Reference O(J log J) implementation used by tests. Implements the same
+/// total order (value desc, NaN last, index asc) without panicking on NaN.
 pub fn top_k_indices_sort(scores: &[f32], k: usize) -> Vec<u32> {
     let n = scores.len();
     let mut idx: Vec<u32> = (0..n as u32).collect();
     idx.sort_by(|&a, &b| {
-        scores[b as usize]
-            .partial_cmp(&scores[a as usize])
-            .unwrap()
-            .then(a.cmp(&b))
+        cmp_score_desc(scores[a as usize], scores[b as usize]).then(a.cmp(&b))
     });
     idx.truncate(k.min(n));
     idx.sort_unstable();
@@ -147,6 +252,37 @@ mod tests {
     }
 
     #[test]
+    fn nan_sorts_last() {
+        let scores = [f32::NAN, 1.0, 2.0];
+        assert_eq!(top_k_indices(&scores, 2), vec![1, 2]);
+        assert_eq!(top_k_indices_sort(&scores, 2), vec![1, 2]);
+        // NaN is still selected once the numbers run out, ties by index.
+        assert_eq!(top_k_indices(&scores, 3), vec![0, 1, 2]);
+        let all_nan = [f32::NAN, f32::NAN, f32::NAN];
+        assert_eq!(top_k_indices(&all_nan, 2), vec![0, 1]);
+        assert_eq!(top_k_indices_sort(&all_nan, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn nan_matches_sort_reference_property() {
+        check(200, |g| {
+            let mut scores = g.vec_normal(1..=256);
+            // Poison a random subset with NaN.
+            for v in scores.iter_mut() {
+                if g.bool_with(0.2) {
+                    *v = f32::NAN;
+                }
+            }
+            let k = g.usize_in(0..=scores.len());
+            assert_eq!(
+                top_k_indices(&scores, k),
+                top_k_indices_sort(&scores, k),
+                "k={k} scores={scores:?}"
+            );
+        });
+    }
+
+    #[test]
     fn matches_sort_reference_property() {
         check(200, |g| {
             let scores = g.vec_normal(1..=512);
@@ -167,6 +303,53 @@ mod tests {
             let k = g.usize_in(0..=n);
             assert_eq!(top_k_indices(&scores, k), top_k_indices_sort(&scores, k));
         });
+    }
+
+    #[test]
+    fn sampled_path_matches_sort_reference() {
+        // Large enough to engage the sampling pre-filter.
+        check(10, |g| {
+            let n = SAMPLE_MIN_LEN + g.usize_in(0..=4096);
+            let scores: Vec<f32> = (0..n).map(|_| g.normal_f32()).collect();
+            for k in [1usize, 16, 100, n / 100] {
+                assert_eq!(top_k_indices(&scores, k), top_k_indices_sort(&scores, k), "k={k}");
+            }
+        });
+    }
+
+    #[test]
+    fn sampled_path_survives_heavy_ties_and_nan() {
+        check(6, |g| {
+            let n = SAMPLE_MIN_LEN + 1000;
+            let scores: Vec<f32> = (0..n)
+                .map(|_| match g.usize_in(0..=3) {
+                    0 => 0.0,
+                    1 => 1.0,
+                    2 => 2.0,
+                    _ => f32::NAN,
+                })
+                .collect();
+            for k in [1usize, 64, n / 50] {
+                assert_eq!(top_k_indices(&scores, k), top_k_indices_sort(&scores, k), "k={k}");
+            }
+        });
+    }
+
+    #[test]
+    fn under_collecting_estimate_falls_back_exactly() {
+        // Adversarial layout for the strided sample: every sampled position
+        // holds a large value, so the threshold estimate is far too high
+        // and the candidate pass under-collects; the fallback must still
+        // return the exact answer.
+        let n = 2 * SAMPLE_MIN_LEN;
+        let step = n / SAMPLE_SIZE;
+        let mut scores = vec![0.0f32; n];
+        for i in 0..SAMPLE_SIZE {
+            scores[i * step] = 1.0;
+        }
+        let k = SAMPLE_SIZE + 88; // more than the number of 1.0 entries
+        assert!(k * SAMPLE_MAX_K_FRACTION <= n);
+        assert_eq!(top_k_indices(&scores, k), top_k_indices_sort(&scores, k));
     }
 
     #[test]

@@ -39,15 +39,20 @@ impl Sparsifier for TopK {
     fn compress(&mut self, grad: &[f32], out: &mut SparseGrad) {
         assert_eq!(grad.len(), self.eps.len(), "gradient dimension mismatch");
         out.clear();
-        // a = eps + g; score = |a|   (Algorithm 1, lines 3-4)
-        for j in 0..grad.len() {
-            let a = self.eps[j] + grad[j];
-            self.acc[j] = a;
-            self.scores[j] = a.abs();
+        // a = eps + g; score = |a|   (Algorithm 1, lines 3-4).
+        // `eps` is accumulated in place — it already equals eps' = a − ĝ
+        // everywhere except the selected entries zeroed below, so the
+        // state roll costs O(k) instead of a J-sized copy.
+        for (((e, a), s), &g) in
+            self.eps.iter_mut().zip(self.acc.iter_mut()).zip(self.scores.iter_mut()).zip(grad)
+        {
+            let v = *e + g;
+            *e = v;
+            *a = v;
+            *s = v.abs();
         }
         top_k_indices_into(&self.scores, self.k, &mut self.scratch, &mut self.selected);
         // ĝ = s ⊙ a ; eps' = a - ĝ   (lines 5-7)
-        self.eps.copy_from_slice(&self.acc);
         for &i in &self.selected {
             let i = i as usize;
             out.indices.push(i as u32);
