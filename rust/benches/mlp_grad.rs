@@ -1,0 +1,236 @@
+//! Gradient-path micro-benchmarks: the per-worker per-iteration cost of
+//! the native MLP gradient oracle, before vs after the BLAS-3 compute
+//! core.
+//!
+//! The headline comparison is `batch_grad` (current: whole-batch tiled
+//! GEMMs, persistent packed scratch) vs `batch_grad_seed_persample` — a
+//! verbatim port of the seed's implementation (per-sample stride-`hidden`
+//! matvecs into the flat theta, gradient accumulated one example at a
+//! time) — at the acceptance-criterion shape input=784, hidden=256,
+//! classes=10, batch=64. The tiled GEMM kernels are also measured against
+//! a naive `i,k,j` triple loop at the forward shape.
+//!
+//! `cargo bench --bench mlp_grad` (REGTOPK_BENCH_FAST=1 for smoke).
+//! Results are written to `BENCH_mlp_grad.json` for PR-over-PR perf
+//! diffing alongside `BENCH_sparsify_hot.json`.
+
+use regtopk::bench::{black_box, Bencher};
+use regtopk::data::{ImageDataset, ImageGenConfig};
+use regtopk::grad::{MlpGrad, WorkerGrad};
+use regtopk::models::{Mlp, MlpConfig};
+use regtopk::rng::Pcg64;
+use regtopk::tensor::gemm_nn;
+use std::sync::Arc;
+
+/// The seed's per-sample MLP, ported verbatim: the baseline the
+/// acceptance criterion measures against.
+struct SeedMlp {
+    cfg: MlpConfig,
+    hidden_pre: Vec<f32>,
+    hidden_act: Vec<f32>,
+    logits: Vec<f32>,
+    dlogits: Vec<f32>,
+    dhidden: Vec<f32>,
+}
+
+impl SeedMlp {
+    fn new(cfg: MlpConfig) -> Self {
+        SeedMlp {
+            cfg,
+            hidden_pre: vec![0.0; cfg.hidden],
+            hidden_act: vec![0.0; cfg.hidden],
+            logits: vec![0.0; cfg.classes],
+            dlogits: vec![0.0; cfg.classes],
+            dhidden: vec![0.0; cfg.hidden],
+        }
+    }
+
+    fn forward(&mut self, theta: &[f32], x: &[f32], label: usize) -> (f64, usize) {
+        let c = &self.cfg;
+        let (w1, b1, w2, b2) = c.offsets();
+        for h in 0..c.hidden {
+            let mut s = theta[b1 + h];
+            for i in 0..c.input {
+                s += theta[w1 + i * c.hidden + h] * x[i];
+            }
+            self.hidden_pre[h] = s;
+            self.hidden_act[h] = s.max(0.0);
+        }
+        for k in 0..c.classes {
+            let mut s = theta[b2 + k];
+            for h in 0..c.hidden {
+                s += theta[w2 + h * c.classes + k] * self.hidden_act[h];
+            }
+            self.logits[k] = s;
+        }
+        let mut pred = 0;
+        for (i, &v) in self.logits.iter().enumerate() {
+            if v > self.logits[pred] {
+                pred = i;
+            }
+        }
+        let max = self.logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f64;
+        for v in self.logits.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v as f64;
+        }
+        let inv = (1.0 / sum) as f32;
+        for v in self.logits.iter_mut() {
+            *v *= inv;
+        }
+        let p = self.logits[label].max(1e-12);
+        (-(p as f64).ln(), pred)
+    }
+
+    fn backward_into(&mut self, theta: &[f32], x: &[f32], label: usize, w: f32, grad: &mut [f32]) {
+        let c = &self.cfg;
+        let (w1o, b1o, w2o, b2o) = c.offsets();
+        for k in 0..c.classes {
+            self.dlogits[k] = self.logits[k] - if k == label { 1.0 } else { 0.0 };
+        }
+        for h in 0..c.hidden {
+            let act = self.hidden_act[h];
+            let mut s = 0.0f32;
+            for k in 0..c.classes {
+                let dl = self.dlogits[k];
+                grad[w2o + h * c.classes + k] += w * act * dl;
+                s += theta[w2o + h * c.classes + k] * dl;
+            }
+            self.dhidden[h] = if self.hidden_pre[h] > 0.0 { s } else { 0.0 };
+        }
+        for k in 0..c.classes {
+            grad[b2o + k] += w * self.dlogits[k];
+        }
+        for i in 0..c.input {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let row = w1o + i * c.hidden;
+            for h in 0..c.hidden {
+                grad[row + h] += w * xi * self.dhidden[h];
+            }
+        }
+        for h in 0..c.hidden {
+            grad[b1o + h] += w * self.dhidden[h];
+        }
+    }
+
+    fn batch_grad(&mut self, theta: &[f32], batch: &[(&[f32], usize)], grad: &mut [f32]) -> (f64, f64) {
+        for g in grad.iter_mut() {
+            *g = 0.0;
+        }
+        let w = 1.0 / batch.len() as f32;
+        let mut loss = 0.0;
+        let mut correct = 0usize;
+        for (x, label) in batch {
+            let (l, pred) = self.forward(theta, x, *label);
+            loss += l;
+            if pred == *label {
+                correct += 1;
+            }
+            self.backward_into(theta, x, *label, w, grad);
+        }
+        (loss / batch.len() as f64, correct as f64 / batch.len() as f64)
+    }
+}
+
+fn naive_matmul(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    for v in c.iter_mut() {
+        *v = 0.0;
+    }
+    for i in 0..m {
+        for p in 0..k {
+            let ap = a[i * k + p];
+            for j in 0..n {
+                c[i * n + j] += ap * b[p * n + j];
+            }
+        }
+    }
+}
+
+fn main() {
+    let b = Bencher::from_env();
+    // The acceptance-criterion shape.
+    let cfg = MlpConfig { input: 784, hidden: 256, classes: 10 };
+    let batch = 64usize;
+    let mut rng = Pcg64::seed_from_u64(1);
+    let theta = cfg.init(&mut rng);
+    let x = rng.normal_vec(batch * cfg.input, 0.0, 1.0);
+    let labels: Vec<usize> = (0..batch).map(|i| i % cfg.classes).collect();
+    let refs: Vec<(&[f32], usize)> = (0..batch)
+        .map(|r| (&x[r * cfg.input..(r + 1) * cfg.input], labels[r]))
+        .collect();
+    let mut grad = vec![0.0f32; cfg.dim()];
+    // "Elements" = parameters touched per call, so Melem/s ratios equal
+    // time ratios between the two implementations.
+    let elems = cfg.dim();
+
+    println!("== MLP batch gradient (input=784, hidden=256, classes=10, batch=64) ==");
+    let mut mlp = Mlp::new(cfg);
+    mlp.batch_grad(&theta, &refs, &mut grad); // warm scratch
+    let new_stats = b.report_throughput("batch_grad/batched_gemm", elems, || {
+        mlp.batch_grad(black_box(&theta), &refs, &mut grad);
+        black_box(&grad);
+    });
+    let mut seed = SeedMlp::new(cfg);
+    let seed_stats = b.report_throughput("batch_grad/seed_persample", elems, || {
+        seed.batch_grad(black_box(&theta), &refs, &mut grad);
+        black_box(&grad);
+    });
+    let speedup = seed_stats.median.as_secs_f64() / new_stats.median.as_secs_f64();
+    println!("{:<44} speedup vs seed {speedup:.2}x", "");
+
+    // End-to-end gradient oracle (batch index gen + packed batch + GEMMs),
+    // as the coordinator drives it per iteration.
+    println!("\n== MlpGrad oracle, one iteration (batch indices + pack + batch_grad) ==");
+    let gen = ImageGenConfig {
+        classes: cfg.classes,
+        channels: 1,
+        height: 28,
+        width: 28,
+        per_worker: 256,
+        workers: 1,
+        heterogeneity: 0.3,
+        noise: 0.5,
+    };
+    let data = Arc::new(ImageDataset::generate(&gen, &mut Pcg64::seed_from_u64(2)));
+    let mut oracle = MlpGrad::new(Arc::clone(&data), cfg, 0, batch, 7);
+    oracle.grad(0, &theta, &mut grad); // warm scratch
+    let mut t = 0usize;
+    b.report_throughput("mlp_grad_oracle/iteration", elems, || {
+        t += 1;
+        black_box(oracle.grad(t, &theta, &mut grad));
+    });
+
+    // The forward-pass GEMM shape, tiled kernel vs naive triple loop.
+    println!("\n== SGEMM kernel (64x784 · 784x256, the forward shape) ==");
+    let (m, k, n) = (batch, cfg.input, cfg.hidden);
+    let a = rng.normal_vec(m * k, 0.0, 1.0);
+    let bm = rng.normal_vec(k * n, 0.0, 1.0);
+    let mut c = vec![0.0f32; m * n];
+    let macs = m * k * n;
+    b.report_throughput("gemm_nn/m64_k784_n256", macs, || {
+        gemm_nn(m, k, n, black_box(&a), black_box(&bm), &mut c);
+        black_box(&c);
+    });
+    b.report_throughput("gemm_naive/m64_k784_n256", macs, || {
+        naive_matmul(m, k, n, black_box(&a), black_box(&bm), &mut c);
+        black_box(&c);
+    });
+
+    let speedup_json = regtopk::metrics::json::Json::obj(vec![(
+        "input=784,hidden=256,classes=10,batch=64",
+        regtopk::metrics::json::Json::Num(speedup),
+    )]);
+    if let Err(e) = b.write_json_with(
+        "mlp_grad",
+        vec![("speedup_batch_grad_vs_seed", speedup_json)],
+        "BENCH_mlp_grad.json",
+    ) {
+        eprintln!("could not write BENCH_mlp_grad.json: {e}");
+    } else {
+        println!("wrote BENCH_mlp_grad.json");
+    }
+}

@@ -89,7 +89,7 @@ pub fn train_global_topk<W: WorkerGrad + ?Sized>(
             comm: &agg.comm,
         });
     }
-    Ok(TrainResult { theta, comm: agg.comm, iters: cfg.iters })
+    Ok(TrainResult { theta, comm: agg.comm, iters: cfg.iters, reuse_misses: 0 })
 }
 
 #[cfg(test)]

@@ -48,6 +48,12 @@ pub struct TrainResult {
     pub theta: Vec<f32>,
     pub comm: CommStats,
     pub iters: usize,
+    /// Times a double-buffered payload (theta broadcast, uplink message,
+    /// observe union) on the threaded executor had to fall back to a fresh
+    /// allocation because a receiver still held the buffer. Steady state
+    /// is 0 — pinned by a test; the sequential executors share buffers
+    /// directly and always report 0.
+    pub reuse_misses: u64,
 }
 
 /// Run options orthogonal to the algorithm config.
@@ -116,7 +122,7 @@ pub fn train<W: WorkerGrad + ?Sized>(
             comm: &agg.comm,
         });
     }
-    Ok(TrainResult { theta, comm: agg.comm, iters: cfg.iters })
+    Ok(TrainResult { theta, comm: agg.comm, iters: cfg.iters, reuse_misses: 0 })
 }
 
 /// Dispatch to the sequential or threaded executor (threaded requires

@@ -6,13 +6,27 @@
 //! Message flow per iteration:
 //! ```text
 //! leader --Step{t, θ}-->   worker n      (broadcast, Arc-shared)
-//! leader <--(loss, ĝ_n)--  worker n      (uplink)
+//! leader <--(loss, ĝ_n)--  worker n      (uplink, Arc-shared)
 //! leader --Observe{union}--> worker n    (sparse broadcast, Arc-shared)
 //! ```
 //!
 //! The observe broadcast carries the sparse union (sorted indices +
 //! aggregated values, O(N·k) entries), never a dense J-vector — matching
 //! the wire protocol a real parameter server would use.
+//!
+//! # Zero-allocation steady state
+//!
+//! Every per-iteration payload — the theta broadcast, each worker's
+//! uplink message, and the observe union — lives in a two-slot
+//! [`DoubleBuffer`] and is shipped as an `Arc` clone. The protocol
+//! guarantees that when slot `t % 2` is rewritten at iteration `t + 2`,
+//! every receiver of iteration `t` has already dropped its handle (a
+//! receiver cannot reach iteration `t + 1` traffic without first leaving
+//! the iteration-`t` message scope), so `Arc::get_mut` succeeds and the
+//! underlying buffers are recycled in place. If the invariant is ever
+//! broken the writer falls back to a fresh allocation and counts a miss
+//! in [`TrainResult::reuse_misses`] instead of corrupting shared data;
+//! a test pins the count to zero.
 
 use super::{IterStats, TrainResult};
 use crate::collective::Aggregator;
@@ -20,9 +34,44 @@ use crate::config::TrainConfig;
 use crate::grad::WorkerGrad;
 use crate::optim;
 use crate::sparsify::{SparseGrad, SparseView, Sparsifier, SparsifierKind};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
+
+/// Two-slot `Arc` recycler for per-iteration payloads (see module docs).
+pub struct DoubleBuffer<T: Clone> {
+    slots: [Arc<T>; 2],
+    misses: u64,
+}
+
+impl<T: Clone> DoubleBuffer<T> {
+    pub fn new(init: impl Fn() -> T) -> Self {
+        DoubleBuffer { slots: [Arc::new(init()), Arc::new(init())], misses: 0 }
+    }
+
+    /// Exclusive access to iteration `t`'s slot for writing. Falls back to
+    /// a fresh clone (counted in [`Self::misses`]) if a receiver from
+    /// iteration `t − 2` still holds the slot.
+    pub fn write(&mut self, t: usize) -> &mut T {
+        let slot = &mut self.slots[t & 1];
+        if Arc::get_mut(slot).is_none() {
+            self.misses += 1;
+            *slot = Arc::new(T::clone(slot));
+        }
+        Arc::get_mut(slot).expect("freshly replaced slot is unshared")
+    }
+
+    /// Shared handle to iteration `t`'s slot, for sending.
+    pub fn share(&self, t: usize) -> Arc<T> {
+        Arc::clone(&self.slots[t & 1])
+    }
+
+    /// Times [`Self::write`] found the slot still shared (steady state: 0).
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+}
 
 /// Leader -> worker messages.
 enum ToWorker {
@@ -32,10 +81,11 @@ enum ToWorker {
     Stop,
 }
 
-/// Worker -> leader message: local loss + sparse gradient.
+/// Worker -> leader message: local loss + sparse gradient (a shared handle
+/// into the worker's double-buffered message slot — no copy on the wire).
 struct FromWorker {
     loss: f64,
-    msg: SparseGrad,
+    msg: Arc<SparseGrad>,
 }
 
 struct WorkerHandle {
@@ -48,29 +98,29 @@ fn spawn_worker(
     mut grad: Box<dyn WorkerGrad + Send>,
     mut sparsifier: Box<dyn Sparsifier>,
     dim: usize,
+    miss_counter: Arc<AtomicU64>,
 ) -> WorkerHandle {
     let (tx_cmd, rx_cmd) = mpsc::channel::<ToWorker>();
     let (tx_res, rx_res) = mpsc::channel::<FromWorker>();
     let join = thread::spawn(move || {
         let mut gbuf = vec![0.0f32; dim];
-        let mut msg = SparseGrad::default();
+        let mut msg_bufs: DoubleBuffer<SparseGrad> = DoubleBuffer::new(SparseGrad::default);
         while let Ok(cmd) = rx_cmd.recv() {
             match cmd {
                 ToWorker::Step { t, theta } => {
                     let loss = grad.grad(t, &theta, &mut gbuf);
-                    sparsifier.compress(&gbuf, &mut msg);
-                    // Channel ownership forces a clone of the message; the
-                    // sequential executor avoids this (see benches).
-                    if tx_res.send(FromWorker { loss, msg: msg.clone() }).is_err() {
-                        return;
+                    sparsifier.compress(&gbuf, msg_bufs.write(t));
+                    if tx_res.send(FromWorker { loss, msg: msg_bufs.share(t) }).is_err() {
+                        break;
                     }
                 }
                 ToWorker::Observe { bcast } => {
                     sparsifier.observe(SparseView::new(&bcast.0, &bcast.1))
                 }
-                ToWorker::Stop => return,
+                ToWorker::Stop => break,
             }
         }
+        miss_counter.fetch_add(msg_bufs.misses(), Ordering::Relaxed);
     });
     WorkerHandle { tx: tx_cmd, rx: rx_res, join }
 }
@@ -93,20 +143,23 @@ pub fn train_threaded(
     }
     let omega: Vec<f32> = cfg.omega().iter().map(|&w| w as f32).collect();
     let sparsifiers = super::build_sparsifiers(cfg, dim);
+    let uplink_misses = Arc::new(AtomicU64::new(0));
     let mut handles: Vec<WorkerHandle> = workers
         .into_iter()
         .zip(sparsifiers)
-        .map(|(g, s)| spawn_worker(g, s, dim))
+        .map(|(g, s)| spawn_worker(g, s, dim, Arc::clone(&uplink_misses)))
         .collect();
     let mut optimizer = optim::build(cfg.optimizer, dim);
     let mut agg = Aggregator::new(dim);
     let mut theta = theta0;
+    let mut theta_bufs: DoubleBuffer<Vec<f32>> = DoubleBuffer::new(|| vec![0.0f32; dim]);
+    let mut union_bufs: DoubleBuffer<(Vec<u32>, Vec<f32>)> = DoubleBuffer::new(Default::default);
     let mut result: anyhow::Result<()> = Ok(());
     'outer: for t in 0..cfg.iters {
         let lr = cfg.lr_schedule.at(cfg.lr, t);
-        let shared = Arc::new(theta.clone());
+        theta_bufs.write(t).copy_from_slice(&theta);
         for h in &handles {
-            if h.tx.send(ToWorker::Step { t, theta: Arc::clone(&shared) }).is_err() {
+            if h.tx.send(ToWorker::Step { t, theta: theta_bufs.share(t) }).is_err() {
                 result = Err(anyhow::anyhow!("worker died"));
                 break 'outer;
             }
@@ -128,10 +181,15 @@ pub fn train_threaded(
         }
         agg.finish(cfg.workers);
         let (dense, bcast) = (agg.dense(), agg.broadcast());
-        // Ship only the union down the channels — O(N·k), not O(N·J).
-        let shared_bcast = Arc::new((bcast.indices.to_vec(), bcast.values.to_vec()));
+        // Ship only the union down the channels — O(N·k), not O(N·J) —
+        // recycling the previous-previous round's buffers.
+        let ub = union_bufs.write(t);
+        ub.0.clear();
+        ub.0.extend_from_slice(bcast.indices);
+        ub.1.clear();
+        ub.1.extend_from_slice(bcast.values);
         for h in &handles {
-            let _ = h.tx.send(ToWorker::Observe { bcast: Arc::clone(&shared_bcast) });
+            let _ = h.tx.send(ToWorker::Observe { bcast: union_bufs.share(t) });
         }
         optimizer.step(&mut theta, dense, lr);
         probe(IterStats {
@@ -149,14 +207,20 @@ pub fn train_threaded(
         let _ = h.join.join();
     }
     result?;
-    Ok(TrainResult { theta, comm: agg.comm, iters: cfg.iters })
+    let reuse_misses =
+        theta_bufs.misses() + union_bufs.misses() + uplink_misses.load(Ordering::Relaxed);
+    Ok(TrainResult { theta, comm: agg.comm, iters: cfg.iters, reuse_misses })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::TrainConfig;
-    use crate::coordinator::{run_linreg, RunOpts};
+    use crate::coordinator::{run_linreg, train, RunOpts};
+    use crate::data::{ImageDataset, ImageGenConfig};
+    use crate::grad::MlpGrad;
+    use crate::models::MlpConfig;
+    use crate::rng::Pcg64;
 
     fn cfg(kind: SparsifierKind) -> TrainConfig {
         TrainConfig {
@@ -189,7 +253,82 @@ mod tests {
                 "{kind:?}: executors must agree bit-for-bit"
             );
             assert_eq!(seq.result.comm.total_bytes(), thr.result.comm.total_bytes());
+            assert_eq!(
+                thr.result.reuse_misses, 0,
+                "{kind:?}: steady state must reuse every payload buffer"
+            );
         }
+    }
+
+    #[test]
+    fn threaded_mlp_matches_sequential_and_reuses_buffers() {
+        // The batched MLP gradient path through both executors: identical
+        // results, and zero allocation fallbacks for the theta broadcast,
+        // uplink messages, and observe unions over the whole run.
+        let icfg = ImageGenConfig {
+            per_worker: 32,
+            workers: 4,
+            classes: 4,
+            channels: 1,
+            height: 4,
+            width: 4,
+            ..Default::default()
+        };
+        let data = std::sync::Arc::new(ImageDataset::generate(
+            &icfg,
+            &mut Pcg64::seed_from_u64(21),
+        ));
+        let mcfg = MlpConfig { input: icfg.pixels(), hidden: 8, classes: icfg.classes };
+        let c = TrainConfig {
+            workers: 4,
+            dim: mcfg.dim(),
+            sparsity: 0.1,
+            sparsifier: SparsifierKind::RegTopK { mu: 1.0, y: 1.0 },
+            lr: 0.05,
+            iters: 40,
+            seed: 5,
+            ..Default::default()
+        };
+        let theta0 = mcfg.init(&mut Pcg64::seed_from_u64(9));
+        let seq = train(
+            &c,
+            theta0.clone(),
+            MlpGrad::all(&data, mcfg, 8, 3),
+            &mut |_| {},
+        )
+        .unwrap();
+        let thr = train_threaded(&c, theta0, MlpGrad::all(&data, mcfg, 8, 3), &mut |_| {})
+            .unwrap();
+        assert_eq!(seq.theta, thr.theta, "executors must agree bit-for-bit on MLP");
+        assert_eq!(thr.reuse_misses, 0, "zero-allocation steady state violated");
+        assert_eq!(seq.reuse_misses, 0);
+    }
+
+    #[test]
+    fn double_buffer_reuses_allocations_in_steady_state() {
+        let mut db: DoubleBuffer<Vec<f32>> = DoubleBuffer::new(|| vec![0.0; 8]);
+        let ptrs = [db.share(0).as_ptr(), db.share(1).as_ptr()];
+        for t in 0..100 {
+            let w = db.write(t);
+            w[0] = t as f32;
+            assert_eq!(w.as_ptr(), ptrs[t & 1], "slot must be recycled in place");
+            let shared = db.share(t);
+            assert_eq!(shared[0], t as f32);
+            // Receiver drops its handle before the slot comes around again.
+            drop(shared);
+        }
+        assert_eq!(db.misses(), 0);
+    }
+
+    #[test]
+    fn double_buffer_falls_back_safely_when_receiver_holds_slot() {
+        let mut db: DoubleBuffer<Vec<f32>> = DoubleBuffer::new(|| vec![1.0; 4]);
+        let held = db.share(0);
+        let w = db.write(0); // slot still shared -> fresh allocation
+        w[0] = 99.0;
+        assert_eq!(held[0], 1.0, "a held buffer must never be mutated");
+        assert_eq!(db.share(0)[0], 99.0);
+        assert_eq!(db.misses(), 1);
     }
 
     #[test]

@@ -53,6 +53,31 @@ pub struct Sample {
     pub label: usize,
 }
 
+/// Pack an ordered set of samples into a row-major `n×pixels` matrix plus
+/// a label buffer, reusing the caller's allocations (steady-state calls
+/// with a stable `n` never reallocate). The packing routine behind every
+/// [`Sample`]-based gradient/evaluation path (`Mlp`'s slice-of-refs entry
+/// points pack equivalently from borrowed slices in `Mlp::pack` — keep
+/// the two layouts in lockstep).
+pub fn pack_samples_into<'a>(
+    samples: impl ExactSizeIterator<Item = &'a Sample>,
+    pixels: usize,
+    xb: &mut Vec<f32>,
+    labels: &mut Vec<usize>,
+) {
+    let n = samples.len();
+    // Exact length (callers hand the whole buffer to the batched model,
+    // which asserts the `n×pixels` shape); shrinking keeps capacity, so
+    // steady-state reuse still never reallocates.
+    xb.resize(n * pixels, 0.0);
+    labels.clear();
+    labels.reserve(n);
+    for (r, s) in samples.enumerate() {
+        xb[r * pixels..(r + 1) * pixels].copy_from_slice(&s.image);
+        labels.push(s.label);
+    }
+}
+
 /// All workers' shards plus a held-out validation set drawn from the
 /// *global* mixture (so validation measures the consensus objective).
 #[derive(Clone, Debug)]
@@ -110,11 +135,29 @@ impl ImageDataset {
         ImageDataset { cfg: *cfg, shards, validation }
     }
 
-    /// Deterministic mini-batch of indices for worker `w`, iteration `t`.
-    pub fn batch_indices(&self, w: usize, t: usize, batch: usize, seed: u64) -> Vec<usize> {
+    /// Deterministic mini-batch of indices for worker `w`, iteration `t`,
+    /// written into a caller-owned buffer (the allocation-free form the
+    /// per-iteration gradient oracles use).
+    pub fn batch_indices_into(
+        &self,
+        w: usize,
+        t: usize,
+        batch: usize,
+        seed: u64,
+        out: &mut Vec<usize>,
+    ) {
         let mut rng = Pcg64::new(seed ^ ((w as u64) << 32) ^ t as u64, 0xBA7C4);
         let n = self.shards[w].len();
-        (0..batch.min(n)).map(|_| rng.below(n as u64) as usize).collect()
+        out.clear();
+        out.extend((0..batch.min(n)).map(|_| rng.below(n as u64) as usize));
+    }
+
+    /// Deterministic mini-batch of indices for worker `w`, iteration `t`
+    /// (allocating convenience wrapper over [`Self::batch_indices_into`]).
+    pub fn batch_indices(&self, w: usize, t: usize, batch: usize, seed: u64) -> Vec<usize> {
+        let mut out = Vec::with_capacity(batch);
+        self.batch_indices_into(w, t, batch, seed, &mut out);
+        out
     }
 }
 
@@ -196,5 +239,22 @@ mod tests {
         assert!(a.iter().all(|&i| i < 40));
         let c = ds.batch_indices(0, 4, 8, 42);
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn batch_indices_into_matches_allocating_form_and_reuses_buffer() {
+        let cfg = ImageGenConfig { per_worker: 40, workers: 2, ..Default::default() };
+        let ds = ImageDataset::generate(&cfg, &mut Pcg64::seed_from_u64(7));
+        let mut buf = Vec::new();
+        ds.batch_indices_into(1, 9, 8, 13, &mut buf);
+        assert_eq!(buf, ds.batch_indices(1, 9, 8, 13));
+        let cap = buf.capacity();
+        let ptr = buf.as_ptr();
+        for t in 0..20 {
+            ds.batch_indices_into(1, t, 8, 13, &mut buf);
+            assert_eq!(buf, ds.batch_indices(1, t, 8, 13));
+        }
+        assert_eq!(buf.capacity(), cap, "steady-state calls must not reallocate");
+        assert_eq!(buf.as_ptr(), ptr);
     }
 }

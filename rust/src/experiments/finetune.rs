@@ -111,13 +111,22 @@ pub fn pretrain(size: &SuiteSize, variant: &Variant, seed: u64) -> Vec<f32> {
     let mut mlp = Mlp::new(cfg);
     let mut theta = cfg.init(&mut Pcg64::new(seed ^ 0xC0DE, 0x1247));
     let mut grad = vec![0.0f32; cfg.dim()];
-    // Train on worker 0's shard (centralized pretraining).
+    // Train on worker 0's shard (centralized pretraining). Batch scratch
+    // is packed once per step into reused buffers — no per-step Vec of
+    // refs, same as the distributed gradient oracle.
     let shard = &data.shards[0];
+    let mut idx = Vec::new();
+    let mut xb: Vec<f32> = Vec::new();
+    let mut labels = Vec::new();
     for t in 0..size.pretrain_steps {
-        let idx = data.batch_indices(0, t, size.batch * 2, seed);
-        let batch: Vec<(&[f32], usize)> =
-            idx.iter().map(|&i| (shard[i].image.as_slice(), shard[i].label)).collect();
-        mlp.batch_grad(&theta, &batch, &mut grad);
+        data.batch_indices_into(0, t, size.batch * 2, seed, &mut idx);
+        crate::data::images::pack_samples_into(
+            idx.iter().map(|&i| &shard[i]),
+            cfg.input,
+            &mut xb,
+            &mut labels,
+        );
+        mlp.batch_grad_packed(&theta, &xb, &labels, &mut grad);
         for (p, g) in theta.iter_mut().zip(grad.iter()) {
             *p -= 0.05 * g;
         }

@@ -94,18 +94,43 @@ impl WorkerGrad for LogisticGrad {
 }
 
 /// Mini-batch MLP gradient over a worker's image shard.
+///
+/// Owns all per-iteration scratch: the batch index buffer, the packed
+/// row-major batch matrix, and the label buffer are grown once and reused,
+/// so a steady-state [`WorkerGrad::grad`] call performs zero heap
+/// allocations (the batched [`Mlp`] keeps its own GEMM scratch likewise).
 pub struct MlpGrad {
     data: Arc<ImageDataset>,
     mlp: Mlp,
     worker: usize,
     batch: usize,
     seed: u64,
+    /// Reused mini-batch index buffer.
+    idx: Vec<usize>,
+    /// Reused packed batch (`batch × pixels`, row-major).
+    xbatch: Vec<f32>,
+    /// Reused label buffer.
+    labels: Vec<usize>,
+    /// Validation set packed once on first evaluate, reused afterwards.
+    val_x: Vec<f32>,
+    val_labels: Vec<usize>,
 }
 
 impl MlpGrad {
     pub fn new(data: Arc<ImageDataset>, cfg: MlpConfig, worker: usize, batch: usize, seed: u64) -> Self {
         assert_eq!(cfg.input, data.cfg.pixels(), "MLP input must match image size");
-        MlpGrad { data, mlp: Mlp::new(cfg), worker, batch, seed }
+        MlpGrad {
+            data,
+            mlp: Mlp::new(cfg),
+            worker,
+            batch,
+            seed,
+            idx: Vec::new(),
+            xbatch: Vec::new(),
+            labels: Vec::new(),
+            val_x: Vec::new(),
+            val_labels: Vec::new(),
+        }
     }
 
     pub fn all(
@@ -122,11 +147,19 @@ impl MlpGrad {
             .collect()
     }
 
-    /// Validation metrics with the current scratch model.
+    /// Validation metrics with the current scratch model. The validation
+    /// set is packed into a row-major matrix once, on first call, and
+    /// reused for every later evaluation.
     pub fn evaluate(&mut self, theta: &[f32]) -> (f64, f64) {
-        let set: Vec<(&[f32], usize)> =
-            self.data.validation.iter().map(|s| (s.image.as_slice(), s.label)).collect();
-        self.mlp.evaluate(theta, &set)
+        if self.val_labels.is_empty() && !self.data.validation.is_empty() {
+            crate::data::images::pack_samples_into(
+                self.data.validation.iter(),
+                self.mlp.cfg.input,
+                &mut self.val_x,
+                &mut self.val_labels,
+            );
+        }
+        self.mlp.evaluate_packed(theta, &self.val_x, &self.val_labels)
     }
 }
 
@@ -136,11 +169,15 @@ impl WorkerGrad for MlpGrad {
     }
 
     fn grad(&mut self, t: usize, theta: &[f32], out: &mut [f32]) -> f64 {
-        let idx = self.data.batch_indices(self.worker, t, self.batch, self.seed);
+        self.data.batch_indices_into(self.worker, t, self.batch, self.seed, &mut self.idx);
         let shard = &self.data.shards[self.worker];
-        let batch: Vec<(&[f32], usize)> =
-            idx.iter().map(|&i| (shard[i].image.as_slice(), shard[i].label)).collect();
-        let (loss, _) = self.mlp.batch_grad(theta, &batch, out);
+        crate::data::images::pack_samples_into(
+            self.idx.iter().map(|&i| &shard[i]),
+            self.mlp.cfg.input,
+            &mut self.xbatch,
+            &mut self.labels,
+        );
+        let (loss, _) = self.mlp.batch_grad_packed(theta, &self.xbatch, &self.labels, out);
         loss
     }
 }

@@ -9,8 +9,30 @@
 //! Parameters are stored flattened in one `Vec<f32>` — the layout the
 //! sparsifiers and the PJRT runtime both operate on:
 //! `[W1 (in×hidden) | b1 (hidden) | W2 (hidden×classes) | b2 (classes)]`.
+//!
+//! The training path is *batched*: the whole mini-batch is packed into one
+//! row-major `B×input` matrix and the pass is four tiled GEMMs
+//! ([`crate::tensor::gemm`]) plus O(B·(hidden+classes)) elementwise work —
+//!
+//! ```text
+//! H  = relu(X·W1 + b1)          gemm_nn
+//! L  = H·W2 + b2                gemm_nn
+//! dL = (softmax(L) − onehot)/B
+//! dW2 = Hᵀ·dL,  db2 = colsum dL  gemm_tn
+//! dH  = dL·W2ᵀ ⊙ [H > 0]         gemm_nt
+//! dW1 = Xᵀ·dH,  db1 = colsum dH  gemm_tn
+//! ```
+//!
+//! — instead of per-sample stride-`hidden` matvecs into the flat `theta`.
+//! The per-sample [`Mlp::forward`]/[`Mlp::backward_into`] pair is kept as
+//! the slow, obviously-correct reference; a property test pins the batched
+//! path to it within 1e-5.
+//!
+//! All scratch lives in the `Mlp` value and is grown once to the largest
+//! batch seen: steady-state `batch_grad`/`evaluate` calls allocate nothing.
 
 use crate::rng::Pcg64;
+use crate::tensor::gemm::{gemm_nn, gemm_nt, gemm_tn};
 use crate::tensor::softmax_inplace;
 
 /// Architecture description.
@@ -51,11 +73,26 @@ impl MlpConfig {
 /// Reusable forward/backward scratch (one per worker).
 pub struct Mlp {
     pub cfg: MlpConfig,
+    // Per-sample scratch (reference path).
     hidden_pre: Vec<f32>,
     hidden_act: Vec<f32>,
     logits: Vec<f32>,
     dlogits: Vec<f32>,
     dhidden: Vec<f32>,
+    // Batched scratch, grown once to the largest batch seen.
+    cap: usize,
+    /// Packed batch `cap×input` for the slice-of-refs entry points.
+    xb: Vec<f32>,
+    /// Labels scratch for the slice-of-refs entry points.
+    labels: Vec<usize>,
+    /// `cap×hidden` post-ReLU activations (sign doubles as the ReLU mask).
+    hb: Vec<f32>,
+    /// `cap×classes` logits, softmax'd in place.
+    lb: Vec<f32>,
+    /// `cap×classes` mean-scaled dlogits.
+    dlb: Vec<f32>,
+    /// `cap×hidden` hidden gradient.
+    dhb: Vec<f32>,
 }
 
 impl Mlp {
@@ -67,11 +104,32 @@ impl Mlp {
             logits: vec![0.0; cfg.classes],
             dlogits: vec![0.0; cfg.classes],
             dhidden: vec![0.0; cfg.hidden],
+            cap: 0,
+            xb: Vec::new(),
+            labels: Vec::new(),
+            hb: Vec::new(),
+            lb: Vec::new(),
+            dlb: Vec::new(),
+            dhb: Vec::new(),
+        }
+    }
+
+    /// Grow the forward/backward scratch to hold `n` samples (no-op once
+    /// warm). `xb` is grown only by [`Self::pack`] and `dlb` only on the
+    /// gradient path, so packed-entry evaluation never allocates either.
+    fn ensure_cap(&mut self, n: usize) {
+        if n > self.cap {
+            let c = self.cfg;
+            self.hb.resize(n * c.hidden, 0.0);
+            self.lb.resize(n * c.classes, 0.0);
+            self.dhb.resize(n * c.hidden, 0.0);
+            self.cap = n;
         }
     }
 
     /// Forward pass for one example; returns (loss, predicted class).
-    /// ReLU hidden activation, softmax CE loss.
+    /// ReLU hidden activation, softmax CE loss. The slow per-sample
+    /// reference the batched path is property-tested against.
     pub fn forward(&mut self, theta: &[f32], x: &[f32], label: usize) -> (f64, usize) {
         let c = &self.cfg;
         assert_eq!(x.len(), c.input);
@@ -139,6 +197,142 @@ impl Mlp {
         }
     }
 
+    /// Batched fused forward(+backward) over a packed row-major batch.
+    /// `x` is `n×input` with `n = labels.len()`; when `grad` is present it
+    /// is fully overwritten with the mean gradient. Returns
+    /// (mean loss, accuracy).
+    fn batched_core(
+        &mut self,
+        theta: &[f32],
+        x: &[f32],
+        labels: &[usize],
+        grad: Option<&mut [f32]>,
+    ) -> (f64, f64) {
+        let c = self.cfg;
+        let n = labels.len();
+        assert_eq!(x.len(), n * c.input, "packed batch shape mismatch");
+        assert_eq!(theta.len(), c.dim());
+        self.ensure_cap(n);
+        let (w1, b1, w2, b2) = c.offsets();
+
+        // H = relu(X·W1 + b1).
+        let hb = &mut self.hb[..n * c.hidden];
+        gemm_nn(n, c.input, c.hidden, x, &theta[w1..b1], hb);
+        let bias1 = &theta[b1..w2];
+        for r in 0..n {
+            let row = &mut hb[r * c.hidden..(r + 1) * c.hidden];
+            for (v, &bv) in row.iter_mut().zip(bias1) {
+                *v = (*v + bv).max(0.0);
+            }
+        }
+
+        // L = H·W2 + b2.
+        let lb = &mut self.lb[..n * c.classes];
+        gemm_nn(n, c.hidden, c.classes, hb, &theta[w2..b2], lb);
+        let bias2 = &theta[b2..];
+        for r in 0..n {
+            let row = &mut lb[r * c.classes..(r + 1) * c.classes];
+            for (v, &bv) in row.iter_mut().zip(bias2) {
+                *v += bv;
+            }
+        }
+
+        // Softmax rows, loss/accuracy, and (if training) scaled dlogits.
+        let want_grad = grad.is_some();
+        if want_grad && self.dlb.len() < n * c.classes {
+            self.dlb.resize(n * c.classes, 0.0);
+        }
+        let wscale = 1.0 / n as f32;
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        for r in 0..n {
+            let row = &mut lb[r * c.classes..(r + 1) * c.classes];
+            let label = labels[r];
+            let pred = argmax(row);
+            softmax_inplace(row);
+            loss += -(row[label].max(1e-12) as f64).ln();
+            if pred == label {
+                correct += 1;
+            }
+            if want_grad {
+                let drow = &mut self.dlb[r * c.classes..(r + 1) * c.classes];
+                for k in 0..c.classes {
+                    drow[k] = (row[k] - if k == label { 1.0 } else { 0.0 }) * wscale;
+                }
+            }
+        }
+
+        if let Some(grad) = grad {
+            let dlb = &self.dlb[..n * c.classes];
+            // dW2 = Hᵀ·dL; db2 = column sums of dL.
+            gemm_tn(c.hidden, n, c.classes, hb, dlb, &mut grad[w2..b2]);
+            let gb2 = &mut grad[b2..];
+            for v in gb2.iter_mut() {
+                *v = 0.0;
+            }
+            for r in 0..n {
+                for (v, &d) in gb2.iter_mut().zip(&dlb[r * c.classes..(r + 1) * c.classes]) {
+                    *v += d;
+                }
+            }
+            // dH = dL·W2ᵀ, masked by the ReLU sign (act > 0 ⟺ pre > 0).
+            let dhb = &mut self.dhb[..n * c.hidden];
+            gemm_nt(n, c.classes, c.hidden, dlb, &theta[w2..b2], dhb);
+            for (dv, &hv) in dhb.iter_mut().zip(hb.iter()) {
+                if hv <= 0.0 {
+                    *dv = 0.0;
+                }
+            }
+            // dW1 = Xᵀ·dH; db1 = column sums of dH.
+            gemm_tn(c.input, n, c.hidden, x, dhb, &mut grad[w1..b1]);
+            let gb1 = &mut grad[b1..w2];
+            for v in gb1.iter_mut() {
+                *v = 0.0;
+            }
+            for r in 0..n {
+                for (v, &d) in gb1.iter_mut().zip(&dhb[r * c.hidden..(r + 1) * c.hidden]) {
+                    *v += d;
+                }
+            }
+        }
+        (loss / n as f64, correct as f64 / n as f64)
+    }
+
+    /// Mean loss + gradient over a pre-packed batch (`x` row-major
+    /// `labels.len()×input`). The allocation-free entry point the gradient
+    /// oracles use: the caller owns the packed batch, this owns the rest.
+    pub fn batch_grad_packed(
+        &mut self,
+        theta: &[f32],
+        x: &[f32],
+        labels: &[usize],
+        grad: &mut [f32],
+    ) -> (f64, f64) {
+        self.batched_core(theta, x, labels, Some(grad))
+    }
+
+    /// Mean loss and accuracy over a pre-packed set (no gradient).
+    pub fn evaluate_packed(&mut self, theta: &[f32], x: &[f32], labels: &[usize]) -> (f64, f64) {
+        self.batched_core(theta, x, labels, None)
+    }
+
+    /// Pack a slice-of-refs batch into the internal scratch, returning the
+    /// sample count. Reuses `self.xb`/`self.labels` (no steady-state
+    /// allocation).
+    fn pack(&mut self, batch: &[(&[f32], usize)]) -> usize {
+        let n = batch.len();
+        let input = self.cfg.input;
+        if self.xb.len() < n * input {
+            self.xb.resize(n * input, 0.0);
+        }
+        self.labels.clear();
+        for (r, (x, label)) in batch.iter().enumerate() {
+            self.xb[r * input..(r + 1) * input].copy_from_slice(x);
+            self.labels.push(*label);
+        }
+        n
+    }
+
     /// Mean loss + gradient over a batch; returns (mean loss, accuracy).
     pub fn batch_grad(
         &mut self,
@@ -146,42 +340,38 @@ impl Mlp {
         batch: &[(&[f32], usize)],
         grad: &mut [f32],
     ) -> (f64, f64) {
-        for g in grad.iter_mut() {
-            *g = 0.0;
-        }
-        let w = 1.0 / batch.len() as f32;
-        let mut loss = 0.0;
-        let mut correct = 0usize;
-        for (x, label) in batch {
-            let (l, pred) = self.forward(theta, x, *label);
-            loss += l;
-            if pred == *label {
-                correct += 1;
-            }
-            self.backward_into(theta, x, *label, w, grad);
-        }
-        (loss / batch.len() as f64, correct as f64 / batch.len() as f64)
+        let n = self.pack(batch);
+        let xb = std::mem::take(&mut self.xb);
+        let labels = std::mem::take(&mut self.labels);
+        let out = self.batched_core(theta, &xb[..n * self.cfg.input], &labels, Some(grad));
+        self.xb = xb;
+        self.labels = labels;
+        out
     }
 
     /// Mean loss and accuracy over a set (no gradient).
     pub fn evaluate(&mut self, theta: &[f32], set: &[(&[f32], usize)]) -> (f64, f64) {
-        let mut loss = 0.0;
-        let mut correct = 0usize;
-        for (x, label) in set {
-            let (l, pred) = self.forward(theta, x, *label);
-            loss += l;
-            if pred == *label {
-                correct += 1;
-            }
-        }
-        (loss / set.len() as f64, correct as f64 / set.len() as f64)
+        let n = self.pack(set);
+        let xb = std::mem::take(&mut self.xb);
+        let labels = std::mem::take(&mut self.labels);
+        let out = self.batched_core(theta, &xb[..n * self.cfg.input], &labels, None);
+        self.xb = xb;
+        self.labels = labels;
+        out
     }
 }
 
+/// Index of the maximum logit under the NaN-sorts-last total order of
+/// `sparsify::select` (value descending, every number before any NaN,
+/// ties to the lower index): a NaN logit never beats a real one — in
+/// particular a leading NaN no longer masks every later finite logit —
+/// and an all-NaN row yields 0 by the tie rule, not by comparison
+/// accident.
 fn argmax(xs: &[f32]) -> usize {
     let mut best = 0;
-    for (i, &v) in xs.iter().enumerate() {
-        if v > xs[best] {
+    for (i, &v) in xs.iter().enumerate().skip(1) {
+        let b = xs[best];
+        if v > b || (b.is_nan() && !v.is_nan()) {
             best = i;
         }
     }
@@ -191,6 +381,7 @@ fn argmax(xs: &[f32]) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testing::check;
 
     fn tiny() -> MlpConfig {
         MlpConfig { input: 4, hidden: 6, classes: 3 }
@@ -247,6 +438,38 @@ mod tests {
     }
 
     #[test]
+    fn batched_gradient_matches_finite_difference() {
+        // Same finite-difference pin, but through the batched path with a
+        // multi-sample batch — the loss is the batch mean.
+        let c = tiny();
+        let mut m = Mlp::new(c);
+        let mut rng = Pcg64::seed_from_u64(4);
+        let theta = c.init(&mut rng);
+        let xs: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(c.input, 0.0, 1.0)).collect();
+        let labels = [0usize, 2, 1, 1, 0];
+        let batch: Vec<(&[f32], usize)> =
+            xs.iter().zip(labels).map(|(x, l)| (x.as_slice(), l)).collect();
+        let mut grad = vec![0.0; c.dim()];
+        m.batch_grad(&theta, &batch, &mut grad);
+        let h = 1e-3f32;
+        let mean_loss = |m: &mut Mlp, th: &[f32]| {
+            batch.iter().map(|&(x, l)| m.forward(th, x, l).0).sum::<f64>() / batch.len() as f64
+        };
+        for &j in &[0usize, 7, 24, 29, 33, 47, 49, 50] {
+            let mut tp = theta.clone();
+            tp[j] += h;
+            let mut tm = theta.clone();
+            tm[j] -= h;
+            let fd = (mean_loss(&mut m, &tp) - mean_loss(&mut m, &tm)) / (2.0 * h as f64);
+            assert!(
+                (fd - grad[j] as f64).abs() < 1e-2 * (1.0 + fd.abs()),
+                "j={j} fd={fd} analytic={}",
+                grad[j]
+            );
+        }
+    }
+
+    #[test]
     fn batch_grad_averages() {
         let c = tiny();
         let mut m = Mlp::new(c);
@@ -266,6 +489,100 @@ mod tests {
             let expect = 0.5 * (g1[j] + g2[j]);
             assert!((g_batch[j] - expect).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn batched_matches_per_sample_reference_property() {
+        // The batched GEMM path must agree with the per-sample reference
+        // (forward + backward_into at weight 1/B) within 1e-5 across random
+        // architectures and batch sizes, including batches that are not
+        // multiples of any tile width.
+        check(40, |g| {
+            let cfg = MlpConfig {
+                input: g.usize_in(1..=9),
+                hidden: g.usize_in(1..=17),
+                classes: g.usize_in(1..=5),
+            };
+            let n = g.usize_in(1..=13);
+            let mut theta = vec![0.0f32; cfg.dim()];
+            for v in theta.iter_mut() {
+                *v = g.normal_f32() * 0.5;
+            }
+            let xs: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..cfg.input).map(|_| g.normal_f32()).collect())
+                .collect();
+            let labels: Vec<usize> = (0..n).map(|_| g.usize_in(0..=cfg.classes - 1)).collect();
+            let batch: Vec<(&[f32], usize)> =
+                xs.iter().zip(labels.iter()).map(|(x, &l)| (x.as_slice(), l)).collect();
+
+            let mut m = Mlp::new(cfg);
+            let mut g_batched = vec![0.0f32; cfg.dim()];
+            let (loss_b, acc_b) = m.batch_grad(&theta, &batch, &mut g_batched);
+
+            let mut g_ref = vec![0.0f32; cfg.dim()];
+            let w = 1.0 / n as f32;
+            let mut loss_ref = 0.0f64;
+            let mut correct = 0usize;
+            for &(x, l) in &batch {
+                let (loss, pred) = m.forward(&theta, x, l);
+                loss_ref += loss;
+                if pred == l {
+                    correct += 1;
+                }
+                m.backward_into(&theta, x, l, w, &mut g_ref);
+            }
+            loss_ref /= n as f64;
+            assert!((loss_b - loss_ref).abs() < 1e-5 * (1.0 + loss_ref.abs()));
+            // The two paths sum logits in different orders; on an exact
+            // argmax tie a prediction may flip, so allow one sample of
+            // slack on accuracy (gradients are unaffected by pred).
+            assert!((acc_b - correct as f64 / n as f64).abs() <= 1.0 / n as f64 + 1e-12);
+            for j in 0..cfg.dim() {
+                assert!(
+                    (g_batched[j] - g_ref[j]).abs() < 1e-5 * (1.0 + g_ref[j].abs()),
+                    "j={j}: batched {} vs reference {}",
+                    g_batched[j],
+                    g_ref[j]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn packed_and_refs_entry_points_agree() {
+        let c = tiny();
+        let mut m = Mlp::new(c);
+        let mut rng = Pcg64::seed_from_u64(6);
+        let theta = c.init(&mut rng);
+        let n = 7;
+        let x: Vec<f32> = rng.normal_vec(n * c.input, 0.0, 1.0);
+        let labels: Vec<usize> = (0..n).map(|i| i % c.classes).collect();
+        let refs: Vec<(&[f32], usize)> = (0..n)
+            .map(|r| (&x[r * c.input..(r + 1) * c.input], labels[r]))
+            .collect();
+        let mut g1 = vec![0.0; c.dim()];
+        let mut g2 = vec![0.0; c.dim()];
+        let a = m.batch_grad_packed(&theta, &x, &labels, &mut g1);
+        let b = m.batch_grad(&theta, &refs, &mut g2);
+        assert_eq!(a, b);
+        assert_eq!(g1, g2);
+        let ea = m.evaluate_packed(&theta, &x, &labels);
+        let eb = m.evaluate(&theta, &refs);
+        assert_eq!(ea, eb);
+        assert_eq!(ea.0, a.0, "evaluate loss must match batch_grad loss");
+    }
+
+    #[test]
+    fn argmax_is_nan_safe() {
+        // A leading NaN must not mask later finite logits...
+        assert_eq!(argmax(&[f32::NAN, 1.0, 2.0]), 2);
+        // ...a NaN elsewhere never wins...
+        assert_eq!(argmax(&[1.0, f32::NAN, 0.5]), 0);
+        assert_eq!(argmax(&[3.0, 1.0, f32::NAN]), 0);
+        // ...all-NaN falls back to index 0, ties to the lower index.
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax(&[2.0, 2.0, 1.0]), 0);
+        assert_eq!(argmax(&[-1.0]), 0);
     }
 
     #[test]

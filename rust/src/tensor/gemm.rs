@@ -1,0 +1,353 @@
+//! Cache-blocked, register-tiled SGEMM kernel family — the BLAS-3 compute
+//! core behind every native gradient oracle.
+//!
+//! Three flavours cover a full dense forward/backward pass without ever
+//! materializing a transpose:
+//!
+//! * [`gemm_nn`] — `C = A·B`   (forward activations),
+//! * [`gemm_tn`] — `C = Aᵀ·B`  (weight gradients `Xᵀ·dY`),
+//! * [`gemm_nt`] — `C = A·Bᵀ`  (input gradients `dY·Wᵀ`).
+//!
+//! All operands are row-major `f32` slices. The `nn` kernel blocks the
+//! reduction dimension (`KC`) so the B-panel stays cache-resident, and
+//! runs a `MR × NR = 4 × 8` register-tile microkernel whose inner loops
+//! are shaped for the auto-vectorizer (8 independent f32 lanes, no
+//! reductions across lanes until the tile is flushed). The `tn` kernel is
+//! a 4-way-unrolled sequence of rank-1 updates — row-major friendly for
+//! both operands — and `nt` is a row of 8-lane dot products. Every kernel
+//! handles non-multiple-of-tile shapes exactly (no padding, no overread);
+//! this is property-tested against a naive f64 reference.
+//!
+//! Determinism: for a fixed shape the summation order is fixed, so results
+//! are bit-stable run-to-run (the executors' bitwise-equivalence tests
+//! rely on this). The order differs from a naive `i,k,j` triple loop, so
+//! cross-implementation comparisons are tolerance-based, not bitwise.
+
+/// Rows per microkernel call: four C rows share every B-row load.
+const MR: usize = 4;
+/// Inner unroll width (8 f32 lanes — one AVX register, two SSE).
+const NR: usize = 8;
+/// Reduction-dimension block: an `MR × KC` A-panel plus the C rows stay
+/// L1-resident while a `KC × n` B-panel streams through once per row
+/// block.
+const KC: usize = 256;
+
+/// `y += s·b` over one row, 8-wide unrolled with an exact scalar tail.
+#[inline(always)]
+fn axpy8(s: f32, b: &[f32], y: &mut [f32]) {
+    let n = y.len();
+    debug_assert_eq!(b.len(), n);
+    let n8 = n - n % NR;
+    let mut j = 0;
+    while j < n8 {
+        let bj = &b[j..j + NR];
+        let yj = &mut y[j..j + NR];
+        for l in 0..NR {
+            yj[l] += s * bj[l];
+        }
+        j += NR;
+    }
+    while j < n {
+        y[j] += s * b[j];
+        j += 1;
+    }
+}
+
+/// `y_r += s_r·b` for four rows at once — the broadcast-FMA microkernel:
+/// one B-row load feeds four independent accumulation streams, which is
+/// what the auto-vectorizer turns into back-to-back FMAs.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn axpy8x4(
+    s: [f32; 4],
+    b: &[f32],
+    y0: &mut [f32],
+    y1: &mut [f32],
+    y2: &mut [f32],
+    y3: &mut [f32],
+) {
+    let n = y0.len();
+    debug_assert_eq!(b.len(), n);
+    let n8 = n - n % NR;
+    let mut j = 0;
+    while j < n8 {
+        let bj = &b[j..j + NR];
+        let x0 = &mut y0[j..j + NR];
+        for l in 0..NR {
+            x0[l] += s[0] * bj[l];
+        }
+        let x1 = &mut y1[j..j + NR];
+        for l in 0..NR {
+            x1[l] += s[1] * bj[l];
+        }
+        let x2 = &mut y2[j..j + NR];
+        for l in 0..NR {
+            x2[l] += s[2] * bj[l];
+        }
+        let x3 = &mut y3[j..j + NR];
+        for l in 0..NR {
+            x3[l] += s[3] * bj[l];
+        }
+        j += NR;
+    }
+    while j < n {
+        let bv = b[j];
+        y0[j] += s[0] * bv;
+        y1[j] += s[1] * bv;
+        y2[j] += s[2] * bv;
+        y3[j] += s[3] * bv;
+        j += 1;
+    }
+}
+
+/// `C(m×n) = A(m×k) · B(k×n)`, all row-major; `C` is overwritten.
+pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    for v in c.iter_mut() {
+        *v = 0.0;
+    }
+    if n == 0 {
+        return; // avoid chunks_exact_mut(0); nothing to compute
+    }
+    let mut k0 = 0;
+    while k0 < k {
+        let kc = KC.min(k - k0);
+        let bp = &b[k0 * n..(k0 + kc) * n];
+        let mut i = 0;
+        while i + MR <= m {
+            let a0 = &a[i * k + k0..i * k + k0 + kc];
+            let a1 = &a[(i + 1) * k + k0..(i + 1) * k + k0 + kc];
+            let a2 = &a[(i + 2) * k + k0..(i + 2) * k + k0 + kc];
+            let a3 = &a[(i + 3) * k + k0..(i + 3) * k + k0 + kc];
+            let mut rows = c[i * n..(i + MR) * n].chunks_exact_mut(n);
+            let c0 = rows.next().unwrap();
+            let c1 = rows.next().unwrap();
+            let c2 = rows.next().unwrap();
+            let c3 = rows.next().unwrap();
+            for p in 0..kc {
+                axpy8x4([a0[p], a1[p], a2[p], a3[p]], &bp[p * n..(p + 1) * n], c0, c1, c2, c3);
+            }
+            i += MR;
+        }
+        while i < m {
+            let arow = &a[i * k + k0..i * k + k0 + kc];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for p in 0..kc {
+                axpy8(arow[p], &bp[p * n..(p + 1) * n], crow);
+            }
+            i += 1;
+        }
+        k0 += kc;
+    }
+}
+
+/// `C(m×n) = Aᵀ · B` where `A` is stored row-major `k × m` (so `Aᵀ` is
+/// `m × k`) and `B` is `k × n`; `C` is overwritten.
+///
+/// This is the weight-gradient shape `dW = Xᵀ·dY`: per output row `i` it
+/// runs a 4-way-unrolled chain of rank-1 updates `c_i += A[p,i]·B[p,:]`,
+/// which keeps both B and C access fully sequential.
+pub fn gemm_tn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), k * m, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for v in crow.iter_mut() {
+            *v = 0.0;
+        }
+        let mut p = 0;
+        while p + 4 <= k {
+            let s = [a[p * m + i], a[(p + 1) * m + i], a[(p + 2) * m + i], a[(p + 3) * m + i]];
+            fma4_into(
+                s,
+                &b[p * n..(p + 1) * n],
+                &b[(p + 1) * n..(p + 2) * n],
+                &b[(p + 2) * n..(p + 3) * n],
+                &b[(p + 3) * n..(p + 4) * n],
+                crow,
+            );
+            p += 4;
+        }
+        while p < k {
+            axpy8(a[p * m + i], &b[p * n..(p + 1) * n], crow);
+            p += 1;
+        }
+    }
+}
+
+/// `y += s₀·b0 + s₁·b1 + s₂·b2 + s₃·b3` — four fused rank-1 contributions
+/// into one row, 8-wide unrolled with an exact scalar tail.
+#[inline(always)]
+fn fma4_into(s: [f32; 4], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32], y: &mut [f32]) {
+    let n = y.len();
+    debug_assert!(b0.len() == n && b1.len() == n && b2.len() == n && b3.len() == n);
+    let n8 = n - n % NR;
+    let mut j = 0;
+    while j < n8 {
+        let yj = &mut y[j..j + NR];
+        let x0 = &b0[j..j + NR];
+        let x1 = &b1[j..j + NR];
+        let x2 = &b2[j..j + NR];
+        let x3 = &b3[j..j + NR];
+        for l in 0..NR {
+            yj[l] += s[0] * x0[l] + s[1] * x1[l] + s[2] * x2[l] + s[3] * x3[l];
+        }
+        j += NR;
+    }
+    while j < n {
+        y[j] += s[0] * b0[j] + s[1] * b1[j] + s[2] * b2[j] + s[3] * b3[j];
+        j += 1;
+    }
+}
+
+/// `C(m×n) = A · Bᵀ` where `A` is `m × k` and `B` is stored row-major
+/// `n × k`; `C` is overwritten.
+///
+/// This is the input-gradient shape `dX = dY·Wᵀ`: each output element is
+/// an inner product of two contiguous rows, computed with the 8-lane
+/// split-accumulator dot kernel.
+pub fn gemm_nt(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), n * k, "B shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            *cv = super::dot(arow, &b[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+
+    /// f64-accumulated references (summation order differs from the tiled
+    /// kernels, hence the tolerance-based comparison).
+    fn naive_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f64> {
+        let mut c = vec![0.0f64; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + p] as f64 * b[p * n + j] as f64;
+                }
+            }
+        }
+        c
+    }
+
+    fn naive_tn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f64> {
+        let mut c = vec![0.0f64; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[p * m + i] as f64 * b[p * n + j] as f64;
+                }
+            }
+        }
+        c
+    }
+
+    fn naive_nt(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f64> {
+        let mut c = vec![0.0f64; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for p in 0..k {
+                    c[i * n + j] += a[i * k + p] as f64 * b[j * k + p] as f64;
+                }
+            }
+        }
+        c
+    }
+
+    fn assert_close(got: &[f32], want: &[f64], ctx: &str) {
+        assert_eq!(got.len(), want.len(), "{ctx}: length");
+        for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            let tol = 1e-4 * (1.0 + w.abs());
+            assert!(
+                ((*g as f64) - w).abs() <= tol,
+                "{ctx}[{i}]: got {g}, want {w}"
+            );
+        }
+    }
+
+    /// Deterministic sweep across tile/block boundaries: every combination
+    /// of below/at/above MR, NR, and a k that crosses the KC block edge.
+    #[test]
+    fn kernels_match_reference_on_boundary_shapes() {
+        let mut rng = crate::rng::Pcg64::seed_from_u64(7);
+        for &m in &[1usize, 3, 4, 5, 9, 16] {
+            for &n in &[1usize, 7, 8, 9, 17, 24] {
+                for &k in &[1usize, 2, 4, 5, 31, 260] {
+                    let a = rng.normal_vec(m * k, 0.0, 1.0);
+                    let b = rng.normal_vec(k * n, 0.0, 1.0);
+                    let mut c = vec![0.0f32; m * n];
+                    gemm_nn(m, k, n, &a, &b, &mut c);
+                    assert_close(&c, &naive_nn(m, k, n, &a, &b), &format!("nn {m}x{k}x{n}"));
+
+                    let at = rng.normal_vec(k * m, 0.0, 1.0);
+                    gemm_tn(m, k, n, &at, &b, &mut c);
+                    assert_close(&c, &naive_tn(m, k, n, &at, &b), &format!("tn {m}x{k}x{n}"));
+
+                    let bt = rng.normal_vec(n * k, 0.0, 1.0);
+                    gemm_nt(m, k, n, &a, &bt, &mut c);
+                    assert_close(&c, &naive_nt(m, k, n, &a, &bt), &format!("nt {m}x{k}x{n}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernels_match_reference_property() {
+        check(60, |g| {
+            let m = g.usize_in(0..=21);
+            let k = g.usize_in(0..=35);
+            let n = g.usize_in(0..=21);
+            let a: Vec<f32> = (0..m * k).map(|_| g.normal_f32()).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| g.normal_f32()).collect();
+            let mut c = vec![0.0f32; m * n];
+            gemm_nn(m, k, n, &a, &b, &mut c);
+            assert_close(&c, &naive_nn(m, k, n, &a, &b), "nn");
+
+            let at: Vec<f32> = (0..k * m).map(|_| g.normal_f32()).collect();
+            gemm_tn(m, k, n, &at, &b, &mut c);
+            assert_close(&c, &naive_tn(m, k, n, &at, &b), "tn");
+
+            let bt: Vec<f32> = (0..n * k).map(|_| g.normal_f32()).collect();
+            gemm_nt(m, k, n, &a, &bt, &mut c);
+            assert_close(&c, &naive_nt(m, k, n, &a, &bt), "nt");
+        });
+    }
+
+    #[test]
+    fn overwrite_semantics_ignore_stale_c() {
+        // C must be fully overwritten, including when k = 0 (empty sum).
+        let mut c = vec![7.0f32; 6];
+        gemm_nn(2, 0, 3, &[], &[], &mut c);
+        assert_eq!(c, vec![0.0; 6]);
+        c.fill(7.0);
+        gemm_tn(2, 0, 3, &[], &[], &mut c);
+        assert_eq!(c, vec![0.0; 6]);
+        c.fill(7.0);
+        gemm_nt(2, 0, 3, &[], &[], &mut c);
+        assert_eq!(c, vec![0.0; 6]);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut rng = crate::rng::Pcg64::seed_from_u64(11);
+        let (m, k, n) = (13, 300, 19);
+        let a = rng.normal_vec(m * k, 0.0, 1.0);
+        let b = rng.normal_vec(k * n, 0.0, 1.0);
+        let mut c1 = vec![0.0f32; m * n];
+        let mut c2 = vec![0.0f32; m * n];
+        gemm_nn(m, k, n, &a, &b, &mut c1);
+        gemm_nn(m, k, n, &a, &b, &mut c2);
+        assert_eq!(c1, c2, "same shape must give bit-identical sums");
+    }
+}

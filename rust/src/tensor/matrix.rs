@@ -72,43 +72,27 @@ impl Matrix {
         }
     }
 
-    /// C = A B (allocating; used by the closed-form optimum solver, not the
-    /// training hot loop).
-    pub fn matmul(&self, b: &Matrix) -> Matrix {
+    /// C = A B into a caller-owned matrix (the non-allocating form; all
+    /// the work happens in the tiled [`super::gemm::gemm_nn`] kernel).
+    pub fn matmul_into(&self, b: &Matrix, c: &mut Matrix) {
         assert_eq!(self.cols, b.rows);
+        assert_eq!(c.rows, self.rows);
+        assert_eq!(c.cols, b.cols);
+        super::gemm::gemm_nn(self.rows, self.cols, b.cols, &self.data, &b.data, &mut c.data);
+    }
+
+    /// C = A B (allocating convenience wrapper over [`Self::matmul_into`]).
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
         let mut c = Matrix::zeros(self.rows, b.cols);
-        for i in 0..self.rows {
-            for k in 0..self.cols {
-                let aik = self.get(i, k);
-                if aik == 0.0 {
-                    continue;
-                }
-                let brow = b.row(k);
-                let crow = c.row_mut(i);
-                for j in 0..b.cols {
-                    crow[j] += aik * brow[j];
-                }
-            }
-        }
+        self.matmul_into(b, &mut c);
         c
     }
 
     /// A^T A — the Gram matrix needed for the least-squares optimum (50).
+    /// Runs on the `Aᵀ·B` tiled kernel with B = A.
     pub fn gram(&self) -> Matrix {
         let mut g = Matrix::zeros(self.cols, self.cols);
-        for r in 0..self.rows {
-            let row = self.row(r);
-            for i in 0..self.cols {
-                let ri = row[i];
-                if ri == 0.0 {
-                    continue;
-                }
-                let grow = &mut g.data[i * self.cols..(i + 1) * self.cols];
-                for j in 0..self.cols {
-                    grow[j] += ri * row[j];
-                }
-            }
-        }
+        super::gemm::gemm_tn(self.cols, self.rows, self.cols, &self.data, &self.data, &mut g.data);
         g
     }
 

@@ -7,8 +7,10 @@
 //! operations take `&mut` output buffers so the training loop allocates
 //! nothing per iteration.
 
+pub mod gemm;
 pub mod matrix;
 
+pub use gemm::{gemm_nn, gemm_nt, gemm_tn};
 pub use matrix::Matrix;
 
 /// y += alpha * x
