@@ -1,0 +1,137 @@
+//! Parallel / SIMD GEMM benchmarks: serial-vs-parallel and
+//! scalar-vs-AVX2 at the two shape families that matter —
+//!
+//! * tall-skinny batch shapes (64×784·784×256, the MLP forward), where
+//!   the broadcast-FMA microkernel was already tuned, and
+//! * square J-scale shapes (512³), where the A-panel packing and the
+//!   row-block parallel driver earn their keep.
+//!
+//! Acceptance criterion: the full dispatch path (parallel + detected
+//! kernel) must be ≥ 2× the serial scalar kernel at 512³ on a multi-core
+//! runner, with the SIMD path additionally beating the scalar path when
+//! AVX2/FMA is detected. The bench asserts bit-identity of serial and
+//! parallel results before timing anything.
+//!
+//! `cargo bench --bench gemm_par` (REGTOPK_BENCH_FAST=1 for smoke).
+//! Results land in `BENCH_gemm_par.json` for PR-over-PR diffing.
+
+use regtopk::bench::{black_box, Bencher};
+use regtopk::metrics::json::Json;
+use regtopk::rng::Pcg64;
+use regtopk::tensor::gemm::{detected_kernel, gemm_nn, with_kernel, Kernel};
+use regtopk::tensor::pool;
+
+struct ShapeResult {
+    label: &'static str,
+    serial_scalar_ns: f64,
+    parallel_detected_ns: f64,
+    serial_detected_ns: f64,
+}
+
+fn bench_shape(
+    b: &Bencher,
+    label: &'static str,
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) -> ShapeResult {
+    let mut rng = Pcg64::seed_from_u64(17);
+    let a = rng.normal_vec(m * k, 0.0, 1.0);
+    let bm = rng.normal_vec(k * n, 0.0, 1.0);
+    let mut c = vec![0.0f32; m * n];
+    let macs = m * k * n;
+    let detected = detected_kernel();
+
+    // Determinism pin before timing: parallel must equal serial bitwise.
+    let mut serial = vec![0.0f32; m * n];
+    pool::with_thread_budget(1, || gemm_nn(m, k, n, &a, &bm, &mut serial));
+    pool::with_thread_budget(threads, || gemm_nn(m, k, n, &a, &bm, &mut c));
+    assert_eq!(serial, c, "parallel GEMM must be bit-identical to serial");
+
+    let time = |b: &Bencher, name: String, kern: Kernel, t: usize, c: &mut Vec<f32>| {
+        with_kernel(kern, || {
+            pool::with_thread_budget(t, || {
+                b.report_throughput(&name, macs, || {
+                    gemm_nn(m, k, n, black_box(&a), black_box(&bm), c);
+                    black_box(&c);
+                })
+            })
+        })
+        .median
+        .as_secs_f64()
+    };
+
+    println!("== gemm_nn {label} ({m}x{k}x{n}, detected kernel {detected:?}, {threads} threads) ==");
+    let serial_scalar =
+        time(b, format!("gemm_nn/{label}/serial_scalar"), Kernel::Scalar, 1, &mut c);
+    let parallel_scalar =
+        time(b, format!("gemm_nn/{label}/parallel_scalar"), Kernel::Scalar, threads, &mut c);
+    let (serial_detected, parallel_detected) = if detected == Kernel::Scalar {
+        (serial_scalar, parallel_scalar)
+    } else {
+        (
+            time(b, format!("gemm_nn/{label}/serial_simd"), detected, 1, &mut c),
+            time(b, format!("gemm_nn/{label}/parallel_simd"), detected, threads, &mut c),
+        )
+    };
+    println!(
+        "{:<44} parallel/serial {:.2}x  simd/scalar {:.2}x  combined {:.2}x",
+        "",
+        serial_detected / parallel_detected,
+        serial_scalar / serial_detected,
+        serial_scalar / parallel_detected,
+    );
+    ShapeResult {
+        label,
+        serial_scalar_ns: serial_scalar * 1e9,
+        parallel_detected_ns: parallel_detected * 1e9,
+        serial_detected_ns: serial_detected * 1e9,
+    }
+}
+
+fn main() {
+    let b = Bencher::from_env();
+    let threads = pool::default_parallelism();
+    let results = [
+        // The MLP forward shape (tall-skinny batch).
+        bench_shape(&b, "m64_k784_n256", 64, 784, 256, threads),
+        // Square J-scale — the acceptance-criterion shape.
+        bench_shape(&b, "m512_k512_n512", 512, 512, 512, threads),
+    ];
+
+    let extras: Vec<(&str, Json)> = vec![
+        ("threads", Json::Num(threads as f64)),
+        ("detected_kernel", Json::Str(format!("{:?}", detected_kernel()))),
+        (
+            "speedups",
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("shape", Json::Str(r.label.to_string())),
+                            (
+                                "parallel_vs_serial",
+                                Json::Num(r.serial_detected_ns / r.parallel_detected_ns),
+                            ),
+                            (
+                                "simd_vs_scalar",
+                                Json::Num(r.serial_scalar_ns / r.serial_detected_ns),
+                            ),
+                            (
+                                "combined_vs_serial_scalar",
+                                Json::Num(r.serial_scalar_ns / r.parallel_detected_ns),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ];
+    if let Err(e) = b.write_json_with("gemm_par", extras, "BENCH_gemm_par.json") {
+        eprintln!("could not write BENCH_gemm_par.json: {e}");
+    } else {
+        println!("wrote BENCH_gemm_par.json");
+    }
+}

@@ -103,7 +103,13 @@ impl Aggregator {
         self.union_values.extend(self.touched.iter().map(|&i| dense[i as usize]));
         let union = self.touched.len() as u64;
         self.comm.downlink_values += union * workers as u64;
-        self.comm.downlink_index_bits += union * self.index_bits * workers as u64;
+        // A full-dimension union is a dense broadcast and needs no index
+        // side-channel — mirroring the uplink exemption in `add`, so the
+        // two directions are charged symmetrically (a Dense run shows
+        // zero index bits both ways).
+        if (union as usize) < self.dim {
+            self.comm.downlink_index_bits += union * self.index_bits * workers as u64;
+        }
     }
 
     /// Dense aggregate view (valid between `finish` and the next `begin`).
@@ -183,6 +189,34 @@ mod tests {
         // union = {0,1,2,3} broadcast to 2 workers
         assert_eq!(agg.comm.downlink_values, 8);
         assert_eq!(agg.comm.downlink_index_bits, 56);
+    }
+
+    #[test]
+    fn dense_traffic_carries_no_index_bits_in_either_direction() {
+        // Uplink already exempts full-vector messages from index bits; the
+        // broadcast must mirror it when the union covers every entry —
+        // regression for the downlink side of the asymmetry.
+        let mut agg = Aggregator::new(4);
+        agg.begin();
+        agg.add(0.5, &msg(vec![0, 1, 2, 3], vec![1.0; 4]));
+        agg.add(0.5, &msg(vec![0, 1, 2, 3], vec![2.0; 4]));
+        agg.finish(2);
+        assert_eq!(agg.comm.uplink_values, 8);
+        assert_eq!(agg.comm.uplink_index_bits, 0, "dense uplink sends no indices");
+        assert_eq!(agg.comm.downlink_values, 8);
+        assert_eq!(agg.comm.downlink_index_bits, 0, "dense broadcast sends no indices");
+    }
+
+    #[test]
+    fn sparse_broadcast_still_pays_index_bits() {
+        // The exemption is strictly for union == J; one entry short of
+        // dense must still be charged.
+        let mut agg = Aggregator::new(4);
+        agg.begin();
+        agg.add(1.0, &msg(vec![0, 1, 2], vec![1.0; 3]));
+        agg.finish(2);
+        assert_eq!(agg.comm.uplink_index_bits, 3 * 2);
+        assert_eq!(agg.comm.downlink_index_bits, 3 * 2 * 2);
     }
 
     #[test]

@@ -105,6 +105,10 @@ pub struct TrainConfig {
     pub artifacts_dir: String,
     /// Log metrics every `log_every` iterations.
     pub log_every: usize,
+    /// Total compute-thread budget for the run (executor worker threads
+    /// and intra-GEMM threads combined); 0 = auto (machine parallelism,
+    /// `REGTOPK_THREADS` overridable).
+    pub threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -123,6 +127,7 @@ impl Default for TrainConfig {
             backend: GradBackend::Native,
             artifacts_dir: "artifacts".into(),
             log_every: 10,
+            threads: 0,
         }
     }
 }
@@ -131,6 +136,18 @@ impl TrainConfig {
     /// Effective k for a given model dimension: k = max(1, round(S * J)).
     pub fn k(&self) -> usize {
         k_for(self.sparsity, self.dim)
+    }
+
+    /// Resolved total compute-thread budget: `threads` when set, else the
+    /// machine parallelism. The executors split this between their worker
+    /// threads and the intra-GEMM pool so the two levels compose instead
+    /// of oversubscribing.
+    pub fn thread_budget(&self) -> usize {
+        if self.threads == 0 {
+            crate::tensor::pool::default_parallelism()
+        } else {
+            self.threads
+        }
     }
 
     /// Per-worker aggregation weights (uniform when unspecified).
@@ -179,6 +196,7 @@ impl TrainConfig {
             "backend" => self.backend = GradBackend::parse(&value.as_str()?)?,
             "artifacts_dir" => self.artifacts_dir = value.as_str()?,
             "log_every" => self.log_every = value.as_usize()?,
+            "threads" => self.threads = value.as_usize()?,
             "lr_step_every" => {
                 let every = value.as_usize()?;
                 self.lr_schedule = match self.lr_schedule {
@@ -260,6 +278,17 @@ mod tests {
         assert_eq!(cfg.workers, 20);
         assert_eq!(cfg.sparsity, 0.6);
         assert_eq!(cfg.sparsifier, SparsifierKind::TopK);
+    }
+
+    #[test]
+    fn threads_key_and_budget_resolution() {
+        let mut cfg = TrainConfig::default();
+        assert_eq!(cfg.threads, 0);
+        assert_eq!(cfg.thread_budget(), crate::tensor::pool::default_parallelism());
+        cfg.apply_kv("threads", &Value::Int(3)).unwrap();
+        assert_eq!(cfg.threads, 3);
+        assert_eq!(cfg.thread_budget(), 3);
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -28,14 +28,20 @@ pub fn train_global_topk<W: WorkerGrad + ?Sized>(
     anyhow::ensure!(workers.len() == cfg.workers, "worker count mismatch");
     let dim = theta0.len();
     let k = crate::config::k_for(cfg.sparsity, dim);
+    // The genie is single-lane like the sequential executor: its oracles'
+    // GEMMs get the whole configured thread budget.
+    let _threads = crate::tensor::pool::budget_guard(cfg.thread_budget());
     let omega: Vec<f32> = cfg.omega().iter().map(|&w| w as f32).collect();
     let mut optimizer = optim::build(cfg.optimizer, dim);
     let mut agg = Aggregator::new(dim);
     let mut theta = theta0;
     // Per-worker error-feedback state (the genie changes *selection*, not
-    // the accumulation mechanism).
+    // the accumulation mechanism). One J-vector per worker: the rolled
+    // accumulator a_n^t lives in `eps` itself — it equals the
+    // carried-forward error everywhere except the k entries transmitted in
+    // phase 3, which are read out *before* being zeroed there, so no
+    // second O(N·J) array is needed.
     let mut eps = vec![vec![0.0f32; dim]; cfg.workers];
-    let mut acc = vec![vec![0.0f32; dim]; cfg.workers];
     let mut gbuf = vec![0.0f32; dim];
     let mut target = vec![0.0f32; dim];
     let mut scores = vec![0.0f32; dim];
@@ -44,9 +50,8 @@ pub fn train_global_topk<W: WorkerGrad + ?Sized>(
     let mut msg = SparseGrad::default();
     for t in 0..cfg.iters {
         let lr = cfg.lr_schedule.at(cfg.lr, t);
-        // Phase 1 (genie): aggregate the *accumulated* gradients. The
-        // error accumulator rolls in place during the same sweep (eps'
-        // equals a everywhere except the entries zeroed in phase 3).
+        // Phase 1 (genie): roll the accumulators in place and aggregate
+        // them (eps now holds a_n^t = eps_n^{t-1} + g_n^t).
         for v in target.iter_mut() {
             *v = 0.0;
         }
@@ -55,7 +60,6 @@ pub fn train_global_topk<W: WorkerGrad + ?Sized>(
             loss_sum += workers[n].grad(t, &theta, &mut gbuf);
             for j in 0..dim {
                 let a = eps[n][j] + gbuf[j];
-                acc[n][j] = a;
                 eps[n][j] = a;
                 target[j] += omega[n] * a;
             }
@@ -67,13 +71,14 @@ pub fn train_global_topk<W: WorkerGrad + ?Sized>(
         top_k_indices_into(&scores, k, &mut scratch, &mut selected);
         // Phase 3: workers transmit exactly the masked entries (this is
         // the accounted communication), server aggregates them; the
-        // selected entries leave each worker's accumulator (O(k)).
+        // selected entries leave each worker's accumulator (O(k)) — read
+        // the accumulated value out of `eps` first, then zero it.
         agg.begin();
         for n in 0..cfg.workers {
             msg.clear();
             for &i in &selected {
                 msg.indices.push(i);
-                msg.values.push(acc[n][i as usize]);
+                msg.values.push(eps[n][i as usize]);
                 eps[n][i as usize] = 0.0;
             }
             agg.add(omega[n], &msg);

@@ -90,6 +90,10 @@ pub fn train<W: WorkerGrad + ?Sized>(
     if cfg.sparsifier == SparsifierKind::GlobalTopK {
         return genie::train_global_topk(cfg, theta0, workers, probe);
     }
+    // The sequential executor is a single lane, so the gradient oracles'
+    // GEMMs get the whole configured thread budget (guard restores the
+    // caller's budget on every exit path).
+    let _threads = crate::tensor::pool::budget_guard(cfg.thread_budget());
     let omega: Vec<f32> = cfg.omega().iter().map(|&w| w as f32).collect();
     let mut sparsifiers = build_sparsifiers(cfg, dim);
     let mut optimizer = optim::build(cfg.optimizer, dim);
@@ -221,6 +225,7 @@ mod tests {
             backend: GradBackend::Native,
             artifacts_dir: "artifacts".into(),
             log_every: 10,
+            threads: 0,
         }
     }
 
@@ -266,6 +271,21 @@ mod tests {
         assert_eq!(r_full.result.comm.uplink_values, (16 * 4 * 10) as u64);
         assert_eq!(r_sparse.result.comm.uplink_values, (4 * 4 * 10) as u64);
         assert!(r_sparse.result.comm.total_bytes() < r_full.result.comm.total_bytes());
+    }
+
+    #[test]
+    fn dense_run_is_charged_symmetrically_with_zero_index_bits() {
+        // Satellite regression: at sparsity 1.0 every message and the
+        // broadcast union are full J-vectors — no index side-channel may
+        // be charged in either direction, on either executor.
+        let cfg = linreg_cfg(SparsifierKind::Dense, 1.0, 10);
+        for opts in [RunOpts { threaded: false }, RunOpts { threaded: true }] {
+            let r = run_linreg(&cfg, &opts).unwrap();
+            assert_eq!(r.result.comm.uplink_index_bits, 0, "threaded={}", opts.threaded);
+            assert_eq!(r.result.comm.downlink_index_bits, 0, "threaded={}", opts.threaded);
+            assert_eq!(r.result.comm.uplink_values, 16 * 4 * 10);
+            assert_eq!(r.result.comm.downlink_values, 16 * 4 * 10);
+        }
     }
 
     #[test]

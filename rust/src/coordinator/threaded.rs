@@ -98,11 +98,16 @@ fn spawn_worker(
     mut grad: Box<dyn WorkerGrad + Send>,
     mut sparsifier: Box<dyn Sparsifier>,
     dim: usize,
+    gemm_budget: usize,
     miss_counter: Arc<AtomicU64>,
 ) -> WorkerHandle {
     let (tx_cmd, rx_cmd) = mpsc::channel::<ToWorker>();
     let (tx_res, rx_res) = mpsc::channel::<FromWorker>();
     let join = thread::spawn(move || {
+        // This worker's share of the run's compute-thread budget: its
+        // gradient GEMMs fan out to at most this many lanes, so N workers
+        // × their shares never oversubscribe the configured total.
+        crate::tensor::pool::set_thread_budget(gemm_budget);
         let mut gbuf = vec![0.0f32; dim];
         let mut msg_bufs: DoubleBuffer<SparseGrad> = DoubleBuffer::new(SparseGrad::default);
         while let Ok(cmd) = rx_cmd.recv() {
@@ -144,10 +149,14 @@ pub fn train_threaded(
     let omega: Vec<f32> = cfg.omega().iter().map(|&w| w as f32).collect();
     let sparsifiers = super::build_sparsifiers(cfg, dim);
     let uplink_misses = Arc::new(AtomicU64::new(0));
+    // Split the run's thread budget across the worker threads (each worker
+    // is itself one lane), so inter-worker and intra-GEMM parallelism
+    // compose instead of oversubscribing.
+    let gemm_budget = (cfg.thread_budget() / cfg.workers).max(1);
     let mut handles: Vec<WorkerHandle> = workers
         .into_iter()
         .zip(sparsifiers)
-        .map(|(g, s)| spawn_worker(g, s, dim, Arc::clone(&uplink_misses)))
+        .map(|(g, s)| spawn_worker(g, s, dim, gemm_budget, Arc::clone(&uplink_misses)))
         .collect();
     let mut optimizer = optim::build(cfg.optimizer, dim);
     let mut agg = Aggregator::new(dim);
@@ -158,9 +167,11 @@ pub fn train_threaded(
     'outer: for t in 0..cfg.iters {
         let lr = cfg.lr_schedule.at(cfg.lr, t);
         theta_bufs.write(t).copy_from_slice(&theta);
-        for h in &handles {
+        for (n, h) in handles.iter().enumerate() {
             if h.tx.send(ToWorker::Step { t, theta: theta_bufs.share(t) }).is_err() {
-                result = Err(anyhow::anyhow!("worker died"));
+                result = Err(anyhow::anyhow!(
+                    "worker {n} died before receiving the iteration-{t} step broadcast"
+                ));
                 break 'outer;
             }
         }
@@ -174,7 +185,9 @@ pub fn train_threaded(
                     agg.add(omega[n], &res.msg);
                 }
                 Err(_) => {
-                    result = Err(anyhow::anyhow!("worker {n} dropped its channel"));
+                    result = Err(anyhow::anyhow!(
+                        "worker {n} died before uplinking its iteration-{t} gradient"
+                    ));
                     break 'outer;
                 }
             }
@@ -182,14 +195,22 @@ pub fn train_threaded(
         agg.finish(cfg.workers);
         let (dense, bcast) = (agg.dense(), agg.broadcast());
         // Ship only the union down the channels — O(N·k), not O(N·J) —
-        // recycling the previous-previous round's buffers.
+        // recycling the previous-previous round's buffers. A send failure
+        // here means the worker died *after* its uplink; detecting it at
+        // the send site names the worker now instead of surfacing a
+        // confusing recv error one iteration later.
         let ub = union_bufs.write(t);
         ub.0.clear();
         ub.0.extend_from_slice(bcast.indices);
         ub.1.clear();
         ub.1.extend_from_slice(bcast.values);
-        for h in &handles {
-            let _ = h.tx.send(ToWorker::Observe { bcast: union_bufs.share(t) });
+        for (n, h) in handles.iter().enumerate() {
+            if h.tx.send(ToWorker::Observe { bcast: union_bufs.share(t) }).is_err() {
+                result = Err(anyhow::anyhow!(
+                    "worker {n} died after uplinking iteration {t}, before observing the broadcast"
+                ));
+                break 'outer;
+            }
         }
         optimizer.step(&mut theta, dense, lr);
         probe(IterStats {
@@ -203,10 +224,27 @@ pub fn train_threaded(
     for h in &handles {
         let _ = h.tx.send(ToWorker::Stop);
     }
-    for h in handles.drain(..) {
-        let _ = h.join.join();
+    // Join every worker and harvest panic payloads: "worker n died" alone
+    // says nothing about *why*, the panic message does.
+    let mut panics: Vec<String> = Vec::new();
+    for (n, h) in handles.drain(..).enumerate() {
+        if let Err(payload) = h.join.join() {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic payload>".into());
+            panics.push(format!("worker {n} panicked: {msg}"));
+        }
     }
-    result?;
+    match result {
+        Err(e) if !panics.is_empty() => return Err(anyhow::anyhow!("{e} ({})", panics.join("; "))),
+        Err(e) => return Err(e),
+        Ok(()) if !panics.is_empty() => {
+            return Err(anyhow::anyhow!("run finished but {}", panics.join("; ")))
+        }
+        Ok(()) => {}
+    }
     let reuse_misses =
         theta_bufs.misses() + union_bufs.misses() + uplink_misses.load(Ordering::Relaxed);
     Ok(TrainResult { theta, comm: agg.comm, iters: cfg.iters, reuse_misses })
@@ -329,6 +367,74 @@ mod tests {
         assert_eq!(held[0], 1.0, "a held buffer must never be mutated");
         assert_eq!(db.share(0)[0], 99.0);
         assert_eq!(db.misses(), 1);
+    }
+
+    /// Gradient oracle that kills its worker thread at iteration `at`.
+    struct PanicAt {
+        dim: usize,
+        at: usize,
+    }
+
+    impl crate::grad::WorkerGrad for PanicAt {
+        fn dim(&self) -> usize {
+            self.dim
+        }
+
+        fn grad(&mut self, t: usize, _theta: &[f32], out: &mut [f32]) -> f64 {
+            assert!(t < self.at, "injected worker death at iteration {t}");
+            for (j, v) in out.iter_mut().enumerate() {
+                *v = (j as f32 + 1.0) * 0.01;
+            }
+            0.5
+        }
+    }
+
+    #[test]
+    fn dead_worker_is_reported_with_index_and_payload() {
+        // Worker 2 dies mid-run; the error must name it (and carry its
+        // panic message) instead of hanging or blaming a channel.
+        let c = cfg(SparsifierKind::TopK);
+        let workers: Vec<Box<dyn crate::grad::WorkerGrad + Send>> = (0..c.workers)
+            .map(|n| {
+                Box::new(PanicAt { dim: c.dim, at: if n == 2 { 3 } else { usize::MAX } })
+                    as Box<dyn crate::grad::WorkerGrad + Send>
+            })
+            .collect();
+        let err = train_threaded(&c, vec![0.0; c.dim], workers, &mut |_| {})
+            .expect_err("a dead worker must fail the run")
+            .to_string();
+        assert!(err.contains("worker 2"), "error must name the dead worker: {err}");
+        assert!(
+            err.contains("injected worker death"),
+            "error must carry the panic payload: {err}"
+        );
+    }
+
+    #[test]
+    fn observe_send_fails_at_the_send_site_once_worker_is_dead() {
+        // The failure mode the leader's Observe broadcast now detects: a
+        // worker that died *after* its uplink refuses further sends
+        // immediately, rather than surfacing as a recv error one
+        // iteration later.
+        let dim = 4;
+        let h = spawn_worker(
+            Box::new(PanicAt { dim, at: 1 }),
+            SparsifierKind::TopK.build(dim, 2, 1.0, 0),
+            dim,
+            1,
+            Arc::new(AtomicU64::new(0)),
+        );
+        h.tx.send(ToWorker::Step { t: 0, theta: Arc::new(vec![0.0; dim]) }).unwrap();
+        let up = h.rx.recv().expect("iteration-0 uplink");
+        assert_eq!(up.msg.len(), 2);
+        h.tx.send(ToWorker::Step { t: 1, theta: Arc::new(vec![0.0; dim]) }).unwrap();
+        assert!(h.rx.recv().is_err(), "worker dies processing iteration 1");
+        // Join before the send assertion: the dying worker drops its two
+        // channel endpoints in unspecified order during unwind, so only
+        // after the join is the command receiver guaranteed gone.
+        assert!(h.join.join().is_err(), "the worker thread panicked");
+        let observe = ToWorker::Observe { bcast: Arc::new((Vec::new(), Vec::new())) };
+        assert!(h.tx.send(observe).is_err(), "send site must see the death");
     }
 
     #[test]

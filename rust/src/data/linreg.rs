@@ -115,8 +115,11 @@ impl LinRegDataset {
         let mut gram = Matrix::zeros(dim, dim);
         let mut rhs = vec![0.0f32; dim];
         let mut xty = vec![0.0f32; dim];
+        // One scratch Gram reused across workers; each per-worker build
+        // runs on the (parallel, runtime-dispatched) `gemm_tn` core.
+        let mut g = Matrix::zeros(dim, dim);
         for w in workers {
-            let g = w.x.gram();
+            w.x.gram_into(&mut g);
             for (a, b) in gram.data.iter_mut().zip(g.data.iter()) {
                 *a += b;
             }

@@ -221,6 +221,20 @@ mod tests {
     }
 
     #[test]
+    fn mlp_evaluate_on_empty_validation_set_is_defined() {
+        // Regression: an empty validation set used to produce 0/0 = NaN
+        // loss and accuracy, which then flowed into the metrics JSON.
+        let icfg = ImageGenConfig { per_worker: 16, workers: 1, ..Default::default() };
+        let mut data = ImageDataset::generate(&icfg, &mut Pcg64::seed_from_u64(4));
+        data.validation.clear();
+        let mcfg = MlpConfig { input: icfg.pixels(), hidden: 4, classes: icfg.classes };
+        let mut w = MlpGrad::new(Arc::new(data), mcfg, 0, 8, 1);
+        let theta = mcfg.init(&mut Pcg64::seed_from_u64(5));
+        let (loss, acc) = w.evaluate(&theta);
+        assert_eq!((loss, acc), (0.0, 0.0), "empty validation must be (0, 0), not NaN");
+    }
+
+    #[test]
     fn mlp_grad_is_deterministic_per_iteration() {
         let icfg = ImageGenConfig { per_worker: 32, workers: 2, ..Default::default() };
         let data = Arc::new(ImageDataset::generate(&icfg, &mut Pcg64::seed_from_u64(2)));

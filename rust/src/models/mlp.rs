@@ -114,15 +114,16 @@ impl Mlp {
         }
     }
 
-    /// Grow the forward/backward scratch to hold `n` samples (no-op once
-    /// warm). `xb` is grown only by [`Self::pack`] and `dlb` only on the
-    /// gradient path, so packed-entry evaluation never allocates either.
+    /// Grow the *forward* scratch to hold `n` samples (no-op once warm).
+    /// `xb` is grown only by [`Self::pack`], and the gradient buffers
+    /// `dlb`/`dhb` only on the gradient path, so packed-entry evaluation
+    /// allocates none of them (a large validation set grows forward
+    /// scratch only).
     fn ensure_cap(&mut self, n: usize) {
         if n > self.cap {
             let c = self.cfg;
             self.hb.resize(n * c.hidden, 0.0);
             self.lb.resize(n * c.classes, 0.0);
-            self.dhb.resize(n * c.hidden, 0.0);
             self.cap = n;
         }
     }
@@ -212,6 +213,17 @@ impl Mlp {
         let n = labels.len();
         assert_eq!(x.len(), n * c.input, "packed batch shape mismatch");
         assert_eq!(theta.len(), c.dim());
+        if n == 0 {
+            // An empty set has no defined mean — return (0.0, 0.0) and a
+            // zero gradient instead of letting 0/0 NaNs flow into metrics
+            // JSON (empty validation sets hit this via `evaluate_packed`).
+            if let Some(grad) = grad {
+                for v in grad.iter_mut() {
+                    *v = 0.0;
+                }
+            }
+            return (0.0, 0.0);
+        }
         self.ensure_cap(n);
         let (w1, b1, w2, b2) = c.offsets();
 
@@ -241,6 +253,9 @@ impl Mlp {
         let want_grad = grad.is_some();
         if want_grad && self.dlb.len() < n * c.classes {
             self.dlb.resize(n * c.classes, 0.0);
+        }
+        if want_grad && self.dhb.len() < n * c.hidden {
+            self.dhb.resize(n * c.hidden, 0.0);
         }
         let wscale = 1.0 / n as f32;
         let mut loss = 0.0f64;
@@ -570,6 +585,22 @@ mod tests {
         let eb = m.evaluate(&theta, &refs);
         assert_eq!(ea, eb);
         assert_eq!(ea.0, a.0, "evaluate loss must match batch_grad loss");
+    }
+
+    #[test]
+    fn empty_set_evaluates_to_zero_not_nan() {
+        // 0/0 regression: evaluating (or differentiating) an empty packed
+        // set must return the defined (0.0, 0.0), never NaN.
+        let c = tiny();
+        let mut m = Mlp::new(c);
+        let theta = c.init(&mut Pcg64::seed_from_u64(8));
+        let (loss, acc) = m.evaluate_packed(&theta, &[], &[]);
+        assert_eq!((loss, acc), (0.0, 0.0));
+        assert_eq!(m.evaluate(&theta, &[]), (0.0, 0.0));
+        let mut grad = vec![3.0f32; c.dim()];
+        let (loss, acc) = m.batch_grad_packed(&theta, &[], &[], &mut grad);
+        assert_eq!((loss, acc), (0.0, 0.0));
+        assert!(grad.iter().all(|&g| g == 0.0), "empty-batch gradient must be zeroed");
     }
 
     #[test]

@@ -9,28 +9,153 @@
 //! * [`gemm_nt`] — `C = A·Bᵀ`  (input gradients `dY·Wᵀ`).
 //!
 //! All operands are row-major `f32` slices. The `nn` kernel blocks the
-//! reduction dimension (`KC`) so the B-panel stays cache-resident, and
-//! runs a `MR × NR = 4 × 8` register-tile microkernel whose inner loops
-//! are shaped for the auto-vectorizer (8 independent f32 lanes, no
-//! reductions across lanes until the tile is flushed). The `tn` kernel is
-//! a 4-way-unrolled sequence of rank-1 updates — row-major friendly for
-//! both operands — and `nt` is a row of 8-lane dot products. Every kernel
-//! handles non-multiple-of-tile shapes exactly (no padding, no overread);
-//! this is property-tested against a naive f64 reference.
+//! reduction dimension (`KC`) so the B-panel stays cache-resident, packs
+//! the `MR × KC` A-panel into a contiguous interleaved buffer (one
+//! sequential stream instead of `MR` strided row walks — the win grows
+//! with `k`, i.e. at square J-scale shapes), and runs an `MR × NR = 4 × 8`
+//! broadcast-FMA microkernel. The `tn` kernel is a 4-way-unrolled sequence
+//! of rank-1 updates — row-major friendly for both operands — and `nt` is
+//! a row of 8-lane dot products.
 //!
-//! Determinism: for a fixed shape the summation order is fixed, so results
-//! are bit-stable run-to-run (the executors' bitwise-equivalence tests
-//! rely on this). The order differs from a naive `i,k,j` triple loop, so
-//! cross-implementation comparisons are tolerance-based, not bitwise.
+//! # Runtime dispatch
+//!
+//! Each driver resolves a [`Kernel`] once per call: explicit AVX2/FMA
+//! microkernels ([`super::simd`]) when `is_x86_feature_detected!` says the
+//! host has them, the scalar-unrolled loops (shaped for the
+//! auto-vectorizer) as the portable fallback. `REGTOPK_NO_SIMD=1` forces
+//! the scalar path process-wide (CI runs the suite once that way);
+//! [`with_kernel`] pins it per scope for tests and benches.
+//!
+//! # Parallelism and determinism
+//!
+//! Large calls split their *output rows* into contiguous blocks executed
+//! on the persistent pool ([`super::pool`]), bounded by the calling
+//! thread's budget ([`super::pool::thread_budget`]) so intra-GEMM threads
+//! compose with the threaded executor's worker threads. Row partitioning
+//! never changes any output row's summation order, and the single-row and
+//! multi-row microkernels perform identical per-element op sequences, so
+//! for a fixed kernel path the results are **bit-identical at every
+//! thread count** (tested below). The two kernel paths differ from each
+//! other in final-ulp rounding (FMA fuses the multiply-add), and both
+//! differ from a naive `i,k,j` triple loop in summation order, so
+//! cross-path comparisons are tolerance-based against an f64 reference.
+//! Every kernel handles non-multiple-of-tile shapes exactly (no padding,
+//! no overread).
+
+use super::pool;
+use std::cell::Cell;
+use std::sync::OnceLock;
 
 /// Rows per microkernel call: four C rows share every B-row load.
 const MR: usize = 4;
 /// Inner unroll width (8 f32 lanes — one AVX register, two SSE).
 const NR: usize = 8;
-/// Reduction-dimension block: an `MR × KC` A-panel plus the C rows stay
-/// L1-resident while a `KC × n` B-panel streams through once per row
+/// Reduction-dimension block: an `MR × KC` packed A-panel plus the C rows
+/// stay L1-resident while a `KC × n` B-panel streams through once per row
 /// block.
 const KC: usize = 256;
+/// Minimum multiply-accumulates per thread before fanning out — below
+/// this, pool dispatch overhead beats the parallel win.
+const PAR_GRAIN_MACS: usize = 128 * 1024;
+
+/// Which microkernel implementation a GEMM call runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable scalar-unrolled loops (auto-vectorizer shaped).
+    Scalar,
+    /// Explicit AVX2/FMA microkernels ([`super::simd`]).
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+}
+
+/// The kernel the host supports, detected once per process.
+/// `REGTOPK_NO_SIMD` (any value) forces [`Kernel::Scalar`].
+pub fn detected_kernel() -> Kernel {
+    static DETECTED: OnceLock<Kernel> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        if std::env::var_os("REGTOPK_NO_SIMD").is_some() {
+            return Kernel::Scalar;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                return Kernel::Avx2;
+            }
+        }
+        Kernel::Scalar
+    })
+}
+
+thread_local! {
+    /// Per-thread dispatch override (tests/benches pin paths with it).
+    static FORCED: Cell<Option<Kernel>> = const { Cell::new(None) };
+}
+
+/// Run `f` with GEMM dispatch pinned to `k` on this thread (the parallel
+/// drivers propagate the pinned kernel into their pool tasks). Panics if
+/// a SIMD kernel is forced on a host that does not support it — forcing
+/// is only for exercising a path that detection would allow.
+pub fn with_kernel<R>(k: Kernel, f: impl FnOnce() -> R) -> R {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if k == Kernel::Avx2 {
+            assert!(
+                is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma"),
+                "cannot force the AVX2/FMA kernel on a host without avx2+fma"
+            );
+        }
+    }
+    struct Restore(Option<Kernel>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            FORCED.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(FORCED.with(|c| c.replace(Some(k))));
+    f()
+}
+
+fn active_kernel() -> Kernel {
+    FORCED.with(Cell::get).unwrap_or_else(detected_kernel)
+}
+
+/// How many row blocks a call of `rows × (macs total)` should split into:
+/// bounded by the caller's thread budget, the per-thread work grain, and
+/// the row count (a block needs at least one row).
+fn effective_threads(rows: usize, macs: usize) -> usize {
+    let budget = pool::thread_budget();
+    if budget <= 1 || rows <= 1 {
+        return 1;
+    }
+    budget.min(macs / PAR_GRAIN_MACS).clamp(1, rows)
+}
+
+/// Split `c` into `threads` contiguous row blocks and run `f(row0, block)`
+/// for each — on the calling thread when `threads == 1`, else on the pool
+/// (caller included). `f` must fully overwrite its block.
+fn run_row_blocks(threads: usize, m: usize, n: usize, c: &mut [f32], f: impl Fn(usize, &mut [f32]) + Sync) {
+    debug_assert!(n > 0 && m > 0);
+    let t = threads.clamp(1, m);
+    if t == 1 {
+        f(0, c);
+        return;
+    }
+    let (base, rem) = (m / t, m % t);
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(t);
+    let mut rest = c;
+    let mut row0 = 0;
+    let fr = &f;
+    for i in 0..t {
+        let rows = base + usize::from(i < rem);
+        let tail = std::mem::take(&mut rest);
+        let (block, tail) = tail.split_at_mut(rows * n);
+        rest = tail;
+        let r0 = row0;
+        tasks.push(Box::new(move || fr(r0, block)));
+        row0 += rows;
+    }
+    pool::global().scope(tasks);
+}
 
 /// `y += s·b` over one row, 8-wide unrolled with an exact scalar tail.
 #[inline(always)]
@@ -100,84 +225,6 @@ fn axpy8x4(
     }
 }
 
-/// `C(m×n) = A(m×k) · B(k×n)`, all row-major; `C` is overwritten.
-pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
-    assert_eq!(a.len(), m * k, "A shape mismatch");
-    assert_eq!(b.len(), k * n, "B shape mismatch");
-    assert_eq!(c.len(), m * n, "C shape mismatch");
-    for v in c.iter_mut() {
-        *v = 0.0;
-    }
-    if n == 0 {
-        return; // avoid chunks_exact_mut(0); nothing to compute
-    }
-    let mut k0 = 0;
-    while k0 < k {
-        let kc = KC.min(k - k0);
-        let bp = &b[k0 * n..(k0 + kc) * n];
-        let mut i = 0;
-        while i + MR <= m {
-            let a0 = &a[i * k + k0..i * k + k0 + kc];
-            let a1 = &a[(i + 1) * k + k0..(i + 1) * k + k0 + kc];
-            let a2 = &a[(i + 2) * k + k0..(i + 2) * k + k0 + kc];
-            let a3 = &a[(i + 3) * k + k0..(i + 3) * k + k0 + kc];
-            let mut rows = c[i * n..(i + MR) * n].chunks_exact_mut(n);
-            let c0 = rows.next().unwrap();
-            let c1 = rows.next().unwrap();
-            let c2 = rows.next().unwrap();
-            let c3 = rows.next().unwrap();
-            for p in 0..kc {
-                axpy8x4([a0[p], a1[p], a2[p], a3[p]], &bp[p * n..(p + 1) * n], c0, c1, c2, c3);
-            }
-            i += MR;
-        }
-        while i < m {
-            let arow = &a[i * k + k0..i * k + k0 + kc];
-            let crow = &mut c[i * n..(i + 1) * n];
-            for p in 0..kc {
-                axpy8(arow[p], &bp[p * n..(p + 1) * n], crow);
-            }
-            i += 1;
-        }
-        k0 += kc;
-    }
-}
-
-/// `C(m×n) = Aᵀ · B` where `A` is stored row-major `k × m` (so `Aᵀ` is
-/// `m × k`) and `B` is `k × n`; `C` is overwritten.
-///
-/// This is the weight-gradient shape `dW = Xᵀ·dY`: per output row `i` it
-/// runs a 4-way-unrolled chain of rank-1 updates `c_i += A[p,i]·B[p,:]`,
-/// which keeps both B and C access fully sequential.
-pub fn gemm_tn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
-    assert_eq!(a.len(), k * m, "A shape mismatch");
-    assert_eq!(b.len(), k * n, "B shape mismatch");
-    assert_eq!(c.len(), m * n, "C shape mismatch");
-    for i in 0..m {
-        let crow = &mut c[i * n..(i + 1) * n];
-        for v in crow.iter_mut() {
-            *v = 0.0;
-        }
-        let mut p = 0;
-        while p + 4 <= k {
-            let s = [a[p * m + i], a[(p + 1) * m + i], a[(p + 2) * m + i], a[(p + 3) * m + i]];
-            fma4_into(
-                s,
-                &b[p * n..(p + 1) * n],
-                &b[(p + 1) * n..(p + 2) * n],
-                &b[(p + 2) * n..(p + 3) * n],
-                &b[(p + 3) * n..(p + 4) * n],
-                crow,
-            );
-            p += 4;
-        }
-        while p < k {
-            axpy8(a[p * m + i], &b[p * n..(p + 1) * n], crow);
-            p += 1;
-        }
-    }
-}
-
 /// `y += s₀·b0 + s₁·b1 + s₂·b2 + s₃·b3` — four fused rank-1 contributions
 /// into one row, 8-wide unrolled with an exact scalar tail.
 #[inline(always)]
@@ -203,6 +250,149 @@ fn fma4_into(s: [f32; 4], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32], y: &mu
     }
 }
 
+/// `C(m×n) = A(m×k) · B(k×n)`, all row-major; `C` is overwritten.
+pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    nn_driver(active_kernel(), effective_threads(m, m * k * n), m, k, n, a, b, c);
+}
+
+fn nn_driver(kernel: Kernel, threads: usize, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    if m == 0 || n == 0 {
+        return; // C is empty
+    }
+    run_row_blocks(threads, m, n, c, |r0, block| {
+        nn_rows(kernel, k, n, &a[r0 * k..], b, block);
+    });
+}
+
+/// One contiguous row block of `gemm_nn`: `block = A[rows]·B`, where `a`
+/// starts at the block's first row (only its first `rows·k` entries are
+/// read). Packs each `MR × kc` A-panel into an interleaved buffer so the
+/// microkernel reads one sequential stream.
+fn nn_rows(kernel: Kernel, k: usize, n: usize, a: &[f32], b: &[f32], block: &mut [f32]) {
+    let rows = block.len() / n;
+    for v in block.iter_mut() {
+        *v = 0.0;
+    }
+    let mut panel = [0.0f32; MR * KC];
+    let mut k0 = 0;
+    while k0 < k {
+        let kc = KC.min(k - k0);
+        let bp = &b[k0 * n..(k0 + kc) * n];
+        let mut i = 0;
+        while i + MR <= rows {
+            let a0 = &a[i * k + k0..i * k + k0 + kc];
+            let a1 = &a[(i + 1) * k + k0..(i + 1) * k + k0 + kc];
+            let a2 = &a[(i + 2) * k + k0..(i + 2) * k + k0 + kc];
+            let a3 = &a[(i + 3) * k + k0..(i + 3) * k + k0 + kc];
+            for p in 0..kc {
+                panel[MR * p] = a0[p];
+                panel[MR * p + 1] = a1[p];
+                panel[MR * p + 2] = a2[p];
+                panel[MR * p + 3] = a3[p];
+            }
+            let mut crows = block[i * n..(i + MR) * n].chunks_exact_mut(n);
+            let c0 = crows.next().unwrap();
+            let c1 = crows.next().unwrap();
+            let c2 = crows.next().unwrap();
+            let c3 = crows.next().unwrap();
+            match kernel {
+                Kernel::Scalar => {
+                    for p in 0..kc {
+                        let s = [panel[MR * p], panel[MR * p + 1], panel[MR * p + 2], panel[MR * p + 3]];
+                        axpy8x4(s, &bp[p * n..(p + 1) * n], c0, c1, c2, c3);
+                    }
+                }
+                #[cfg(target_arch = "x86_64")]
+                Kernel::Avx2 => unsafe {
+                    super::simd::nn_panel_x4(&panel[..MR * kc], bp, n, c0, c1, c2, c3);
+                },
+            }
+            i += MR;
+        }
+        while i < rows {
+            let arow = &a[i * k + k0..i * k + k0 + kc];
+            let crow = &mut block[i * n..(i + 1) * n];
+            match kernel {
+                Kernel::Scalar => {
+                    for p in 0..kc {
+                        axpy8(arow[p], &bp[p * n..(p + 1) * n], crow);
+                    }
+                }
+                #[cfg(target_arch = "x86_64")]
+                Kernel::Avx2 => unsafe {
+                    for p in 0..kc {
+                        super::simd::row_axpy(arow[p], &bp[p * n..(p + 1) * n], crow);
+                    }
+                },
+            }
+            i += 1;
+        }
+        k0 += kc;
+    }
+}
+
+/// `C(m×n) = Aᵀ · B` where `A` is stored row-major `k × m` (so `Aᵀ` is
+/// `m × k`) and `B` is `k × n`; `C` is overwritten.
+///
+/// This is the weight-gradient shape `dW = Xᵀ·dY`: per output row `i` it
+/// runs a 4-way-unrolled chain of rank-1 updates `c_i += A[p,i]·B[p,:]`,
+/// which keeps both B and C access fully sequential.
+pub fn gemm_tn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), k * m, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    tn_driver(active_kernel(), effective_threads(m, m * k * n), m, k, n, a, b, c);
+}
+
+fn tn_driver(kernel: Kernel, threads: usize, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    run_row_blocks(threads, m, n, c, |i0, block| {
+        tn_rows(kernel, m, k, n, i0, a, b, block);
+    });
+}
+
+/// One contiguous row block of `gemm_tn`: C rows `i0 ..` (A columns are
+/// indexed absolutely, so the full `a` is passed through).
+fn tn_rows(kernel: Kernel, m: usize, k: usize, n: usize, i0: usize, a: &[f32], b: &[f32], block: &mut [f32]) {
+    for (bi, crow) in block.chunks_exact_mut(n).enumerate() {
+        let i = i0 + bi;
+        for v in crow.iter_mut() {
+            *v = 0.0;
+        }
+        let mut p = 0;
+        while p + 4 <= k {
+            let s = [a[p * m + i], a[(p + 1) * m + i], a[(p + 2) * m + i], a[(p + 3) * m + i]];
+            let (b0, b1, b2, b3) = (
+                &b[p * n..(p + 1) * n],
+                &b[(p + 1) * n..(p + 2) * n],
+                &b[(p + 2) * n..(p + 3) * n],
+                &b[(p + 3) * n..(p + 4) * n],
+            );
+            match kernel {
+                Kernel::Scalar => fma4_into(s, b0, b1, b2, b3, crow),
+                #[cfg(target_arch = "x86_64")]
+                Kernel::Avx2 => unsafe { super::simd::tn_fma4(s, b0, b1, b2, b3, crow) },
+            }
+            p += 4;
+        }
+        while p < k {
+            match kernel {
+                Kernel::Scalar => axpy8(a[p * m + i], &b[p * n..(p + 1) * n], crow),
+                #[cfg(target_arch = "x86_64")]
+                Kernel::Avx2 => unsafe {
+                    super::simd::row_axpy(a[p * m + i], &b[p * n..(p + 1) * n], crow);
+                },
+            }
+            p += 1;
+        }
+    }
+}
+
 /// `C(m×n) = A · Bᵀ` where `A` is `m × k` and `B` is stored row-major
 /// `n × k`; `C` is overwritten.
 ///
@@ -213,11 +403,38 @@ pub fn gemm_nt(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]
     assert_eq!(a.len(), m * k, "A shape mismatch");
     assert_eq!(b.len(), n * k, "B shape mismatch");
     assert_eq!(c.len(), m * n, "C shape mismatch");
-    for i in 0..m {
+    nt_driver(active_kernel(), effective_threads(m, m * k * n), m, k, n, a, b, c);
+}
+
+fn nt_driver(kernel: Kernel, threads: usize, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        for v in c.iter_mut() {
+            *v = 0.0; // empty inner products
+        }
+        return;
+    }
+    run_row_blocks(threads, m, n, c, |r0, block| {
+        nt_rows(kernel, k, n, &a[r0 * k..], b, block);
+    });
+}
+
+/// One contiguous row block of `gemm_nt` (`a` starts at the block's first
+/// row; only its first `rows·k` entries are read).
+fn nt_rows(kernel: Kernel, k: usize, n: usize, a: &[f32], b: &[f32], block: &mut [f32]) {
+    let rows = block.len() / n;
+    for i in 0..rows {
         let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
+        let crow = &mut block[i * n..(i + 1) * n];
         for (j, cv) in crow.iter_mut().enumerate() {
-            *cv = super::dot(arow, &b[j * k..(j + 1) * k]);
+            let brow = &b[j * k..(j + 1) * k];
+            *cv = match kernel {
+                Kernel::Scalar => super::dot(arow, brow),
+                #[cfg(target_arch = "x86_64")]
+                Kernel::Avx2 => unsafe { super::simd::dot(arow, brow) },
+            };
         }
     }
 }
@@ -226,6 +443,19 @@ pub fn gemm_nt(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]
 mod tests {
     use super::*;
     use crate::testing::check;
+
+    /// Every dispatch path the host can execute (Scalar always; AVX2 when
+    /// detection allows it — forcing an unsupported kernel would be UB).
+    fn kernels_available() -> Vec<Kernel> {
+        let mut v = vec![Kernel::Scalar];
+        #[cfg(target_arch = "x86_64")]
+        {
+            if detected_kernel() == Kernel::Avx2 {
+                v.push(Kernel::Avx2);
+            }
+        }
+        v
+    }
 
     /// f64-accumulated references (summation order differs from the tiled
     /// kernels, hence the tolerance-based comparison).
@@ -276,27 +506,45 @@ mod tests {
         }
     }
 
-    /// Deterministic sweep across tile/block boundaries: every combination
-    /// of below/at/above MR, NR, and a k that crosses the KC block edge.
+    /// Deterministic sweep across tile/block boundaries — every combination
+    /// of below/at/above MR, NR, a k crossing the KC edge — for every
+    /// dispatch path × thread count the host can run (the satellite parity
+    /// matrix). Thread counts above the machine size still exercise the
+    /// partitioning: blocks simply queue on the pool.
     #[test]
     fn kernels_match_reference_on_boundary_shapes() {
+        let pool_max = pool::default_parallelism().max(3);
         let mut rng = crate::rng::Pcg64::seed_from_u64(7);
         for &m in &[1usize, 3, 4, 5, 9, 16] {
             for &n in &[1usize, 7, 8, 9, 17, 24] {
                 for &k in &[1usize, 2, 4, 5, 31, 260] {
                     let a = rng.normal_vec(m * k, 0.0, 1.0);
                     let b = rng.normal_vec(k * n, 0.0, 1.0);
-                    let mut c = vec![0.0f32; m * n];
-                    gemm_nn(m, k, n, &a, &b, &mut c);
-                    assert_close(&c, &naive_nn(m, k, n, &a, &b), &format!("nn {m}x{k}x{n}"));
-
                     let at = rng.normal_vec(k * m, 0.0, 1.0);
-                    gemm_tn(m, k, n, &at, &b, &mut c);
-                    assert_close(&c, &naive_tn(m, k, n, &at, &b), &format!("tn {m}x{k}x{n}"));
-
                     let bt = rng.normal_vec(n * k, 0.0, 1.0);
-                    gemm_nt(m, k, n, &a, &bt, &mut c);
-                    assert_close(&c, &naive_nt(m, k, n, &a, &bt), &format!("nt {m}x{k}x{n}"));
+                    let mut c = vec![0.0f32; m * n];
+                    for &kern in &kernels_available() {
+                        for &t in &[1usize, 2, pool_max] {
+                            nn_driver(kern, t, m, k, n, &a, &b, &mut c);
+                            assert_close(
+                                &c,
+                                &naive_nn(m, k, n, &a, &b),
+                                &format!("nn {m}x{k}x{n} {kern:?} t={t}"),
+                            );
+                            tn_driver(kern, t, m, k, n, &at, &b, &mut c);
+                            assert_close(
+                                &c,
+                                &naive_tn(m, k, n, &at, &b),
+                                &format!("tn {m}x{k}x{n} {kern:?} t={t}"),
+                            );
+                            nt_driver(kern, t, m, k, n, &a, &bt, &mut c);
+                            assert_close(
+                                &c,
+                                &naive_nt(m, k, n, &a, &bt),
+                                &format!("nt {m}x{k}x{n} {kern:?} t={t}"),
+                            );
+                        }
+                    }
                 }
             }
         }
@@ -321,6 +569,85 @@ mod tests {
             let bt: Vec<f32> = (0..n * k).map(|_| g.normal_f32()).collect();
             gemm_nt(m, k, n, &a, &bt, &mut c);
             assert_close(&c, &naive_nt(m, k, n, &a, &bt), "nt");
+        });
+    }
+
+    /// The tentpole's core guarantee: for a fixed kernel path, the parallel
+    /// drivers are bit-identical to the serial ones at every thread count
+    /// — row partitioning must never change a row's summation order, and
+    /// remainder rows that fall out of 4-row groups must compute the same
+    /// bits through the single-row kernel.
+    #[test]
+    fn parallel_is_bit_identical_to_serial() {
+        let pool_max = pool::default_parallelism().max(3);
+        let mut rng = crate::rng::Pcg64::seed_from_u64(23);
+        // Shapes chosen so blocks land on/off MR groups: primes, sub-MR
+        // leftovers, and a KC-crossing k.
+        for &(m, k, n) in &[(13usize, 300usize, 19usize), (64, 97, 33), (7, 5, 3), (96, 96, 96)] {
+            let a = rng.normal_vec(m * k, 0.0, 1.0);
+            let b = rng.normal_vec(k * n, 0.0, 1.0);
+            let at = rng.normal_vec(k * m, 0.0, 1.0);
+            let bt = rng.normal_vec(n * k, 0.0, 1.0);
+            for &kern in &kernels_available() {
+                let mut serial = vec![0.0f32; m * n];
+                let mut par = vec![0.0f32; m * n];
+                type Driver = fn(Kernel, usize, usize, usize, usize, &[f32], &[f32], &mut [f32]);
+                for (driver, x, y) in [
+                    (nn_driver as Driver, &a[..], &b[..]),
+                    (tn_driver as Driver, &at[..], &b[..]),
+                    (nt_driver as Driver, &a[..], &bt[..]),
+                ] {
+                    driver(kern, 1, m, k, n, x, y, &mut serial[..]);
+                    for t in [2usize, 3, pool_max, m + 5] {
+                        driver(kern, t, m, k, n, x, y, &mut par[..]);
+                        assert_eq!(
+                            serial, par,
+                            "{kern:?} t={t} {m}x{k}x{n}: parallel must match serial bitwise"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// The public entry points honor the thread-budget and forced-kernel
+    /// thread-locals, including propagation into pool tasks.
+    #[test]
+    fn public_api_honors_budget_and_kernel_pins() {
+        // Big enough that the work grain actually allows a multi-block
+        // split (m·k·n ≈ 3 × PAR_GRAIN_MACS).
+        let (m, k, n) = (64, 150, 41);
+        let mut rng = crate::rng::Pcg64::seed_from_u64(31);
+        let a = rng.normal_vec(m * k, 0.0, 1.0);
+        let b = rng.normal_vec(k * n, 0.0, 1.0);
+        let mut serial = vec![0.0f32; m * n];
+        nn_driver(Kernel::Scalar, 1, m, k, n, &a, &b, &mut serial);
+        for budget in [1usize, 2, 4] {
+            let mut c = vec![0.0f32; m * n];
+            with_kernel(Kernel::Scalar, || {
+                pool::with_thread_budget(budget, || gemm_nn(m, k, n, &a, &b, &mut c))
+            });
+            assert_eq!(serial, c, "budget {budget}");
+        }
+        // The detected kernel (whatever it is) must agree with the f64
+        // reference through the same public path.
+        let mut c = vec![0.0f32; m * n];
+        pool::with_thread_budget(4, || gemm_nn(m, k, n, &a, &b, &mut c));
+        assert_close(&c, &naive_nn(m, k, n, &a, &b), "detected kernel");
+    }
+
+    #[test]
+    fn effective_threads_respects_budget_grain_and_rows() {
+        pool::with_thread_budget(8, || {
+            // Tiny work: stays serial no matter the budget.
+            assert_eq!(effective_threads(64, 1000), 1);
+            // Huge work: capped by the budget.
+            assert_eq!(effective_threads(1 << 20, 1 << 30), 8);
+            // Row-bound: never more blocks than rows.
+            assert_eq!(effective_threads(2, 1 << 30), 2);
+        });
+        pool::with_thread_budget(1, || {
+            assert_eq!(effective_threads(1 << 20, 1 << 30), 1);
         });
     }
 

@@ -88,11 +88,19 @@ impl Matrix {
         c
     }
 
+    /// A^T A into a caller-owned `cols × cols` matrix (the non-allocating
+    /// form — `solve_optimum` reuses one scratch across all workers). Runs
+    /// on the `Aᵀ·B` tiled kernel with B = A.
+    pub fn gram_into(&self, g: &mut Matrix) {
+        assert_eq!(g.rows, self.cols);
+        assert_eq!(g.cols, self.cols);
+        super::gemm::gemm_tn(self.cols, self.rows, self.cols, &self.data, &self.data, &mut g.data);
+    }
+
     /// A^T A — the Gram matrix needed for the least-squares optimum (50).
-    /// Runs on the `Aᵀ·B` tiled kernel with B = A.
     pub fn gram(&self) -> Matrix {
         let mut g = Matrix::zeros(self.cols, self.cols);
-        super::gemm::gemm_tn(self.cols, self.rows, self.cols, &self.data, &self.data, &mut g.data);
+        self.gram_into(&mut g);
         g
     }
 

@@ -9,8 +9,11 @@
 
 pub mod gemm;
 pub mod matrix;
+pub mod pool;
+#[cfg(target_arch = "x86_64")]
+pub mod simd;
 
-pub use gemm::{gemm_nn, gemm_nt, gemm_tn};
+pub use gemm::{gemm_nn, gemm_nt, gemm_tn, Kernel};
 pub use matrix::Matrix;
 
 /// y += alpha * x

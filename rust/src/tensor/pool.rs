@@ -1,0 +1,356 @@
+//! Persistent scoped thread pool for intra-operator (GEMM) parallelism.
+//!
+//! The GEMM drivers in [`super::gemm`] split their output rows into
+//! contiguous blocks and run one block per thread. Spawning OS threads per
+//! call would cost more than a small GEMM itself, so a process-wide pool
+//! ([`global`]) is created once and reused; [`ScopedPool::scope`] executes
+//! a batch of *borrowing* closures (they may capture `&`/`&mut` slices of
+//! the caller's stack) and blocks until every one has finished, which is
+//! what makes the lifetime erasure inside sound.
+//!
+//! # Thread-budget composition
+//!
+//! Intra-GEMM parallelism has to compose with the *inter-worker*
+//! parallelism of the threaded executor: N worker threads each running
+//! J-scale GEMMs must not fan out to N·cores pool tasks. The budget is a
+//! thread-local ([`thread_budget`]): the sequential executor sets it to
+//! the configured total ([`crate::config::TrainConfig::threads`]), the
+//! threaded executor gives each worker thread `total / workers`, and a
+//! GEMM call never splits into more blocks than its caller's budget. The
+//! process default is `available_parallelism()`, overridable with the
+//! `REGTOPK_THREADS` environment variable.
+//!
+//! # Determinism
+//!
+//! The pool only ever changes *where* a row block runs, never how it is
+//! computed; the GEMM drivers guarantee bit-identical results for every
+//! thread count (tested in `gemm::tests`).
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread;
+
+/// A lifetime-erased job queued to the pool (see [`ScopedPool::scope`] for
+/// why the erasure is sound).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<(VecDeque<Job>, bool)>,
+    available: Condvar,
+}
+
+/// Countdown latch: `scope` blocks on it until all submitted jobs ran.
+struct Latch {
+    state: Mutex<(usize, bool)>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(count: usize) -> Self {
+        Latch { state: Mutex::new((count, true)), done: Condvar::new() }
+    }
+
+    fn signal(&self, ok: bool) {
+        let mut s = self.state.lock().unwrap();
+        s.0 -= 1;
+        s.1 &= ok;
+        if s.0 == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until the count reaches zero; returns false if any job panicked.
+    fn wait(&self) -> bool {
+        let mut s = self.state.lock().unwrap();
+        while s.0 > 0 {
+            s = self.done.wait(s).unwrap();
+        }
+        s.1
+    }
+}
+
+/// Persistent worker threads executing borrowed-scope jobs (module docs).
+pub struct ScopedPool {
+    shared: Arc<Shared>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl ScopedPool {
+    /// Pool with `workers` OS threads (0 is valid: `scope` runs inline).
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new((VecDeque::new(), false)),
+            available: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("regtopk-gemm-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ScopedPool { shared, handles }
+    }
+
+    /// Number of pool worker threads (callers add themselves on top).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run every task to completion, using the pool workers plus the
+    /// calling thread, and return only when all have finished. Tasks may
+    /// borrow from the caller's scope: the blocking wait is exactly what
+    /// makes the internal lifetime erasure sound (no task can outlive this
+    /// call). If a task panics, the panic is reported from this call after
+    /// all other tasks finished; the pool stays usable.
+    pub fn scope<'s>(&self, mut tasks: Vec<Box<dyn FnOnce() + Send + 's>>) {
+        let Some(last) = tasks.pop() else { return };
+        if tasks.is_empty() || self.handles.is_empty() {
+            // Nothing to offload (or nowhere to offload it): run inline.
+            for t in tasks {
+                t();
+            }
+            last();
+            return;
+        }
+        let latch = Arc::new(Latch::new(tasks.len()));
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for task in tasks {
+                // SAFETY: only the lifetime is erased; the job is fully
+                // executed (or the process aborts) before `scope` returns,
+                // because we block on the latch below and every job —
+                // panicking or not — signals it exactly once.
+                let task: Box<dyn FnOnce() + Send + 'static> =
+                    unsafe { std::mem::transmute(task) };
+                let l = Arc::clone(&latch);
+                q.0.push_back(Box::new(move || {
+                    let ok = catch_unwind(AssertUnwindSafe(task)).is_ok();
+                    l.signal(ok);
+                }));
+            }
+        }
+        self.shared.available.notify_all();
+        let caller = catch_unwind(AssertUnwindSafe(last));
+        let pooled_ok = latch.wait();
+        match caller {
+            Err(p) => resume_unwind(p),
+            Ok(()) => {
+                if !pooled_ok {
+                    panic!("a pooled task panicked (payload reported on its worker thread)");
+                }
+            }
+        }
+    }
+}
+
+impl Drop for ScopedPool {
+    fn drop(&mut self) {
+        self.shared.queue.lock().unwrap().1 = true;
+        self.shared.available.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.0.pop_front() {
+                    break job;
+                }
+                if q.1 {
+                    return; // shutdown and drained
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+/// Process-wide machine parallelism: `REGTOPK_THREADS` if set, else
+/// `available_parallelism()`, clamped to at least 1.
+pub fn default_parallelism() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("REGTOPK_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    })
+}
+
+/// The shared pool behind every parallel GEMM: `default_parallelism() - 1`
+/// workers (the calling thread is always the +1).
+pub fn global() -> &'static ScopedPool {
+    static POOL: OnceLock<ScopedPool> = OnceLock::new();
+    POOL.get_or_init(|| ScopedPool::new(default_parallelism().saturating_sub(1)))
+}
+
+thread_local! {
+    /// 0 = unset (fall back to the process default).
+    static BUDGET: Cell<usize> = const { Cell::new(0) };
+}
+
+/// This thread's compute-thread budget: how many lanes (caller included) a
+/// GEMM issued from this thread may fan out to.
+pub fn thread_budget() -> usize {
+    let b = BUDGET.with(Cell::get);
+    if b == 0 {
+        default_parallelism()
+    } else {
+        b
+    }
+}
+
+/// Set this thread's budget (0 resets to the process default); returns the
+/// previous raw value. Prefer [`budget_guard`]/[`with_thread_budget`] on
+/// threads that outlive the setting.
+pub fn set_thread_budget(n: usize) -> usize {
+    BUDGET.with(|c| c.replace(n))
+}
+
+/// RAII restore for [`set_thread_budget`].
+pub struct BudgetGuard {
+    prev: usize,
+}
+
+impl Drop for BudgetGuard {
+    fn drop(&mut self) {
+        BUDGET.with(|c| c.set(self.prev));
+    }
+}
+
+/// Set the budget for the current scope, restoring the previous value on
+/// drop (executors hold one across a run so test threads stay clean).
+pub fn budget_guard(n: usize) -> BudgetGuard {
+    BudgetGuard { prev: set_thread_budget(n) }
+}
+
+/// Run `f` under budget `n` (test/bench helper).
+pub fn with_thread_budget<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    let _g = budget_guard(n);
+    f()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn scope_runs_all_tasks_and_blocks_until_done() {
+        let pool = ScopedPool::new(3);
+        let mut out = vec![0usize; 16];
+        {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+                .chunks_mut(4)
+                .enumerate()
+                .map(|(b, chunk)| {
+                    Box::new(move || {
+                        for (i, v) in chunk.iter_mut().enumerate() {
+                            *v = b * 4 + i;
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.scope(tasks);
+        }
+        assert_eq!(out, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = ScopedPool::new(0);
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..5)
+            .map(|_| {
+                Box::new(|| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scope(tasks);
+        assert_eq!(counter.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn pool_survives_task_panic_and_reports_it() {
+        let pool = ScopedPool::new(2);
+        let boom: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+            Box::new(|| panic!("pooled boom")),
+            Box::new(|| {}),
+            Box::new(|| {}),
+        ];
+        let r = catch_unwind(AssertUnwindSafe(|| pool.scope(boom)));
+        assert!(r.is_err(), "panic in a pooled task must surface to the scope caller");
+        // The pool must still execute new work afterwards.
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|_| {
+                Box::new(|| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scope(tasks);
+        assert_eq!(counter.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn concurrent_scopes_share_one_pool() {
+        // Two caller threads fanning out through the same pool must both
+        // complete (no lost wakeups / cross-talk between latches).
+        let pool = std::sync::Arc::new(ScopedPool::new(2));
+        let total = std::sync::Arc::new(AtomicUsize::new(0));
+        let mut joins = Vec::new();
+        for _ in 0..2 {
+            let pool = std::sync::Arc::clone(&pool);
+            let total = std::sync::Arc::clone(&total);
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..20 {
+                    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..3)
+                        .map(|_| {
+                            Box::new(|| {
+                                total.fetch_add(1, Ordering::Relaxed);
+                            })
+                                as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                    pool.scope(tasks);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 2 * 20 * 3);
+    }
+
+    #[test]
+    fn budget_guard_restores_previous_value() {
+        let outer = thread_budget();
+        {
+            let _g = budget_guard(3);
+            assert_eq!(thread_budget(), 3);
+            with_thread_budget(1, || assert_eq!(thread_budget(), 1));
+            assert_eq!(thread_budget(), 3);
+        }
+        assert_eq!(thread_budget(), outer);
+    }
+
+    #[test]
+    fn default_parallelism_is_at_least_one() {
+        assert!(default_parallelism() >= 1);
+        assert_eq!(global().workers() + 1, default_parallelism().max(1));
+    }
+}

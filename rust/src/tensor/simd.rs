@@ -1,0 +1,270 @@
+//! Explicit AVX2/FMA microkernels for the GEMM drivers (x86_64 only).
+//!
+//! The scalar loops in [`super::gemm`] lean on the auto-vectorizer, which
+//! at rustc's baseline `x86-64` target emits 128-bit SSE without FMA —
+//! measured ~2× off what the hardware does with 256-bit FMAs
+//! (BENCH_mlp_grad.json notes). These kernels issue the FMAs explicitly
+//! and are selected at runtime behind `is_x86_feature_detected!` in
+//! [`super::gemm::detected_kernel`]; the scalar loops remain the portable
+//! fallback and the `REGTOPK_NO_SIMD` escape hatch.
+//!
+//! # Numerics and determinism
+//!
+//! `_mm256_fmadd_ps` rounds once per multiply-add, so results differ from
+//! the scalar path in the last ulp(s) — the two dispatch paths are *not*
+//! bit-compatible with each other (parity is tolerance-tested against an
+//! f64 reference for both). What *is* guaranteed, and load-bearing for the
+//! executor-equivalence tests, is determinism within a path: for a fixed
+//! kernel each output element sees the same single-rounded op sequence
+//! regardless of thread count or row partition, because the multi-row and
+//! single-row kernels below perform identical per-element math (one fused
+//! multiply-add per (p, j), p-major) and scalar tails use `f32::mul_add`
+//! (also single-rounded). `gemm::tests` pins parallel == serial bitwise on
+//! this path whenever the host supports it.
+//!
+//! Safety: every function is `#[target_feature(enable = "avx2", "fma")]`
+//! and must only be called after detection succeeded; the only caller is
+//! the dispatch in `gemm.rs`. Loads/stores are unaligned-safe
+//! (`loadu`/`storeu`) and every tail is handled in scalar code, so no
+//! out-of-bounds access exists for any shape.
+
+#![cfg(target_arch = "x86_64")]
+
+use std::arch::x86_64::*;
+
+/// `y[j] = fma(s, b[j], y[j])` over one row.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn row_axpy(s: f32, b: &[f32], y: &mut [f32]) {
+    let n = y.len();
+    debug_assert_eq!(b.len(), n);
+    let sv = _mm256_set1_ps(s);
+    let n8 = n - n % 8;
+    let mut j = 0;
+    while j < n8 {
+        let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+        let yv = _mm256_loadu_ps(y.as_ptr().add(j));
+        _mm256_storeu_ps(y.as_mut_ptr().add(j), _mm256_fmadd_ps(sv, bv, yv));
+        j += 8;
+    }
+    while j < n {
+        y[j] = s.mul_add(b[j], y[j]);
+        j += 1;
+    }
+}
+
+/// Four-row register-tiled broadcast-FMA microkernel over a packed
+/// `kc × 4` A-panel (`panel[4p..4p+4]` = the four A entries at reduction
+/// index `p`): `c_r[j] = fma(panel[4p+r], bp[p·n + j], c_r[j])` for all
+/// p, j.
+///
+/// The 4×16 C tile lives in eight ymm accumulators across the whole `p`
+/// loop (j-tile outer, p inner), so the steady state is 8 FMAs per 2
+/// B-loads with no C traffic — ~2.5× the per-p load/store formulation it
+/// replaced (measured at 512³, BENCH_gemm_par.json). Per output element
+/// the op sequence is *unchanged*: one fused multiply-add per (p, j) with
+/// p ascending — identical to [`row_axpy`] repeated per p, which is what
+/// keeps results independent of row grouping and therefore of the row
+/// partition chosen by the parallel driver (pinned bitwise in tests).
+#[target_feature(enable = "avx2", enable = "fma")]
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn nn_panel_x4(
+    panel: &[f32],
+    bp: &[f32],
+    n: usize,
+    c0: &mut [f32],
+    c1: &mut [f32],
+    c2: &mut [f32],
+    c3: &mut [f32],
+) {
+    let kc = panel.len() / 4;
+    debug_assert_eq!(bp.len(), kc * n);
+    let mut j = 0;
+    while j + 16 <= n {
+        let mut a00 = _mm256_loadu_ps(c0.as_ptr().add(j));
+        let mut a01 = _mm256_loadu_ps(c0.as_ptr().add(j + 8));
+        let mut a10 = _mm256_loadu_ps(c1.as_ptr().add(j));
+        let mut a11 = _mm256_loadu_ps(c1.as_ptr().add(j + 8));
+        let mut a20 = _mm256_loadu_ps(c2.as_ptr().add(j));
+        let mut a21 = _mm256_loadu_ps(c2.as_ptr().add(j + 8));
+        let mut a30 = _mm256_loadu_ps(c3.as_ptr().add(j));
+        let mut a31 = _mm256_loadu_ps(c3.as_ptr().add(j + 8));
+        let mut b = bp.as_ptr().add(j);
+        for p in 0..kc {
+            let b0 = _mm256_loadu_ps(b);
+            let b1 = _mm256_loadu_ps(b.add(8));
+            let s0 = _mm256_set1_ps(panel[4 * p]);
+            a00 = _mm256_fmadd_ps(s0, b0, a00);
+            a01 = _mm256_fmadd_ps(s0, b1, a01);
+            let s1 = _mm256_set1_ps(panel[4 * p + 1]);
+            a10 = _mm256_fmadd_ps(s1, b0, a10);
+            a11 = _mm256_fmadd_ps(s1, b1, a11);
+            let s2 = _mm256_set1_ps(panel[4 * p + 2]);
+            a20 = _mm256_fmadd_ps(s2, b0, a20);
+            a21 = _mm256_fmadd_ps(s2, b1, a21);
+            let s3 = _mm256_set1_ps(panel[4 * p + 3]);
+            a30 = _mm256_fmadd_ps(s3, b0, a30);
+            a31 = _mm256_fmadd_ps(s3, b1, a31);
+            b = b.add(n);
+        }
+        _mm256_storeu_ps(c0.as_mut_ptr().add(j), a00);
+        _mm256_storeu_ps(c0.as_mut_ptr().add(j + 8), a01);
+        _mm256_storeu_ps(c1.as_mut_ptr().add(j), a10);
+        _mm256_storeu_ps(c1.as_mut_ptr().add(j + 8), a11);
+        _mm256_storeu_ps(c2.as_mut_ptr().add(j), a20);
+        _mm256_storeu_ps(c2.as_mut_ptr().add(j + 8), a21);
+        _mm256_storeu_ps(c3.as_mut_ptr().add(j), a30);
+        _mm256_storeu_ps(c3.as_mut_ptr().add(j + 8), a31);
+        j += 16;
+    }
+    while j + 8 <= n {
+        let mut a0 = _mm256_loadu_ps(c0.as_ptr().add(j));
+        let mut a1 = _mm256_loadu_ps(c1.as_ptr().add(j));
+        let mut a2 = _mm256_loadu_ps(c2.as_ptr().add(j));
+        let mut a3 = _mm256_loadu_ps(c3.as_ptr().add(j));
+        let mut b = bp.as_ptr().add(j);
+        for p in 0..kc {
+            let bv = _mm256_loadu_ps(b);
+            a0 = _mm256_fmadd_ps(_mm256_set1_ps(panel[4 * p]), bv, a0);
+            a1 = _mm256_fmadd_ps(_mm256_set1_ps(panel[4 * p + 1]), bv, a1);
+            a2 = _mm256_fmadd_ps(_mm256_set1_ps(panel[4 * p + 2]), bv, a2);
+            a3 = _mm256_fmadd_ps(_mm256_set1_ps(panel[4 * p + 3]), bv, a3);
+            b = b.add(n);
+        }
+        _mm256_storeu_ps(c0.as_mut_ptr().add(j), a0);
+        _mm256_storeu_ps(c1.as_mut_ptr().add(j), a1);
+        _mm256_storeu_ps(c2.as_mut_ptr().add(j), a2);
+        _mm256_storeu_ps(c3.as_mut_ptr().add(j), a3);
+        j += 8;
+    }
+    while j < n {
+        let mut a0 = c0[j];
+        let mut a1 = c1[j];
+        let mut a2 = c2[j];
+        let mut a3 = c3[j];
+        for p in 0..kc {
+            let bv = bp[p * n + j];
+            a0 = panel[4 * p].mul_add(bv, a0);
+            a1 = panel[4 * p + 1].mul_add(bv, a1);
+            a2 = panel[4 * p + 2].mul_add(bv, a2);
+            a3 = panel[4 * p + 3].mul_add(bv, a3);
+        }
+        c0[j] = a0;
+        c1[j] = a1;
+        c2[j] = a2;
+        c3[j] = a3;
+        j += 1;
+    }
+}
+
+/// `y[j] = fma(s3, b3[j], fma(s2, b2[j], fma(s1, b1[j], fma(s0, b0[j], y[j]))))`
+/// — four fused rank-1 contributions into one C row (the `gemm_tn` inner
+/// kernel). Chain order is fixed (0,1,2,3), so a row's result depends only
+/// on its reduction sequence, never on the thread partition.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn tn_fma4(s: [f32; 4], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32], y: &mut [f32]) {
+    let n = y.len();
+    debug_assert!(b0.len() == n && b1.len() == n && b2.len() == n && b3.len() == n);
+    let s0 = _mm256_set1_ps(s[0]);
+    let s1 = _mm256_set1_ps(s[1]);
+    let s2 = _mm256_set1_ps(s[2]);
+    let s3 = _mm256_set1_ps(s[3]);
+    let n8 = n - n % 8;
+    let mut j = 0;
+    while j < n8 {
+        let mut acc = _mm256_loadu_ps(y.as_ptr().add(j));
+        acc = _mm256_fmadd_ps(s0, _mm256_loadu_ps(b0.as_ptr().add(j)), acc);
+        acc = _mm256_fmadd_ps(s1, _mm256_loadu_ps(b1.as_ptr().add(j)), acc);
+        acc = _mm256_fmadd_ps(s2, _mm256_loadu_ps(b2.as_ptr().add(j)), acc);
+        acc = _mm256_fmadd_ps(s3, _mm256_loadu_ps(b3.as_ptr().add(j)), acc);
+        _mm256_storeu_ps(y.as_mut_ptr().add(j), acc);
+        j += 8;
+    }
+    while j < n {
+        y[j] = s[3].mul_add(b3[j], s[2].mul_add(b2[j], s[1].mul_add(b1[j], s[0].mul_add(b0[j], y[j]))));
+        j += 1;
+    }
+}
+
+/// Inner product with one 8-lane FMA accumulator (the `gemm_nt` kernel).
+/// Fixed reduction order: 8-lane FMA sweep, pairwise lane sum, scalar
+/// tail — deterministic for a fixed length.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
+    let n = x.len();
+    debug_assert_eq!(y.len(), n);
+    let n8 = n - n % 8;
+    let mut acc = _mm256_setzero_ps();
+    let mut j = 0;
+    while j < n8 {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(j));
+        let yv = _mm256_loadu_ps(y.as_ptr().add(j));
+        acc = _mm256_fmadd_ps(xv, yv, acc);
+        j += 8;
+    }
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut tail = 0.0f32;
+    while j < n {
+        tail = x[j].mul_add(y[j], tail);
+        j += 1;
+    }
+    // Pairwise lane reduction, mirroring the scalar `tensor::dot` shape.
+    let s01 = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+    let s23 = (lanes[4] + lanes[5]) + (lanes[6] + lanes[7]);
+    s01 + s23 + tail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn detected() -> bool {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+
+    #[test]
+    fn row_kernels_match_f64_reference() {
+        if !detected() {
+            return; // nothing to test on this host; gemm falls back to scalar
+        }
+        let n = 37; // crosses the 8-lane boundary with a tail
+        let b: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut y: Vec<f32> = (0..n).map(|i| (i as f32 * 0.11).cos()).collect();
+        let want: Vec<f64> =
+            y.iter().zip(&b).map(|(&yv, &bv)| yv as f64 + 1.5f64 * bv as f64).collect();
+        unsafe { row_axpy(1.5, &b, &mut y) };
+        for (g, w) in y.iter().zip(&want) {
+            assert!((*g as f64 - w).abs() < 1e-5, "{g} vs {w}");
+        }
+
+        let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.21).cos()).collect();
+        let d = unsafe { dot(&b, &x) };
+        let dref: f64 = b.iter().zip(&x).map(|(&a, &c)| a as f64 * c as f64).sum();
+        assert!((d as f64 - dref).abs() < 1e-4 * (1.0 + dref.abs()));
+    }
+
+    #[test]
+    fn x4_panel_matches_four_single_rows_bitwise() {
+        if !detected() {
+            return;
+        }
+        // The load-bearing property for parallel determinism: grouping four
+        // rows through the panel kernel must equal four single-row updates
+        // bit-for-bit (same per-element fused op sequence).
+        let (kc, n) = (13, 21);
+        let panel: Vec<f32> = (0..kc * 4).map(|i| (i as f32 * 0.7).sin()).collect();
+        let bp: Vec<f32> = (0..kc * n).map(|i| (i as f32 * 0.3).cos()).collect();
+        let mut grouped = vec![vec![0.1f32; n]; 4];
+        let mut single = grouped.clone();
+        {
+            let [c0, c1, c2, c3] = &mut grouped[..] else { unreachable!() };
+            unsafe { nn_panel_x4(&panel, &bp, n, c0, c1, c2, c3) };
+        }
+        for (r, row) in single.iter_mut().enumerate() {
+            for p in 0..kc {
+                unsafe { row_axpy(panel[4 * p + r], &bp[p * n..(p + 1) * n], row) };
+            }
+        }
+        assert_eq!(grouped, single);
+    }
+}
