@@ -1,0 +1,157 @@
+//! Conv-subsystem micro-benchmarks: the per-worker per-iteration cost of
+//! the native residual-CNN gradient oracle, im2col + GEMM vs the naive
+//! per-sample direct-convolution reference.
+//!
+//! The headline comparison is `batch_grad_packed` (whole-batch im2col
+//! packs feeding the runtime-dispatched GEMM core) against the
+//! property-tested direct reference (`forward_ref`/`backward_ref`) at a
+//! conv-structured J ≈ 1.8·10⁵ ResNet-18-topology model on 16×16×3
+//! inputs — the first native workload that puts real conv FLOPs through
+//! the PR-3 parallel/AVX2 drivers. A single stage-1 conv3×3 layer is
+//! also measured both ways (the shape the committed C-mirror numbers in
+//! `BENCH_conv_grad.json` cover).
+//!
+//! `cargo bench --bench conv_grad` (REGTOPK_BENCH_FAST=1 for smoke).
+//! Results are written to `BENCH_conv_grad.json` at the repo root for
+//! PR-over-PR perf diffing.
+
+use regtopk::bench::{black_box, Bencher};
+use regtopk::data::{ImageDataset, ImageGenConfig};
+use regtopk::grad::{ConvGrad, WorkerGrad};
+use regtopk::models::conv::{
+    self, chw_to_hwc, conv_data_grad, conv_forward, conv_param_grad, direct_conv_backward,
+    direct_conv_forward, ConvConfig, ConvNet,
+};
+use regtopk::rng::Pcg64;
+use regtopk::tensor::im2col::ConvShape;
+use std::sync::Arc;
+
+fn main() {
+    let b = Bencher::from_env();
+    let cfg = ConvConfig {
+        channels: 3,
+        height: 16,
+        width: 16,
+        classes: 10,
+        base_width: 8,
+        blocks: [2, 2, 2, 2],
+    };
+    let batch = 16usize;
+    let dim = cfg.dim();
+    let mut rng = Pcg64::seed_from_u64(1);
+    let theta = cfg.init(&mut rng);
+    println!(
+        "== residual CNN batch gradient (16x16x3, ResNet-18 topology at base width 8, \
+         J = {dim}, B = {batch}) =="
+    );
+    // CHW samples (dataset layout) and their NHWC packing.
+    let samples: Vec<Vec<f32>> =
+        (0..batch).map(|_| rng.normal_vec(cfg.pixels(), 0.0, 1.0)).collect();
+    let labels: Vec<usize> = (0..batch).map(|i| i % cfg.classes).collect();
+    let mut xb = vec![0.0f32; batch * cfg.pixels()];
+    for (s, d) in samples.iter().zip(xb.chunks_exact_mut(cfg.pixels())) {
+        chw_to_hwc(cfg.channels, cfg.height, cfg.width, s, d);
+    }
+    let mut net = ConvNet::new(cfg);
+    let mut grad = vec![0.0f32; dim];
+    net.batch_grad_packed(&theta, &xb, &labels, &mut grad); // warm scratch
+    let batched = b.report_throughput("conv_grad/batched_im2col", dim, || {
+        net.batch_grad_packed(black_box(&theta), &xb, &labels, &mut grad);
+        black_box(&grad);
+    });
+    let wgt = 1.0 / batch as f32;
+    net.forward_ref(&theta, &samples[0], labels[0]); // warm reference scratch
+    let direct = b.report_throughput("conv_grad/direct_persample", dim, || {
+        for g in grad.iter_mut() {
+            *g = 0.0;
+        }
+        for (s, &l) in samples.iter().zip(&labels) {
+            net.forward_ref(black_box(&theta), s, l);
+            net.backward_ref(&theta, l, wgt, &mut grad);
+        }
+        black_box(&grad);
+    });
+    let speedup = direct.median.as_secs_f64() / batched.median.as_secs_f64();
+    println!("{:<44} speedup vs direct per-sample {speedup:.2}x", "");
+
+    // End-to-end oracle iteration as the coordinator drives it (indices +
+    // shared-packer staging + NHWC convert + batched grad).
+    println!("\n== ConvGrad oracle, one iteration ==");
+    let gen = ImageGenConfig {
+        classes: cfg.classes,
+        channels: 3,
+        height: 16,
+        width: 16,
+        per_worker: 128,
+        workers: 1,
+        heterogeneity: 0.5,
+        noise: 1.0,
+    };
+    let data = Arc::new(ImageDataset::generate(&gen, &mut Pcg64::seed_from_u64(2)));
+    let mut oracle = ConvGrad::new(Arc::clone(&data), cfg, 0, batch, 7);
+    oracle.grad(0, &theta, &mut grad); // warm scratch
+    let mut t = 0usize;
+    b.report_throughput("conv_grad_oracle/iteration", dim, || {
+        t += 1;
+        black_box(oracle.grad(t, &theta, &mut grad));
+    });
+
+    // One stage-1 conv3×3 layer, full grad (fwd + dW + dX) both ways —
+    // the layer-level comparison the committed C-mirror numbers cover.
+    println!("\n== single conv3x3 layer fwd+dW+dX (16x16, 8 -> 8 channels, B = 16) ==");
+    let shape = ConvShape::new(8, 8, 3, 1, 1, 16, 16);
+    let desc = conv::ConvDesc { shape, w_off: 0, b_off: shape.weight_len() };
+    let ltheta = rng.normal_vec(shape.weight_len() + shape.cout, 0.0, 0.2);
+    let input = rng.normal_vec(shape.in_len(batch), 0.0, 1.0);
+    let dz = rng.normal_vec(shape.out_len(batch), 0.0, 1.0);
+    let mut cols = vec![0.0f32; shape.cols_len(batch)];
+    let mut dcols = vec![0.0f32; shape.cols_len(batch)];
+    let mut out = vec![0.0f32; shape.out_len(batch)];
+    let mut lgrad = vec![0.0f32; ltheta.len()];
+    let mut dinput = vec![0.0f32; shape.in_len(batch)];
+    // fwd + dW + dX are one GEMM each at the same M·K·N.
+    let macs = shape.rows(batch) * shape.col_width() * shape.cout * 3;
+    b.report_throughput("conv3x3/im2col_gemm/16x16_c8_b16", macs, || {
+        conv_forward(&desc, batch, &ltheta, &input, &mut cols, &mut out);
+        conv_param_grad(&desc, batch, &input, &dz, &mut cols, &mut lgrad);
+        conv_data_grad(&desc, batch, &ltheta, &dz, &mut dcols, &mut dinput, false);
+        black_box((&out, &lgrad, &dinput));
+    });
+    let (in1, out1) = (shape.in_len(1), shape.out_len(1));
+    b.report_throughput("conv3x3/direct/16x16_c8_b16", macs, || {
+        for g in lgrad.iter_mut() {
+            *g = 0.0;
+        }
+        for v in dinput.iter_mut() {
+            *v = 0.0;
+        }
+        for s in 0..batch {
+            let xin = &input[s * in1..(s + 1) * in1];
+            direct_conv_forward(&desc, &ltheta, xin, &mut out[s * out1..(s + 1) * out1]);
+            direct_conv_backward(
+                &desc,
+                &ltheta,
+                xin,
+                &dz[s * out1..(s + 1) * out1],
+                1.0,
+                &mut lgrad,
+                Some(&mut dinput[s * in1..(s + 1) * in1]),
+            );
+        }
+        black_box((&out, &lgrad, &dinput));
+    });
+
+    let speedup_json = regtopk::metrics::json::Json::obj(vec![(
+        "resnet18w8_16x16x3_b16",
+        regtopk::metrics::json::Json::Num(speedup),
+    )]);
+    if let Err(e) = b.write_json_with(
+        "conv_grad",
+        vec![("speedup_batched_vs_direct", speedup_json)],
+        "BENCH_conv_grad.json",
+    ) {
+        eprintln!("could not write BENCH_conv_grad.json: {e}");
+    } else {
+        println!("wrote BENCH_conv_grad.json");
+    }
+}

@@ -31,6 +31,34 @@ impl GradBackend {
     }
 }
 
+/// Which native model family the image experiments run on when no HLO
+/// artifacts are in play. The conv backend is the default — it is the
+/// structured workload the paper's CNN figures call for — with the MLP
+/// kept selectable (`model = "mlp"` / `--model mlp`) as the cheap
+/// fallback and cross-check.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Mlp,
+    Conv,
+}
+
+impl ModelKind {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "mlp" => Ok(ModelKind::Mlp),
+            "conv" => Ok(ModelKind::Conv),
+            _ => Err(ConfigError::new(format!("unknown model `{s}` (mlp, conv)"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Mlp => "mlp",
+            ModelKind::Conv => "conv",
+        }
+    }
+}
+
 /// Server-side optimizer selection.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum OptimizerKind {
@@ -101,6 +129,9 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Gradient backend.
     pub backend: GradBackend,
+    /// Native model family for the image workloads (ignored by the
+    /// linreg/logistic experiments).
+    pub model: ModelKind,
     /// Directory of AOT artifacts (HLO backend only).
     pub artifacts_dir: String,
     /// Log metrics every `log_every` iterations.
@@ -125,6 +156,7 @@ impl Default for TrainConfig {
             weights: Vec::new(),
             seed: 0,
             backend: GradBackend::Native,
+            model: ModelKind::Conv,
             artifacts_dir: "artifacts".into(),
             log_every: 10,
             threads: 0,
@@ -194,6 +226,7 @@ impl TrainConfig {
             "iters" => self.iters = value.as_usize()?,
             "seed" => self.seed = value.as_usize()? as u64,
             "backend" => self.backend = GradBackend::parse(&value.as_str()?)?,
+            "model" => self.model = ModelKind::parse(&value.as_str()?)?,
             "artifacts_dir" => self.artifacts_dir = value.as_str()?,
             "log_every" => self.log_every = value.as_usize()?,
             "threads" => self.threads = value.as_usize()?,
@@ -289,6 +322,19 @@ mod tests {
         assert_eq!(cfg.threads, 3);
         assert_eq!(cfg.thread_budget(), 3);
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn model_kind_parses_and_defaults_to_conv() {
+        let mut cfg = TrainConfig::default();
+        assert_eq!(cfg.model, ModelKind::Conv);
+        cfg.apply_kv("model", &Value::Str("mlp".into())).unwrap();
+        assert_eq!(cfg.model, ModelKind::Mlp);
+        cfg.apply_kv("model", &Value::Str("conv".into())).unwrap();
+        assert_eq!(cfg.model, ModelKind::Conv);
+        assert!(cfg.apply_kv("model", &Value::Str("transformer".into())).is_err());
+        assert_eq!(ModelKind::Conv.name(), "conv");
+        assert_eq!(ModelKind::Mlp.name(), "mlp");
     }
 
     #[test]

@@ -53,29 +53,41 @@ pub struct Sample {
     pub label: usize,
 }
 
+/// The one row-major batch packer: lay an ordered set of `(row, label)`
+/// pairs into an `n×width` matrix plus a label buffer, reusing the
+/// caller's allocations (steady-state calls with a stable `n` never
+/// reallocate). Every batch layout in the crate goes through here —
+/// [`pack_samples_into`] for [`Sample`] sets, `Mlp::pack` for
+/// slice-of-refs batches, and the conv oracle's CHW staging — so the
+/// layout cannot drift between them.
+pub fn pack_rows_into<'a>(
+    rows: impl ExactSizeIterator<Item = (&'a [f32], usize)>,
+    width: usize,
+    xb: &mut Vec<f32>,
+    labels: &mut Vec<usize>,
+) {
+    let n = rows.len();
+    // Exact length (callers hand the whole buffer to the batched model,
+    // which asserts the `n×width` shape); shrinking keeps capacity, so
+    // steady-state reuse still never reallocates.
+    xb.resize(n * width, 0.0);
+    labels.clear();
+    labels.reserve(n);
+    for (r, (row, label)) in rows.enumerate() {
+        xb[r * width..(r + 1) * width].copy_from_slice(row);
+        labels.push(label);
+    }
+}
+
 /// Pack an ordered set of samples into a row-major `n×pixels` matrix plus
-/// a label buffer, reusing the caller's allocations (steady-state calls
-/// with a stable `n` never reallocate). The packing routine behind every
-/// [`Sample`]-based gradient/evaluation path (`Mlp`'s slice-of-refs entry
-/// points pack equivalently from borrowed slices in `Mlp::pack` — keep
-/// the two layouts in lockstep).
+/// a label buffer (thin [`Sample`] adapter over [`pack_rows_into`]).
 pub fn pack_samples_into<'a>(
     samples: impl ExactSizeIterator<Item = &'a Sample>,
     pixels: usize,
     xb: &mut Vec<f32>,
     labels: &mut Vec<usize>,
 ) {
-    let n = samples.len();
-    // Exact length (callers hand the whole buffer to the batched model,
-    // which asserts the `n×pixels` shape); shrinking keeps capacity, so
-    // steady-state reuse still never reallocates.
-    xb.resize(n * pixels, 0.0);
-    labels.clear();
-    labels.reserve(n);
-    for (r, s) in samples.enumerate() {
-        xb[r * pixels..(r + 1) * pixels].copy_from_slice(&s.image);
-        labels.push(s.label);
-    }
+    pack_rows_into(samples.map(|s| (s.image.as_slice(), s.label)), pixels, xb, labels);
 }
 
 /// All workers' shards plus a held-out validation set drawn from the
@@ -227,6 +239,36 @@ mod tests {
             let d_diff = crate::tensor::dist2(&c0[0].image, &c1[0].image);
             assert!(d_diff > d_same, "inter-class {d_diff} <= intra-class {d_same}");
         }
+    }
+
+    #[test]
+    fn shared_packer_and_sample_adapter_agree() {
+        let cfg = ImageGenConfig { per_worker: 6, workers: 1, ..Default::default() };
+        let ds = ImageDataset::generate(&cfg, &mut Pcg64::seed_from_u64(9));
+        let shard = &ds.shards[0];
+        let (mut xa, mut la) = (Vec::new(), Vec::new());
+        pack_samples_into(shard.iter(), cfg.pixels(), &mut xa, &mut la);
+        let (mut xb, mut lb) = (Vec::new(), Vec::new());
+        pack_rows_into(
+            shard.iter().map(|s| (s.image.as_slice(), s.label)),
+            cfg.pixels(),
+            &mut xb,
+            &mut lb,
+        );
+        assert_eq!(xa, xb);
+        assert_eq!(la, lb);
+        assert_eq!(xa.len(), 6 * cfg.pixels());
+        // Shrinking re-pack keeps capacity (steady-state reuse).
+        let cap = xb.capacity();
+        pack_rows_into(
+            shard[..2].iter().map(|s| (s.image.as_slice(), s.label)),
+            cfg.pixels(),
+            &mut xb,
+            &mut lb,
+        );
+        assert_eq!(xb.len(), 2 * cfg.pixels());
+        assert_eq!(xb.capacity(), cap);
+        assert_eq!(&xb[..], &xa[..2 * cfg.pixels()]);
     }
 
     #[test]

@@ -152,15 +152,23 @@ impl LinRegDataset {
 
     /// Local full-batch gradient: ∇F_n(θ) = 2/D_n · X_nᵀ(X_nθ − y_n).
     /// `resid` and `grad` are caller-provided buffers (hot loop).
+    ///
+    /// Both halves run on the runtime-dispatched BLAS-3 core instead of
+    /// per-row matvecs: the residual is `X·θᵀ` as a `D×J·J×1` `gemm_nt`
+    /// (SIMD dots, row-block parallel), and the gradient is the row
+    /// vector `residᵀ·X` as a `1×D·D×J` `gemm_nn` (sequential axpy sweeps
+    /// over X — the same access pattern the old `matvec_t` had, now on
+    /// the dispatched kernel).
     pub fn local_grad(&self, n: usize, theta: &[f32], resid: &mut Vec<f32>, grad: &mut [f32]) {
         let w = &self.workers[n];
-        resid.resize(w.y.len(), 0.0);
-        w.x.matvec(theta, resid);
+        let d = w.y.len();
+        resid.resize(d, 0.0);
+        crate::tensor::gemm_nt(d, self.cfg.dim, 1, &w.x.data, theta, resid);
         for (r, y) in resid.iter_mut().zip(w.y.iter()) {
             *r -= *y;
         }
-        w.x.matvec_t(resid, grad);
-        let scale = 2.0 / w.y.len() as f32;
+        crate::tensor::gemm_nn(1, d, self.cfg.dim, resid, &w.x.data, grad);
+        let scale = 2.0 / d as f32;
         for v in grad.iter_mut() {
             *v *= scale;
         }
@@ -251,6 +259,48 @@ mod tests {
         let ds = LinRegDataset::generate(&cfg, &mut rng);
         let d = dist2(&ds.workers[0].truth, &ds.workers[1].truth);
         assert!(d > 1.0, "heterogeneous truths should differ, d={d}");
+    }
+
+    #[test]
+    fn blas3_local_grad_matches_the_matvec_path() {
+        // Parity pin for the BLAS-3 rewrite: the gemm_nt/gemm_nn gradient
+        // must agree with the previous per-row matvec implementation
+        // (different summation orders, hence tolerance-based).
+        let mut rng = Pcg64::seed_from_u64(17);
+        let cfg = LinRegGenConfig {
+            workers: 2,
+            dim: 37, // off any tile boundary
+            points_per_worker: 53,
+            ..Default::default()
+        };
+        let ds = LinRegDataset::generate(&cfg, &mut rng);
+        for n in 0..cfg.workers {
+            let theta: Vec<f32> = rng.normal_vec(cfg.dim, 0.0, 1.0);
+            let mut resid = Vec::new();
+            let mut grad = vec![0.0f32; cfg.dim];
+            ds.local_grad(n, &theta, &mut resid, &mut grad);
+            // The seed's matvec path, inlined as the reference.
+            let w = &ds.workers[n];
+            let mut r_ref = vec![0.0f32; w.y.len()];
+            w.x.matvec(&theta, &mut r_ref);
+            for (r, y) in r_ref.iter_mut().zip(w.y.iter()) {
+                *r -= *y;
+            }
+            let mut g_ref = vec![0.0f32; cfg.dim];
+            w.x.matvec_t(&r_ref, &mut g_ref);
+            let scale = 2.0 / w.y.len() as f32;
+            for v in g_ref.iter_mut() {
+                *v *= scale;
+            }
+            for j in 0..cfg.dim {
+                assert!(
+                    (grad[j] - g_ref[j]).abs() <= 1e-3 * (1.0 + g_ref[j].abs()),
+                    "worker {n} j={j}: blas3 {} vs matvec {}",
+                    grad[j],
+                    g_ref[j]
+                );
+            }
+        }
     }
 
     #[test]

@@ -3,27 +3,33 @@
 //! vs no sparsification.
 //!
 //! Paper workload: ResNet-18 on CIFAR-10, N = 8, D_n = 64. Substitution
-//! (DESIGN.md §4): a small CNN — JAX/Pallas-authored, AOT-compiled to an
-//! HLO artifact, executed via PJRT — trained on the synthetic CIFAR-like
-//! generator. This is the repository's production path: the gradient of
-//! every worker at every round is an artifact execution.
-//!
-//! When artifacts are absent (fresh checkout before `make artifacts`) the
-//! harness falls back to the native MLP backend so `regtopk exp all`
-//! still runs; the CSV notes which backend produced it.
+//! (DESIGN.md §4): when AOT artifacts are present, a JAX/Pallas-authored
+//! CNN executed via PJRT (the production path). When artifacts are absent
+//! (fresh checkout before `make artifacts`) the harness runs the **native
+//! residual CNN** (`models::conv` — ResNet-18 topology at reduced width on
+//! the im2col + GEMM core, J ≈ 1.8·10⁵), so the figure exercises a
+//! genuinely conv-structured gradient vector either way; the 2-layer MLP
+//! remains selectable with `--model mlp` as the cheap cross-check. The
+//! CSV records which backend produced it (`# backend=...`).
 
 use super::ExpOpts;
-use crate::config::TrainConfig;
+use crate::config::{ModelKind, TrainConfig};
 use crate::coordinator::{train, IterStats};
 use crate::data::{ImageDataset, ImageGenConfig};
-use crate::grad::{MlpGrad, WorkerGrad};
+use crate::grad::{ConvGrad, MlpGrad, WorkerGrad};
 use crate::metrics::{AsciiPlot, Curves};
-use crate::models::MlpConfig;
+use crate::models::{ConvConfig, MlpConfig};
 use crate::rng::Pcg64;
 use crate::runtime::hlo_grad::{open_engine, HloGrad, SharedEngine};
 use crate::runtime::Manifest;
 use crate::sparsify::SparsifierKind;
 use std::sync::Arc;
+
+/// Which native model backs the fallback workload.
+enum NativeNet {
+    Mlp(MlpConfig),
+    Conv(ConvConfig),
+}
 
 /// The classification workload: data + worker builders + evaluator.
 pub struct Workload {
@@ -32,7 +38,7 @@ pub struct Workload {
     pub workers_n: usize,
     data: Arc<ImageDataset>,
     engine: Option<SharedEngine>,
-    mlp_cfg: Option<MlpConfig>,
+    native: Option<NativeNet>,
     batch: usize,
     theta0: Vec<f32>,
 }
@@ -80,14 +86,20 @@ impl Workload {
             workers_n,
             data,
             engine: Some(engine),
-            mlp_cfg: None,
+            native: None,
             batch,
             theta0,
         })
     }
 
-    /// Native fallback (no artifacts present).
-    pub fn native(seed: u64) -> Workload {
+    /// Native workload (no artifacts present). The conv backend runs the
+    /// same calibrated hard setting as the HLO CNN; the MLP keeps its
+    /// original easier setting (it has no capacity for the hard one).
+    pub fn native(seed: u64, model: ModelKind) -> Workload {
+        let (heterogeneity, noise) = match model {
+            ModelKind::Conv => (1.0, 1.5),
+            ModelKind::Mlp => (0.5, 0.5),
+        };
         let gen = ImageGenConfig {
             classes: 10,
             channels: 3,
@@ -95,40 +107,62 @@ impl Workload {
             width: 8,
             per_worker: 256,
             workers: 8,
-            heterogeneity: 0.5,
-            noise: 0.5,
+            heterogeneity,
+            noise,
         };
         let data = Arc::new(ImageDataset::generate(&gen, &mut Pcg64::new(seed, 0xF16)));
-        let mlp_cfg = MlpConfig { input: gen.pixels(), hidden: 32, classes: gen.classes };
-        let theta0 = mlp_cfg.init(&mut Pcg64::new(seed ^ 0xABC, 7));
+        let (backend, native, theta0) = match model {
+            ModelKind::Conv => {
+                let cfg = ConvConfig {
+                    channels: gen.channels,
+                    height: gen.height,
+                    width: gen.width,
+                    classes: gen.classes,
+                    base_width: 8,
+                    blocks: [2, 2, 2, 2],
+                };
+                let theta0 = cfg.init(&mut Pcg64::new(seed ^ 0xABC, 7));
+                ("conv", NativeNet::Conv(cfg), theta0)
+            }
+            ModelKind::Mlp => {
+                let cfg =
+                    MlpConfig { input: gen.pixels(), hidden: 32, classes: gen.classes };
+                let theta0 = cfg.init(&mut Pcg64::new(seed ^ 0xABC, 7));
+                ("native_mlp", NativeNet::Mlp(cfg), theta0)
+            }
+        };
+        let dim = theta0.len();
         Workload {
-            backend: "native_mlp",
-            dim: mlp_cfg.dim(),
+            backend,
+            dim,
             workers_n: 8,
             data,
             engine: None,
-            mlp_cfg: Some(mlp_cfg),
+            native: Some(native),
             batch: 16,
             theta0,
         }
     }
 
     /// Resolve HLO-with-fallback.
-    pub fn auto(artifacts_dir: &str, seed: u64) -> Workload {
+    pub fn auto(artifacts_dir: &str, seed: u64, model: ModelKind) -> Workload {
         if Manifest::available(artifacts_dir) {
             match Workload::hlo(artifacts_dir, seed) {
                 Ok(w) => return w,
                 Err(e) => eprintln!("fig6: HLO workload unavailable ({e}); using native"),
             }
         } else {
-            eprintln!("fig6: no artifacts at {artifacts_dir}; using native MLP backend");
+            eprintln!(
+                "fig6: no artifacts at {artifacts_dir}; using native {} backend",
+                model.name()
+            );
         }
-        Workload::native(seed)
+        Workload::native(seed, model)
     }
 
     /// Build the worker set (fresh state per run).
     pub fn build_workers(&self, seed: u64) -> Vec<Box<dyn WorkerGrad>> {
-        match (&self.engine, self.mlp_cfg) {
+        match (&self.engine, &self.native) {
             (Some(engine), _) => {
                 let classes = self.data.cfg.classes;
                 let pixels = self.data.cfg.pixels();
@@ -158,9 +192,15 @@ impl Workload {
                     })
                     .collect()
             }
-            (None, Some(mlp_cfg)) => (0..self.workers_n)
+            (None, Some(NativeNet::Conv(cfg))) => (0..self.workers_n)
                 .map(|n| {
-                    Box::new(MlpGrad::new(Arc::clone(&self.data), mlp_cfg, n, self.batch, seed))
+                    Box::new(ConvGrad::new(Arc::clone(&self.data), *cfg, n, self.batch, seed))
+                        as Box<dyn WorkerGrad>
+                })
+                .collect(),
+            (None, Some(NativeNet::Mlp(cfg))) => (0..self.workers_n)
+                .map(|n| {
+                    Box::new(MlpGrad::new(Arc::clone(&self.data), *cfg, n, self.batch, seed))
                         as Box<dyn WorkerGrad>
                 })
                 .collect(),
@@ -170,7 +210,7 @@ impl Workload {
 
     /// Validation accuracy of a parameter vector.
     pub fn evaluate(&self, theta: &[f32]) -> f64 {
-        match (&self.engine, self.mlp_cfg) {
+        match (&self.engine, &self.native) {
             (Some(engine), _) => {
                 // Evaluate through the `cnn_eval` artifact in batches.
                 let classes = self.data.cfg.classes;
@@ -205,9 +245,12 @@ impl Workload {
                     correct_w / total as f64
                 }
             }
-            (None, Some(mlp_cfg)) => {
-                let mut eval =
-                    MlpGrad::new(Arc::clone(&self.data), mlp_cfg, 0, self.batch, 0);
+            (None, Some(NativeNet::Conv(cfg))) => {
+                let mut eval = ConvGrad::new(Arc::clone(&self.data), *cfg, 0, self.batch, 0);
+                eval.evaluate(theta).1
+            }
+            (None, Some(NativeNet::Mlp(cfg))) => {
+                let mut eval = MlpGrad::new(Arc::clone(&self.data), *cfg, 0, self.batch, 0);
                 eval.evaluate(theta).1
             }
             _ => unreachable!(),
@@ -259,7 +302,7 @@ pub fn run_policy(
 }
 
 pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
-    let workload = Workload::auto(&opts.artifacts_dir, 0);
+    let workload = Workload::auto(&opts.artifacts_dir, 0, opts.model);
     println!(
         "fig6 backend: {} (J = {}, N = {})",
         workload.backend, workload.dim, workload.workers_n
@@ -287,7 +330,7 @@ pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
         );
     }
     let path = opts.path("fig6_accuracy.csv");
-    curves.write_csv(&path)?;
+    curves.write_csv_tagged(&path, &[("backend", workload.backend)])?;
     let mut plot = AsciiPlot::new("Fig 6: test accuracy vs rounds (1% and 0.1%-style sparsity)");
     plot.add('-', curves.get("dense").unwrap());
     plot.add('o', curves.get("topk_0.1pct").unwrap());
@@ -302,8 +345,29 @@ mod tests {
     use super::*;
 
     #[test]
-    fn native_fallback_trains() {
-        let w = Workload::native(1);
+    fn native_defaults_to_conv_backend_at_j_1e5() {
+        // Without artifacts the promoted fallback is the residual CNN —
+        // a conv-structured J ≈ 1.8·10⁵ parameter vector.
+        let w = Workload::auto("/nonexistent/artifacts", 0, ModelKind::Conv);
+        assert_eq!(w.backend, "conv");
+        assert_eq!(w.dim, 175_802);
+        assert_eq!(w.workers_n, 8);
+    }
+
+    #[test]
+    fn native_conv_fallback_trains() {
+        let w = Workload::native(1, ModelKind::Conv);
+        assert_eq!(w.backend, "conv");
+        let acc0 = w.evaluate(&w.theta0());
+        let curve = run_policy(&w, SparsifierKind::Dense, 1.0, 12, 1).unwrap();
+        let last = curve.last().unwrap().1;
+        assert!(last >= acc0, "training should not reduce accuracy: {acc0} -> {last}");
+    }
+
+    #[test]
+    fn native_mlp_fallback_still_trains() {
+        let w = Workload::native(1, ModelKind::Mlp);
+        assert_eq!(w.backend, "native_mlp");
         let acc0 = w.evaluate(&w.theta0());
         let curve = run_policy(&w, SparsifierKind::Dense, 1.0, 30, 1).unwrap();
         let last = curve.last().unwrap().1;
@@ -311,13 +375,34 @@ mod tests {
     }
 
     #[test]
-    fn sparsified_policies_run_on_fallback() {
-        let w = Workload::native(2);
+    fn sparsified_policies_run_on_conv_fallback() {
+        let w = Workload::native(2, ModelKind::Conv);
         for kind in [SparsifierKind::TopK, SparsifierKind::RegTopK { mu: 3.0, y: 1.0 }] {
-            let curve = run_policy(&w, kind, 0.01, 10, 2).unwrap();
+            let curve = run_policy(&w, kind, 0.01, 4, 2).unwrap();
             assert!(!curve.is_empty());
             assert!(curve.iter().all(|&(_, a)| (0.0..=1.0).contains(&a)));
         }
+    }
+
+    #[test]
+    fn fig6_csv_is_tagged_with_the_conv_backend() {
+        // The satellite smoke pin: a native fig6 run must record
+        // `# backend=conv` in its CSV provenance header.
+        let w = Workload::auto("/nonexistent/artifacts", 3, ModelKind::Conv);
+        let curve = run_policy(&w, SparsifierKind::TopK, 0.01, 2, 3).unwrap();
+        let mut curves = Curves::new();
+        for (t, acc) in curve {
+            curves.series_mut("topk").push(t, acc);
+        }
+        let dir = std::env::temp_dir().join("regtopk_fig6_tag_test");
+        let path = dir.join("fig6_accuracy.csv");
+        curves.write_csv_tagged(&path, &[("backend", w.backend)]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(
+            text.starts_with("# backend=conv\n"),
+            "fig6 CSV must be tagged with the conv backend, got:\n{text}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

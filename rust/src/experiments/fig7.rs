@@ -29,7 +29,8 @@ pub fn accuracy_at_mu(
 }
 
 pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
-    let size = SuiteSize::default_size(opts.fast);
+    let mut size = SuiteSize::default_size(opts.fast);
+    size.model = opts.model;
     let seeds: Vec<u64> = (0..if opts.fast { 2 } else { 5 }).collect();
     let sparsity = 0.01;
     let grid: Vec<f64> = if opts.fast {

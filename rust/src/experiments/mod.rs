@@ -29,6 +29,10 @@ pub struct ExpOpts {
     pub fast: bool,
     /// Artifacts directory for HLO-backed experiments.
     pub artifacts_dir: String,
+    /// Native model family for the image experiments (`--model mlp|conv`):
+    /// the residual CNN by default, with the MLP kept as the cheap
+    /// fallback/cross-check.
+    pub model: crate::config::ModelKind,
 }
 
 impl Default for ExpOpts {
@@ -37,6 +41,7 @@ impl Default for ExpOpts {
             out_dir: PathBuf::from("results"),
             fast: false,
             artifacts_dir: crate::runtime::hlo_grad::default_artifacts_dir(),
+            model: crate::config::ModelKind::Conv,
         }
     }
 }

@@ -66,7 +66,11 @@ fn pm(xs: &[f64], scale: f64) -> String {
 }
 
 pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
-    let size = SuiteSize::default_size(opts.fast);
+    // The CLI promotes the suite to the native residual CNN (the paper's
+    // Table 1 models are conv nets); `--model mlp` keeps the cheap MLP.
+    let mut size = SuiteSize::default_size(opts.fast);
+    size.model = opts.model;
+    println!("table1 model backend: {}", size.model.name());
     let variants: &[Variant] = if opts.fast { &VARIANTS[..2] } else { &VARIANTS };
     // Paper sparsities are 1% / 0.1% of multi-million-parameter models
     // (k in the thousands). Our variants have ~2–20k parameters, so the

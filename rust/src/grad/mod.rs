@@ -9,6 +9,7 @@
 
 use crate::data::linreg::LinRegDataset;
 use crate::data::ImageDataset;
+use crate::models::conv::{chw_rows_to_hwc, ConvConfig, ConvNet};
 use crate::models::{Mlp, MlpConfig, ToyLogistic};
 use std::sync::Arc;
 
@@ -182,6 +183,109 @@ impl WorkerGrad for MlpGrad {
     }
 }
 
+/// Mini-batch residual-CNN gradient over a worker's image shard — the
+/// conv analogue of [`MlpGrad`], running entirely on the im2col + GEMM
+/// path of [`ConvNet`].
+///
+/// Per iteration: draw the deterministic batch indices, stage the CHW
+/// samples through the shared row packer, convert once to the NHWC layout
+/// the conv stack consumes, and run the batched pass. All staging buffers
+/// are grown once and reused — steady-state `grad` calls perform zero
+/// heap allocations.
+pub struct ConvGrad {
+    data: Arc<ImageDataset>,
+    net: ConvNet,
+    worker: usize,
+    batch: usize,
+    seed: u64,
+    /// Reused mini-batch index buffer.
+    idx: Vec<usize>,
+    /// Reused packed CHW batch (`batch × pixels`, row-major).
+    xchw: Vec<f32>,
+    /// Reused NHWC batch the conv stack consumes.
+    xb: Vec<f32>,
+    /// Reused label buffer.
+    labels: Vec<usize>,
+    /// Validation set packed + converted once on first evaluate.
+    val_x: Vec<f32>,
+    val_labels: Vec<usize>,
+}
+
+impl ConvGrad {
+    pub fn new(data: Arc<ImageDataset>, cfg: ConvConfig, worker: usize, batch: usize, seed: u64) -> Self {
+        // The CHW→HWC conversion needs the exact geometry, not just the
+        // total pixel count.
+        assert_eq!(cfg.channels, data.cfg.channels, "CNN channels must match image channels");
+        assert_eq!(cfg.height, data.cfg.height, "CNN height must match image height");
+        assert_eq!(cfg.width, data.cfg.width, "CNN width must match image width");
+        ConvGrad {
+            data,
+            net: ConvNet::new(cfg),
+            worker,
+            batch,
+            seed,
+            idx: Vec::new(),
+            xchw: Vec::new(),
+            xb: Vec::new(),
+            labels: Vec::new(),
+            val_x: Vec::new(),
+            val_labels: Vec::new(),
+        }
+    }
+
+    pub fn all(
+        data: &Arc<ImageDataset>,
+        cfg: ConvConfig,
+        batch: usize,
+        seed: u64,
+    ) -> Vec<Box<dyn WorkerGrad + Send>> {
+        (0..data.shards.len())
+            .map(|n| {
+                Box::new(ConvGrad::new(Arc::clone(data), cfg, n, batch, seed))
+                    as Box<dyn WorkerGrad + Send>
+            })
+            .collect()
+    }
+
+    /// Validation metrics with the current parameters. The validation set
+    /// is packed and NHWC-converted once, on first call, and reused for
+    /// every later (chunked, scratch-bounded) evaluation.
+    pub fn evaluate(&mut self, theta: &[f32]) -> (f64, f64) {
+        if self.val_labels.is_empty() && !self.data.validation.is_empty() {
+            let cfg = self.net.plan.cfg;
+            crate::data::images::pack_samples_into(
+                self.data.validation.iter(),
+                cfg.pixels(),
+                &mut self.xchw,
+                &mut self.val_labels,
+            );
+            chw_rows_to_hwc(cfg.channels, cfg.height, cfg.width, &self.xchw, &mut self.val_x);
+        }
+        self.net.evaluate_packed(theta, &self.val_x, &self.val_labels)
+    }
+}
+
+impl WorkerGrad for ConvGrad {
+    fn dim(&self) -> usize {
+        self.net.plan.dim
+    }
+
+    fn grad(&mut self, t: usize, theta: &[f32], out: &mut [f32]) -> f64 {
+        self.data.batch_indices_into(self.worker, t, self.batch, self.seed, &mut self.idx);
+        let shard = &self.data.shards[self.worker];
+        let cfg = self.net.plan.cfg;
+        crate::data::images::pack_rows_into(
+            self.idx.iter().map(|&i| (shard[i].image.as_slice(), shard[i].label)),
+            cfg.pixels(),
+            &mut self.xchw,
+            &mut self.labels,
+        );
+        chw_rows_to_hwc(cfg.channels, cfg.height, cfg.width, &self.xchw, &mut self.xb);
+        let (loss, _) = self.net.batch_grad_packed(theta, &self.xb, &self.labels, out);
+        loss
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -232,6 +336,73 @@ mod tests {
         let theta = mcfg.init(&mut Pcg64::seed_from_u64(5));
         let (loss, acc) = w.evaluate(&theta);
         assert_eq!((loss, acc), (0.0, 0.0), "empty validation must be (0, 0), not NaN");
+    }
+
+    #[test]
+    fn conv_grad_is_deterministic_and_evaluates() {
+        let icfg = ImageGenConfig {
+            per_worker: 24,
+            workers: 2,
+            channels: 2,
+            height: 5,
+            width: 5,
+            classes: 4,
+            ..Default::default()
+        };
+        let data = Arc::new(ImageDataset::generate(&icfg, &mut Pcg64::seed_from_u64(11)));
+        let ccfg = ConvConfig {
+            channels: 2,
+            height: 5,
+            width: 5,
+            classes: 4,
+            base_width: 2,
+            blocks: [1, 1, 1, 1],
+        };
+        let mut w = ConvGrad::new(Arc::clone(&data), ccfg, 0, 6, 3);
+        assert_eq!(w.dim(), ccfg.dim());
+        let theta = ccfg.init(&mut Pcg64::seed_from_u64(5));
+        let mut g1 = vec![0.0; ccfg.dim()];
+        let mut g2 = vec![0.0; ccfg.dim()];
+        let l1 = w.grad(4, &theta, &mut g1);
+        let l2 = w.grad(4, &theta, &mut g2);
+        assert_eq!(l1, l2);
+        assert_eq!(g1, g2);
+        assert!(g1.iter().any(|&v| v != 0.0));
+        // Different iteration -> different batch -> different gradient.
+        let mut g3 = vec![0.0; ccfg.dim()];
+        w.grad(5, &theta, &mut g3);
+        assert_ne!(g1, g3);
+        let (loss, acc) = w.evaluate(&theta);
+        assert!(loss.is_finite() && (0.0..=1.0).contains(&acc));
+        // Repeated evaluation reuses the packed validation set.
+        assert_eq!(w.evaluate(&theta), (loss, acc));
+        assert_eq!(ConvGrad::all(&data, ccfg, 6, 3).len(), 2);
+    }
+
+    #[test]
+    fn conv_evaluate_on_empty_validation_set_is_defined() {
+        let icfg = ImageGenConfig {
+            per_worker: 8,
+            workers: 1,
+            channels: 1,
+            height: 4,
+            width: 4,
+            classes: 3,
+            ..Default::default()
+        };
+        let mut data = ImageDataset::generate(&icfg, &mut Pcg64::seed_from_u64(13));
+        data.validation.clear();
+        let ccfg = ConvConfig {
+            channels: 1,
+            height: 4,
+            width: 4,
+            classes: 3,
+            base_width: 2,
+            blocks: [1, 1, 1, 1],
+        };
+        let mut w = ConvGrad::new(Arc::new(data), ccfg, 0, 4, 1);
+        let theta = ccfg.init(&mut Pcg64::seed_from_u64(2));
+        assert_eq!(w.evaluate(&theta), (0.0, 0.0), "empty validation must be (0, 0), not NaN");
     }
 
     #[test]

@@ -35,8 +35,9 @@ fn run() -> anyhow::Result<()> {
 }
 
 const USAGE: &str = "usage:
-  regtopk exp <id|all> [--out DIR] [--fast] [--artifacts DIR]
+  regtopk exp <id|all> [--out DIR] [--fast] [--artifacts DIR] [--model conv|mlp]
       ids: fig1 fig3 fig4 fig5 fig6 fig7 fig8 table1 table2 ablations robustness
+      --model picks the native image backend (default: conv — the residual CNN)
   regtopk train [--config FILE] [--set key=value ...] [--threaded]
   regtopk info [--artifacts DIR]";
 
@@ -52,6 +53,10 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(dir) = args.opt("artifacts") {
         opts.artifacts_dir = dir.to_string();
+    }
+    if let Some(model) = args.opt("model") {
+        opts.model =
+            regtopk::config::ModelKind::parse(model).map_err(|e| anyhow::anyhow!("{e}"))?;
     }
     opts.fast = args.flag("fast");
     std::fs::create_dir_all(&opts.out_dir)?;

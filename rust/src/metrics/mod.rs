@@ -60,10 +60,24 @@ impl Curves {
     /// Write all series to a CSV: `iter,<name1>,<name2>,...`. Iterations
     /// are the union across series; missing values are left empty.
     pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        self.write_csv_tagged(path, &[])
+    }
+
+    /// [`Self::write_csv`] with leading `# key=value` provenance lines —
+    /// how the experiment harnesses record which backend produced a run
+    /// (e.g. `# backend=conv` for the native CNN Fig. 6).
+    pub fn write_csv_tagged(
+        &self,
+        path: impl AsRef<Path>,
+        tags: &[(&str, &str)],
+    ) -> std::io::Result<()> {
         if let Some(dir) = path.as_ref().parent() {
             std::fs::create_dir_all(dir)?;
         }
         let mut w = BufWriter::new(File::create(path)?);
+        for (key, value) in tags {
+            writeln!(w, "# {key}={value}")?;
+        }
         write!(w, "iter")?;
         for s in &self.series {
             write!(w, ",{}", s.name)?;
@@ -187,6 +201,21 @@ mod tests {
         assert_eq!(lines[0], "iter,a,b");
         assert_eq!(lines[1], "0,1,");
         assert_eq!(lines[2], "1,2,3");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tagged_csv_carries_provenance_comments() {
+        let mut c = Curves::new();
+        c.series_mut("acc").push(0, 0.5);
+        let dir = std::env::temp_dir().join("regtopk_test_metrics_tagged");
+        let path = dir.join("tagged.csv");
+        c.write_csv_tagged(&path, &[("backend", "conv"), ("j", "175802")]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "# backend=conv");
+        assert_eq!(lines[1], "# j=175802");
+        assert_eq!(lines[2], "iter,acc");
         std::fs::remove_dir_all(&dir).ok();
     }
 

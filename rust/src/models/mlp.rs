@@ -30,10 +30,18 @@
 //!
 //! All scratch lives in the `Mlp` value and is grown once to the largest
 //! batch seen: steady-state `batch_grad`/`evaluate` calls allocate nothing.
+//! Evaluation runs in [`EVAL_CHUNK`]-row chunks, so scratch is bounded by
+//! `max(train batch, EVAL_CHUNK)` no matter how large the validation set
+//! grows — and chunking is bit-invisible: per-row results are independent
+//! of the batch they ride in (the GEMM core is bit-stable under row
+//! partitioning) and the loss accumulates left-to-right into one f64.
 
 use crate::rng::Pcg64;
 use crate::tensor::gemm::{gemm_nn, gemm_nt, gemm_tn};
 use crate::tensor::softmax_inplace;
+
+/// Rows per evaluation chunk (bounds forward scratch for large sets).
+const EVAL_CHUNK: usize = 256;
 
 /// Architecture description.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -117,8 +125,8 @@ impl Mlp {
     /// Grow the *forward* scratch to hold `n` samples (no-op once warm).
     /// `xb` is grown only by [`Self::pack`], and the gradient buffers
     /// `dlb`/`dhb` only on the gradient path, so packed-entry evaluation
-    /// allocates none of them (a large validation set grows forward
-    /// scratch only).
+    /// allocates none of them — and since evaluation is chunked, `n`
+    /// never exceeds `max(train batch, EVAL_CHUNK)` here.
     fn ensure_cap(&mut self, n: usize) {
         if n > self.cap {
             let c = self.cfg;
@@ -200,29 +208,34 @@ impl Mlp {
 
     /// Batched fused forward(+backward) over a packed row-major batch.
     /// `x` is `n×input` with `n = labels.len()`; when `grad` is present it
-    /// is fully overwritten with the mean gradient. Returns
-    /// (mean loss, accuracy).
+    /// is fully overwritten with the mean gradient. Adds the f64 per-row
+    /// losses and the correct-prediction count into the caller's
+    /// accumulators, so chunked evaluation reproduces an unchunked pass
+    /// bit for bit.
     fn batched_core(
         &mut self,
         theta: &[f32],
         x: &[f32],
         labels: &[usize],
         grad: Option<&mut [f32]>,
-    ) -> (f64, f64) {
+        loss_sum: &mut f64,
+        correct: &mut usize,
+    ) {
         let c = self.cfg;
         let n = labels.len();
         assert_eq!(x.len(), n * c.input, "packed batch shape mismatch");
         assert_eq!(theta.len(), c.dim());
         if n == 0 {
-            // An empty set has no defined mean — return (0.0, 0.0) and a
-            // zero gradient instead of letting 0/0 NaNs flow into metrics
-            // JSON (empty validation sets hit this via `evaluate_packed`).
+            // An empty set has no defined mean — leave the accumulators
+            // untouched and zero the gradient instead of letting 0/0 NaNs
+            // flow into metrics JSON (empty validation sets hit this via
+            // `evaluate_packed`).
             if let Some(grad) = grad {
                 for v in grad.iter_mut() {
                     *v = 0.0;
                 }
             }
-            return (0.0, 0.0);
+            return;
         }
         self.ensure_cap(n);
         let (w1, b1, w2, b2) = c.offsets();
@@ -258,16 +271,14 @@ impl Mlp {
             self.dhb.resize(n * c.hidden, 0.0);
         }
         let wscale = 1.0 / n as f32;
-        let mut loss = 0.0f64;
-        let mut correct = 0usize;
         for r in 0..n {
             let row = &mut lb[r * c.classes..(r + 1) * c.classes];
             let label = labels[r];
             let pred = argmax(row);
             softmax_inplace(row);
-            loss += -(row[label].max(1e-12) as f64).ln();
+            *loss_sum += -(row[label].max(1e-12) as f64).ln();
             if pred == label {
-                correct += 1;
+                *correct += 1;
             }
             if want_grad {
                 let drow = &mut self.dlb[r * c.classes..(r + 1) * c.classes];
@@ -310,7 +321,6 @@ impl Mlp {
                 }
             }
         }
-        (loss / n as f64, correct as f64 / n as f64)
     }
 
     /// Mean loss + gradient over a pre-packed batch (`x` row-major
@@ -323,29 +333,58 @@ impl Mlp {
         labels: &[usize],
         grad: &mut [f32],
     ) -> (f64, f64) {
-        self.batched_core(theta, x, labels, Some(grad))
+        let n = labels.len();
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        self.batched_core(theta, x, labels, Some(grad), &mut loss, &mut correct);
+        if n == 0 {
+            return (0.0, 0.0);
+        }
+        (loss / n as f64, correct as f64 / n as f64)
     }
 
-    /// Mean loss and accuracy over a pre-packed set (no gradient).
+    /// Mean loss and accuracy over a pre-packed set (no gradient),
+    /// evaluated in [`EVAL_CHUNK`]-row chunks so forward scratch stays
+    /// bounded regardless of the set size.
     pub fn evaluate_packed(&mut self, theta: &[f32], x: &[f32], labels: &[usize]) -> (f64, f64) {
-        self.batched_core(theta, x, labels, None)
+        self.evaluate_packed_chunked(theta, x, labels, EVAL_CHUNK)
     }
 
-    /// Pack a slice-of-refs batch into the internal scratch, returning the
-    /// sample count. Reuses `self.xb`/`self.labels` (no steady-state
-    /// allocation).
-    fn pack(&mut self, batch: &[(&[f32], usize)]) -> usize {
-        let n = batch.len();
+    /// Chunked evaluation with an explicit chunk size; any chunk size
+    /// returns bit-identical results (module docs).
+    pub fn evaluate_packed_chunked(
+        &mut self,
+        theta: &[f32],
+        x: &[f32],
+        labels: &[usize],
+        chunk: usize,
+    ) -> (f64, f64) {
+        assert!(chunk >= 1);
+        let n = labels.len();
+        if n == 0 {
+            return (0.0, 0.0);
+        }
         let input = self.cfg.input;
-        if self.xb.len() < n * input {
-            self.xb.resize(n * input, 0.0);
+        assert_eq!(x.len(), n * input, "packed set shape mismatch");
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        for (xc, lc) in x.chunks(chunk * input).zip(labels.chunks(chunk)) {
+            self.batched_core(theta, xc, lc, None, &mut loss, &mut correct);
         }
-        self.labels.clear();
-        for (r, (x, label)) in batch.iter().enumerate() {
-            self.xb[r * input..(r + 1) * input].copy_from_slice(x);
-            self.labels.push(*label);
-        }
-        n
+        (loss / n as f64, correct as f64 / n as f64)
+    }
+
+    /// Pack a slice-of-refs batch into the internal scratch via the shared
+    /// row packer, returning the sample count. Reuses `self.xb` /
+    /// `self.labels` (no steady-state allocation).
+    fn pack(&mut self, batch: &[(&[f32], usize)]) -> usize {
+        crate::data::images::pack_rows_into(
+            batch.iter().map(|&(x, label)| (x, label)),
+            self.cfg.input,
+            &mut self.xb,
+            &mut self.labels,
+        );
+        batch.len()
     }
 
     /// Mean loss + gradient over a batch; returns (mean loss, accuracy).
@@ -358,21 +397,50 @@ impl Mlp {
         let n = self.pack(batch);
         let xb = std::mem::take(&mut self.xb);
         let labels = std::mem::take(&mut self.labels);
-        let out = self.batched_core(theta, &xb[..n * self.cfg.input], &labels, Some(grad));
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        self.batched_core(
+            theta,
+            &xb[..n * self.cfg.input],
+            &labels,
+            Some(grad),
+            &mut loss,
+            &mut correct,
+        );
         self.xb = xb;
         self.labels = labels;
-        out
+        if n == 0 {
+            return (0.0, 0.0);
+        }
+        (loss / n as f64, correct as f64 / n as f64)
     }
 
-    /// Mean loss and accuracy over a set (no gradient).
+    /// Mean loss and accuracy over a set (no gradient). Packs and
+    /// evaluates one [`EVAL_CHUNK`] at a time, so neither the packed
+    /// scratch nor the forward scratch grows to the set size.
     pub fn evaluate(&mut self, theta: &[f32], set: &[(&[f32], usize)]) -> (f64, f64) {
-        let n = self.pack(set);
-        let xb = std::mem::take(&mut self.xb);
-        let labels = std::mem::take(&mut self.labels);
-        let out = self.batched_core(theta, &xb[..n * self.cfg.input], &labels, None);
-        self.xb = xb;
-        self.labels = labels;
-        out
+        let n = set.len();
+        if n == 0 {
+            return (0.0, 0.0);
+        }
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        for chunk in set.chunks(EVAL_CHUNK) {
+            let cn = self.pack(chunk);
+            let xb = std::mem::take(&mut self.xb);
+            let labels = std::mem::take(&mut self.labels);
+            self.batched_core(
+                theta,
+                &xb[..cn * self.cfg.input],
+                &labels,
+                None,
+                &mut loss,
+                &mut correct,
+            );
+            self.xb = xb;
+            self.labels = labels;
+        }
+        (loss / n as f64, correct as f64 / n as f64)
     }
 }
 
@@ -381,8 +449,9 @@ impl Mlp {
 /// ties to the lower index): a NaN logit never beats a real one — in
 /// particular a leading NaN no longer masks every later finite logit —
 /// and an all-NaN row yields 0 by the tie rule, not by comparison
-/// accident.
-fn argmax(xs: &[f32]) -> usize {
+/// accident. Shared with the conv head (`models::conv`), which scores
+/// logits the same way.
+pub(crate) fn argmax(xs: &[f32]) -> usize {
     let mut best = 0;
     for (i, &v) in xs.iter().enumerate().skip(1) {
         let b = xs[best];
@@ -585,6 +654,35 @@ mod tests {
         let eb = m.evaluate(&theta, &refs);
         assert_eq!(ea, eb);
         assert_eq!(ea.0, a.0, "evaluate loss must match batch_grad loss");
+    }
+
+    #[test]
+    fn chunked_evaluation_is_bit_identical_and_bounds_scratch() {
+        let c = tiny();
+        let mut rng = Pcg64::seed_from_u64(21);
+        let theta = c.init(&mut rng);
+        let n = 600; // > EVAL_CHUNK, not a multiple of any chunk below
+        let x: Vec<f32> = rng.normal_vec(n * c.input, 0.0, 1.0);
+        let labels: Vec<usize> = (0..n).map(|i| i % c.classes).collect();
+        let whole = Mlp::new(c).evaluate_packed_chunked(&theta, &x, &labels, n);
+        for chunk in [1usize, 7, 64, 256, 1000] {
+            let mut m = Mlp::new(c);
+            let got = m.evaluate_packed_chunked(&theta, &x, &labels, chunk);
+            assert_eq!(whole, got, "chunk={chunk} must be bit-identical to unchunked");
+            assert!(m.cap <= chunk.min(n), "scratch cap {} exceeds chunk {chunk}", m.cap);
+        }
+        // Default entry points chunk too: forward scratch stays bounded at
+        // EVAL_CHUNK rows even though the set is larger, for both the
+        // packed and the slice-of-refs entry.
+        let mut m = Mlp::new(c);
+        assert_eq!(m.evaluate_packed(&theta, &x, &labels), whole);
+        assert!(m.cap <= EVAL_CHUNK);
+        let refs: Vec<(&[f32], usize)> =
+            (0..n).map(|r| (&x[r * c.input..(r + 1) * c.input], labels[r])).collect();
+        let mut m = Mlp::new(c);
+        assert_eq!(m.evaluate(&theta, &refs), whole);
+        assert!(m.cap <= EVAL_CHUNK);
+        assert!(m.xb.len() <= EVAL_CHUNK * c.input, "packed scratch must stay chunk-bounded");
     }
 
     #[test]

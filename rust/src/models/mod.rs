@@ -6,8 +6,10 @@
 //! backends for the wide experiment sweeps; (3) cross-checks for the
 //! HLO-artifact path (the same math must come out of PJRT).
 
+pub mod conv;
 pub mod logistic;
 pub mod mlp;
 
+pub use conv::{ConvConfig, ConvNet};
 pub use logistic::ToyLogistic;
 pub use mlp::{Mlp, MlpConfig};

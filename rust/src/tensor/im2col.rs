@@ -1,0 +1,312 @@
+//! im2col / col2im packing — the bridge between convolutions and the
+//! BLAS-3 core.
+//!
+//! A convolution over an NHWC batch is lowered to one GEMM per direction:
+//!
+//! ```text
+//! cols = im2col(X)                      rows (b,oy,ox) × cols (ky,kx,ci)
+//! Y    = cols · W                       gemm_nn   (forward)
+//! dW   = colsᵀ · dY                     gemm_tn   (weight gradient)
+//! dX   = col2im(dY · Wᵀ)                gemm_nt + scatter-add (data gradient)
+//! ```
+//!
+//! with the weight stored row-major `(k·k·cin) × cout` — i.e. the patch
+//! layout and the weight layout agree, so no transpose is ever
+//! materialized. Activations are NHWC (`[b, y, x, c]` row-major): a patch
+//! row (`ky` fixed) is then *contiguous* in the source image, so the hot
+//! path of [`im2col`] is a handful of `copy_from_slice` slabs per output
+//! position with explicit zero-fill only at the padding borders — no
+//! per-element bounds tests. [`col2im_add`] is the exact adjoint traversal
+//! with `+=` in place of the copy.
+//!
+//! Both routines are deterministic single-pass loops in a fixed order;
+//! all parallelism (and the bit-identical-across-thread-counts guarantee)
+//! lives in the GEMMs they feed.
+
+/// Geometry of one convolution as the packing module sees it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvShape {
+    pub cin: usize,
+    pub cout: usize,
+    /// Square kernel side (3 for the residual convs, 1 for projections).
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub h_in: usize,
+    pub w_in: usize,
+    pub h_out: usize,
+    pub w_out: usize,
+}
+
+impl ConvShape {
+    /// Derive the output spatial dims from the usual conv formula.
+    pub fn new(
+        cin: usize,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        h_in: usize,
+        w_in: usize,
+    ) -> Self {
+        assert!(cin >= 1 && cout >= 1 && k >= 1 && stride >= 1);
+        assert!(h_in + 2 * pad >= k, "kernel taller than padded input");
+        assert!(w_in + 2 * pad >= k, "kernel wider than padded input");
+        ConvShape {
+            cin,
+            cout,
+            k,
+            stride,
+            pad,
+            h_in,
+            w_in,
+            h_out: (h_in + 2 * pad - k) / stride + 1,
+            w_out: (w_in + 2 * pad - k) / stride + 1,
+        }
+    }
+
+    /// Patch width `k·k·cin` — the GEMM reduction dimension.
+    pub fn col_width(&self) -> usize {
+        self.k * self.k * self.cin
+    }
+
+    /// GEMM row count for a batch of `n`: one row per output position.
+    pub fn rows(&self, n: usize) -> usize {
+        n * self.h_out * self.w_out
+    }
+
+    /// Total `cols` buffer length for a batch of `n`.
+    pub fn cols_len(&self, n: usize) -> usize {
+        self.rows(n) * self.col_width()
+    }
+
+    /// NHWC input length for a batch of `n`.
+    pub fn in_len(&self, n: usize) -> usize {
+        n * self.h_in * self.w_in * self.cin
+    }
+
+    /// NHWC output length for a batch of `n`.
+    pub fn out_len(&self, n: usize) -> usize {
+        self.rows(n) * self.cout
+    }
+
+    /// Flat weight length `(k·k·cin) · cout`.
+    pub fn weight_len(&self) -> usize {
+        self.col_width() * self.cout
+    }
+}
+
+/// Pack an NHWC batch into the patch matrix: row `(b·h_out + oy)·w_out + ox`
+/// holds the `(ky, kx, ci)`-ordered receptive field of that output
+/// position, zero-filled where the window hangs over the padding border.
+/// Fully overwrites `cols`.
+pub fn im2col(s: &ConvShape, n: usize, input: &[f32], cols: &mut [f32]) {
+    assert_eq!(input.len(), s.in_len(n), "im2col input shape mismatch");
+    assert_eq!(cols.len(), s.cols_len(n), "im2col cols shape mismatch");
+    let cw = s.col_width();
+    let kc = s.k * s.cin; // one ky-row of a patch
+    let plane = s.h_in * s.w_in * s.cin;
+    for b in 0..n {
+        let image = &input[b * plane..(b + 1) * plane];
+        for oy in 0..s.h_out {
+            for ox in 0..s.w_out {
+                let r = (b * s.h_out + oy) * s.w_out + ox;
+                let row = &mut cols[r * cw..(r + 1) * cw];
+                // Window starts at (iy0, ix0) in padded coordinates.
+                let ix0 = (ox * s.stride) as isize - s.pad as isize;
+                // Valid kx range: 0 <= ix0 + kx < w_in.
+                let kx_lo = ((-ix0).max(0) as usize).min(s.k);
+                let kx_hi = ((s.w_in as isize - ix0).max(0) as usize).min(s.k);
+                for ky in 0..s.k {
+                    let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+                    let seg = &mut row[ky * kc..(ky + 1) * kc];
+                    if iy < 0 || iy >= s.h_in as isize || kx_lo >= kx_hi {
+                        for v in seg.iter_mut() {
+                            *v = 0.0;
+                        }
+                        continue;
+                    }
+                    for v in seg[..kx_lo * s.cin].iter_mut() {
+                        *v = 0.0;
+                    }
+                    let ix_lo = (ix0 + kx_lo as isize) as usize;
+                    let src0 = (iy as usize * s.w_in + ix_lo) * s.cin;
+                    seg[kx_lo * s.cin..kx_hi * s.cin]
+                        .copy_from_slice(&image[src0..src0 + (kx_hi - kx_lo) * s.cin]);
+                    for v in seg[kx_hi * s.cin..].iter_mut() {
+                        *v = 0.0;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Adjoint of [`im2col`]: scatter-*add* a patch-matrix gradient back onto
+/// the NHWC input gradient (overlapping receptive fields accumulate).
+/// The caller zeroes `dinput` first when overwrite semantics are wanted;
+/// leaving it warm accumulates — the conv backward pass uses that to fold
+/// a projection shortcut's data gradient into the main branch's without a
+/// temporary.
+pub fn col2im_add(s: &ConvShape, n: usize, dcols: &[f32], dinput: &mut [f32]) {
+    assert_eq!(dcols.len(), s.cols_len(n), "col2im dcols shape mismatch");
+    assert_eq!(dinput.len(), s.in_len(n), "col2im dinput shape mismatch");
+    let cw = s.col_width();
+    let kc = s.k * s.cin;
+    let plane = s.h_in * s.w_in * s.cin;
+    for b in 0..n {
+        let dimage = &mut dinput[b * plane..(b + 1) * plane];
+        for oy in 0..s.h_out {
+            for ox in 0..s.w_out {
+                let r = (b * s.h_out + oy) * s.w_out + ox;
+                let row = &dcols[r * cw..(r + 1) * cw];
+                let ix0 = (ox * s.stride) as isize - s.pad as isize;
+                let kx_lo = ((-ix0).max(0) as usize).min(s.k);
+                let kx_hi = ((s.w_in as isize - ix0).max(0) as usize).min(s.k);
+                if kx_lo >= kx_hi {
+                    continue;
+                }
+                for ky in 0..s.k {
+                    let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+                    if iy < 0 || iy >= s.h_in as isize {
+                        continue;
+                    }
+                    let ix_lo = (ix0 + kx_lo as isize) as usize;
+                    let dst0 = (iy as usize * s.w_in + ix_lo) * s.cin;
+                    let src = &row[ky * kc + kx_lo * s.cin..ky * kc + kx_hi * s.cin];
+                    for (d, &v) in dimage[dst0..dst0 + src.len()].iter_mut().zip(src) {
+                        *d += v;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+
+    /// Index-at-a-time reference with explicit bounds tests per element.
+    fn im2col_naive(s: &ConvShape, n: usize, input: &[f32]) -> Vec<f32> {
+        let mut cols = vec![0.0f32; s.cols_len(n)];
+        let cw = s.col_width();
+        for b in 0..n {
+            for oy in 0..s.h_out {
+                for ox in 0..s.w_out {
+                    let r = (b * s.h_out + oy) * s.w_out + ox;
+                    for ky in 0..s.k {
+                        for kx in 0..s.k {
+                            let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+                            let ix = (ox * s.stride + kx) as isize - s.pad as isize;
+                            if iy < 0
+                                || iy >= s.h_in as isize
+                                || ix < 0
+                                || ix >= s.w_in as isize
+                            {
+                                continue; // stays zero
+                            }
+                            for ci in 0..s.cin {
+                                cols[r * cw + (ky * s.k + kx) * s.cin + ci] = input[((b
+                                    * s.h_in
+                                    + iy as usize)
+                                    * s.w_in
+                                    + ix as usize)
+                                    * s.cin
+                                    + ci];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        cols
+    }
+
+    fn random_shape(g: &mut crate::testing::Gen) -> ConvShape {
+        let k = if g.bool_with(0.3) { 1 } else { 3 };
+        let pad = if k == 1 { 0 } else { 1 };
+        ConvShape::new(
+            g.usize_in(1..=3),
+            g.usize_in(1..=4),
+            k,
+            g.usize_in(1..=2),
+            pad,
+            g.usize_in(1..=6),
+            g.usize_in(1..=6),
+        )
+    }
+
+    #[test]
+    fn shape_formula() {
+        let s = ConvShape::new(3, 8, 3, 1, 1, 8, 8);
+        assert_eq!((s.h_out, s.w_out), (8, 8));
+        let s = ConvShape::new(8, 16, 3, 2, 1, 8, 8);
+        assert_eq!((s.h_out, s.w_out), (4, 4));
+        let s = ConvShape::new(8, 16, 1, 2, 0, 8, 8);
+        assert_eq!((s.h_out, s.w_out), (4, 4));
+        // Degenerate 1×1 spatial input still produces one output position.
+        let s = ConvShape::new(4, 4, 3, 2, 1, 1, 1);
+        assert_eq!((s.h_out, s.w_out), (1, 1));
+        assert_eq!(s.col_width(), 36);
+        assert_eq!(s.weight_len(), 36 * 4);
+    }
+
+    #[test]
+    fn slab_copy_matches_naive_property() {
+        check(60, |g| {
+            let s = random_shape(g);
+            let n = g.usize_in(1..=3);
+            let input: Vec<f32> = (0..s.in_len(n)).map(|_| g.normal_f32()).collect();
+            let mut cols = vec![7.0f32; s.cols_len(n)]; // stale garbage
+            im2col(&s, n, &input, &mut cols);
+            assert_eq!(cols, im2col_naive(&s, n, &input), "shape {s:?} n={n}");
+        });
+    }
+
+    #[test]
+    fn col2im_is_the_adjoint_of_im2col() {
+        // <im2col(x), y> == <x, col2im(y)> for all x, y — the defining
+        // property of the scatter-add being the exact transpose of the
+        // gather (f64 accumulation; the maps themselves are permutation
+        // matrices with 0/1 entries so no rounding is involved).
+        check(40, |g| {
+            let s = random_shape(g);
+            let n = g.usize_in(1..=2);
+            let x: Vec<f32> = (0..s.in_len(n)).map(|_| g.normal_f32()).collect();
+            let y: Vec<f32> = (0..s.cols_len(n)).map(|_| g.normal_f32()).collect();
+            let mut cols = vec![0.0f32; s.cols_len(n)];
+            im2col(&s, n, &x, &mut cols);
+            let lhs: f64 =
+                cols.iter().zip(&y).map(|(&a, &b)| a as f64 * b as f64).sum();
+            let mut dx = vec![0.0f32; s.in_len(n)];
+            col2im_add(&s, n, &y, &mut dx);
+            let rhs: f64 = x.iter().zip(&dx).map(|(&a, &b)| a as f64 * b as f64).sum();
+            assert!(
+                (lhs - rhs).abs() <= 1e-3 * (1.0 + lhs.abs()),
+                "adjoint mismatch: {lhs} vs {rhs} ({s:?})"
+            );
+        });
+    }
+
+    #[test]
+    fn col2im_accumulates_instead_of_overwriting() {
+        let s = ConvShape::new(1, 1, 1, 1, 0, 2, 2);
+        let dcols = vec![1.0f32; s.cols_len(1)];
+        let mut dx = vec![10.0f32; s.in_len(1)];
+        col2im_add(&s, 1, &dcols, &mut dx);
+        assert_eq!(dx, vec![11.0; 4]);
+    }
+
+    #[test]
+    fn stride_one_interior_is_pure_copy() {
+        // With no padding every patch element comes from the image.
+        let s = ConvShape::new(2, 1, 3, 1, 0, 4, 5);
+        let input: Vec<f32> = (0..s.in_len(1)).map(|i| i as f32).collect();
+        let mut cols = vec![0.0f32; s.cols_len(1)];
+        im2col(&s, 1, &input, &mut cols);
+        assert!(cols.iter().all(|&v| v >= 0.0));
+        assert_eq!(cols, im2col_naive(&s, 1, &input));
+    }
+}

@@ -8,6 +8,7 @@
 //! nothing per iteration.
 
 pub mod gemm;
+pub mod im2col;
 pub mod matrix;
 pub mod pool;
 #[cfg(target_arch = "x86_64")]

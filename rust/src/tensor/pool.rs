@@ -17,8 +17,10 @@
 //! the configured total ([`crate::config::TrainConfig::threads`]), the
 //! threaded executor gives each worker thread `total / workers`, and a
 //! GEMM call never splits into more blocks than its caller's budget. The
-//! process default is `available_parallelism()`, overridable with the
-//! `REGTOPK_THREADS` environment variable.
+//! process default is the *physical*-core count (sysfs SMT census, since
+//! hyperthread siblings only contend with the FMA-saturated kernels),
+//! falling back to logical `available_parallelism()` where the census is
+//! unavailable; `REGTOPK_THREADS` overrides both.
 //!
 //! # Determinism
 //!
@@ -176,16 +178,56 @@ fn worker_loop(shared: &Shared) {
     }
 }
 
-/// Process-wide machine parallelism: `REGTOPK_THREADS` if set, else
+/// Parse the first CPU id out of a sysfs `thread_siblings_list` line.
+/// The file uses list syntax (`"0,4"`, `"0-3"`, `"7"`); the first id is
+/// all the physical-core census needs.
+fn first_sibling(s: &str) -> Option<usize> {
+    s.trim().split(|c| c == ',' || c == '-').next()?.trim().parse().ok()
+}
+
+/// Count physical cores from the sysfs SMT topology: a CPU that leads its
+/// own `thread_siblings_list` is the representative thread of its core,
+/// so counting leaders counts cores. An *offline* CPU (nosmt boot,
+/// hotplug) keeps its `cpuN` directory but loses `topology/` — skip it
+/// rather than stop, and end the scan only when the `cpuN` directory
+/// itself is missing. Returns `None` off Linux or when sysfs is
+/// unreadable (the caller falls back to the logical count).
+fn sysfs_physical_cores() -> Option<usize> {
+    let mut cores = 0usize;
+    for cpu in 0..4096usize {
+        let dir = format!("/sys/devices/system/cpu/cpu{cpu}");
+        if !std::path::Path::new(&dir).exists() {
+            break; // past the last possible CPU
+        }
+        let Ok(text) = std::fs::read_to_string(format!("{dir}/topology/thread_siblings_list"))
+        else {
+            continue; // offline CPU: no topology, but numbering continues
+        };
+        if first_sibling(&text) == Some(cpu) {
+            cores += 1;
+        }
+    }
+    (cores >= 1).then_some(cores)
+}
+
+/// Process-wide machine parallelism: `REGTOPK_THREADS` if set, else the
+/// *physical*-core count (sysfs SMT census), else the logical
 /// `available_parallelism()`, clamped to at least 1.
+///
+/// Physical beats logical here because the FMA-saturated GEMM kernels
+/// leave no port slack for an SMT sibling to use — two hyperthreads on
+/// one core just contend for the FMA units and L1 — so fanning out to
+/// logical CPUs buys contention, not throughput.
 pub fn default_parallelism() -> usize {
     static N: OnceLock<usize> = OnceLock::new();
     *N.get_or_init(|| {
-        std::env::var("REGTOPK_THREADS")
-            .ok()
-            .and_then(|s| s.parse::<usize>().ok())
-            .filter(|&n| n >= 1)
-            .unwrap_or_else(|| thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+        if let Some(n) =
+            std::env::var("REGTOPK_THREADS").ok().and_then(|s| s.parse::<usize>().ok()).filter(|&n| n >= 1)
+        {
+            return n;
+        }
+        let logical = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        sysfs_physical_cores().map_or(logical, |p| p.clamp(1, logical))
     })
 }
 
@@ -352,5 +394,32 @@ mod tests {
     fn default_parallelism_is_at_least_one() {
         assert!(default_parallelism() >= 1);
         assert_eq!(global().workers() + 1, default_parallelism().max(1));
+    }
+
+    #[test]
+    fn sibling_list_parser_handles_all_sysfs_syntaxes() {
+        assert_eq!(first_sibling("0,4"), Some(0));
+        assert_eq!(first_sibling("2-3"), Some(2));
+        assert_eq!(first_sibling("7"), Some(7));
+        assert_eq!(first_sibling("7\n"), Some(7));
+        assert_eq!(first_sibling(" 12,44 \n"), Some(12));
+        assert_eq!(first_sibling(""), None);
+        assert_eq!(first_sibling("garbage"), None);
+    }
+
+    #[test]
+    fn physical_core_census_is_sane_with_logical_fallback() {
+        // On Linux the census returns >= 1 and never more than the
+        // logical count; elsewhere it returns None and the default falls
+        // back to available_parallelism. Either way the resolved default
+        // stays within [1, logical] (unless REGTOPK_THREADS overrides).
+        let logical = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        if let Some(p) = sysfs_physical_cores() {
+            assert!(p >= 1);
+            assert!(p.clamp(1, logical) <= logical);
+        }
+        if std::env::var_os("REGTOPK_THREADS").is_none() {
+            assert!(default_parallelism() <= logical);
+        }
     }
 }
