@@ -1,0 +1,115 @@
+//! Fused (implicit-GEMM) vs materialized conv path: the tentpole
+//! comparison for the pack+GEMM fusion.
+//!
+//! Measures `conv_forward + conv_param_grad` — the two directions that
+//! used to materialize the O(B·Ho·Wo·K²·Cin) `cols` buffer — against
+//! `conv_forward_fused + conv_param_grad_fused` at two widths:
+//!
+//! * the **stem-width layer** (3 → 8 channels at 16×16, the acceptance
+//!   shape: low arithmetic intensity, so the eliminated cols round trip
+//!   dominates), and
+//! * a **stage-width layer** (32 → 32 channels at 8×8: GEMM-heavier, the
+//!   fusion win narrows as FLOPs amortize the pack).
+//!
+//! A `ConvNet::batch_grad_packed` entry tracks the end-to-end model
+//! gradient on the fused path (its steady state no longer touches a
+//! forward/weight-grad cols buffer at all). Before timing, every
+//! fused/materialized pair is checked **bitwise equal** — the bench
+//! refuses to report numbers for diverging paths.
+//!
+//! `cargo bench --bench conv_fused` (REGTOPK_BENCH_FAST=1 for smoke).
+//! Results go to `BENCH_conv_fused.json` at the repo root for
+//! PR-over-PR perf diffing.
+
+use regtopk::bench::{black_box, Bencher};
+use regtopk::metrics::json::Json;
+use regtopk::models::conv::{
+    self, conv_forward, conv_forward_fused, conv_param_grad, conv_param_grad_fused, ConvConfig,
+    ConvNet,
+};
+use regtopk::rng::Pcg64;
+use regtopk::tensor::im2col::ConvShape;
+
+/// Bench one layer both ways; returns (materialized_ns, fused_ns).
+fn layer_pair(b: &Bencher, rng: &mut Pcg64, label: &str, shape: ConvShape, batch: usize) -> (f64, f64) {
+    let desc = conv::ConvDesc { shape, w_off: 0, b_off: shape.weight_len() };
+    let theta = rng.normal_vec(shape.weight_len() + shape.cout, 0.0, 0.2);
+    let input = rng.normal_vec(shape.in_len(batch), 0.0, 1.0);
+    let dz = rng.normal_vec(shape.out_len(batch), 0.0, 1.0);
+    let mut cols = vec![0.0f32; shape.cols_len(batch)];
+    let mut out_m = vec![0.0f32; shape.out_len(batch)];
+    let mut out_f = vec![0.0f32; shape.out_len(batch)];
+    let mut grad_m = vec![0.0f32; theta.len()];
+    let mut grad_f = vec![0.0f32; theta.len()];
+    // Parity gate: fused must equal materialized bit for bit before any
+    // timing is reported.
+    conv_forward(&desc, batch, &theta, &input, &mut cols, &mut out_m);
+    conv_forward_fused(&desc, batch, &theta, &input, &mut out_f);
+    assert_eq!(out_m, out_f, "{label}: fused forward diverged");
+    conv_param_grad(&desc, batch, &input, &dz, &mut cols, &mut grad_m);
+    conv_param_grad_fused(&desc, batch, &input, &dz, &mut grad_f);
+    assert_eq!(grad_m, grad_f, "{label}: fused param grad diverged");
+
+    // fwd + dW are one GEMM each at the same M·K·N.
+    let macs = shape.rows(batch) * shape.col_width() * shape.cout * 2;
+    let mat = b.report_throughput(&format!("conv_fused/materialized/{label}"), macs, || {
+        conv_forward(&desc, batch, &theta, &input, &mut cols, &mut out_m);
+        conv_param_grad(&desc, batch, &input, &dz, &mut cols, &mut grad_m);
+        black_box((&out_m, &grad_m));
+    });
+    let fus = b.report_throughput(&format!("conv_fused/fused/{label}"), macs, || {
+        conv_forward_fused(&desc, batch, &theta, &input, &mut out_f);
+        conv_param_grad_fused(&desc, batch, &input, &dz, &mut grad_f);
+        black_box((&out_f, &grad_f));
+    });
+    let speedup = mat.median.as_secs_f64() / fus.median.as_secs_f64();
+    println!("{:<44} fused speedup {speedup:.2}x", "");
+    (mat.median.as_secs_f64() * 1e9, fus.median.as_secs_f64() * 1e9)
+}
+
+fn main() {
+    let b = Bencher::from_env();
+    let batch = 16usize;
+    let mut rng = Pcg64::seed_from_u64(3);
+
+    println!("== fused (implicit-GEMM) vs materialized conv layer, fwd + dW (B = {batch}) ==");
+    let stem = ConvShape::new(3, 8, 3, 1, 1, 16, 16);
+    let (stem_m, stem_f) = layer_pair(&b, &mut rng, "stem3x3_16x16_c3_w8", stem, batch);
+    let stage = ConvShape::new(32, 32, 3, 1, 1, 8, 8);
+    let (stage_m, stage_f) = layer_pair(&b, &mut rng, "stage3x3_8x8_c32_w32", stage, batch);
+
+    // End-to-end model gradient on the fused path (no forward/weight-grad
+    // cols buffer exists in ConvNet's steady state anymore).
+    println!("\n== residual CNN batch gradient on the fused path ==");
+    let cfg = ConvConfig {
+        channels: 3,
+        height: 16,
+        width: 16,
+        classes: 10,
+        base_width: 8,
+        blocks: [2, 2, 2, 2],
+    };
+    let dim = cfg.dim();
+    let theta = cfg.init(&mut rng);
+    let xb = rng.normal_vec(batch * cfg.pixels(), 0.0, 1.0);
+    let labels: Vec<usize> = (0..batch).map(|i| i % cfg.classes).collect();
+    let mut net = ConvNet::new(cfg);
+    let mut grad = vec![0.0f32; dim];
+    net.batch_grad_packed(&theta, &xb, &labels, &mut grad); // warm scratch
+    b.report_throughput("conv_fused/batch_grad_packed_fused", dim, || {
+        net.batch_grad_packed(black_box(&theta), &xb, &labels, &mut grad);
+        black_box(&grad);
+    });
+
+    let speedups = Json::obj(vec![
+        ("stem3x3_16x16_c3_w8", Json::Num(stem_m / stem_f)),
+        ("stage3x3_8x8_c32_w32", Json::Num(stage_m / stage_f)),
+    ]);
+    if let Err(e) =
+        b.write_json_with("conv_fused", vec![("speedup_fused_vs_materialized", speedups)], "BENCH_conv_fused.json")
+    {
+        eprintln!("could not write BENCH_conv_fused.json: {e}");
+    } else {
+        println!("wrote BENCH_conv_fused.json");
+    }
+}

@@ -21,6 +21,7 @@
 
 pub mod checkpoint;
 pub mod genie;
+pub mod ring;
 pub mod threaded;
 
 use crate::collective::Aggregator;

@@ -1,0 +1,269 @@
+//! Fixed-capacity SPSC ring channel — the allocation-free replacement for
+//! `std::sync::mpsc` on the threaded executor's leader ⇄ worker links.
+//!
+//! `mpsc` backs its queue with heap-allocated ~32-message blocks, so a
+//! long training run pays roughly one allocation per 31 sends per
+//! channel even when every *payload* is recycled (the `DoubleBuffer`
+//! story in [`super::threaded`]). These rings close that last leak: all
+//! storage is one boxed slot array allocated at construction, and a
+//! steady-state send/recv moves the payload in and out of a slot without
+//! touching the heap. The executor's protocol bounds occupancy at two
+//! in-flight commands per worker and one in-flight uplink, so tiny rings
+//! suffice and sends never block in steady state.
+//!
+//! Semantics match the `mpsc` subset the executor relies on:
+//!
+//! * [`RingSender::send`] blocks while the ring is full (transient under
+//!   the protocol bound) and returns the payload as `Err` once the
+//!   receiver is gone — worker-death detection keeps working at every
+//!   send site, payload included.
+//! * [`RingReceiver::recv`] blocks while empty, still drains messages
+//!   buffered before the sender dropped, and errors only when empty *and*
+//!   disconnected — so a worker's final uplink is never lost.
+//!
+//! Single-producer single-consumer is all the executor topology needs
+//! (one leader ⇄ one worker per link); the types are `Send` but
+//! deliberately not `Clone`.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+struct State<T> {
+    /// Slot storage, allocated once; `None` = empty slot.
+    buf: Box<[Option<T>]>,
+    /// Index of the oldest occupied slot.
+    head: usize,
+    /// Number of occupied slots.
+    len: usize,
+    sender_alive: bool,
+    receiver_alive: bool,
+}
+
+struct Shared<T> {
+    state: Mutex<State<T>>,
+    /// Signalled when a slot frees up or the receiver drops.
+    not_full: Condvar,
+    /// Signalled when a message arrives or the sender drops.
+    not_empty: Condvar,
+}
+
+/// Sending half; dropping it disconnects (receiver drains, then errors).
+pub struct RingSender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Receiving half; dropping it disconnects (sends fail immediately).
+pub struct RingReceiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// The receiver disconnected; the unsent payload is handed back.
+#[derive(Debug)]
+pub struct SendError<T>(pub T);
+
+/// The channel is empty and the sender disconnected.
+#[derive(Debug, PartialEq, Eq)]
+pub struct RecvError;
+
+/// Create a ring with `capacity` slots (≥ 1). The slot array is the only
+/// allocation the channel ever performs.
+pub fn ring_channel<T>(capacity: usize) -> (RingSender<T>, RingReceiver<T>) {
+    assert!(capacity >= 1, "ring capacity must be at least 1");
+    let mut buf = Vec::with_capacity(capacity);
+    buf.resize_with(capacity, || None);
+    let shared = Arc::new(Shared {
+        state: Mutex::new(State {
+            buf: buf.into_boxed_slice(),
+            head: 0,
+            len: 0,
+            sender_alive: true,
+            receiver_alive: true,
+        }),
+        not_full: Condvar::new(),
+        not_empty: Condvar::new(),
+    });
+    (RingSender { shared: Arc::clone(&shared) }, RingReceiver { shared })
+}
+
+impl<T> RingSender<T> {
+    /// Enqueue `value`, blocking while the ring is full. Fails — returning
+    /// the payload — as soon as the receiver is gone, including while
+    /// blocked on a full ring.
+    pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+        let mut s = self.shared.state.lock().unwrap();
+        loop {
+            if !s.receiver_alive {
+                return Err(SendError(value));
+            }
+            if s.len < s.buf.len() {
+                break;
+            }
+            s = self.shared.not_full.wait(s).unwrap();
+        }
+        let cap = s.buf.len();
+        let slot = (s.head + s.len) % cap;
+        debug_assert!(s.buf[slot].is_none(), "occupied slot inside the live window");
+        s.buf[slot] = Some(value);
+        s.len += 1;
+        drop(s);
+        self.shared.not_empty.notify_one();
+        Ok(())
+    }
+}
+
+impl<T> Drop for RingSender<T> {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().sender_alive = false;
+        self.shared.not_empty.notify_all();
+    }
+}
+
+impl<T> RingReceiver<T> {
+    /// Dequeue the oldest message, blocking while the ring is empty.
+    /// Messages buffered before a sender disconnect are still delivered;
+    /// only an empty, disconnected ring errors.
+    pub fn recv(&self) -> Result<T, RecvError> {
+        let mut s = self.shared.state.lock().unwrap();
+        loop {
+            if s.len > 0 {
+                break;
+            }
+            if !s.sender_alive {
+                return Err(RecvError);
+            }
+            s = self.shared.not_empty.wait(s).unwrap();
+        }
+        let head = s.head;
+        let value = s.buf[head].take().expect("occupied head slot");
+        s.head = (head + 1) % s.buf.len();
+        s.len -= 1;
+        drop(s);
+        self.shared.not_full.notify_one();
+        Ok(value)
+    }
+}
+
+impl<T> Drop for RingReceiver<T> {
+    fn drop(&mut self) {
+        let mut s = self.shared.state.lock().unwrap();
+        s.receiver_alive = false;
+        // Free buffered messages eagerly (their payloads may hold Arc
+        // handles the leader's DoubleBuffer wants back).
+        while s.len > 0 {
+            let head = s.head;
+            s.buf[head] = None;
+            s.head = (head + 1) % s.buf.len();
+            s.len -= 1;
+        }
+        drop(s);
+        self.shared.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order_within_and_across_wraps() {
+        let (tx, rx) = ring_channel::<usize>(2);
+        // Several wraps of a 2-slot ring must preserve order.
+        for round in 0..5 {
+            tx.send(2 * round).unwrap();
+            tx.send(2 * round + 1).unwrap();
+            assert_eq!(rx.recv(), Ok(2 * round));
+            assert_eq!(rx.recv(), Ok(2 * round + 1));
+        }
+    }
+
+    #[test]
+    fn send_blocks_on_full_ring_until_a_recv_frees_a_slot() {
+        let (tx, rx) = ring_channel::<usize>(1);
+        tx.send(1).unwrap();
+        let sent = Arc::new(AtomicUsize::new(0));
+        let sent2 = Arc::clone(&sent);
+        let h = std::thread::spawn(move || {
+            tx.send(2).unwrap(); // blocks: ring is full
+            sent2.store(1, Ordering::SeqCst);
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(sent.load(Ordering::SeqCst), 0, "send must block while full");
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.recv(), Ok(2)); // unblocked sender's message arrives
+        h.join().unwrap();
+        assert_eq!(sent.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn send_fails_with_payload_once_receiver_is_gone() {
+        let (tx, rx) = ring_channel::<String>(2);
+        tx.send("kept".into()).unwrap();
+        drop(rx);
+        let err = tx.send("lost?".into()).expect_err("receiver is gone");
+        assert_eq!(err.0, "lost?", "the unsent payload must come back");
+    }
+
+    #[test]
+    fn blocked_sender_wakes_and_fails_when_receiver_drops() {
+        let (tx, rx) = ring_channel::<usize>(1);
+        tx.send(1).unwrap();
+        let h = std::thread::spawn(move || tx.send(2));
+        std::thread::sleep(Duration::from_millis(30));
+        drop(rx); // sender is parked on a full ring; this must wake it
+        let r = h.join().unwrap();
+        assert!(r.is_err(), "sender blocked on a dead receiver must fail, not hang");
+    }
+
+    #[test]
+    fn recv_drains_buffered_messages_after_sender_drop_then_errors() {
+        let (tx, rx) = ring_channel::<usize>(4);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.recv(), Ok(2));
+        assert_eq!(rx.recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn recv_blocks_until_a_message_arrives() {
+        let (tx, rx) = ring_channel::<usize>(2);
+        let h = std::thread::spawn(move || rx.recv());
+        std::thread::sleep(Duration::from_millis(30));
+        tx.send(42).unwrap();
+        assert_eq!(h.join().unwrap(), Ok(42));
+    }
+
+    #[test]
+    fn receiver_drop_releases_buffered_payloads() {
+        // A buffered Arc payload must be dropped with the receiver, not
+        // leak in a slot — the leader's DoubleBuffer reuse depends on
+        // handles dying with dead workers.
+        let payload = Arc::new(7u32);
+        let (tx, rx) = ring_channel::<Arc<u32>>(2);
+        tx.send(Arc::clone(&payload)).unwrap();
+        assert_eq!(Arc::strong_count(&payload), 2);
+        drop(rx);
+        assert_eq!(Arc::strong_count(&payload), 1, "slot must release its handle");
+    }
+
+    #[test]
+    fn cross_thread_ping_pong() {
+        let (tx_a, rx_a) = ring_channel::<usize>(2);
+        let (tx_b, rx_b) = ring_channel::<usize>(2);
+        let h = std::thread::spawn(move || {
+            while let Ok(v) = rx_a.recv() {
+                if tx_b.send(v * 2).is_err() {
+                    break;
+                }
+            }
+        });
+        for i in 0..100 {
+            tx_a.send(i).unwrap();
+            assert_eq!(rx_b.recv(), Ok(i * 2));
+        }
+        drop(tx_a);
+        h.join().unwrap();
+    }
+}

@@ -27,7 +27,19 @@
 //! broken the writer falls back to a fresh allocation and counts a miss
 //! in [`TrainResult::reuse_misses`] instead of corrupting shared data;
 //! a test pins the count to zero.
+//!
+//! The channels themselves are fixed-capacity rings ([`super::ring`]),
+//! not `mpsc` (whose internal block allocator pays ~1 heap allocation per
+//! 31 sends): with recycled payloads *and* ring transport, a steady-state
+//! iteration performs no heap allocation anywhere on the wire path. The
+//! protocol bounds ring occupancy — a worker's command ring holds at most
+//! `Observe{t}` plus the following `Step{t+1}` (or the final `Stop`), and
+//! at most one uplink is in flight per worker — so the tiny capacities
+//! below never block in steady state, and a blocked send can only mean
+//! the peer is mid-iteration (transient) or dead (detected: ring sends
+//! fail once the receiver dropped, exactly like `mpsc` disconnects).
 
+use super::ring::{ring_channel, RingReceiver, RingSender};
 use super::{IterStats, TrainResult};
 use crate::collective::Aggregator;
 use crate::config::TrainConfig;
@@ -35,9 +47,19 @@ use crate::grad::WorkerGrad;
 use crate::optim;
 use crate::sparsify::{SparseGrad, SparseView, Sparsifier, SparsifierKind};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
+
+/// Command-ring slots per worker: the protocol keeps at most two commands
+/// in flight (`Observe{t}` still queued when `Step{t+1}` — or the final
+/// `Stop` — arrives); a third slot would never be written.
+const CMD_RING_CAP: usize = 2;
+/// Uplink-ring slots per worker: at most one gradient message is in
+/// flight (the leader consumes iteration `t`'s uplink from every worker
+/// before broadcasting anything for `t + 1`); the second slot is
+/// headroom for the moment the worker enqueues while the leader drains
+/// its siblings.
+const UPLINK_RING_CAP: usize = 2;
 
 /// Two-slot `Arc` recycler for per-iteration payloads (see module docs).
 pub struct DoubleBuffer<T: Clone> {
@@ -89,8 +111,8 @@ struct FromWorker {
 }
 
 struct WorkerHandle {
-    tx: mpsc::Sender<ToWorker>,
-    rx: mpsc::Receiver<FromWorker>,
+    tx: RingSender<ToWorker>,
+    rx: RingReceiver<FromWorker>,
     join: thread::JoinHandle<()>,
 }
 
@@ -101,8 +123,8 @@ fn spawn_worker(
     gemm_budget: usize,
     miss_counter: Arc<AtomicU64>,
 ) -> WorkerHandle {
-    let (tx_cmd, rx_cmd) = mpsc::channel::<ToWorker>();
-    let (tx_res, rx_res) = mpsc::channel::<FromWorker>();
+    let (tx_cmd, rx_cmd) = ring_channel::<ToWorker>(CMD_RING_CAP);
+    let (tx_res, rx_res) = ring_channel::<FromWorker>(UPLINK_RING_CAP);
     let join = thread::spawn(move || {
         // This worker's share of the run's compute-thread budget: its
         // gradient GEMMs fan out to at most this many lanes, so N workers

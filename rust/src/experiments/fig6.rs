@@ -23,12 +23,19 @@ use crate::rng::Pcg64;
 use crate::runtime::hlo_grad::{open_engine, HloGrad, SharedEngine};
 use crate::runtime::Manifest;
 use crate::sparsify::SparsifierKind;
+use std::cell::RefCell;
 use std::sync::Arc;
 
 /// Which native model backs the fallback workload.
 enum NativeNet {
     Mlp(MlpConfig),
     Conv(ConvConfig),
+}
+
+/// The one validation oracle a workload keeps across its whole sweep.
+enum NativeEval {
+    Mlp(MlpGrad),
+    Conv(ConvGrad),
 }
 
 /// The classification workload: data + worker builders + evaluator.
@@ -41,6 +48,12 @@ pub struct Workload {
     native: Option<NativeNet>,
     batch: usize,
     theta0: Vec<f32>,
+    /// Cached validation evaluator, built on first [`Workload::evaluate`]:
+    /// every run/policy of a sweep reuses one oracle (and its packed,
+    /// NHWC-converted validation set) instead of re-constructing — and
+    /// re-packing — per call. Evaluation is stateless in theta, so cached
+    /// results are bit-identical to a fresh oracle's (regression-tested).
+    eval: RefCell<Option<NativeEval>>,
 }
 
 impl Workload {
@@ -89,6 +102,7 @@ impl Workload {
             native: None,
             batch,
             theta0,
+            eval: RefCell::new(None),
         })
     }
 
@@ -141,6 +155,7 @@ impl Workload {
             native: Some(native),
             batch: 16,
             theta0,
+            eval: RefCell::new(None),
         }
     }
 
@@ -245,13 +260,31 @@ impl Workload {
                     correct_w / total as f64
                 }
             }
-            (None, Some(NativeNet::Conv(cfg))) => {
-                let mut eval = ConvGrad::new(Arc::clone(&self.data), *cfg, 0, self.batch, 0);
-                eval.evaluate(theta).1
-            }
-            (None, Some(NativeNet::Mlp(cfg))) => {
-                let mut eval = MlpGrad::new(Arc::clone(&self.data), *cfg, 0, self.batch, 0);
-                eval.evaluate(theta).1
+            (None, Some(net)) => {
+                // One cached oracle per workload (ROADMAP item): the
+                // validation set is packed (and NHWC-converted for conv)
+                // exactly once per sweep, not once per evaluate call.
+                let mut slot = self.eval.borrow_mut();
+                let eval = slot.get_or_insert_with(|| match net {
+                    NativeNet::Conv(cfg) => NativeEval::Conv(ConvGrad::new(
+                        Arc::clone(&self.data),
+                        *cfg,
+                        0,
+                        self.batch,
+                        0,
+                    )),
+                    NativeNet::Mlp(cfg) => NativeEval::Mlp(MlpGrad::new(
+                        Arc::clone(&self.data),
+                        *cfg,
+                        0,
+                        self.batch,
+                        0,
+                    )),
+                });
+                match eval {
+                    NativeEval::Conv(e) => e.evaluate(theta).1,
+                    NativeEval::Mlp(e) => e.evaluate(theta).1,
+                }
             }
             _ => unreachable!(),
         }
@@ -381,6 +414,49 @@ mod tests {
             let curve = run_policy(&w, kind, 0.01, 4, 2).unwrap();
             assert!(!curve.is_empty());
             assert!(curve.iter().all(|&(_, a)| (0.0..=1.0).contains(&a)));
+        }
+    }
+
+    #[test]
+    fn cached_evaluator_is_bit_identical_to_a_fresh_one() {
+        // The satellite regression pin: Workload::evaluate now reuses one
+        // cached oracle per workload; its accuracy must equal a freshly
+        // constructed oracle's, bit for bit, at several thetas — and
+        // repeated cached evaluations must agree with themselves.
+        for model in [ModelKind::Conv, ModelKind::Mlp] {
+            let w = Workload::native(5, model);
+            let mut rng = Pcg64::seed_from_u64(77);
+            for _ in 0..3 {
+                let mut theta = w.theta0();
+                for v in theta.iter_mut() {
+                    *v += rng.normal_with(0.0, 0.01) as f32;
+                }
+                let cached = w.evaluate(&theta);
+                let again = w.evaluate(&theta);
+                let fresh = match model {
+                    ModelKind::Conv => {
+                        let cfg = ConvConfig {
+                            channels: 3,
+                            height: 8,
+                            width: 8,
+                            classes: 10,
+                            base_width: 8,
+                            blocks: [2, 2, 2, 2],
+                        };
+                        ConvGrad::new(Arc::clone(&w.data), cfg, 0, w.batch, 0)
+                            .evaluate(&theta)
+                            .1
+                    }
+                    ModelKind::Mlp => {
+                        let cfg = MlpConfig { input: 3 * 8 * 8, hidden: 32, classes: 10 };
+                        MlpGrad::new(Arc::clone(&w.data), cfg, 0, w.batch, 0)
+                            .evaluate(&theta)
+                            .1
+                    }
+                };
+                assert_eq!(cached, fresh, "{model:?}: cached evaluator must match fresh");
+                assert_eq!(cached, again, "{model:?}: repeated evaluation must be stable");
+            }
         }
     }
 

@@ -4,15 +4,19 @@
 //! Paper observation: REGTOP-k is stable over a broad range of μ and
 //! beats the μ = 0 (TOP-k) point throughout.
 
-use super::finetune::{run_cell, SuiteSize, VARIANTS};
+use super::finetune::{FinetuneSuite, SuiteSize, VARIANTS};
 use super::ExpOpts;
 use crate::metrics::{AsciiPlot, Curves};
 use crate::sparsify::SparsifierKind;
 use crate::stats;
 
-/// Accuracy (mean, std) at one μ.
-pub fn accuracy_at_mu(
-    size: &SuiteSize,
+/// Accuracy (mean, std) at one μ, against a shared suite cache: every μ
+/// point fine-tunes the *same* cached checkpoints on the same data (the
+/// paired-comparison structure the paper's sweep relies on), so the
+/// pretraining and validation packing happen once per seed, not once per
+/// grid point.
+pub fn accuracy_at_mu_with(
+    suite: &mut FinetuneSuite,
     mu: f64,
     sparsity: f64,
     seeds: &[u64],
@@ -23,9 +27,19 @@ pub fn accuracy_at_mu(
     } else {
         SparsifierKind::RegTopK { mu, y: 1.0 }
     };
-    let results = run_cell(size, variant, kind, sparsity, seeds)?;
+    let results = suite.run_cell(variant, kind, sparsity, seeds)?;
     let accs: Vec<f64> = results.iter().map(|r| r.val_accuracy).collect();
     Ok((stats::mean(&accs), stats::std_dev(&accs)))
+}
+
+/// Accuracy (mean, std) at one μ with a throwaway cache.
+pub fn accuracy_at_mu(
+    size: &SuiteSize,
+    mu: f64,
+    sparsity: f64,
+    seeds: &[u64],
+) -> anyhow::Result<(f64, f64)> {
+    accuracy_at_mu_with(&mut FinetuneSuite::new(*size), mu, sparsity, seeds)
 }
 
 pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
@@ -39,9 +53,10 @@ pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
         vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0, 10.0]
     };
     let mut curves = Curves::new();
+    let mut suite = FinetuneSuite::new(size);
     println!("mu     accuracy(mean±std)   [mu=0 is TOP-k]");
     for &mu in &grid {
-        let (m, sd) = accuracy_at_mu(&size, mu, sparsity, &seeds)?;
+        let (m, sd) = accuracy_at_mu_with(&mut suite, mu, sparsity, &seeds)?;
         curves.series_mut("accuracy").push((mu * 10.0) as usize, m);
         println!("{mu:<5.1}  {:.2}% ± {:.2}%", m * 100.0, sd * 100.0);
     }

@@ -7,7 +7,7 @@
 //! structure — same seeds, same data, same schedules for both policies —
 //! matches the paper exactly.
 
-use super::finetune::{run_cell, SuiteSize, Variant, VARIANTS};
+use super::finetune::{FinetuneSuite, SuiteSize, Variant, VARIANTS};
 use super::ExpOpts;
 use crate::metrics::render_table;
 use crate::sparsify::SparsifierKind;
@@ -36,18 +36,26 @@ impl Cell {
     }
 }
 
-/// Run the full grid.
+/// Run the full grid. One [`FinetuneSuite`] spans every cell, so each
+/// `(variant, seed)` workload — pretrained checkpoint, shifted dataset,
+/// packed evaluator — is built once and shared by both policies at both
+/// sparsity levels (bit-identical to per-cell rebuilding; pinned in
+/// `finetune::tests`).
 pub fn run_suite(
     size: &SuiteSize,
     variants: &[Variant],
     sparsities: &[f64],
     seeds: &[u64],
 ) -> anyhow::Result<Vec<Cell>> {
+    let mut suite = FinetuneSuite::new(*size);
     let mut cells = Vec::new();
     for v in variants {
+        // Previous variants' workloads are dead weight from here on:
+        // bound peak residency to one variant's seed set.
+        suite.retain_variant(v);
         for &s in sparsities {
-            let top = run_cell(size, v, SparsifierKind::TopK, s, seeds)?;
-            let reg = run_cell(size, v, SparsifierKind::RegTopK { mu: MU, y: 1.0 }, s, seeds)?;
+            let top = suite.run_cell(v, SparsifierKind::TopK, s, seeds)?;
+            let reg = suite.run_cell(v, SparsifierKind::RegTopK { mu: MU, y: 1.0 }, s, seeds)?;
             cells.push(Cell {
                 variant: v.name,
                 sparsity: s,

@@ -29,12 +29,16 @@
 //! the coordinator see — with the per-layer segment map available from
 //! [`ConvConfig::offsets`] (the conv analogue of `MlpConfig::offsets`).
 //!
-//! Each conv costs one im2col pack (O(B·Ho·Wo·K²·Cin) copied floats) and
-//! one GEMM per direction (O(B·Ho·Wo·K²·Cin·Cout) MACs); the backward
-//! pass recomputes the pack from the stored input activation instead of
-//! caching per-layer patch matrices, so the only J-scale buffers are the
-//! activations themselves. All scratch lives in [`ConvNet`] and is grown
-//! once: steady-state `batch_grad_packed` calls allocate nothing.
+//! Forward and weight-gradient GEMMs run **fused** (implicit GEMM): the
+//! im2col panels are generated straight into the GEMM microkernel from
+//! the stored activations ([`crate::tensor::im2col::ImplicitCols`]), so
+//! the O(B·Ho·Wo·K²·Cin) `cols` buffer never materializes in either
+//! direction — its packing traffic happens in L1-resident panels instead
+//! of a DRAM round trip. Only the data gradient keeps a materialized
+//! `dcols` buffer (col2im consumes the GEMM output in full). Fused is
+//! bitwise-identical to the materialized composition per kernel path
+//! (parity matrix in tests). All scratch lives in [`ConvNet`] and is
+//! grown once: steady-state `batch_grad_packed` calls allocate nothing.
 //!
 //! The per-sample direct convolution ([`ConvNet::forward_ref`] /
 //! [`ConvNet::backward_ref`]) is kept as the slow, obviously-correct
@@ -42,8 +46,8 @@
 //! finite differences pin both to the loss.
 
 use crate::rng::Pcg64;
-use crate::tensor::gemm::{gemm_nn, gemm_nt, gemm_tn};
-use crate::tensor::im2col::{col2im_add, im2col, ConvShape};
+use crate::tensor::gemm::{gemm_nn, gemm_nn_from, gemm_nt, gemm_tn, gemm_tn_from};
+use crate::tensor::im2col::{col2im_add, im2col, ConvShape, ImplicitCols};
 use crate::tensor::softmax_inplace;
 
 use super::mlp::argmax;
@@ -301,37 +305,74 @@ fn add_into(dst: &mut [f32], src: &[f32]) {
     }
 }
 
-/// `out = im2col(input) · W + b` — forward of one conv layer.
-pub fn conv_forward(d: &ConvDesc, n: usize, theta: &[f32], input: &[f32], cols: &mut [f32], out: &mut [f32]) {
-    let s = &d.shape;
-    let cols = &mut cols[..s.cols_len(n)];
-    im2col(s, n, input, cols);
-    gemm_nn(s.rows(n), s.col_width(), s.cout, cols, &theta[d.w_off..d.w_off + s.weight_len()], out);
-    let bias = &theta[d.b_off..d.b_off + s.cout];
-    for row in out.chunks_exact_mut(s.cout) {
+/// Broadcast-add a layer's bias over the NHWC output rows.
+#[inline]
+fn add_bias(out: &mut [f32], bias: &[f32]) {
+    for row in out.chunks_exact_mut(bias.len()) {
         for (v, &bv) in row.iter_mut().zip(bias) {
             *v += bv;
         }
     }
 }
 
+/// `db = column sums of dz`, overwriting the bias segment.
+#[inline]
+fn bias_grad(gb: &mut [f32], dz: &[f32]) {
+    for v in gb.iter_mut() {
+        *v = 0.0;
+    }
+    for row in dz.chunks_exact(gb.len()) {
+        for (v, &dv) in gb.iter_mut().zip(row) {
+            *v += dv;
+        }
+    }
+}
+
+/// `out = im2col(input) · W + b` — forward of one conv layer through the
+/// *materialized* patch matrix (`cols` scratch). Kept as the reference
+/// half of the fused-vs-materialized parity matrix and for benches; the
+/// training path runs [`conv_forward_fused`].
+pub fn conv_forward(d: &ConvDesc, n: usize, theta: &[f32], input: &[f32], cols: &mut [f32], out: &mut [f32]) {
+    let s = &d.shape;
+    let cols = &mut cols[..s.cols_len(n)];
+    im2col(s, n, input, cols);
+    gemm_nn(s.rows(n), s.col_width(), s.cout, cols, &theta[d.w_off..d.w_off + s.weight_len()], out);
+    add_bias(out, &theta[d.b_off..d.b_off + s.cout]);
+}
+
+/// Implicit-GEMM forward of one conv layer: im2col panels are generated
+/// straight into the GEMM microkernel ([`ImplicitCols`]), so no `cols`
+/// buffer exists. Bitwise-identical to [`conv_forward`] for a fixed
+/// kernel path at every thread count.
+pub fn conv_forward_fused(d: &ConvDesc, n: usize, theta: &[f32], input: &[f32], out: &mut [f32]) {
+    let s = &d.shape;
+    let src = ImplicitCols::new(s, n, input);
+    gemm_nn_from(s.rows(n), s.col_width(), s.cout, &src, &theta[d.w_off..d.w_off + s.weight_len()], out);
+    add_bias(out, &theta[d.b_off..d.b_off + s.cout]);
+}
+
 /// `dW = colsᵀ·dz`, `db = column sums of dz` — parameter gradients of one
-/// conv layer (the im2col pack is recomputed from the stored input).
-/// Overwrites the layer's segments of `grad`.
+/// conv layer through the *materialized* patch matrix (recomputed from the
+/// stored input). Kept for the parity matrix and benches; the training
+/// path runs [`conv_param_grad_fused`]. Overwrites the layer's segments
+/// of `grad`.
 pub fn conv_param_grad(d: &ConvDesc, n: usize, input: &[f32], dz: &[f32], cols: &mut [f32], grad: &mut [f32]) {
     let s = &d.shape;
     let cols = &mut cols[..s.cols_len(n)];
     im2col(s, n, input, cols);
     gemm_tn(s.col_width(), s.rows(n), s.cout, cols, dz, &mut grad[d.w_off..d.w_off + s.weight_len()]);
-    let gb = &mut grad[d.b_off..d.b_off + s.cout];
-    for v in gb.iter_mut() {
-        *v = 0.0;
-    }
-    for row in dz.chunks_exact(s.cout) {
-        for (v, &dv) in gb.iter_mut().zip(row) {
-            *v += dv;
-        }
-    }
+    bias_grad(&mut grad[d.b_off..d.b_off + s.cout], dz);
+}
+
+/// Implicit-GEMM parameter gradients: the patch matrix is consumed
+/// column-wise on the fly, so the backward's recomputed pack never
+/// materializes either. Bitwise-identical to [`conv_param_grad`] for a
+/// fixed kernel path at every thread count.
+pub fn conv_param_grad_fused(d: &ConvDesc, n: usize, input: &[f32], dz: &[f32], grad: &mut [f32]) {
+    let s = &d.shape;
+    let src = ImplicitCols::new(s, n, input);
+    gemm_tn_from(s.col_width(), s.rows(n), s.cout, &src, dz, &mut grad[d.w_off..d.w_off + s.weight_len()]);
+    bias_grad(&mut grad[d.b_off..d.b_off + s.cout], dz);
 }
 
 /// `dinput (+)= col2im(dz · Wᵀ)` — data gradient of one conv layer.
@@ -448,9 +489,9 @@ pub struct ConvNet {
     pub plan: ConvPlan,
     cap: usize,
     grad_cap: usize,
-    // Shared patch-matrix scratch (forward + weight-grad packs).
-    cols: Vec<f32>,
-    // Patch-matrix gradient scratch (data-grad GEMM output).
+    // Patch-matrix gradient scratch (data-grad GEMM output, consumed by
+    // col2im). The forward/weight-grad packs no longer exist: those GEMMs
+    // run fused ([`conv_forward_fused`] / [`conv_param_grad_fused`]).
     dcols: Vec<f32>,
     /// Activation nodes: `xs[0]` = stem output, `xs[i+1]` = block `i` output.
     xs: Vec<Vec<f32>>,
@@ -486,7 +527,6 @@ impl ConvNet {
             plan,
             cap: 0,
             grad_cap: 0,
-            cols: Vec::new(),
             dcols: Vec::new(),
             xs: vec![Vec::new(); nb + 1],
             mids: vec![Vec::new(); nb],
@@ -516,7 +556,6 @@ impl ConvNet {
             return;
         }
         let p = &self.plan;
-        self.cols.resize(p.max_cols_len(n), 0.0);
         for (j, x) in self.xs.iter_mut().enumerate() {
             x.resize(p.node_len(j, n), 0.0);
         }
@@ -581,10 +620,10 @@ impl ConvNet {
         let nb = p.blocks.len();
         let (gh, gw, feat, classes) = (p.gap_h, p.gap_w, p.feat, p.cfg.classes);
 
-        // ---- forward ----
+        // ---- forward (implicit GEMM: no cols buffer exists) ----
         {
             let out = &mut self.xs[0][..p.stem.shape.out_len(n)];
-            conv_forward(&p.stem, n, theta, x, &mut self.cols, out);
+            conv_forward_fused(&p.stem, n, theta, x, out);
             relu_inplace(out);
         }
         for (i, blk) in p.blocks.iter().enumerate() {
@@ -592,14 +631,14 @@ impl ConvNet {
             let xin = &head[i][..blk.conv1.shape.in_len(n)];
             let xout = &mut tail[0][..blk.conv2.shape.out_len(n)];
             let mid = &mut self.mids[i][..blk.conv1.shape.out_len(n)];
-            conv_forward(&blk.conv1, n, theta, xin, &mut self.cols, mid);
+            conv_forward_fused(&blk.conv1, n, theta, xin, mid);
             relu_inplace(mid);
-            conv_forward(&blk.conv2, n, theta, mid, &mut self.cols, xout);
+            conv_forward_fused(&blk.conv2, n, theta, mid, xout);
             match &blk.proj {
                 None => add_into(xout, xin),
                 Some(pr) => {
                     let pt = &mut self.ptmp[..pr.shape.out_len(n)];
-                    conv_forward(pr, n, theta, xin, &mut self.cols, pt);
+                    conv_forward_fused(pr, n, theta, xin, pt);
                     add_into(xout, pt);
                 }
             }
@@ -698,15 +737,15 @@ impl ConvNet {
             let mid = &self.mids[i][..blk.conv1.shape.out_len(n)];
             let gmid = &mut self.gmids[i][..blk.conv1.shape.out_len(n)];
             relu_mask(gout, y);
-            conv_param_grad(&blk.conv2, n, mid, gout, &mut self.cols, grad);
+            conv_param_grad_fused(&blk.conv2, n, mid, gout, grad);
             conv_data_grad(&blk.conv2, n, theta, gout, &mut self.dcols, gmid, false);
             relu_mask(gmid, mid);
-            conv_param_grad(&blk.conv1, n, xin, gmid, &mut self.cols, grad);
+            conv_param_grad_fused(&blk.conv1, n, xin, gmid, grad);
             conv_data_grad(&blk.conv1, n, theta, gmid, &mut self.dcols, gin, false);
             match &blk.proj {
                 None => add_into(gin, gout),
                 Some(pr) => {
-                    conv_param_grad(pr, n, xin, gout, &mut self.cols, grad);
+                    conv_param_grad_fused(pr, n, xin, gout, grad);
                     conv_data_grad(pr, n, theta, gout, &mut self.dcols, gin, true);
                 }
             }
@@ -715,7 +754,7 @@ impl ConvNet {
         // ---- backward: stem ----
         let g0 = &mut self.gxs[0][..p.stem.shape.out_len(n)];
         relu_mask(g0, &self.xs[0][..p.stem.shape.out_len(n)]);
-        conv_param_grad(&p.stem, n, x, g0, &mut self.cols, grad);
+        conv_param_grad_fused(&p.stem, n, x, g0, grad);
     }
 
     /// Mean loss + gradient over a pre-packed NHWC batch; `grad` is fully
@@ -1129,6 +1168,62 @@ mod tests {
                 );
             }
         });
+    }
+
+    #[test]
+    fn fused_conv_is_bitwise_identical_to_materialized() {
+        // The tentpole acceptance pin: the implicit-GEMM layer functions
+        // against their materialized-cols counterparts, bit for bit, over
+        // kernel dispatch × thread budgets × boundary geometry — pad > 0,
+        // stride > 1, 1×1 projections, pad 0, non-tile-multiple B·Ho·Wo
+        // row counts, and a KC-crossing patch width (3²·30 = 270 > 256).
+        use crate::tensor::gemm::{detected_kernel, with_kernel, Kernel};
+        use crate::tensor::pool;
+        let mut kernels = vec![Kernel::Scalar];
+        #[cfg(target_arch = "x86_64")]
+        {
+            if detected_kernel() == Kernel::Avx2 {
+                kernels.push(Kernel::Avx2);
+            }
+        }
+        let shapes = [
+            ConvShape::new(3, 8, 3, 1, 1, 5, 7),
+            ConvShape::new(4, 6, 3, 2, 1, 7, 5),
+            ConvShape::new(5, 7, 1, 2, 0, 6, 6),
+            ConvShape::new(2, 3, 3, 1, 0, 4, 5),
+            ConvShape::new(30, 2, 3, 1, 1, 3, 3),
+        ];
+        let mut rng = Pcg64::seed_from_u64(17);
+        for shape in shapes {
+            for n in [1usize, 3] {
+                let d = ConvDesc { shape, w_off: 0, b_off: shape.weight_len() };
+                let theta = rng.normal_vec(shape.weight_len() + shape.cout, 0.0, 0.5);
+                let input = rng.normal_vec(shape.in_len(n), 0.0, 1.0);
+                let dz = rng.normal_vec(shape.out_len(n), 0.0, 1.0);
+                let mut cols = vec![0.0f32; shape.cols_len(n)];
+                let mut out_m = vec![0.0f32; shape.out_len(n)];
+                let mut out_f = vec![1.0f32; shape.out_len(n)];
+                let mut grad_m = vec![0.0f32; theta.len()];
+                let mut grad_f = vec![1.0f32; theta.len()];
+                for &kern in &kernels {
+                    for budget in [1usize, 2, 5] {
+                        with_kernel(kern, || {
+                            pool::with_thread_budget(budget, || {
+                                conv_forward(&d, n, &theta, &input, &mut cols, &mut out_m);
+                                conv_forward_fused(&d, n, &theta, &input, &mut out_f);
+                                conv_param_grad(&d, n, &input, &dz, &mut cols, &mut grad_m);
+                                conv_param_grad_fused(&d, n, &input, &dz, &mut grad_f);
+                            })
+                        });
+                        assert_eq!(out_m, out_f, "forward {shape:?} n={n} {kern:?} t={budget}");
+                        assert_eq!(
+                            grad_m, grad_f,
+                            "param grad {shape:?} n={n} {kern:?} t={budget}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -17,6 +17,33 @@
 //! of rank-1 updates — row-major friendly for both operands — and `nt` is
 //! a row of 8-lane dot products.
 //!
+//! # Panel sources (implicit GEMM)
+//!
+//! The `nn` and `tn` drivers do not read the A operand directly: they pull
+//! it through a *panel source* ([`NnPanelSource`] / [`TnColSource`]) — an
+//! abstraction over "where A-panels come from". [`gemm_nn`] / [`gemm_tn`]
+//! wrap a materialized row-major slice; [`gemm_nn_from`] /
+//! [`gemm_tn_from`] accept a generator that computes panel entries on the
+//! fly. The fused pack+GEMM convolution path ([`super::im2col`]) uses the
+//! latter to feed im2col patch panels straight into the microkernel's
+//! interleaved layout, never materializing the O(B·Ho·Wo·K²·Cin) `cols`
+//! buffer. A source must produce exactly the values of the equivalent
+//! materialized matrix; the drivers then guarantee fused == materialized
+//! **bitwise** per kernel path, because the kernels consume identical
+//! panel contents in the identical KC-blocked order.
+//!
+//! # NC-blocked B-panels
+//!
+//! `nn` calls with `n > NC` additionally block the *output columns*: each
+//! `KC × NC` B-panel is packed contiguous into thread-local scratch
+//! (grown once per thread, zero steady-state allocations) so the
+//! microkernel streams it at stride `NC` instead of striding over the
+//! full row length. Column blocking changes only which j-tile an output
+//! element is computed in — never its reduction order (k-blocks ascend,
+//! `p` ascends within a block, one multiply-add per `(p, j)` in every
+//! width bucket) — so blocked results are bit-identical to unblocked
+//! (pinned by tests).
+//!
 //! # Runtime dispatch
 //!
 //! Each driver resolves a [`Kernel`] once per call: explicit AVX2/FMA
@@ -43,20 +70,24 @@
 //! no overread).
 
 use super::pool;
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::sync::OnceLock;
 
-/// Rows per microkernel call: four C rows share every B-row load.
-const MR: usize = 4;
+/// Rows per microkernel call: four C rows share every B-row load. Also the
+/// interleave factor of the packed A-panel layout ([`NnPanelSource`]).
+pub const MR: usize = 4;
 /// Inner unroll width (8 f32 lanes — one AVX register, two SSE).
 const NR: usize = 8;
 /// Reduction-dimension block: an `MR × KC` packed A-panel plus the C rows
-/// stay L1-resident while a `KC × n` B-panel streams through once per row
-/// block.
-const KC: usize = 256;
-/// Minimum multiply-accumulates per thread before fanning out — below
-/// this, pool dispatch overhead beats the parallel win.
-const PAR_GRAIN_MACS: usize = 128 * 1024;
+/// stay L1-resident while a B-panel streams through once per row block.
+/// Panel sources are never asked for more than `KC` reduction entries at a
+/// time.
+pub const KC: usize = 256;
+/// Output-column block for the B-panel packing stage: `nn` calls with
+/// `n > NC` pack each `KC × NC` B-panel contiguous (thread-local scratch)
+/// before the row loop. `KC × NC` f32 = 512 KiB — sized to stay resident
+/// in a per-core L2 while C tiles and A panels live in L1.
+const NC: usize = 512;
 
 /// Which microkernel implementation a GEMM call runs on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -119,15 +150,104 @@ fn active_kernel() -> Kernel {
     FORCED.with(Cell::get).unwrap_or_else(detected_kernel)
 }
 
-/// How many row blocks a call of `rows × (macs total)` should split into:
-/// bounded by the caller's thread budget, the per-thread work grain, and
-/// the row count (a block needs at least one row).
-fn effective_threads(rows: usize, macs: usize) -> usize {
-    let budget = pool::thread_budget();
-    if budget <= 1 || rows <= 1 {
-        return 1;
+/// How many row blocks a call of `rows × (work total)` should split into —
+/// the grain accounting lives in [`pool::plan_fanout`] so panel-sourced
+/// calls can fold their generation cost into `work` uniformly.
+fn effective_threads(rows: usize, work: usize) -> usize {
+    pool::plan_fanout(rows, work)
+}
+
+/// Source of A-operand panels for the `nn` drivers — either a materialized
+/// row-major slice (what [`gemm_nn`] wraps) or an implicit generator that
+/// computes entries on the fly (the fused im2col source in
+/// [`super::im2col`], entered through [`gemm_nn_from`]).
+///
+/// Contract: a source is a pure function of its indices (the parallel
+/// driver may pull the same region from different threads), and must
+/// produce exactly the values of the equivalent materialized matrix — the
+/// fused == materialized *bitwise* guarantee rests on the kernel seeing
+/// identical panel contents in the identical KC-blocked order.
+pub trait NnPanelSource: Sync {
+    /// Interleave `panel[MR·p + l] = A[r + l][k0 + p]` for `l < MR`,
+    /// `p < kc` — the microkernel's packed layout. Only called with
+    /// `kc ≤ KC` and all `MR` rows in range.
+    fn fill_panel(&self, r: usize, k0: usize, kc: usize, panel: &mut [f32]);
+
+    /// `row[p] = A[r][k0 + p]` for `p < kc` (remainder rows that fall out
+    /// of `MR`-row groups).
+    fn fill_row(&self, r: usize, k0: usize, kc: usize, row: &mut [f32]);
+
+    /// Extra work units (≈ generated elements, weighted by generation
+    /// cost) the parallel grain accounts for on top of the kernel MACs.
+    /// Zero for materialized slices — reading is already priced into the
+    /// MACs.
+    fn pack_work(&self) -> usize {
+        0
     }
-    budget.min(macs / PAR_GRAIN_MACS).clamp(1, rows)
+}
+
+/// The materialized panel source: a row-major `m × k` slice.
+struct SliceNn<'a> {
+    a: &'a [f32],
+    k: usize,
+}
+
+impl NnPanelSource for SliceNn<'_> {
+    fn fill_panel(&self, r: usize, k0: usize, kc: usize, panel: &mut [f32]) {
+        let a0 = &self.a[r * self.k + k0..r * self.k + k0 + kc];
+        let a1 = &self.a[(r + 1) * self.k + k0..(r + 1) * self.k + k0 + kc];
+        let a2 = &self.a[(r + 2) * self.k + k0..(r + 2) * self.k + k0 + kc];
+        let a3 = &self.a[(r + 3) * self.k + k0..(r + 3) * self.k + k0 + kc];
+        for p in 0..kc {
+            panel[MR * p] = a0[p];
+            panel[MR * p + 1] = a1[p];
+            panel[MR * p + 2] = a2[p];
+            panel[MR * p + 3] = a3[p];
+        }
+    }
+
+    fn fill_row(&self, r: usize, k0: usize, kc: usize, row: &mut [f32]) {
+        row[..kc].copy_from_slice(&self.a[r * self.k + k0..r * self.k + k0 + kc]);
+    }
+}
+
+/// Source of A-operand *columns* for the `tn` drivers (`C = Aᵀ·B`): output
+/// row `i` of C reduces over column `i` of the `k × m` A operand. Same
+/// purity/exact-values contract as [`NnPanelSource`].
+pub trait TnColSource: Sync {
+    /// `col[p] = A[p][i]` for `p < k` — the full reduction stream of
+    /// output row `i`, gathered contiguous so the rank-1 chain reads it
+    /// sequentially.
+    fn fill_col(&self, i: usize, col: &mut [f32]);
+
+    /// See [`NnPanelSource::pack_work`].
+    fn pack_work(&self) -> usize {
+        0
+    }
+}
+
+/// The materialized column source: a row-major `k × m` slice.
+struct SliceTn<'a> {
+    a: &'a [f32],
+    m: usize,
+}
+
+impl TnColSource for SliceTn<'_> {
+    fn fill_col(&self, i: usize, col: &mut [f32]) {
+        for (p, v) in col.iter_mut().enumerate() {
+            *v = self.a[p * self.m + i];
+        }
+    }
+}
+
+thread_local! {
+    /// Packed `KC × NC` B-panel scratch for column-blocked `nn` calls.
+    /// Thread-local (pool workers persist), grown once: steady-state
+    /// large-`n` GEMMs allocate nothing.
+    static BPACK: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+    /// Gathered A-column scratch for the `tn` drivers, grown once to the
+    /// largest reduction length seen on this thread.
+    static TNCOL: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
 }
 
 /// Split `c` into `threads` contiguous row blocks and run `f(row0, block)`
@@ -258,79 +378,154 @@ pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]
     nn_driver(active_kernel(), effective_threads(m, m * k * n), m, k, n, a, b, c);
 }
 
+/// `C(m×n) = A·B` where `A`'s panels are *generated* by `src` instead of
+/// read from a materialized slice — the implicit-GEMM entry point (fused
+/// pack+GEMM convolutions). Bitwise-identical to materializing `A` and
+/// calling [`gemm_nn`], for a fixed kernel path at every thread count.
+pub fn gemm_nn_from<S: NnPanelSource>(m: usize, k: usize, n: usize, src: &S, b: &[f32], c: &mut [f32]) {
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    let threads = effective_threads(m, m * k * n + src.pack_work());
+    nn_driver_src(active_kernel(), threads, m, k, n, src, b, c);
+}
+
 fn nn_driver(kernel: Kernel, threads: usize, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    nn_driver_src(kernel, threads, m, k, n, &SliceNn { a, k }, b, c);
+}
+
+fn nn_driver_src<S: NnPanelSource + ?Sized>(
+    kernel: Kernel,
+    threads: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    src: &S,
+    b: &[f32],
+    c: &mut [f32],
+) {
     if m == 0 || n == 0 {
         return; // C is empty
     }
     run_row_blocks(threads, m, n, c, |r0, block| {
-        nn_rows(kernel, k, n, &a[r0 * k..], b, block);
+        nn_rows(kernel, k, n, NC, src, r0, b, block);
     });
 }
 
-/// One contiguous row block of `gemm_nn`: `block = A[rows]·B`, where `a`
-/// starts at the block's first row (only its first `rows·k` entries are
-/// read). Packs each `MR × kc` A-panel into an interleaved buffer so the
-/// microkernel reads one sequential stream.
-fn nn_rows(kernel: Kernel, k: usize, n: usize, a: &[f32], b: &[f32], block: &mut [f32]) {
-    let rows = block.len() / n;
+/// One contiguous row block of the `nn` drivers: rows `r0 ..` of `C = A·B`
+/// with A-panels pulled from `src`. Column-blocked at `nc` (the drivers
+/// pass [`NC`]; tests shrink it to force the packed path on small shapes):
+/// `n ≤ nc` streams B borrowed at stride `n` exactly as before, `n > nc`
+/// packs each `kc × ncw` B-panel contiguous first. Either way every
+/// output element accumulates its reduction in the same KC-blocked,
+/// p-ascending order — column blocking is bitwise-invisible.
+fn nn_rows<S: NnPanelSource + ?Sized>(
+    kernel: Kernel,
+    k: usize,
+    n: usize,
+    nc: usize,
+    src: &S,
+    r0: usize,
+    b: &[f32],
+    block: &mut [f32],
+) {
     for v in block.iter_mut() {
         *v = 0.0;
     }
     let mut panel = [0.0f32; MR * KC];
-    let mut k0 = 0;
-    while k0 < k {
-        let kc = KC.min(k - k0);
-        let bp = &b[k0 * n..(k0 + kc) * n];
-        let mut i = 0;
-        while i + MR <= rows {
-            let a0 = &a[i * k + k0..i * k + k0 + kc];
-            let a1 = &a[(i + 1) * k + k0..(i + 1) * k + k0 + kc];
-            let a2 = &a[(i + 2) * k + k0..(i + 2) * k + k0 + kc];
-            let a3 = &a[(i + 3) * k + k0..(i + 3) * k + k0 + kc];
-            for p in 0..kc {
-                panel[MR * p] = a0[p];
-                panel[MR * p + 1] = a1[p];
-                panel[MR * p + 2] = a2[p];
-                panel[MR * p + 3] = a3[p];
-            }
-            let mut crows = block[i * n..(i + MR) * n].chunks_exact_mut(n);
-            let c0 = crows.next().unwrap();
-            let c1 = crows.next().unwrap();
-            let c2 = crows.next().unwrap();
-            let c3 = crows.next().unwrap();
-            match kernel {
-                Kernel::Scalar => {
-                    for p in 0..kc {
-                        let s = [panel[MR * p], panel[MR * p + 1], panel[MR * p + 2], panel[MR * p + 3]];
-                        axpy8x4(s, &bp[p * n..(p + 1) * n], c0, c1, c2, c3);
-                    }
-                }
-                #[cfg(target_arch = "x86_64")]
-                Kernel::Avx2 => unsafe {
-                    super::simd::nn_panel_x4(&panel[..MR * kc], bp, n, c0, c1, c2, c3);
-                },
-            }
-            i += MR;
+    let mut rowbuf = [0.0f32; KC];
+    if n <= nc {
+        let mut k0 = 0;
+        while k0 < k {
+            let kc = KC.min(k - k0);
+            let bp = &b[k0 * n..(k0 + kc) * n];
+            nn_tile(kernel, src, r0, k0, kc, bp, n, 0, n, block, &mut panel, &mut rowbuf);
+            k0 += kc;
         }
-        while i < rows {
-            let arow = &a[i * k + k0..i * k + k0 + kc];
-            let crow = &mut block[i * n..(i + 1) * n];
-            match kernel {
-                Kernel::Scalar => {
-                    for p in 0..kc {
-                        axpy8(arow[p], &bp[p * n..(p + 1) * n], crow);
-                    }
-                }
-                #[cfg(target_arch = "x86_64")]
-                Kernel::Avx2 => unsafe {
-                    for p in 0..kc {
-                        super::simd::row_axpy(arow[p], &bp[p * n..(p + 1) * n], crow);
-                    }
-                },
-            }
-            i += 1;
+        return;
+    }
+    BPACK.with(|cell| {
+        let mut bpack = cell.borrow_mut();
+        if bpack.len() < KC * nc {
+            bpack.resize(KC * nc, 0.0);
         }
-        k0 += kc;
+        let mut j0 = 0;
+        while j0 < n {
+            let ncw = nc.min(n - j0);
+            let mut k0 = 0;
+            while k0 < k {
+                let kc = KC.min(k - k0);
+                let bp = &mut bpack[..kc * ncw];
+                for p in 0..kc {
+                    let brow = &b[(k0 + p) * n + j0..(k0 + p) * n + j0 + ncw];
+                    bp[p * ncw..(p + 1) * ncw].copy_from_slice(brow);
+                }
+                nn_tile(kernel, src, r0, k0, kc, bp, n, j0, ncw, block, &mut panel, &mut rowbuf);
+                k0 += kc;
+            }
+            j0 += ncw;
+        }
+    });
+}
+
+/// One `(row block × kc × ncw)` tile of the `nn` computation: accumulate
+/// `A[:, k0..k0+kc] · bp` into C columns `[j0, j0+ncw)`. `bp` is the
+/// B-panel, row-major at stride `ncw` (a borrowed full-width slice when
+/// unblocked — then `ncw == n`, `j0 == 0` — or the packed scratch).
+#[allow(clippy::too_many_arguments)]
+fn nn_tile<S: NnPanelSource + ?Sized>(
+    kernel: Kernel,
+    src: &S,
+    r0: usize,
+    k0: usize,
+    kc: usize,
+    bp: &[f32],
+    n: usize,
+    j0: usize,
+    ncw: usize,
+    block: &mut [f32],
+    panel: &mut [f32; MR * KC],
+    rowbuf: &mut [f32; KC],
+) {
+    let rows = block.len() / n;
+    let mut i = 0;
+    while i + MR <= rows {
+        src.fill_panel(r0 + i, k0, kc, &mut panel[..MR * kc]);
+        let mut crows = block[i * n..(i + MR) * n].chunks_exact_mut(n);
+        let c0 = &mut crows.next().unwrap()[j0..j0 + ncw];
+        let c1 = &mut crows.next().unwrap()[j0..j0 + ncw];
+        let c2 = &mut crows.next().unwrap()[j0..j0 + ncw];
+        let c3 = &mut crows.next().unwrap()[j0..j0 + ncw];
+        match kernel {
+            Kernel::Scalar => {
+                for p in 0..kc {
+                    let s = [panel[MR * p], panel[MR * p + 1], panel[MR * p + 2], panel[MR * p + 3]];
+                    axpy8x4(s, &bp[p * ncw..(p + 1) * ncw], c0, c1, c2, c3);
+                }
+            }
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => unsafe {
+                super::simd::nn_panel_x4(&panel[..MR * kc], bp, ncw, c0, c1, c2, c3);
+            },
+        }
+        i += MR;
+    }
+    while i < rows {
+        src.fill_row(r0 + i, k0, kc, &mut rowbuf[..kc]);
+        let crow = &mut block[i * n + j0..i * n + j0 + ncw];
+        match kernel {
+            Kernel::Scalar => {
+                for p in 0..kc {
+                    axpy8(rowbuf[p], &bp[p * ncw..(p + 1) * ncw], crow);
+                }
+            }
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => unsafe {
+                for p in 0..kc {
+                    super::simd::row_axpy(rowbuf[p], &bp[p * ncw..(p + 1) * ncw], crow);
+                }
+            },
+        }
+        i += 1;
     }
 }
 
@@ -347,50 +542,93 @@ pub fn gemm_tn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]
     tn_driver(active_kernel(), effective_threads(m, m * k * n), m, k, n, a, b, c);
 }
 
+/// `C(m×n) = Aᵀ·B` where `A`'s columns are *generated* by `src` — the
+/// implicit-GEMM weight-gradient entry point (`dW = colsᵀ·dY` without the
+/// materialized patch matrix). Bitwise-identical to materializing `A` and
+/// calling [`gemm_tn`], for a fixed kernel path at every thread count.
+pub fn gemm_tn_from<S: TnColSource>(m: usize, k: usize, n: usize, src: &S, b: &[f32], c: &mut [f32]) {
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    let threads = effective_threads(m, m * k * n + src.pack_work());
+    tn_driver_src(active_kernel(), threads, m, k, n, src, b, c);
+}
+
 fn tn_driver(kernel: Kernel, threads: usize, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    tn_driver_src(kernel, threads, m, k, n, &SliceTn { a, m }, b, c);
+}
+
+fn tn_driver_src<S: TnColSource + ?Sized>(
+    kernel: Kernel,
+    threads: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    src: &S,
+    b: &[f32],
+    c: &mut [f32],
+) {
     if m == 0 || n == 0 {
         return;
     }
     run_row_blocks(threads, m, n, c, |i0, block| {
-        tn_rows(kernel, m, k, n, i0, a, b, block);
+        tn_rows(kernel, k, n, i0, src, b, block);
     });
 }
 
-/// One contiguous row block of `gemm_tn`: C rows `i0 ..` (A columns are
-/// indexed absolutely, so the full `a` is passed through).
-fn tn_rows(kernel: Kernel, m: usize, k: usize, n: usize, i0: usize, a: &[f32], b: &[f32], block: &mut [f32]) {
-    for (bi, crow) in block.chunks_exact_mut(n).enumerate() {
-        let i = i0 + bi;
-        for v in crow.iter_mut() {
-            *v = 0.0;
+/// One contiguous row block of the `tn` drivers: C rows `i0 ..`. Each
+/// output row gathers its A column into thread-local contiguous scratch
+/// first (a strided copy for slices, a generated stream for fused
+/// sources), then runs the fixed-order rank-1 chain over it — same values
+/// in the same order as reading the column in place, so the gather is
+/// bitwise-invisible.
+fn tn_rows<S: TnColSource + ?Sized>(
+    kernel: Kernel,
+    k: usize,
+    n: usize,
+    i0: usize,
+    src: &S,
+    b: &[f32],
+    block: &mut [f32],
+) {
+    TNCOL.with(|cell| {
+        let mut colv = cell.borrow_mut();
+        if colv.len() < k {
+            colv.resize(k, 0.0);
         }
-        let mut p = 0;
-        while p + 4 <= k {
-            let s = [a[p * m + i], a[(p + 1) * m + i], a[(p + 2) * m + i], a[(p + 3) * m + i]];
-            let (b0, b1, b2, b3) = (
-                &b[p * n..(p + 1) * n],
-                &b[(p + 1) * n..(p + 2) * n],
-                &b[(p + 2) * n..(p + 3) * n],
-                &b[(p + 3) * n..(p + 4) * n],
-            );
-            match kernel {
-                Kernel::Scalar => fma4_into(s, b0, b1, b2, b3, crow),
-                #[cfg(target_arch = "x86_64")]
-                Kernel::Avx2 => unsafe { super::simd::tn_fma4(s, b0, b1, b2, b3, crow) },
+        let col = &mut colv[..k];
+        for (bi, crow) in block.chunks_exact_mut(n).enumerate() {
+            src.fill_col(i0 + bi, col);
+            for v in crow.iter_mut() {
+                *v = 0.0;
             }
-            p += 4;
-        }
-        while p < k {
-            match kernel {
-                Kernel::Scalar => axpy8(a[p * m + i], &b[p * n..(p + 1) * n], crow),
-                #[cfg(target_arch = "x86_64")]
-                Kernel::Avx2 => unsafe {
-                    super::simd::row_axpy(a[p * m + i], &b[p * n..(p + 1) * n], crow);
-                },
+            let mut p = 0;
+            while p + 4 <= k {
+                let s = [col[p], col[p + 1], col[p + 2], col[p + 3]];
+                let (b0, b1, b2, b3) = (
+                    &b[p * n..(p + 1) * n],
+                    &b[(p + 1) * n..(p + 2) * n],
+                    &b[(p + 2) * n..(p + 3) * n],
+                    &b[(p + 3) * n..(p + 4) * n],
+                );
+                match kernel {
+                    Kernel::Scalar => fma4_into(s, b0, b1, b2, b3, crow),
+                    #[cfg(target_arch = "x86_64")]
+                    Kernel::Avx2 => unsafe { super::simd::tn_fma4(s, b0, b1, b2, b3, crow) },
+                }
+                p += 4;
             }
-            p += 1;
+            while p < k {
+                match kernel {
+                    Kernel::Scalar => axpy8(col[p], &b[p * n..(p + 1) * n], crow),
+                    #[cfg(target_arch = "x86_64")]
+                    Kernel::Avx2 => unsafe {
+                        super::simd::row_axpy(col[p], &b[p * n..(p + 1) * n], crow);
+                    },
+                }
+                p += 1;
+            }
         }
-    }
+    });
 }
 
 /// `C(m×n) = A · Bᵀ` where `A` is `m × k` and `B` is stored row-major
@@ -615,7 +853,7 @@ mod tests {
     #[test]
     fn public_api_honors_budget_and_kernel_pins() {
         // Big enough that the work grain actually allows a multi-block
-        // split (m·k·n ≈ 3 × PAR_GRAIN_MACS).
+        // split (m·k·n ≈ 3 × pool::PAR_GRAIN_WORK).
         let (m, k, n) = (64, 150, 41);
         let mut rng = crate::rng::Pcg64::seed_from_u64(31);
         let a = rng.normal_vec(m * k, 0.0, 1.0);
@@ -676,5 +914,118 @@ mod tests {
         gemm_nn(m, k, n, &a, &b, &mut c1);
         gemm_nn(m, k, n, &a, &b, &mut c2);
         assert_eq!(c1, c2, "same shape must give bit-identical sums");
+    }
+
+    /// Deterministic on-the-fly A generator with no backing slice — pins
+    /// the sourced entry points against materializing the same matrix.
+    fn gen_elem(i: usize, j: usize) -> f32 {
+        ((i * 31 + j * 7) % 13) as f32 * 0.25 - 1.5
+    }
+
+    struct GenNn;
+
+    impl NnPanelSource for GenNn {
+        fn fill_panel(&self, r: usize, k0: usize, kc: usize, panel: &mut [f32]) {
+            for p in 0..kc {
+                for l in 0..MR {
+                    panel[MR * p + l] = gen_elem(r + l, k0 + p);
+                }
+            }
+        }
+
+        fn fill_row(&self, r: usize, k0: usize, kc: usize, row: &mut [f32]) {
+            for (p, v) in row[..kc].iter_mut().enumerate() {
+                *v = gen_elem(r, k0 + p);
+            }
+        }
+
+        fn pack_work(&self) -> usize {
+            7 // arbitrary: exercises the grain accounting path
+        }
+    }
+
+    /// `A` is `k × m`; column `i` of it is `gen_elem(p, i)` over `p`.
+    struct GenTn;
+
+    impl TnColSource for GenTn {
+        fn fill_col(&self, i: usize, col: &mut [f32]) {
+            for (p, v) in col.iter_mut().enumerate() {
+                *v = gen_elem(p, i);
+            }
+        }
+    }
+
+    #[test]
+    fn sourced_entry_points_match_materialized_bitwise() {
+        // The implicit-GEMM guarantee: generating A-panels on the fly is
+        // bit-identical to materializing A first, per kernel path, at
+        // every thread budget (shapes cross MR groups and the KC edge).
+        let pool_max = pool::default_parallelism().max(3);
+        for &(m, k, n) in &[(9usize, 37usize, 11usize), (13, 260, 24), (1, 5, 1), (8, 4, 8)] {
+            let a: Vec<f32> = (0..m * k).map(|x| gen_elem(x / k, x % k)).collect();
+            let at: Vec<f32> = (0..k * m).map(|x| gen_elem(x / m, x % m)).collect();
+            let mut rng = crate::rng::Pcg64::seed_from_u64(47);
+            let b = rng.normal_vec(k * n, 0.0, 1.0);
+            let mut c_mat = vec![0.0f32; m * n];
+            let mut c_src = vec![0.0f32; m * n];
+            for &kern in &kernels_available() {
+                for &t in &[1usize, 2, pool_max] {
+                    with_kernel(kern, || {
+                        pool::with_thread_budget(t, || {
+                            gemm_nn(m, k, n, &a, &b, &mut c_mat);
+                            gemm_nn_from(m, k, n, &GenNn, &b, &mut c_src);
+                            assert_eq!(c_mat, c_src, "nn {m}x{k}x{n} {kern:?} t={t}");
+                            gemm_tn(m, k, n, &at, &b, &mut c_mat);
+                            gemm_tn_from(m, k, n, &GenTn, &b, &mut c_src);
+                            assert_eq!(c_mat, c_src, "tn {m}x{k}x{n} {kern:?} t={t}");
+                        })
+                    });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nc_blocked_b_panels_are_bitwise_invisible() {
+        // Force the packed path with tiny `nc` values and compare against
+        // the borrowed-B path at the same shape: column blocking must
+        // never change an output element's reduction order. Includes a
+        // KC-crossing k and nc values that don't divide n.
+        let mut rng = crate::rng::Pcg64::seed_from_u64(41);
+        let (m, k, n) = (11usize, 300usize, 45usize);
+        let a = rng.normal_vec(m * k, 0.0, 1.0);
+        let b = rng.normal_vec(k * n, 0.0, 1.0);
+        let src = SliceNn { a: &a, k };
+        for &kern in &kernels_available() {
+            let mut unblocked = vec![0.0f32; m * n];
+            nn_rows(kern, k, n, n, &src, 0, &b, &mut unblocked);
+            for &nc in &[1usize, 8, 16, 44] {
+                let mut blocked = vec![0.0f32; m * n];
+                nn_rows(kern, k, n, nc, &src, 0, &b, &mut blocked);
+                assert_eq!(unblocked, blocked, "{kern:?} nc={nc}");
+            }
+        }
+    }
+
+    #[test]
+    fn large_n_past_nc_matches_reference_and_stays_deterministic() {
+        // The production driver at n ≫ NC — packed B-panels engaged for
+        // real: tolerance-pinned to the f64 reference, and parallel
+        // bitwise-equal to serial.
+        let mut rng = crate::rng::Pcg64::seed_from_u64(43);
+        let (m, k, n) = (9usize, 40usize, 2 * NC + 139);
+        let a = rng.normal_vec(m * k, 0.0, 1.0);
+        let b = rng.normal_vec(k * n, 0.0, 1.0);
+        let want = naive_nn(m, k, n, &a, &b);
+        for &kern in &kernels_available() {
+            let mut serial = vec![0.0f32; m * n];
+            nn_driver(kern, 1, m, k, n, &a, &b, &mut serial);
+            assert_close(&serial, &want, &format!("nc-packed nn {kern:?}"));
+            for &t in &[2usize, 3, 7] {
+                let mut par = vec![0.0f32; m * n];
+                nn_driver(kern, t, m, k, n, &a, &b, &mut par);
+                assert_eq!(serial, par, "{kern:?} t={t}: NC path must stay deterministic");
+            }
+        }
     }
 }

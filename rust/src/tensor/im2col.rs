@@ -22,6 +22,24 @@
 //! Both routines are deterministic single-pass loops in a fixed order;
 //! all parallelism (and the bit-identical-across-thread-counts guarantee)
 //! lives in the GEMMs they feed.
+//!
+//! # Implicit GEMM (fused pack+GEMM)
+//!
+//! [`ImplicitCols`] is the *fused* alternative to materializing `cols` at
+//! all: it implements the GEMM core's panel-source traits
+//! ([`NnPanelSource`] for the forward, [`TnColSource`] for the weight
+//! gradient), generating patch-matrix panels straight into the
+//! microkernel's interleaved layout from the NHWC input. Panel entries are
+//! produced by the same slab-copy traversal as [`im2col`], restricted to
+//! the requested `[k0, k0+kc)` patch-column window, so a fused GEMM is
+//! **bitwise identical** to `im2col` + the materialized GEMM on every
+//! kernel path at every thread count — while the `cols` working set
+//! (O(B·Ho·Wo·K²·Cin) floats, written to and re-read from DRAM twice per
+//! training step) never exists. Only the *data* gradient keeps a
+//! materialized buffer: `col2im`'s scatter-add adjoint consumes the
+//! `dcols` GEMM output in full.
+
+use super::gemm::{NnPanelSource, TnColSource, KC, MR};
 
 /// Geometry of one convolution as the packing module sees it.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -183,6 +201,193 @@ pub fn col2im_add(s: &ConvShape, n: usize, dcols: &[f32], dinput: &mut [f32]) {
     }
 }
 
+/// Implicit-GEMM panel source over an NHWC batch: the patch matrix
+/// `im2col` would materialize, generated on demand (module docs). One
+/// instance serves both GEMM directions of a conv layer:
+///
+/// * as an [`NnPanelSource`], row `r` = output position `(b, oy, ox)`,
+///   column `q` = patch entry `(ky, kx, ci)` — the forward `cols·W`;
+/// * as a [`TnColSource`], the same matrix consumed column-wise — the
+///   weight gradient `colsᵀ·dY`.
+pub struct ImplicitCols<'a> {
+    s: ConvShape,
+    n: usize,
+    input: &'a [f32],
+}
+
+impl<'a> ImplicitCols<'a> {
+    pub fn new(s: &ConvShape, n: usize, input: &'a [f32]) -> Self {
+        assert_eq!(input.len(), s.in_len(n), "implicit im2col input shape mismatch");
+        ImplicitCols { s: *s, n, input }
+    }
+
+    /// Generate patch row `r`, columns `[k0, k0 + kc)`, into `out[..kc]` —
+    /// the partial-row slab-copy core shared by the panel and row fills.
+    /// Exactly [`im2col`]'s traversal restricted to a column window: per
+    /// `ky` one contiguous copy of the in-image `(kx, ci)` span, explicit
+    /// zero-fill outside it.
+    fn gen_row(&self, r: usize, k0: usize, kc: usize, out: &mut [f32]) {
+        let s = &self.s;
+        let cin = s.cin;
+        let kcrow = s.k * cin; // one ky-row of a patch
+        let hw = s.h_out * s.w_out;
+        let (b, rem) = (r / hw, r % hw);
+        let (oy, ox) = (rem / s.w_out, rem % s.w_out);
+        let plane = s.h_in * s.w_in * cin;
+        let image = &self.input[b * plane..(b + 1) * plane];
+        let ix0 = (ox * s.stride) as isize - s.pad as isize;
+        let kx_lo = ((-ix0).max(0) as usize).min(s.k);
+        let kx_hi = ((s.w_in as isize - ix0).max(0) as usize).min(s.k);
+        // In-image window of one ky row, in flat (kx, ci) units.
+        let (v_lo, v_hi) = (kx_lo * cin, kx_hi * cin);
+        let c_end = k0 + kc;
+        let mut ky = k0 / kcrow;
+        while ky * kcrow < c_end {
+            let row0 = ky * kcrow;
+            let lo = k0.max(row0);
+            let hi = c_end.min(row0 + kcrow);
+            let seg = &mut out[lo - k0..hi - k0];
+            let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+            if iy < 0 || iy >= s.h_in as isize || v_lo >= v_hi {
+                seg.fill(0.0);
+                ky += 1;
+                continue;
+            }
+            // `seg` covers flat units [u_lo, u_hi) of this ky row; copy
+            // its intersection with [v_lo, v_hi), zero the rest.
+            let (u_lo, u_hi) = (lo - row0, hi - row0);
+            let cp_lo = u_lo.max(v_lo);
+            let cp_hi = u_hi.min(v_hi);
+            if cp_lo >= cp_hi {
+                seg.fill(0.0);
+            } else {
+                seg[..cp_lo - u_lo].fill(0.0);
+                let base = (iy as usize * s.w_in * cin) as isize + ix0 * cin as isize;
+                seg[cp_lo - u_lo..cp_hi - u_lo].copy_from_slice(
+                    &image[(base + cp_lo as isize) as usize..(base + cp_hi as isize) as usize],
+                );
+                seg[cp_hi - u_lo..].fill(0.0);
+            }
+            ky += 1;
+        }
+    }
+}
+
+impl NnPanelSource for ImplicitCols<'_> {
+    fn fill_panel(&self, r: usize, k0: usize, kc: usize, panel: &mut [f32]) {
+        let s = &self.s;
+        // Interior fast path (the bulk of a conv's panels): all `MR` rows
+        // share `(b, oy)` and every receptive field is fully in-image —
+        // then the requested `[k0, k0+kc)` window is one pure strided
+        // gather, one pass, no tmp row. Row `r + l` sees the window
+        // shifted by `l·stride` source columns, so lane `l` reads at
+        // `base + u + l·stride·cin`. Pure copies, so bitwise-identical to
+        // the general path below (pinned by tests).
+        {
+            let hw = s.h_out * s.w_out;
+            let rem = r % hw;
+            let (oy, ox) = (rem / s.w_out, rem % s.w_out);
+            let iy0 = (oy * s.stride) as isize - s.pad as isize;
+            let ix0 = (ox * s.stride) as isize - s.pad as isize;
+            if ox + MR - 1 < s.w_out
+                && iy0 >= 0
+                && iy0 as usize + s.k <= s.h_in
+                && ix0 >= 0
+                && ix0 as usize + (MR - 1) * s.stride + s.k <= s.w_in
+            {
+                let (iy0, ix0) = (iy0 as usize, ix0 as usize);
+                let cin = s.cin;
+                let lstep = s.stride * cin;
+                let plane = s.h_in * s.w_in * cin;
+                let image = &self.input[(r / hw) * plane..][..plane];
+                let kcrow = s.k * cin;
+                let c_end = k0 + kc;
+                let mut ky = k0 / kcrow;
+                while ky * kcrow < c_end {
+                    let row0 = ky * kcrow;
+                    let lo = k0.max(row0);
+                    let hi = c_end.min(row0 + kcrow);
+                    let base = &image[((iy0 + ky) * s.w_in + ix0) * cin + (lo - row0)..];
+                    let pk = &mut panel[MR * (lo - k0)..MR * (hi - k0)];
+                    for (u, quad) in pk.chunks_exact_mut(MR).enumerate() {
+                        quad[0] = base[u];
+                        quad[1] = base[u + lstep];
+                        quad[2] = base[u + 2 * lstep];
+                        quad[3] = base[u + 3 * lstep];
+                    }
+                    ky += 1;
+                }
+                return;
+            }
+        }
+        let mut tmp = [0.0f32; KC];
+        for l in 0..MR {
+            self.gen_row(r + l, k0, kc, &mut tmp[..kc]);
+            for p in 0..kc {
+                panel[MR * p + l] = tmp[p];
+            }
+        }
+    }
+
+    fn fill_row(&self, r: usize, k0: usize, kc: usize, row: &mut [f32]) {
+        self.gen_row(r, k0, kc, row);
+    }
+
+    fn pack_work(&self) -> usize {
+        // Each patch element is generated once per call, with bounds
+        // bookkeeping on top of the copy — weight it at ~2 work units.
+        2 * self.s.cols_len(self.n)
+    }
+}
+
+impl TnColSource for ImplicitCols<'_> {
+    /// Column `i` fixes one `(ky, kx, ci)` patch entry: its values over
+    /// the patch rows `(b, oy, ox)` are a strided gather from the input
+    /// (stride `stride·cin` along `ox`), zero where the window hangs over
+    /// the padding border.
+    fn fill_col(&self, i: usize, col: &mut [f32]) {
+        let s = &self.s;
+        let cin = s.cin;
+        let (ky, rem) = (i / (s.k * cin), i % (s.k * cin));
+        let (kx, ci) = (rem / cin, rem % cin);
+        let plane = s.h_in * s.w_in * cin;
+        debug_assert_eq!(col.len(), s.rows(self.n));
+        // Valid ox window: 0 ≤ ox·stride + kx − pad < w_in.
+        let t = kx as isize - s.pad as isize;
+        let ox_lo = if t >= 0 { 0 } else { ((-t) as usize + s.stride - 1) / s.stride };
+        let ox_lo = ox_lo.min(s.w_out);
+        let ox_hi = if (s.w_in as isize) > t {
+            (((s.w_in as isize - 1 - t) as usize) / s.stride + 1).min(s.w_out)
+        } else {
+            0
+        };
+        for b in 0..self.n {
+            let image = &self.input[b * plane..(b + 1) * plane];
+            for oy in 0..s.h_out {
+                let dst = &mut col[((b * s.h_out) + oy) * s.w_out..][..s.w_out];
+                let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+                if iy < 0 || iy >= s.h_in as isize || ox_lo >= ox_hi {
+                    dst.fill(0.0);
+                    continue;
+                }
+                dst[..ox_lo].fill(0.0);
+                let row0 = iy as usize * s.w_in * cin;
+                let mut src =
+                    (row0 as isize + ((ox_lo * s.stride) as isize + t) * cin as isize) as usize + ci;
+                for v in dst[ox_lo..ox_hi].iter_mut() {
+                    *v = image[src];
+                    src += s.stride * cin;
+                }
+                dst[ox_hi..].fill(0.0);
+            }
+        }
+    }
+
+    fn pack_work(&self) -> usize {
+        2 * self.s.cols_len(self.n)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -297,6 +502,59 @@ mod tests {
         let mut dx = vec![10.0f32; s.in_len(1)];
         col2im_add(&s, 1, &dcols, &mut dx);
         assert_eq!(dx, vec![11.0; 4]);
+    }
+
+    #[test]
+    fn implicit_source_reproduces_materialized_cols_exactly() {
+        // Every access pattern the GEMM drivers use — row windows, MR-row
+        // interleaved panels, full columns — must reproduce the
+        // materialized patch matrix bit for bit, across kernel sizes,
+        // strides, and padding (the foundation of the fused == materialized
+        // guarantee).
+        check(40, |g| {
+            let s = random_shape(g);
+            let n = g.usize_in(1..=3);
+            let input: Vec<f32> = (0..s.in_len(n)).map(|_| g.normal_f32()).collect();
+            let cols = im2col_naive(&s, n, &input);
+            let src = ImplicitCols::new(&s, n, &input);
+            let cw = s.col_width();
+            let rows = s.rows(n);
+            // Row windows at random offsets (incl. windows crossing ky
+            // row boundaries) — the remainder-row fill.
+            for _ in 0..8 {
+                let r = g.usize_in(0..=rows - 1);
+                let k0 = g.usize_in(0..=cw - 1);
+                let kc = g.usize_in(1..=cw - k0);
+                let mut row = vec![7.0f32; kc];
+                src.fill_row(r, k0, kc, &mut row);
+                assert_eq!(row, cols[r * cw + k0..r * cw + k0 + kc], "row {r} [{k0}, {kc})");
+            }
+            // Interleaved MR-row panels — the microkernel fill.
+            if rows >= MR {
+                let r = g.usize_in(0..=rows - MR);
+                let k0 = g.usize_in(0..=cw - 1);
+                let kc = g.usize_in(1..=(cw - k0).min(KC));
+                let mut panel = vec![0.0f32; MR * kc];
+                src.fill_panel(r, k0, kc, &mut panel);
+                for p in 0..kc {
+                    for l in 0..MR {
+                        assert_eq!(
+                            panel[MR * p + l],
+                            cols[(r + l) * cw + k0 + p],
+                            "panel r={r} l={l} p={p}"
+                        );
+                    }
+                }
+            }
+            // Full columns — the weight-gradient (tn) fill.
+            let mut col = vec![7.0f32; rows];
+            for i in [0, cw / 2, cw - 1] {
+                TnColSource::fill_col(&src, i, &mut col);
+                for (r, &v) in col.iter().enumerate() {
+                    assert_eq!(v, cols[r * cw + i], "col {i} row {r}");
+                }
+            }
+        });
     }
 
     #[test]

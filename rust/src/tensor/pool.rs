@@ -284,6 +284,26 @@ pub fn with_thread_budget<R>(n: usize, f: impl FnOnce() -> R) -> R {
     f()
 }
 
+/// Minimum work units per thread before a parallel driver should fan out —
+/// below this, pool dispatch overhead beats the parallel win. A "work
+/// unit" is one multiply-accumulate for plain GEMM calls; panel-*sourced*
+/// calls (fused im2col) add their generation cost on top, so a call whose
+/// on-the-fly packing dominates its FLOPs still crosses the grain at the
+/// right total size.
+pub const PAR_GRAIN_WORK: usize = 128 * 1024;
+
+/// How many row blocks a parallel driver working `rows` output rows and
+/// `work` total units should split into: bounded by the calling thread's
+/// budget ([`thread_budget`]), the per-thread grain, and the row count (a
+/// block needs at least one row).
+pub fn plan_fanout(rows: usize, work: usize) -> usize {
+    let budget = thread_budget();
+    if budget <= 1 || rows <= 1 {
+        return 1;
+    }
+    budget.min(work / PAR_GRAIN_WORK).clamp(1, rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -376,6 +396,27 @@ mod tests {
             j.join().unwrap();
         }
         assert_eq!(total.load(Ordering::Relaxed), 2 * 20 * 3);
+    }
+
+    #[test]
+    fn plan_fanout_respects_budget_grain_and_rows() {
+        with_thread_budget(8, || {
+            // Tiny work: stays serial no matter the budget.
+            assert_eq!(plan_fanout(64, 1000), 1);
+            // Huge work: capped by the budget.
+            assert_eq!(plan_fanout(1 << 20, 1 << 30), 8);
+            // Row-bound: never more blocks than rows.
+            assert_eq!(plan_fanout(2, 1 << 30), 2);
+            // Pack work counts toward the grain: a call whose MACs alone
+            // sit under the grain still fans out once generation cost is
+            // added (the fused-im2col accounting).
+            let macs = PAR_GRAIN_WORK - 1;
+            assert_eq!(plan_fanout(64, macs), 1);
+            assert!(plan_fanout(64, macs + PAR_GRAIN_WORK) >= 2);
+        });
+        with_thread_budget(1, || {
+            assert_eq!(plan_fanout(1 << 20, 1 << 30), 1);
+        });
     }
 
     #[test]

@@ -57,6 +57,14 @@ pub unsafe fn row_axpy(s: f32, b: &[f32], y: &mut [f32]) {
 /// index `p`): `c_r[j] = fma(panel[4p+r], bp[p·n + j], c_r[j])` for all
 /// p, j.
 ///
+/// `n` is the *B-panel row stride and C-tile width* — the full output row
+/// for unblocked calls, or the packed-panel width `ncw ≤ NC` when the
+/// driver's NC-blocking stage handed us a contiguous B-panel and a column
+/// sub-tile of C. The kernel performs one fused multiply-add per `(p, j)`
+/// in every width bucket (16/8/scalar), so which bucket a column lands in
+/// — and therefore how the driver blocks columns — never changes a C
+/// element's op sequence.
+///
 /// The 4×16 C tile lives in eight ymm accumulators across the whole `p`
 /// loop (j-tile outer, p inner), so the steady state is 8 FMAs per 2
 /// B-loads with no C traffic — ~2.5× the per-p load/store formulation it
