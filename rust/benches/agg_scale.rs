@@ -1,0 +1,73 @@
+//! Aggregation at cluster scale: the sharded union merge against the
+//! serial scatter-add at growing worker counts, plus end-to-end cluster
+//! iterations/sec under a seeded fault plan. Writes BENCH_agg_scale.json.
+
+use regtopk::bench::{black_box, Bencher};
+use regtopk::collective::Aggregator;
+use regtopk::experiments::fig_scale;
+use regtopk::metrics::json::Json;
+use regtopk::rng::Pcg64;
+use regtopk::sparsify::SparseGrad;
+use regtopk::tensor::pool;
+
+/// A worker's synthetic sparse message: k sorted unique indices in [0, J).
+fn synth_msg(rng: &mut Pcg64, dim: usize, k: usize) -> SparseGrad {
+    let mut indices: Vec<u32> =
+        rng.sample_indices(dim, k).into_iter().map(|i| i as u32).collect();
+    indices.sort_unstable();
+    let values = rng.normal_vec(k, 0.0, 1.0);
+    SparseGrad { indices, values }
+}
+
+fn main() {
+    let b = Bencher::from_env();
+    let mut extras: Vec<(&str, Json)> = Vec::new();
+
+    println!("== sharded union merge vs serial scatter-add ==");
+    let dim = 1 << 18; // J = 262144
+    let k = 1 << 10; // k = 1024 entries per message
+    let auto_width = pool::plan_merge_shards(usize::MAX / 2, dim);
+    let mut speedups: Vec<(&str, Json)> = Vec::new();
+    for (n, key) in [(64usize, "N64"), (256, "N256"), (1024, "N1024")] {
+        let mut rng = Pcg64::seed_from_u64(42);
+        let batch: Vec<(f32, SparseGrad)> = (0..n)
+            .map(|_| (1.0 / n as f32, synth_msg(&mut rng, dim, k)))
+            .collect();
+        let entries = n * k;
+        let mut agg = Aggregator::new(dim);
+        let serial = b.report_throughput(&format!("merge_serial/N{n}"), entries, || {
+            agg.merge_sharded(black_box(&batch), n, 1);
+        });
+        let mut agg = Aggregator::new(dim);
+        let sharded = b.report_throughput(
+            &format!("merge_sharded/N{n}/shards{auto_width}"),
+            entries,
+            || {
+                agg.merge_sharded(black_box(&batch), n, auto_width);
+            },
+        );
+        let speedup = serial.median.as_secs_f64() / sharded.median.as_secs_f64();
+        println!("{:<44} speedup x{speedup:.2}", "");
+        speedups.push((key, Json::Num(speedup)));
+    }
+    extras.push(("speedup_sharded_vs_serial", Json::obj(speedups)));
+
+    println!("\n== cluster executor under faults (linreg, REGTOP-k) ==");
+    for (n, iters) in [(64usize, 30usize), (256, 20)] {
+        let stats = b.report(&format!("cluster_e2e/N{n}/{iters}iters"), || {
+            let (report, _plan) = fig_scale::run_point(n, 64, 20, iters).unwrap();
+            black_box(report.final_gap());
+        });
+        println!(
+            "{:<44} per-iteration {:.1} µs",
+            "",
+            stats.median.as_secs_f64() * 1e6 / iters as f64
+        );
+    }
+
+    if let Err(e) = b.write_json_with("agg_scale", extras, "BENCH_agg_scale.json") {
+        eprintln!("warning: could not write BENCH_agg_scale.json: {e}");
+    } else {
+        println!("\nwrote BENCH_agg_scale.json");
+    }
+}

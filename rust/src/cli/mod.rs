@@ -37,7 +37,8 @@ pub struct Args {
 const VALUED: &[&str] = &[
     "config", "set", "out", "sparsifier", "mu", "y", "sparsity", "workers", "iters", "lr",
     "seed", "seeds", "dim", "k", "backend", "artifacts", "samples", "optimizer", "log-every",
-    "model", "steps", "batch", "score-backend",
+    "model", "steps", "batch", "score-backend", "lanes", "staleness", "shards", "p-straggle",
+    "p-death", "p-loss", "fault-seed",
 ];
 
 impl Args {

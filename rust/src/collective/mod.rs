@@ -15,6 +15,16 @@
 
 use crate::metrics::CommStats;
 use crate::sparsify::{SparseGrad, SparseView};
+use std::borrow::Borrow;
+
+/// Per-shard output of the parallel union merge: the sorted touched
+/// indices and aggregated values inside one J-range. Persistent on the
+/// [`Aggregator`] so the sharded path allocates nothing in steady state.
+#[derive(Default)]
+struct ShardScratch {
+    touched: Vec<u32>,
+    values: Vec<f32>,
+}
 
 /// Sparse weighted-sum aggregator with comm accounting.
 pub struct Aggregator {
@@ -30,6 +40,8 @@ pub struct Aggregator {
     union_values: Vec<f32>,
     /// Dirty flags to avoid duplicate entries in `touched`.
     dirty: Vec<bool>,
+    /// Per-shard scratch for [`Aggregator::merge_sharded`].
+    shard_scratch: Vec<ShardScratch>,
     /// Number of messages added this round.
     messages: usize,
     /// Cumulative communication statistics.
@@ -45,6 +57,7 @@ impl Aggregator {
             touched: Vec::new(),
             union_values: Vec::new(),
             dirty: vec![false; dim],
+            shard_scratch: Vec::new(),
             messages: 0,
             comm: CommStats::default(),
         }
@@ -112,6 +125,119 @@ impl Aggregator {
         }
     }
 
+    /// Merge one whole round in a single call, sharding the scatter-add
+    /// and union construction across the [`crate::tensor::pool`] by
+    /// J-range. Equivalent to `begin()` + `add(ω, m)` per message +
+    /// `finish(receivers)` — and *bitwise identical* to that serial path
+    /// at every shard count: each shard runs the exact serial scatter-add
+    /// restricted to its contiguous index range (per-entry f32 accumulation
+    /// order is the batch order either way), and concatenating the sorted
+    /// per-shard unions in range order yields the sorted global union.
+    ///
+    /// `batch` is the round's messages in aggregation order, each with its
+    /// weight ω_n; message indices must be sorted ascending (every
+    /// sparsifier in this crate guarantees it — the sharded path binary
+    /// searches each message for its range, so the requirement is real
+    /// here, unlike in `add`). An empty batch is a well-defined empty
+    /// round: empty broadcast, zeroed dense view, no NaN — survivor
+    /// continuation relies on this when every worker is dead.
+    ///
+    /// `shards` is clamped to `[1, dim]`; `shards == 1` (or an empty
+    /// batch) takes the serial path directly.
+    pub fn merge_sharded<M: Borrow<SparseGrad> + Sync>(
+        &mut self,
+        batch: &[(f32, M)],
+        receivers: usize,
+        shards: usize,
+    ) {
+        self.begin();
+        // Uplink accounting is per message, identical to `add`.
+        for (_, msg) in batch {
+            let msg = msg.borrow();
+            debug_assert_eq!(msg.indices.len(), msg.values.len());
+            self.comm.uplink_values += msg.len() as u64;
+            if msg.len() < self.dim {
+                self.comm.uplink_index_bits += msg.len() as u64 * self.index_bits;
+            }
+            self.messages += 1;
+        }
+        let shards = shards.clamp(1, self.dim.max(1));
+        if shards == 1 || batch.is_empty() {
+            for (omega, msg) in batch {
+                let msg = msg.borrow();
+                for (&i, &v) in msg.indices.iter().zip(msg.values.iter()) {
+                    let idx = i as usize;
+                    assert!(idx < self.dim, "index {idx} out of range (J={})", self.dim);
+                    self.dense[idx] += omega * v;
+                    if !self.dirty[idx] {
+                        self.dirty[idx] = true;
+                        self.touched.push(i);
+                    }
+                }
+            }
+            self.finish(receivers);
+            return;
+        }
+        // The serial path validates per entry; here out-of-range indices
+        // would silently miss every shard, so validate up front (indices
+        // are sorted — the last one bounds the message).
+        for (_, msg) in batch {
+            let msg = msg.borrow();
+            debug_assert!(
+                msg.indices.windows(2).all(|w| w[0] < w[1]),
+                "merge_sharded requires sorted unique indices"
+            );
+            if let Some(&last) = msg.indices.last() {
+                assert!(
+                    (last as usize) < self.dim,
+                    "index {last} out of range (J={})",
+                    self.dim
+                );
+            }
+        }
+        if self.shard_scratch.len() < shards {
+            self.shard_scratch.resize_with(shards, ShardScratch::default);
+        }
+        let dim = self.dim;
+        let (base, rem) = (dim / shards, dim % shards);
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(shards);
+        let mut dense_rest: &mut [f32] = &mut self.dense;
+        let mut dirty_rest: &mut [bool] = &mut self.dirty;
+        let mut scratch_rest: &mut [ShardScratch] = &mut self.shard_scratch[..shards];
+        let mut lo = 0usize;
+        for s in 0..shards {
+            let len = base + usize::from(s < rem);
+            let (dense_s, tail) = std::mem::take(&mut dense_rest).split_at_mut(len);
+            dense_rest = tail;
+            let (dirty_s, tail) = std::mem::take(&mut dirty_rest).split_at_mut(len);
+            dirty_rest = tail;
+            let (scr, tail) = std::mem::take(&mut scratch_rest).split_at_mut(1);
+            scratch_rest = tail;
+            let scr = &mut scr[0];
+            let range_lo = lo as u32;
+            lo += len;
+            let range_hi = lo as u32;
+            tasks.push(Box::new(move || {
+                merge_shard(batch, range_lo, range_hi, dense_s, dirty_s, scr)
+            }));
+        }
+        crate::tensor::pool::global().scope(tasks);
+        // Concatenate the per-shard unions: shard order is ascending
+        // J-range order, so this is the sorted global union — no extra
+        // sort, matching `finish` bit for bit.
+        self.union_values.clear();
+        for scr in &self.shard_scratch[..shards] {
+            self.touched.extend_from_slice(&scr.touched);
+            self.union_values.extend_from_slice(&scr.values);
+        }
+        // Downlink accounting, identical to `finish`.
+        let union = self.touched.len() as u64;
+        self.comm.downlink_values += union * receivers as u64;
+        if (union as usize) < self.dim {
+            self.comm.downlink_index_bits += union * self.index_bits * receivers as u64;
+        }
+    }
+
     /// Dense aggregate view (valid between `finish` and the next `begin`).
     pub fn dense(&self) -> &[f32] {
         &self.dense
@@ -134,6 +260,40 @@ impl Aggregator {
         self.comm = CommStats::default();
         self.messages = 0;
     }
+}
+
+/// One shard of the parallel merge: the serial scatter-add restricted to
+/// the J-range `[lo, hi)`. `dense`/`dirty` are the disjoint sub-slices of
+/// the aggregator's buffers for that range (local index = global − `lo`),
+/// so shards share nothing and need no synchronization. Each message's
+/// in-range run is found by binary search on its sorted indices.
+fn merge_shard<M: Borrow<SparseGrad>>(
+    batch: &[(f32, M)],
+    lo: u32,
+    hi: u32,
+    dense: &mut [f32],
+    dirty: &mut [bool],
+    scr: &mut ShardScratch,
+) {
+    scr.touched.clear();
+    for (omega, msg) in batch {
+        let msg = msg.borrow();
+        let idx = &msg.indices;
+        let start = idx.partition_point(|&i| i < lo);
+        let end = start + idx[start..].partition_point(|&i| i < hi);
+        for p in start..end {
+            let i = idx[p];
+            let local = (i - lo) as usize;
+            dense[local] += omega * msg.values[p];
+            if !dirty[local] {
+                dirty[local] = true;
+                scr.touched.push(i);
+            }
+        }
+    }
+    scr.touched.sort_unstable();
+    scr.values.clear();
+    scr.values.extend(scr.touched.iter().map(|&i| dense[(i - lo) as usize]));
 }
 
 #[cfg(test)]
@@ -270,5 +430,125 @@ mod tests {
                 assert_eq!(bcast.values[p], dense[i as usize]);
             }
         });
+    }
+
+    /// Random sorted-index message with `len` entries in `[0, dim)`.
+    fn random_msg(g: &mut crate::testing::Gen, dim: usize) -> SparseGrad {
+        let len = g.usize_in(0..=dim);
+        let mut idx: Vec<u32> = (0..dim as u32).collect();
+        for i in 0..len {
+            let j = i + g.usize_in(0..=(dim - i - 1));
+            idx.swap(i, j);
+        }
+        idx.truncate(len);
+        idx.sort_unstable();
+        let values: Vec<f32> = (0..len).map(|_| g.normal_f32()).collect();
+        SparseGrad { indices: idx, values }
+    }
+
+    /// Drive one aggregator serially (`begin`/`add`/`finish`) and another
+    /// through `merge_sharded`, then assert bitwise-identical state.
+    fn assert_merge_parity(rounds: &[Vec<(f32, SparseGrad)>], dim: usize, shards: usize) {
+        let mut serial = Aggregator::new(dim);
+        let mut sharded = Aggregator::new(dim);
+        for (r, batch) in rounds.iter().enumerate() {
+            serial.begin();
+            for (w, m) in batch {
+                serial.add(*w, m);
+            }
+            serial.finish(batch.len());
+            let borrowed: Vec<(f32, &SparseGrad)> =
+                batch.iter().map(|(w, m)| (*w, m)).collect();
+            sharded.merge_sharded(&borrowed, batch.len(), shards);
+            assert_eq!(serial.dense(), sharded.dense(), "round {r}, shards {shards}");
+            assert_eq!(
+                serial.broadcast().indices,
+                sharded.broadcast().indices,
+                "round {r}, shards {shards}"
+            );
+            assert_eq!(
+                serial.broadcast().values,
+                sharded.broadcast().values,
+                "round {r}, shards {shards}"
+            );
+            assert_eq!(serial.comm, sharded.comm, "round {r}, shards {shards}");
+        }
+    }
+
+    #[test]
+    fn shard_count_parity_matrix() {
+        // The satellite's pinned matrix: sharded == serial bitwise at
+        // shards ∈ {1, 2, 3, 7, pool width} (plus dim, the clamp edge), on
+        // a fixed two-round workload exercising buffer reuse.
+        let dim = 23;
+        let rounds = vec![
+            vec![
+                (0.25f32, msg(vec![0, 3, 7, 21], vec![1.5, -2.0, 0.5, 3.25])),
+                (0.5f32, msg(vec![3, 4, 22], vec![2.0, -1.0, 0.125])),
+                (0.25f32, msg(vec![0, 22], vec![-0.75, 4.0])),
+            ],
+            vec![
+                (0.75f32, msg(vec![1, 7, 8, 9], vec![0.1, 0.2, 0.3, 0.4])),
+                (0.25f32, msg(vec![0, 9], vec![-5.0, 1.0])),
+            ],
+        ];
+        let pool_width = crate::tensor::pool::default_parallelism();
+        for shards in [1, 2, 3, 7, pool_width, dim, dim + 50] {
+            assert_merge_parity(&rounds, dim, shards);
+        }
+    }
+
+    #[test]
+    fn sharded_merge_matches_serial_bitwise_property() {
+        // Random dims, batches, and weights across two rounds per case
+        // (buffer reuse), at every shard count in the pinned matrix.
+        check(60, |g| {
+            let dim = g.usize_in(1..=96);
+            let pool_width = crate::tensor::pool::default_parallelism();
+            let mk_round = |g: &mut crate::testing::Gen| {
+                let n = g.usize_in(0..=9);
+                (0..n)
+                    .map(|_| (g.f32_in(0.0, 1.0), random_msg(g, dim)))
+                    .collect::<Vec<_>>()
+            };
+            let rounds = vec![mk_round(g), mk_round(g)];
+            for shards in [1, 2, 3, 7, pool_width] {
+                assert_merge_parity(&rounds, dim, shards);
+            }
+        });
+    }
+
+    #[test]
+    fn empty_round_yields_well_defined_empty_broadcast() {
+        // The all-workers-dead round (N_live = 0): both the serial and the
+        // sharded path must produce an empty broadcast and a zeroed dense
+        // view with no NaN and no comm charge — after a non-empty round,
+        // so stale state would show if it leaked.
+        let dim = 11;
+        for shards in [1, 4] {
+            let mut agg = Aggregator::new(dim);
+            let full: Vec<(f32, SparseGrad)> =
+                vec![(1.0, msg(vec![2, 5, 9], vec![1.0, -2.0, 3.0]))];
+            let borrowed: Vec<(f32, &SparseGrad)> =
+                full.iter().map(|(w, m)| (*w, m)).collect();
+            agg.merge_sharded(&borrowed, 1, shards);
+            let before = agg.comm;
+            let empty: Vec<(f32, &SparseGrad)> = Vec::new();
+            agg.merge_sharded(&empty, 0, shards);
+            assert!(agg.broadcast().is_empty(), "shards {shards}");
+            assert!(agg.dense().iter().all(|&v| v == 0.0), "shards {shards}");
+            assert_eq!(agg.comm, before, "an empty round moves no bytes (shards {shards})");
+        }
+    }
+
+    #[test]
+    fn sharded_merge_rejects_out_of_range_indices() {
+        let r = std::panic::catch_unwind(|| {
+            let mut agg = Aggregator::new(4);
+            let bad = msg(vec![1, 9], vec![1.0, 1.0]);
+            let batch = vec![(1.0f32, &bad)];
+            agg.merge_sharded(&batch, 1, 2);
+        });
+        assert!(r.is_err(), "out-of-range index must panic, not be dropped");
     }
 }

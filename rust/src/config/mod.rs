@@ -140,6 +140,13 @@ pub struct TrainConfig {
     /// and intra-GEMM threads combined); 0 = auto (machine parallelism,
     /// `REGTOPK_THREADS` overridable).
     pub threads: usize,
+    /// Cluster executor: OS-thread lanes multiplexing the logical workers;
+    /// 0 = auto (`min(thread budget, workers)`).
+    pub lanes: usize,
+    /// Cluster executor: bounded-staleness window — max rounds a straggler
+    /// uplink may lag and still be merged (older uplinks are discarded,
+    /// their bytes still charged).
+    pub staleness: usize,
 }
 
 impl Default for TrainConfig {
@@ -160,6 +167,8 @@ impl Default for TrainConfig {
             artifacts_dir: "artifacts".into(),
             log_every: 10,
             threads: 0,
+            lanes: 0,
+            staleness: 2,
         }
     }
 }
@@ -230,6 +239,8 @@ impl TrainConfig {
             "artifacts_dir" => self.artifacts_dir = value.as_str()?,
             "log_every" => self.log_every = value.as_usize()?,
             "threads" => self.threads = value.as_usize()?,
+            "lanes" => self.lanes = value.as_usize()?,
+            "staleness" => self.staleness = value.as_usize()?,
             "lr_step_every" => {
                 let every = value.as_usize()?;
                 self.lr_schedule = match self.lr_schedule {
@@ -335,6 +346,18 @@ mod tests {
         assert!(cfg.apply_kv("model", &Value::Str("transformer".into())).is_err());
         assert_eq!(ModelKind::Conv.name(), "conv");
         assert_eq!(ModelKind::Mlp.name(), "mlp");
+    }
+
+    #[test]
+    fn cluster_keys_parse_with_sane_defaults() {
+        let mut cfg = TrainConfig::default();
+        assert_eq!(cfg.lanes, 0, "lanes default to auto");
+        assert_eq!(cfg.staleness, 2);
+        cfg.apply_kv("lanes", &Value::Int(6)).unwrap();
+        cfg.apply_kv("staleness", &Value::Int(4)).unwrap();
+        assert_eq!(cfg.lanes, 6);
+        assert_eq!(cfg.staleness, 4);
+        cfg.validate().unwrap();
     }
 
     #[test]

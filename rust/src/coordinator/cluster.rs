@@ -1,0 +1,727 @@
+//! Cluster executor: hundreds-to-thousands of *logical* workers
+//! multiplexed over a handful of OS-thread lanes, with deterministic
+//! fault injection ([`super::fault::FaultPlan`]) and survivor
+//! continuation.
+//!
+//! The threaded executor pins one OS thread per worker — the right model
+//! for N ≤ cores, hopeless for the N ∈ [256, 1024] regime the union-size
+//! analyses assume. Here each lane hosts a contiguous chunk of logical
+//! workers (ascending ids, so concatenating lane uplinks in lane order
+//! visits workers in ascending id order) and drives them sequentially per
+//! round over the same [`super::ring`] transport the threaded executor
+//! uses. With no faults injected, the round is bit-identical to the
+//! sequential executor at every lane count.
+//!
+//! # Survivor continuation
+//!
+//! Each logical worker runs a small state machine (`Alive`, `Busy` while
+//! a straggler uplink is in flight, `Dead`):
+//!
+//! * a **dead** worker contributes nothing and observes nothing; the
+//!   round completes on the survivors with ω_n renormalized over the
+//!   contributing set (exact configured weights when everyone
+//!   contributed, so the no-fault path stays bit-identical);
+//! * a **straggler** computes on time but its uplink arrives `d` rounds
+//!   late; the leader merges it iff its lag fits the bounded-staleness
+//!   window (`ClusterOpts::staleness`), otherwise the message is
+//!   discarded — either way its bytes are charged (it was transmitted);
+//! * a **re-admitted** worker resyncs: compressor state reset, the
+//!   current broadcast is its first observation;
+//! * if *every* worker is out, the round is a well-defined empty round
+//!   (empty broadcast, θ unchanged under SGD) — counted, not crashed.
+//!
+//! OS-lane death (a panicking gradient oracle) is still a hard error,
+//! exactly as on the threaded executor: simulated faults are injected,
+//! never inferred from infrastructure failures.
+
+use super::fault::FaultPlan;
+use super::ring::{ring_channel, RingReceiver, RingSender};
+use super::threaded::DoubleBuffer;
+use super::{IterStats, TrainResult};
+use crate::collective::Aggregator;
+use crate::config::TrainConfig;
+use crate::grad::WorkerGrad;
+use crate::metrics::CommStats;
+use crate::optim;
+use crate::sparsify::{SparseGrad, SparseView, Sparsifier, SparsifierKind};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+/// Same protocol bound as the threaded executor: at most `Observe{t}` +
+/// `Step{t+1}` (or `Stop`) queued per lane, one uplink batch in flight.
+const CMD_RING_CAP: usize = 2;
+const UPLINK_RING_CAP: usize = 2;
+
+/// Execution knobs orthogonal to the training config.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterOpts {
+    /// OS-thread lanes multiplexing the logical workers; 0 = auto
+    /// (`min(thread budget, workers)`).
+    pub lanes: usize,
+    /// J-range shards for the union merge; 0 = auto
+    /// ([`crate::tensor::pool::plan_merge_shards`] per round).
+    pub shards: usize,
+    /// Max rounds a straggler uplink may lag and still be merged.
+    pub staleness: usize,
+}
+
+impl Default for ClusterOpts {
+    fn default() -> Self {
+        ClusterOpts { lanes: 0, shards: 0, staleness: 2 }
+    }
+}
+
+impl ClusterOpts {
+    /// Pick up the config-file knobs (`lanes`, `staleness`).
+    pub fn from_config(cfg: &TrainConfig) -> Self {
+        ClusterOpts { lanes: cfg.lanes, shards: 0, staleness: cfg.staleness }
+    }
+}
+
+/// Result of a cluster run: the usual training result plus the fault
+/// bookkeeping and the exact per-round wire ledger.
+pub struct ClusterResult {
+    pub train: TrainResult,
+    /// Bytes-on-the-wire delta per round (`CommStats::since` snapshots) —
+    /// deterministic for a fixed (config, plan, opts).
+    pub ledger: Vec<CommStats>,
+    /// Late uplinks merged inside the staleness window.
+    pub merged_stale: u64,
+    /// Late uplinks discarded outside the window (bytes still charged).
+    pub discarded_stale: u64,
+    /// Rounds with zero contributors (broadcast empty, θ unchanged).
+    pub empty_rounds: u64,
+}
+
+/// One logical worker's slot in its lane's per-round uplink batch.
+#[derive(Clone, Default)]
+struct UpItem {
+    worker: u32,
+    /// Round the carried message was computed at (< the batch round for
+    /// straggler deliveries).
+    origin: u32,
+    /// Whether this slot carries a message this round.
+    contribute: bool,
+    /// Whether this worker receives the round's broadcast (alive and not
+    /// mid-straggle) — the downlink accounting multiplier. Wire loss
+    /// (`drop_broadcast`) does not clear it: the server transmits either
+    /// way, the worker just never hears it.
+    observer: bool,
+    loss: f64,
+    msg: SparseGrad,
+}
+
+/// Lane → leader batch: one persistent slot per hosted logical worker,
+/// ascending worker id. Double-buffered like every other payload.
+#[derive(Clone, Default)]
+struct LaneUplink {
+    items: Vec<UpItem>,
+}
+
+enum ToLane {
+    Step { t: usize, theta: Arc<Vec<f32>> },
+    Observe { t: usize, bcast: Arc<(Vec<u32>, Vec<f32>)> },
+    Stop,
+}
+
+struct FromLane {
+    batch: Arc<LaneUplink>,
+}
+
+struct LaneHandle {
+    tx: RingSender<ToLane>,
+    rx: RingReceiver<FromLane>,
+    join: thread::JoinHandle<()>,
+}
+
+/// Logical-worker lifecycle (executor view of the fault plan).
+#[derive(Clone, Copy)]
+enum WState {
+    Alive,
+    /// Straggling: the round-`origin` message is parked until round
+    /// `until`; the worker neither computes nor observes meanwhile.
+    Busy { until: usize, origin: usize },
+    Dead,
+}
+
+/// One logical worker hosted on a lane.
+struct Logical {
+    id: usize,
+    grad: Box<dyn WorkerGrad + Send>,
+    sparsifier: Box<dyn Sparsifier>,
+    state: WState,
+    /// Parked straggler message (+ its loss) while `Busy`.
+    held: SparseGrad,
+    held_loss: f64,
+}
+
+/// Advance one logical worker through round `t`, filling its uplink slot.
+/// Lifecycle transitions resolve at the top of the round, before any
+/// compute: a death cancels an in-flight straggler delivery; a
+/// re-admission resets the compressor so the coming broadcast is the
+/// worker's first observation (resync, no stale error feedback).
+fn step_worker(
+    lw: &mut Logical,
+    t: usize,
+    theta: &[f32],
+    plan: &FaultPlan,
+    gbuf: &mut [f32],
+    slot: &mut UpItem,
+) {
+    slot.worker = lw.id as u32;
+    slot.contribute = false;
+    if plan.dies_at(lw.id, t) {
+        lw.state = WState::Dead;
+        lw.held.clear();
+    } else if matches!(lw.state, WState::Dead) && plan.readmits_at(lw.id, t) {
+        lw.sparsifier.reset();
+        lw.state = WState::Alive;
+    }
+    match lw.state {
+        WState::Dead => {
+            slot.observer = false;
+        }
+        WState::Busy { until, origin } => {
+            if until <= t {
+                // The parked message finally arrives with this batch; the
+                // worker is back online (it observes this broadcast) and
+                // computes fresh again next round.
+                std::mem::swap(&mut slot.msg, &mut lw.held);
+                slot.loss = lw.held_loss;
+                slot.origin = origin as u32;
+                slot.contribute = true;
+                slot.observer = true;
+                lw.state = WState::Alive;
+            } else {
+                slot.observer = false;
+            }
+        }
+        WState::Alive => {
+            let loss = lw.grad.grad(t, theta, gbuf);
+            if let Some(d) = plan.straggle_delay(lw.id, t) {
+                lw.sparsifier.compress(gbuf, &mut lw.held);
+                lw.held_loss = loss;
+                lw.state = WState::Busy { until: t + d, origin: t };
+                slot.observer = false;
+            } else {
+                lw.sparsifier.compress(gbuf, &mut slot.msg);
+                slot.loss = loss;
+                slot.origin = t as u32;
+                slot.contribute = true;
+                slot.observer = true;
+            }
+        }
+    }
+}
+
+fn spawn_lane(
+    mut workers: Vec<Logical>,
+    dim: usize,
+    plan: Arc<FaultPlan>,
+    gemm_budget: usize,
+    miss_counter: Arc<AtomicU64>,
+) -> LaneHandle {
+    let hosted = workers.len();
+    let (tx_cmd, rx_cmd) = ring_channel::<ToLane>(CMD_RING_CAP);
+    let (tx_res, rx_res) = ring_channel::<FromLane>(UPLINK_RING_CAP);
+    let join = thread::spawn(move || {
+        crate::tensor::pool::set_thread_budget(gemm_budget);
+        let mut gbuf = vec![0.0f32; dim];
+        let mut bufs: DoubleBuffer<LaneUplink> =
+            DoubleBuffer::new(|| LaneUplink { items: vec![UpItem::default(); hosted] });
+        while let Ok(cmd) = rx_cmd.recv() {
+            match cmd {
+                ToLane::Step { t, theta } => {
+                    let batch = bufs.write(t);
+                    for (slot, lw) in batch.items.iter_mut().zip(workers.iter_mut()) {
+                        step_worker(lw, t, &theta, &plan, &mut gbuf, slot);
+                    }
+                    if tx_res.send(FromLane { batch: bufs.share(t) }).is_err() {
+                        break;
+                    }
+                }
+                ToLane::Observe { t, bcast } => {
+                    let view = SparseView::new(&bcast.0, &bcast.1);
+                    for lw in workers.iter_mut() {
+                        if matches!(lw.state, WState::Alive) && !plan.broadcast_lost(lw.id, t) {
+                            lw.sparsifier.observe(view);
+                        }
+                    }
+                }
+                ToLane::Stop => break,
+            }
+        }
+        miss_counter.fetch_add(bufs.misses(), Ordering::Relaxed);
+    });
+    LaneHandle { tx: tx_cmd, rx: rx_res, join }
+}
+
+/// Train under a fault plan on the cluster executor (module docs).
+pub fn train_cluster(
+    cfg: &TrainConfig,
+    theta0: Vec<f32>,
+    workers: Vec<Box<dyn WorkerGrad + Send>>,
+    plan: &FaultPlan,
+    copts: &ClusterOpts,
+    probe: &mut dyn FnMut(IterStats<'_>),
+) -> anyhow::Result<ClusterResult> {
+    anyhow::ensure!(workers.len() == cfg.workers, "worker count mismatch");
+    anyhow::ensure!(
+        plan.workers() == cfg.workers,
+        "fault plan covers {} workers, run has {}",
+        plan.workers(),
+        cfg.workers
+    );
+    anyhow::ensure!(
+        cfg.sparsifier != SparsifierKind::GlobalTopK,
+        "global_topk runs on the sequential genie executor"
+    );
+    let dim = theta0.len();
+    for (n, w) in workers.iter().enumerate() {
+        anyhow::ensure!(w.dim() == dim, "worker {n} dim {} != theta dim {dim}", w.dim());
+    }
+    let n_workers = cfg.workers;
+    let lanes = if copts.lanes == 0 {
+        cfg.thread_budget().min(n_workers).max(1)
+    } else {
+        copts.lanes.min(n_workers)
+    };
+    // The leader's own merge fan-out obeys the run budget too.
+    let _budget = crate::tensor::pool::budget_guard(cfg.thread_budget());
+    let omega64 = cfg.omega();
+    let omega: Vec<f32> = omega64.iter().map(|&w| w as f32).collect();
+    let sparsifiers = super::build_sparsifiers(cfg, dim);
+    let plan = Arc::new(plan.clone());
+    let lane_misses = Arc::new(AtomicU64::new(0));
+    let gemm_budget = (cfg.thread_budget() / lanes).max(1);
+    let mut logicals: Vec<Logical> = workers
+        .into_iter()
+        .zip(sparsifiers)
+        .enumerate()
+        .map(|(id, (grad, sparsifier))| Logical {
+            id,
+            grad,
+            sparsifier,
+            state: WState::Alive,
+            held: SparseGrad::default(),
+            held_loss: 0.0,
+        })
+        .collect();
+    // Contiguous ascending-id chunks: lane-order concatenation of the
+    // uplink batches is then exactly ascending worker order, preserving
+    // the serial executors' deterministic aggregation order.
+    let (base, rem) = (n_workers / lanes, n_workers % lanes);
+    let mut handles: Vec<LaneHandle> = Vec::with_capacity(lanes);
+    for l in 0..lanes {
+        let take = base + usize::from(l < rem);
+        let rest = logicals.split_off(take);
+        let chunk = std::mem::replace(&mut logicals, rest);
+        handles.push(spawn_lane(
+            chunk,
+            dim,
+            Arc::clone(&plan),
+            gemm_budget,
+            Arc::clone(&lane_misses),
+        ));
+    }
+    let mut optimizer = optim::build(cfg.optimizer, dim);
+    let mut agg = Aggregator::new(dim);
+    let mut theta = theta0;
+    let mut theta_bufs: DoubleBuffer<Vec<f32>> = DoubleBuffer::new(|| vec![0.0f32; dim]);
+    let mut union_bufs: DoubleBuffer<(Vec<u32>, Vec<f32>)> = DoubleBuffer::new(Default::default);
+    let mut lane_batches: Vec<Arc<LaneUplink>> = Vec::with_capacity(lanes);
+    let mut ledger: Vec<CommStats> = Vec::with_capacity(cfg.iters);
+    let (mut merged_stale, mut discarded_stale, mut empty_rounds) = (0u64, 0u64, 0u64);
+    let mut prev_comm = CommStats::default();
+    let mut result: anyhow::Result<()> = Ok(());
+    'outer: for t in 0..cfg.iters {
+        let lr = cfg.lr_schedule.at(cfg.lr, t);
+        theta_bufs.write(t).copy_from_slice(&theta);
+        for (l, h) in handles.iter().enumerate() {
+            if h.tx.send(ToLane::Step { t, theta: theta_bufs.share(t) }).is_err() {
+                result = Err(anyhow::anyhow!(
+                    "lane {l} died before receiving the iteration-{t} step broadcast"
+                ));
+                break 'outer;
+            }
+        }
+        lane_batches.clear();
+        for (l, h) in handles.iter().enumerate() {
+            match h.rx.recv() {
+                Ok(r) => lane_batches.push(r.batch),
+                Err(_) => {
+                    result = Err(anyhow::anyhow!(
+                        "lane {l} died before uplinking its iteration-{t} batch"
+                    ));
+                    break 'outer;
+                }
+            }
+        }
+        // Assemble the round's contribution set in ascending worker order,
+        // applying the bounded-staleness window. Discarded-stale messages
+        // were transmitted, so their bytes are charged by hand.
+        let mut contrib: Vec<&UpItem> = Vec::with_capacity(n_workers);
+        let mut receivers = 0usize;
+        let mut loss_sum = 0.0;
+        for lb in &lane_batches {
+            for item in &lb.items {
+                receivers += usize::from(item.observer);
+                if !item.contribute {
+                    continue;
+                }
+                let lag = t - item.origin as usize;
+                if lag > copts.staleness {
+                    discarded_stale += 1;
+                    agg.comm.uplink_values += item.msg.len() as u64;
+                    if item.msg.len() < dim {
+                        agg.comm.uplink_index_bits +=
+                            item.msg.len() as u64 * agg.index_bits();
+                    }
+                    continue;
+                }
+                if lag > 0 {
+                    merged_stale += 1;
+                }
+                loss_sum += item.loss;
+                contrib.push(item);
+            }
+        }
+        // ω over the contributing set: the configured weights verbatim
+        // when everyone contributed (bit-identity with the faultless
+        // executors — renormalizing would perturb the f32 rounding), else
+        // ω_n / Σ_live ω_m in f64, rounded once. A zero weight sum (all
+        // contributors configured at weight 0) degrades to weight 0 —
+        // deterministic and NaN-free.
+        let full = contrib.len() == n_workers;
+        let weight_sum: f64 = if full {
+            1.0
+        } else {
+            contrib.iter().map(|i| omega64[i.worker as usize]).sum()
+        };
+        let batch: Vec<(f32, &SparseGrad)> = contrib
+            .iter()
+            .map(|i| {
+                let w = if full {
+                    omega[i.worker as usize]
+                } else if weight_sum > 0.0 {
+                    (omega64[i.worker as usize] / weight_sum) as f32
+                } else {
+                    0.0
+                };
+                (w, &i.msg)
+            })
+            .collect();
+        if contrib.is_empty() {
+            empty_rounds += 1;
+        }
+        let shards = if copts.shards == 0 {
+            let entries: usize = batch.iter().map(|(_, m)| m.len()).sum();
+            crate::tensor::pool::plan_merge_shards(entries, dim)
+        } else {
+            copts.shards
+        };
+        agg.merge_sharded(&batch, receivers, shards);
+        ledger.push(agg.comm.since(&prev_comm));
+        prev_comm = agg.comm;
+        let (dense, bcast) = (agg.dense(), agg.broadcast());
+        let ub = union_bufs.write(t);
+        ub.0.clear();
+        ub.0.extend_from_slice(bcast.indices);
+        ub.1.clear();
+        ub.1.extend_from_slice(bcast.values);
+        for (l, h) in handles.iter().enumerate() {
+            if h.tx.send(ToLane::Observe { t, bcast: union_bufs.share(t) }).is_err() {
+                result = Err(anyhow::anyhow!(
+                    "lane {l} died after uplinking iteration {t}, before the broadcast"
+                ));
+                break 'outer;
+            }
+        }
+        optimizer.step(&mut theta, dense, lr);
+        let contributors = contrib.len();
+        drop(batch);
+        drop(contrib);
+        probe(IterStats {
+            t,
+            theta: &theta,
+            // Mean over the round's merged contributions; 0.0 on an empty
+            // round (nothing was measured).
+            mean_loss: if contributors > 0 { loss_sum / contributors as f64 } else { 0.0 },
+            agg: dense,
+            comm: &agg.comm,
+        });
+    }
+    for h in &handles {
+        let _ = h.tx.send(ToLane::Stop);
+    }
+    let mut panics: Vec<String> = Vec::new();
+    for (l, h) in handles.drain(..).enumerate() {
+        if let Err(payload) = h.join.join() {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic payload>".into());
+            panics.push(format!("lane {l} panicked: {msg}"));
+        }
+    }
+    match result {
+        Err(e) if !panics.is_empty() => return Err(anyhow::anyhow!("{e} ({})", panics.join("; "))),
+        Err(e) => return Err(e),
+        Ok(()) if !panics.is_empty() => {
+            return Err(anyhow::anyhow!("run finished but {}", panics.join("; ")))
+        }
+        Ok(()) => {}
+    }
+    let reuse_misses =
+        theta_bufs.misses() + union_bufs.misses() + lane_misses.load(Ordering::Relaxed);
+    Ok(ClusterResult {
+        train: TrainResult { theta, comm: agg.comm, iters: cfg.iters, reuse_misses },
+        ledger,
+        merged_stale,
+        discarded_stale,
+        empty_rounds,
+    })
+}
+
+/// Cluster-run report with optimality-gap tracking (linreg workloads).
+pub struct ClusterReport {
+    pub result: ClusterResult,
+    pub gap_curve: Vec<(usize, f64)>,
+}
+
+impl ClusterReport {
+    pub fn final_gap(&self) -> f64 {
+        self.gap_curve.last().map(|&(_, g)| g).unwrap_or(f64::NAN)
+    }
+}
+
+/// Run distributed linear regression on the cluster executor (the §5.1
+/// data model seeded by `cfg.seed`, like [`super::run_linreg_on`]).
+pub fn run_linreg_cluster(
+    cfg: &TrainConfig,
+    gen: &crate::data::linreg::LinRegGenConfig,
+    plan: &FaultPlan,
+    copts: &ClusterOpts,
+) -> anyhow::Result<ClusterReport> {
+    use crate::data::linreg::LinRegDataset;
+    use crate::grad::LinRegGrad;
+    use crate::rng::Pcg64;
+    anyhow::ensure!(gen.workers == cfg.workers && gen.dim == cfg.dim, "config mismatch");
+    let mut rng = Pcg64::new(cfg.seed, 0xDA7A);
+    let data = Arc::new(LinRegDataset::generate(gen, &mut rng));
+    let workers = LinRegGrad::all(&data);
+    let optimum = data.optimum.clone();
+    let mut gap_curve = Vec::new();
+    let log_every = cfg.log_every.max(1);
+    let result = train_cluster(
+        cfg,
+        vec![0.0f32; cfg.dim],
+        workers,
+        plan,
+        copts,
+        &mut |s: IterStats<'_>| {
+            if s.t % log_every == 0 || s.t + 1 == cfg.iters {
+                gap_curve.push((s.t, crate::tensor::dist2(s.theta, &optimum) as f64));
+            }
+        },
+    )?;
+    Ok(ClusterReport { result, gap_curve })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::k_for;
+    use crate::coordinator::{run_linreg, RunOpts};
+    use crate::data::linreg::LinRegGenConfig;
+
+    fn cfg(kind: SparsifierKind, workers: usize, dim: usize, iters: usize) -> TrainConfig {
+        TrainConfig {
+            workers,
+            dim,
+            sparsity: 0.5,
+            sparsifier: kind,
+            lr: 0.01,
+            iters,
+            seed: 11,
+            ..Default::default()
+        }
+    }
+
+    fn run_cluster(c: &TrainConfig, plan: &FaultPlan, copts: &ClusterOpts) -> ClusterReport {
+        let gen = LinRegGenConfig { workers: c.workers, dim: c.dim, ..Default::default() };
+        run_linreg_cluster(c, &gen, plan, copts).unwrap()
+    }
+
+    fn ledger_total(ledger: &[CommStats]) -> CommStats {
+        let mut sum = CommStats::default();
+        for round in ledger {
+            sum.add(round);
+        }
+        sum
+    }
+
+    #[test]
+    fn faultless_cluster_matches_sequential_bitwise() {
+        // The survivor-continuation machinery must vanish when no fault is
+        // injected: same θ bit-for-bit as the sequential executor at every
+        // lane count, with the per-round ledger summing to the run totals.
+        for kind in [
+            SparsifierKind::TopK,
+            SparsifierKind::RegTopK { mu: 1.0, y: 1.0 },
+            SparsifierKind::Dense,
+            SparsifierKind::Dgc { momentum: 0.9 },
+        ] {
+            let c = cfg(kind, 4, 12, 60);
+            let seq = run_linreg(&c, &RunOpts::default()).unwrap();
+            for lanes in [1, 3] {
+                let copts = ClusterOpts { lanes, ..Default::default() };
+                let clu = run_cluster(&c, &FaultPlan::none(4), &copts);
+                assert_eq!(
+                    seq.result.theta, clu.result.train.theta,
+                    "{kind:?} lanes={lanes}: executors must agree bit-for-bit"
+                );
+                assert_eq!(seq.result.comm, clu.result.train.comm, "{kind:?} lanes={lanes}");
+                assert_eq!(clu.result.train.reuse_misses, 0, "{kind:?} lanes={lanes}");
+                assert_eq!(clu.result.ledger.len(), c.iters);
+                assert_eq!(
+                    ledger_total(&clu.result.ledger),
+                    clu.result.train.comm,
+                    "{kind:?} lanes={lanes}: ledger must sum to the run totals"
+                );
+                assert_eq!(clu.result.empty_rounds, 0);
+                assert_eq!(clu.result.merged_stale, 0);
+                assert_eq!(clu.result.discarded_stale, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn uneven_lane_chunks_preserve_worker_order() {
+        // 9 workers over 4 lanes (chunks 3/2/2/2): lane-order concatenation
+        // must still visit workers in ascending id order, keeping the
+        // f32 aggregation order — and the result — bit-identical.
+        let mut c = cfg(SparsifierKind::RegTopK { mu: 1.0, y: 1.0 }, 9, 20, 50);
+        c.weights = vec![0.2, 0.15, 0.1, 0.1, 0.1, 0.1, 0.1, 0.1, 0.05];
+        let seq = run_linreg(&c, &RunOpts::default()).unwrap();
+        let copts = ClusterOpts { lanes: 4, ..Default::default() };
+        let clu = run_cluster(&c, &FaultPlan::none(9), &copts);
+        assert_eq!(seq.result.theta, clu.result.train.theta);
+        assert_eq!(seq.result.comm, clu.result.train.comm);
+    }
+
+    #[test]
+    fn churn_lifecycle_survivor_continuation_and_resync() {
+        // Satellite: kill worker 2 mid-run, continue on the survivors,
+        // re-admit it, and keep the comm ledger exact throughout. Worker 2
+        // contributes rounds 0..10 and 25..40 — every uplink byte is
+        // accounted for, nothing double-charged during the outage.
+        let c = cfg(SparsifierKind::RegTopK { mu: 1.0, y: 1.0 }, 4, 16, 40);
+        let plan = FaultPlan::none(4).kill(2, 10).readmit(2, 25);
+        let copts = ClusterOpts::default();
+        let a = run_cluster(&c, &plan, &copts);
+        let k = k_for(c.sparsity, c.dim) as u64;
+        let messages = 3 * 40 + (10 + 15); // survivors full-run, worker 2 churned
+        assert_eq!(a.result.train.comm.uplink_values, k * messages);
+        assert_eq!(a.result.empty_rounds, 0);
+        assert_eq!(a.result.merged_stale, 0);
+        assert_eq!(a.result.discarded_stale, 0);
+        assert_eq!(a.result.ledger.len(), 40);
+        assert_eq!(ledger_total(&a.result.ledger), a.result.train.comm);
+        assert!(a.result.train.theta.iter().all(|v| v.is_finite()));
+        let first = a.gap_curve.first().unwrap().1;
+        assert!(a.final_gap() < first, "survivors must keep converging: {first} -> {}", a.final_gap());
+        // Same seed, same plan -> same θ, same ledger (two-run determinism).
+        let b = run_cluster(&c, &plan, &copts);
+        assert_eq!(a.result.train.theta, b.result.train.theta);
+        assert_eq!(a.result.ledger, b.result.ledger);
+        assert_eq!(a.gap_curve, b.gap_curve);
+        // The faults must actually have changed the trajectory.
+        let clean = run_cluster(&c, &FaultPlan::none(4), &copts);
+        assert_ne!(clean.result.train.theta, a.result.train.theta);
+    }
+
+    #[test]
+    fn straggler_uplinks_respect_the_staleness_window() {
+        let c = cfg(SparsifierKind::TopK, 3, 12, 20);
+        let k = k_for(c.sparsity, c.dim) as u64;
+        let copts = ClusterOpts { staleness: 2, ..Default::default() };
+        // Lag 2 ≤ window: merged. Worker 1 computes rounds {0..5} ∪ {8..20}.
+        let merged = run_cluster(&c, &FaultPlan::none(3).straggle(1, 5, 2), &copts);
+        assert_eq!(merged.result.merged_stale, 1);
+        assert_eq!(merged.result.discarded_stale, 0);
+        assert_eq!(merged.result.train.comm.uplink_values, k * (2 * 20 + 18));
+        // Lag 5 > window: discarded, but the transmission is still charged.
+        // Worker 1 computes rounds {0..5} ∪ {11..20} = 15 messages.
+        let dropped = run_cluster(&c, &FaultPlan::none(3).straggle(1, 5, 5), &copts);
+        assert_eq!(dropped.result.merged_stale, 0);
+        assert_eq!(dropped.result.discarded_stale, 1);
+        assert_eq!(dropped.result.train.comm.uplink_values, k * (2 * 20 + 15));
+        assert_eq!(ledger_total(&dropped.result.ledger), dropped.result.train.comm);
+        // A wider window turns the same plan's discard into a merge.
+        let wide = ClusterOpts { staleness: 5, ..Default::default() };
+        let kept = run_cluster(&c, &FaultPlan::none(3).straggle(1, 5, 5), &wide);
+        assert_eq!(kept.result.merged_stale, 1);
+        assert_eq!(kept.result.discarded_stale, 0);
+    }
+
+    #[test]
+    fn all_dead_rounds_are_empty_and_training_survives() {
+        // Satellite audit at executor level: every worker out in rounds
+        // 5..8 — empty broadcast, θ frozen, zero bytes, no NaN, and
+        // training resumes after mass re-admission.
+        let mut c = cfg(SparsifierKind::TopK, 2, 10, 12);
+        c.log_every = 1;
+        let plan = FaultPlan::none(2).kill(0, 5).kill(1, 5).readmit(0, 8).readmit(1, 8);
+        let r = run_cluster(&c, &plan, &ClusterOpts::default());
+        assert_eq!(r.result.empty_rounds, 3);
+        assert!(r.result.train.theta.iter().all(|v| v.is_finite()));
+        // θ (hence the gap) is unchanged across the empty rounds 5..8.
+        let gap: Vec<f64> = r.gap_curve.iter().map(|&(_, g)| g).collect();
+        assert_eq!(gap[4], gap[5]);
+        assert_eq!(gap[5], gap[6]);
+        assert_eq!(gap[6], gap[7]);
+        assert_ne!(gap[8], gap[7], "training must resume after re-admission");
+        for t in 5..8 {
+            assert_eq!(r.result.ledger[t].total_bytes(), 0, "round {t} moves no bytes");
+        }
+        assert!(r.result.ledger[8].total_bytes() > 0);
+    }
+
+    #[test]
+    fn lost_broadcasts_change_the_trajectory_but_not_the_uplink() {
+        // drop_broadcast is wire loss: the server still transmits to every
+        // live worker and every worker still uplinks k entries per round,
+        // so the uplink charge is identical to the clean run — but the
+        // disturbed REGTOP-k posteriors pick different supports, so θ (and
+        // possibly the union sizes) diverge.
+        let c = cfg(SparsifierKind::RegTopK { mu: 1.0, y: 1.0 }, 3, 12, 30);
+        let copts = ClusterOpts::default();
+        let clean = run_cluster(&c, &FaultPlan::none(3), &copts);
+        let lossy = run_cluster(&c, &FaultPlan::lossy_broadcast(3, 30, 0.4, 7), &copts);
+        assert_eq!(
+            clean.result.train.comm.uplink_values,
+            lossy.result.train.comm.uplink_values
+        );
+        assert_eq!(
+            clean.result.train.comm.uplink_index_bits,
+            lossy.result.train.comm.uplink_index_bits
+        );
+        assert_ne!(clean.result.train.theta, lossy.result.train.theta);
+    }
+
+    #[test]
+    fn plan_size_mismatch_and_genie_are_rejected() {
+        let c = cfg(SparsifierKind::TopK, 4, 12, 5);
+        let gen = LinRegGenConfig { workers: 4, dim: 12, ..Default::default() };
+        let bad_plan = FaultPlan::none(3);
+        assert!(run_linreg_cluster(&c, &gen, &bad_plan, &ClusterOpts::default()).is_err());
+        let genie = cfg(SparsifierKind::GlobalTopK, 4, 12, 5);
+        assert!(
+            run_linreg_cluster(&genie, &gen, &FaultPlan::none(4), &ClusterOpts::default())
+                .is_err()
+        );
+    }
+}

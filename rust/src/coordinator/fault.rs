@@ -1,0 +1,348 @@
+//! Deterministic fault injection for the cluster executor.
+//!
+//! A [`FaultPlan`] is a *precomputed, seeded schedule* of per-worker
+//! events — straggler delays, deaths, re-admissions, and broadcast losses
+//! — that the executor queries round by round. Precomputing (rather than
+//! drawing during the run) keeps the fault trace independent of execution
+//! order: the same plan replays bit-identically on any lane count, and a
+//! failing run can be reproduced from `(seed, config)` alone.
+//!
+//! Event semantics (enforced by [`super::cluster`]):
+//!
+//! * **straggle(w, t, d)** — worker `w` computes its round-`t` gradient on
+//!   time but the uplink arrives with round `t + d`. While in flight the
+//!   worker neither computes nor observes (it is busy/partitioned).
+//! * **kill(w, t)** — `w` drops out at the top of round `t`: no uplink,
+//!   no observes, any in-flight straggler message is lost.
+//! * **readmit(w, t)** — a dead `w` rejoins at the top of round `t` with
+//!   its compressor state reset; the round-`t` broadcast is its first
+//!   observation (resync from the current model, not from stale error
+//!   feedback).
+//! * **drop_broadcast(w, t)** — `w` misses the round-`t` broadcast
+//!   (REGTOP-k falls back to its TOP-k metric for that round).
+
+use crate::rng::Pcg64;
+
+/// Probabilities and magnitudes for [`FaultPlan::generate`].
+#[derive(Clone, Debug)]
+pub struct FaultConfig {
+    /// Seed of the generated plan (independent of the training seed).
+    pub seed: u64,
+    /// Per-(live worker, round) straggle probability.
+    pub p_straggle: f64,
+    /// Straggle delays are drawn uniformly from `1..=max_straggle` rounds.
+    pub max_straggle: usize,
+    /// Per-(live worker, round) death probability. Worker 0 is exempt so
+    /// a generated plan always keeps at least one survivor.
+    pub p_death: f64,
+    /// A dead worker stays down `1..=max_down` rounds before re-admission.
+    pub max_down: usize,
+    /// Per-(live worker, round) broadcast-loss probability.
+    pub p_bcast_loss: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 0,
+            p_straggle: 0.0,
+            max_straggle: 2,
+            p_death: 0.0,
+            max_down: 20,
+            p_bcast_loss: 0.0,
+        }
+    }
+}
+
+/// One worker's event schedule, each list sorted by round.
+#[derive(Clone, Debug, Default)]
+struct WorkerFaults {
+    deaths: Vec<u32>,
+    readmits: Vec<u32>,
+    /// (round, delay in rounds ≥ 1).
+    straggles: Vec<(u32, u32)>,
+    bcast_loss: Vec<u32>,
+}
+
+/// Seeded, deterministic per-worker fault schedule (module docs).
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    workers: Vec<WorkerFaults>,
+}
+
+fn insert_round(v: &mut Vec<u32>, t: u32) {
+    if let Err(pos) = v.binary_search(&t) {
+        v.insert(pos, t);
+    }
+}
+
+impl FaultPlan {
+    /// The faultless plan for `workers` workers.
+    pub fn none(workers: usize) -> Self {
+        FaultPlan { workers: vec![WorkerFaults::default(); workers] }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Whether the plan contains no events at all.
+    pub fn is_empty(&self) -> bool {
+        self.workers.iter().all(|w| {
+            w.deaths.is_empty()
+                && w.readmits.is_empty()
+                && w.straggles.is_empty()
+                && w.bcast_loss.is_empty()
+        })
+    }
+
+    /// Schedule worker `w` to die at the top of round `t` (builder).
+    pub fn kill(mut self, w: usize, t: usize) -> Self {
+        insert_round(&mut self.workers[w].deaths, t as u32);
+        self
+    }
+
+    /// Schedule a dead worker `w` to rejoin at the top of round `t`.
+    pub fn readmit(mut self, w: usize, t: usize) -> Self {
+        insert_round(&mut self.workers[w].readmits, t as u32);
+        self
+    }
+
+    /// Delay worker `w`'s round-`t` uplink by `delay ≥ 1` rounds.
+    pub fn straggle(mut self, w: usize, t: usize, delay: usize) -> Self {
+        let s = &mut self.workers[w].straggles;
+        if let Err(pos) = s.binary_search_by_key(&(t as u32), |&(r, _)| r) {
+            s.insert(pos, (t as u32, delay.max(1) as u32));
+        }
+        self
+    }
+
+    /// Make worker `w` miss the round-`t` broadcast.
+    pub fn drop_broadcast(mut self, w: usize, t: usize) -> Self {
+        insert_round(&mut self.workers[w].bcast_loss, t as u32);
+        self
+    }
+
+    pub fn dies_at(&self, w: usize, t: usize) -> bool {
+        self.workers[w].deaths.binary_search(&(t as u32)).is_ok()
+    }
+
+    pub fn readmits_at(&self, w: usize, t: usize) -> bool {
+        self.workers[w].readmits.binary_search(&(t as u32)).is_ok()
+    }
+
+    /// Straggle delay for worker `w`'s round-`t` compute, if scheduled.
+    pub fn straggle_delay(&self, w: usize, t: usize) -> Option<usize> {
+        let s = &self.workers[w].straggles;
+        s.binary_search_by_key(&(t as u32), |&(r, _)| r).ok().map(|pos| s[pos].1 as usize)
+    }
+
+    pub fn broadcast_lost(&self, w: usize, t: usize) -> bool {
+        self.workers[w].bcast_loss.binary_search(&(t as u32)).is_ok()
+    }
+
+    /// Generate a random plan by walking each worker's lifecycle with its
+    /// own split PRNG stream (per-worker streams keep the plan for worker
+    /// `w` independent of how many other workers exist). Deaths schedule
+    /// their own re-admission `1..=max_down` rounds later; a dead worker
+    /// draws nothing until it rejoins. Worker 0 never dies, so the live
+    /// set is never empty by construction (the executor still handles the
+    /// empty round — hand-built plans can create one).
+    pub fn generate(workers: usize, iters: usize, cfg: &FaultConfig) -> Self {
+        let mut plan = FaultPlan::none(workers);
+        let mut root = Pcg64::new(cfg.seed, 0xFA_17);
+        for w in 0..workers {
+            let mut rng = root.split(w as u64);
+            let mut down_until = 0usize; // worker is dead for t < down_until
+            let mut dead = false;
+            for t in 0..iters {
+                let mut rejoining = false;
+                if dead {
+                    if t >= down_until {
+                        plan = plan.readmit(w, t);
+                        dead = false;
+                        rejoining = true;
+                    } else {
+                        continue;
+                    }
+                }
+                // No death draw on the re-admission round itself: the
+                // executor resolves a same-round kill+readmit as a kill,
+                // which would shadow the rejoin and break alternation.
+                if !rejoining && w != 0 && cfg.p_death > 0.0 && rng.f64() < cfg.p_death {
+                    plan = plan.kill(w, t);
+                    dead = true;
+                    down_until = t + 1 + rng.below(cfg.max_down.max(1) as u64) as usize;
+                    continue;
+                }
+                if cfg.p_straggle > 0.0 && rng.f64() < cfg.p_straggle {
+                    let d = 1 + rng.below(cfg.max_straggle.max(1) as u64) as usize;
+                    plan = plan.straggle(w, t, d);
+                }
+                if cfg.p_bcast_loss > 0.0 && rng.f64() < cfg.p_bcast_loss {
+                    plan = plan.drop_broadcast(w, t);
+                }
+            }
+        }
+        plan
+    }
+
+    /// The legacy `experiments::robustness` lossy-broadcast model as a
+    /// plan: one draw per (round, worker) — rounds outer, workers inner —
+    /// from `Pcg64::new(seed ^ 0x1055, 3)`, dropping the broadcast when
+    /// the draw lands below `p_loss`. This reproduces the historical
+    /// sweep's RNG sequence exactly (a regression test pins the final
+    /// gaps bit-for-bit), so existing robustness CSVs stay comparable.
+    pub fn lossy_broadcast(workers: usize, iters: usize, p_loss: f64, seed: u64) -> Self {
+        let mut plan = FaultPlan::none(workers);
+        let mut net_rng = Pcg64::new(seed ^ 0x10_55, 3);
+        for t in 0..iters {
+            for w in 0..workers {
+                if net_rng.f64() < p_loss {
+                    plan = plan.drop_broadcast(w, t);
+                }
+            }
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_and_queries_roundtrip() {
+        let plan = FaultPlan::none(3)
+            .kill(1, 5)
+            .readmit(1, 9)
+            .straggle(2, 3, 2)
+            .drop_broadcast(0, 4);
+        assert_eq!(plan.workers(), 3);
+        assert!(!plan.is_empty());
+        assert!(plan.dies_at(1, 5));
+        assert!(!plan.dies_at(1, 4));
+        assert!(!plan.dies_at(0, 5));
+        assert!(plan.readmits_at(1, 9));
+        assert_eq!(plan.straggle_delay(2, 3), Some(2));
+        assert_eq!(plan.straggle_delay(2, 4), None);
+        assert!(plan.broadcast_lost(0, 4));
+        assert!(!plan.broadcast_lost(0, 5));
+        assert!(FaultPlan::none(2).is_empty());
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_seed_sensitive() {
+        let cfg = FaultConfig {
+            seed: 7,
+            p_straggle: 0.2,
+            max_straggle: 3,
+            p_death: 0.05,
+            max_down: 10,
+            p_bcast_loss: 0.1,
+        };
+        let trace = |plan: &FaultPlan, iters: usize| -> Vec<(usize, usize, u8, usize)> {
+            let mut out = Vec::new();
+            for w in 0..plan.workers() {
+                for t in 0..iters {
+                    if plan.dies_at(w, t) {
+                        out.push((w, t, 0, 0));
+                    }
+                    if plan.readmits_at(w, t) {
+                        out.push((w, t, 1, 0));
+                    }
+                    if let Some(d) = plan.straggle_delay(w, t) {
+                        out.push((w, t, 2, d));
+                    }
+                    if plan.broadcast_lost(w, t) {
+                        out.push((w, t, 3, 0));
+                    }
+                }
+            }
+            out
+        };
+        let a = FaultPlan::generate(16, 200, &cfg);
+        let b = FaultPlan::generate(16, 200, &cfg);
+        assert_eq!(trace(&a, 200), trace(&b, 200), "same seed, same plan");
+        let c = FaultPlan::generate(16, 200, &FaultConfig { seed: 8, ..cfg });
+        assert_ne!(trace(&a, 200), trace(&c, 200), "different seed, different plan");
+        assert!(!a.is_empty(), "these rates produce events over 16×200 draws");
+    }
+
+    #[test]
+    fn generated_lifecycle_is_consistent() {
+        // Deaths and re-admissions must alternate per worker, starting
+        // with a death, and worker 0 must never die.
+        let cfg = FaultConfig {
+            seed: 3,
+            p_death: 0.1,
+            max_down: 5,
+            ..Default::default()
+        };
+        let plan = FaultPlan::generate(8, 300, &cfg);
+        assert!(plan.workers[0].deaths.is_empty(), "worker 0 is the guaranteed survivor");
+        for w in 0..8 {
+            let f = &plan.workers[w];
+            let n = f.deaths.len();
+            assert!(
+                f.readmits.len() == n || f.readmits.len() == n.saturating_sub(1),
+                "worker {w}"
+            );
+            for i in 0..f.readmits.len() {
+                assert!(f.deaths[i] < f.readmits[i], "worker {w}: readmit after death");
+                if i + 1 < f.deaths.len() {
+                    assert!(f.readmits[i] < f.deaths[i + 1], "worker {w}: alternation");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dead_workers_schedule_no_events() {
+        let cfg = FaultConfig {
+            seed: 11,
+            p_straggle: 0.5,
+            p_death: 0.2,
+            max_down: 8,
+            p_bcast_loss: 0.5,
+            ..Default::default()
+        };
+        let plan = FaultPlan::generate(6, 200, &cfg);
+        for w in 1..6 {
+            let f = plan.workers[w].clone();
+            for (i, &d) in f.deaths.iter().enumerate() {
+                let until = f.readmits.get(i).copied().unwrap_or(u32::MAX);
+                for t in (d as usize + 1)..(until.min(200) as usize) {
+                    assert!(
+                        plan.straggle_delay(w, t).is_none() && !plan.broadcast_lost(w, t),
+                        "worker {w} is dead in round {t}, nothing may be scheduled"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lossy_broadcast_matches_legacy_rng_sequence() {
+        // The plan must reproduce the historical robustness sweep's draws:
+        // Pcg64::new(seed ^ 0x1055, 3), rounds outer / workers inner,
+        // observe iff draw >= p_loss.
+        let (workers, iters, p, seed) = (5, 40, 0.3, 9u64);
+        let plan = FaultPlan::lossy_broadcast(workers, iters, p, seed);
+        let mut rng = Pcg64::new(seed ^ 0x10_55, 3);
+        for t in 0..iters {
+            for w in 0..workers {
+                let observed = rng.f64() >= p;
+                assert_eq!(
+                    plan.broadcast_lost(w, t),
+                    !observed,
+                    "draw sequence diverged at (t={t}, w={w})"
+                );
+            }
+        }
+        // Edge rates.
+        assert!(FaultPlan::lossy_broadcast(3, 10, 0.0, 0).is_empty());
+        let all = FaultPlan::lossy_broadcast(3, 10, 1.0, 0);
+        assert!((0..3).all(|w| (0..10).all(|t| all.broadcast_lost(w, t))));
+    }
+}

@@ -18,8 +18,15 @@
 //!
 //! The genie-aided *global TOP-k* of §3.1 (infeasible in practice, used as
 //! the paper's reference policy) is in [`genie`].
+//!
+//! A third executor, [`cluster::train_cluster`], multiplexes hundreds of
+//! *logical* workers over a few OS-thread lanes and adds deterministic
+//! fault injection ([`fault::FaultPlan`]) with survivor continuation —
+//! bit-identical to the executors above when the plan is faultless.
 
 pub mod checkpoint;
+pub mod cluster;
+pub mod fault;
 pub mod genie;
 pub mod ring;
 pub mod threaded;
@@ -227,6 +234,7 @@ mod tests {
             artifacts_dir: "artifacts".into(),
             log_every: 10,
             threads: 0,
+            ..Default::default()
         }
     }
 

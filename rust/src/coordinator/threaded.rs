@@ -168,6 +168,9 @@ pub fn train_threaded(
     for (n, w) in workers.iter().enumerate() {
         anyhow::ensure!(w.dim() == dim, "worker {n} dim {} != theta dim {dim}", w.dim());
     }
+    // The leader's sharded union merge fans out on the shared pool under
+    // the same budget the workers split below (guard restores on exit).
+    let _budget = crate::tensor::pool::budget_guard(cfg.thread_budget());
     let omega: Vec<f32> = cfg.omega().iter().map(|&w| w as f32).collect();
     let sparsifiers = super::build_sparsifiers(cfg, dim);
     let uplink_misses = Arc::new(AtomicU64::new(0));
@@ -185,6 +188,7 @@ pub fn train_threaded(
     let mut theta = theta0;
     let mut theta_bufs: DoubleBuffer<Vec<f32>> = DoubleBuffer::new(|| vec![0.0f32; dim]);
     let mut union_bufs: DoubleBuffer<(Vec<u32>, Vec<f32>)> = DoubleBuffer::new(Default::default);
+    let mut uplinks: Vec<(f32, Arc<SparseGrad>)> = Vec::with_capacity(cfg.workers);
     let mut result: anyhow::Result<()> = Ok(());
     'outer: for t in 0..cfg.iters {
         let lr = cfg.lr_schedule.at(cfg.lr, t);
@@ -197,14 +201,16 @@ pub fn train_threaded(
                 break 'outer;
             }
         }
-        agg.begin();
         let mut loss_sum = 0.0;
-        // Collect in worker order for deterministic aggregation.
+        // Collect in worker order, then merge the whole round in one call:
+        // the J-range-sharded merge is bit-identical to the old per-message
+        // `add` loop (worker order is the aggregation order either way).
+        uplinks.clear();
         for (n, h) in handles.iter().enumerate() {
             match h.rx.recv() {
                 Ok(res) => {
                     loss_sum += res.loss;
-                    agg.add(omega[n], &res.msg);
+                    uplinks.push((omega[n], res.msg));
                 }
                 Err(_) => {
                     result = Err(anyhow::anyhow!(
@@ -214,7 +220,9 @@ pub fn train_threaded(
                 }
             }
         }
-        agg.finish(cfg.workers);
+        let entries: usize = uplinks.iter().map(|(_, m)| m.len()).sum();
+        let shards = crate::tensor::pool::plan_merge_shards(entries, dim);
+        agg.merge_sharded(&uplinks, cfg.workers, shards);
         let (dense, bcast) = (agg.dense(), agg.broadcast());
         // Ship only the union down the channels — O(N·k), not O(N·J) —
         // recycling the previous-previous round's buffers. A send failure

@@ -1,0 +1,181 @@
+//! Cluster-scale sweep — an extension beyond the paper.
+//!
+//! The paper's experiments stop at N = 20 workers; this harness sweeps the
+//! worker-count axis into the hundreds-to-thousands regime on the cluster
+//! executor, under a seeded fault plan (stragglers, worker churn, broadcast
+//! loss), and reports throughput plus the *exact* per-round wire ledger.
+//! Everything except wall-clock timing is deterministic for a fixed seed:
+//! two same-seed runs reproduce the ledger CSV byte for byte.
+//!
+//! `regtopk exp fig_scale` — CSVs: results/fig_scale.csv (summary; the
+//! trailing `iters_per_sec` column is machine-dependent) and
+//! results/fig_scale_ledger.csv (per-round bytes; fully deterministic).
+
+use super::fig3::paper_gen;
+use super::ExpOpts;
+use crate::config::TrainConfig;
+use crate::coordinator::cluster::{run_linreg_cluster, ClusterOpts, ClusterReport};
+use crate::coordinator::fault::{FaultConfig, FaultPlan};
+use crate::sparsify::SparsifierKind;
+
+/// The sweep's fault model: light but omnipresent — ~5% straggle rate
+/// (1–2 rounds), ~1% per-round death with re-admission within 10 rounds,
+/// ~5% broadcast loss. Seeded per worker count so every sweep point has
+/// its own reproducible plan.
+pub fn fault_config(workers: usize) -> FaultConfig {
+    FaultConfig {
+        seed: 0x5CA1 ^ workers as u64,
+        p_straggle: 0.05,
+        max_straggle: 2,
+        p_death: 0.01,
+        max_down: 10,
+        p_bcast_loss: 0.05,
+    }
+}
+
+/// One sweep point: REGTOP-k linreg at `workers` logical workers under the
+/// generated fault plan. Deterministic for fixed arguments.
+pub fn run_point(
+    workers: usize,
+    dim: usize,
+    points: usize,
+    iters: usize,
+) -> anyhow::Result<(ClusterReport, FaultPlan)> {
+    let cfg = TrainConfig {
+        workers,
+        dim,
+        sparsity: 0.25,
+        sparsifier: SparsifierKind::RegTopK { mu: 1.0, y: 1.0 },
+        lr: 0.01,
+        iters,
+        seed: 7,
+        ..Default::default()
+    };
+    let gen = paper_gen(workers, dim, points);
+    let plan = FaultPlan::generate(workers, iters, &fault_config(workers));
+    let report = run_linreg_cluster(&cfg, &gen, &plan, &ClusterOpts::from_config(&cfg))?;
+    Ok((report, plan))
+}
+
+pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
+    let (ns, dim, points, iters): (&[usize], usize, usize, usize) = if opts.fast {
+        (&[4, 16, 64, 256], 64, 20, 60)
+    } else {
+        (&[4, 16, 64, 256, 1024], 256, 100, 400)
+    };
+    let mut csv = String::from(
+        "workers,final_gap,uplink_bytes,downlink_bytes,total_bytes,\
+         merged_stale,discarded_stale,empty_rounds,iters_per_sec\n",
+    );
+    let mut ledger_csv = String::from(
+        "workers,round,uplink_values,uplink_index_bits,downlink_values,\
+         downlink_index_bits,bytes\n",
+    );
+    println!("cluster-scale sweep under faults (J = {dim}, {iters} iters)");
+    println!(
+        "{:<8} {:>10} {:>14} {:>8} {:>9} {:>7} {:>12}",
+        "workers", "final_gap", "total_bytes", "merged", "discarded", "empty", "iters/sec"
+    );
+    for &n in ns {
+        let t0 = std::time::Instant::now();
+        let (report, _plan) = run_point(n, dim, points, iters)?;
+        let elapsed = t0.elapsed().as_secs_f64();
+        let ips = iters as f64 / elapsed.max(1e-9);
+        let r = &report.result;
+        let comm = &r.train.comm;
+        println!(
+            "{n:<8} {:>10.3e} {:>14} {:>8} {:>9} {:>7} {ips:>12.1}",
+            report.final_gap(),
+            comm.total_bytes(),
+            r.merged_stale,
+            r.discarded_stale,
+            r.empty_rounds
+        );
+        csv.push_str(&format!(
+            "{n},{},{},{},{},{},{},{},{ips}\n",
+            report.final_gap(),
+            comm.uplink_bytes(),
+            comm.downlink_bytes(),
+            comm.total_bytes(),
+            r.merged_stale,
+            r.discarded_stale,
+            r.empty_rounds
+        ));
+        for (t, round) in r.ledger.iter().enumerate() {
+            ledger_csv.push_str(&format!(
+                "{n},{t},{},{},{},{},{}\n",
+                round.uplink_values,
+                round.uplink_index_bits,
+                round.downlink_values,
+                round.downlink_index_bits,
+                round.total_bytes()
+            ));
+        }
+    }
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let path = opts.path("fig_scale.csv");
+    std::fs::write(&path, csv)?;
+    println!("wrote {}", path.display());
+    let lpath = opts.path("fig_scale_ledger.csv");
+    std::fs::write(&lpath, ledger_csv)?;
+    println!("wrote {}", lpath.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::CommStats;
+
+    #[test]
+    fn scale_point_with_256_workers_is_deterministic_under_churn() {
+        // The acceptance bar: ≥ 256 logical workers complete a seeded run
+        // with injected stragglers + churn, and two same-seed runs agree on
+        // θ, the gap curve, and every per-round ledger entry.
+        let (a, plan_a) = run_point(256, 24, 10, 24).unwrap();
+        let (b, _plan_b) = run_point(256, 24, 10, 24).unwrap();
+        assert!(!plan_a.is_empty(), "these rates must inject faults at 256×24 draws");
+        assert!(a.result.train.theta.iter().all(|v| v.is_finite()));
+        assert_eq!(a.result.train.theta, b.result.train.theta);
+        assert_eq!(a.gap_curve, b.gap_curve);
+        assert_eq!(a.result.ledger, b.result.ledger);
+        assert_eq!(a.result.merged_stale, b.result.merged_stale);
+        assert_eq!(a.result.discarded_stale, b.result.discarded_stale);
+        assert_eq!(a.result.empty_rounds, b.result.empty_rounds);
+        // The ledger is exact: per-round deltas sum back to the run totals.
+        let mut sum = CommStats::default();
+        for round in &a.result.ledger {
+            sum.add(round);
+        }
+        assert_eq!(sum, a.result.train.comm);
+    }
+
+    #[test]
+    fn fast_sweep_reproduces_its_ledger_csv() {
+        // Two same-seed fast sweeps must write identical ledger CSVs (the
+        // summary CSV differs only in the trailing timing column).
+        let base = std::env::temp_dir().join("regtopk_test_fig_scale");
+        let read = |tag: &str| -> (String, String) {
+            let opts = ExpOpts {
+                out_dir: base.join(tag),
+                fast: true,
+                ..Default::default()
+            };
+            run(&opts).unwrap();
+            let summary = std::fs::read_to_string(opts.path("fig_scale.csv")).unwrap();
+            let ledger = std::fs::read_to_string(opts.path("fig_scale_ledger.csv")).unwrap();
+            (summary, ledger)
+        };
+        let (sum_a, led_a) = read("a");
+        let (sum_b, led_b) = read("b");
+        assert_eq!(led_a, led_b, "ledger CSV must be bit-reproducible");
+        let strip_timing = |csv: &str| -> Vec<String> {
+            csv.lines().map(|l| l.rsplit_once(',').unwrap().0.to_string()).collect()
+        };
+        assert_eq!(strip_timing(&sum_a), strip_timing(&sum_b));
+        // Header sanity + one row per sweep point.
+        assert!(sum_a.starts_with("workers,final_gap,"));
+        assert_eq!(sum_a.lines().count(), 1 + 4);
+        std::fs::remove_dir_all(&base).ok();
+    }
+}

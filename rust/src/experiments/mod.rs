@@ -14,6 +14,7 @@ pub mod table2;
 pub mod ablations;
 pub mod fig6;
 pub mod fig7;
+pub mod fig_scale;
 pub mod finetune;
 pub mod robustness;
 pub mod table1;
@@ -71,6 +72,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> anyhow::Result<()> {
         "table2" => table2::run(opts),
         "ablations" => ablations::run(opts),
         "robustness" => robustness::run(opts),
+        "fig_scale" => fig_scale::run(opts),
         "all" => {
             for id in ALL {
                 println!("\n=== experiment {id} ===");
@@ -85,5 +87,5 @@ pub fn run(id: &str, opts: &ExpOpts) -> anyhow::Result<()> {
 /// All experiment ids in paper order, plus the extension studies.
 pub const ALL: &[&str] = &[
     "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "table1", "table2", "ablations",
-    "robustness",
+    "robustness", "fig_scale",
 ];

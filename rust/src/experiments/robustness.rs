@@ -11,17 +11,19 @@
 
 use super::fig3::{paper_gen, Size};
 use super::ExpOpts;
-use crate::collective::Aggregator;
 use crate::config::TrainConfig;
-use crate::data::linreg::LinRegDataset;
-use crate::grad::LinRegGrad;
-use crate::optim;
-use crate::rng::Pcg64;
-use crate::sparsify::{SparseGrad, SparsifierKind};
-use std::sync::Arc;
+use crate::coordinator::cluster::{run_linreg_cluster, ClusterOpts};
+use crate::coordinator::fault::FaultPlan;
+use crate::sparsify::SparsifierKind;
 
 /// Run one policy with broadcasts independently dropped with probability
 /// `p_loss` per (worker, round). Returns the final optimality gap.
+///
+/// The sweep is expressed as a [`FaultPlan`] (`lossy_broadcast` replays
+/// the historical harness's RNG draw-for-draw) and executed on the
+/// cluster executor, which is bit-identical to the old inline loop for
+/// loss-only plans — a regression test below pins that identity against
+/// a verbatim copy of the legacy implementation.
 pub fn run_lossy(
     size: &Size,
     kind: SparsifierKind,
@@ -40,35 +42,9 @@ pub fn run_lossy(
         ..Default::default()
     };
     let gen = paper_gen(size.workers, size.dim, size.points);
-    let data = Arc::new(LinRegDataset::generate(&gen, &mut Pcg64::new(seed, 0xDA7A)));
-    let mut workers = LinRegGrad::all(&data);
-    let dim = size.dim;
-    let mut sparsifiers = crate::coordinator::build_sparsifiers(&cfg, dim);
-    let omega: Vec<f32> = cfg.omega().iter().map(|&w| w as f32).collect();
-    let mut optimizer = optim::build(cfg.optimizer, dim);
-    let mut agg = Aggregator::new(dim);
-    let mut theta = vec![0.0f32; dim];
-    let mut gbuf = vec![0.0f32; dim];
-    let mut msg = SparseGrad::default();
-    let mut net_rng = Pcg64::new(seed ^ 0x10_55, 3);
-    for t in 0..cfg.iters {
-        agg.begin();
-        for n in 0..cfg.workers {
-            workers[n].grad(t, &theta, &mut gbuf);
-            sparsifiers[n].compress(&gbuf, &mut msg);
-            agg.add(omega[n], &msg);
-        }
-        agg.finish(cfg.workers);
-        let (dense, bcast) = (agg.dense(), agg.broadcast());
-        for s in sparsifiers.iter_mut() {
-            // Lossy downlink: the worker misses this round's broadcast.
-            if net_rng.f64() >= p_loss {
-                s.observe(bcast);
-            }
-        }
-        optimizer.step(&mut theta, dense, cfg.lr_schedule.at(cfg.lr, t));
-    }
-    Ok(crate::tensor::dist2(&theta, &data.optimum) as f64)
+    let plan = FaultPlan::lossy_broadcast(size.workers, size.iters, p_loss, seed);
+    let report = run_linreg_cluster(&cfg, &gen, &plan, &ClusterOpts::default())?;
+    Ok(report.final_gap())
 }
 
 pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
@@ -98,9 +74,85 @@ pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collective::Aggregator;
+    use crate::data::linreg::LinRegDataset;
+    use crate::grad::LinRegGrad;
+    use crate::optim;
+    use crate::rng::Pcg64;
+    use crate::sparsify::SparseGrad;
+    use std::sync::Arc;
 
     fn small() -> Size {
         Size { workers: 6, dim: 24, points: 60, iters: 800 }
+    }
+
+    /// The harness as it existed before the FaultPlan rework, verbatim:
+    /// inline train loop, one `net_rng` draw per (round, worker) deciding
+    /// each observe. Kept only to pin the rework bit-for-bit.
+    fn run_lossy_legacy(
+        size: &Size,
+        kind: SparsifierKind,
+        sparsity: f64,
+        p_loss: f64,
+        seed: u64,
+    ) -> f64 {
+        let cfg = TrainConfig {
+            workers: size.workers,
+            dim: size.dim,
+            sparsity,
+            sparsifier: kind,
+            lr: 0.01,
+            iters: size.iters,
+            seed,
+            ..Default::default()
+        };
+        let gen = paper_gen(size.workers, size.dim, size.points);
+        let data = Arc::new(LinRegDataset::generate(&gen, &mut Pcg64::new(seed, 0xDA7A)));
+        let mut workers = LinRegGrad::all(&data);
+        let dim = size.dim;
+        let mut sparsifiers = crate::coordinator::build_sparsifiers(&cfg, dim);
+        let omega: Vec<f32> = cfg.omega().iter().map(|&w| w as f32).collect();
+        let mut optimizer = optim::build(cfg.optimizer, dim);
+        let mut agg = Aggregator::new(dim);
+        let mut theta = vec![0.0f32; dim];
+        let mut gbuf = vec![0.0f32; dim];
+        let mut msg = SparseGrad::default();
+        let mut net_rng = Pcg64::new(seed ^ 0x10_55, 3);
+        for t in 0..cfg.iters {
+            agg.begin();
+            for n in 0..cfg.workers {
+                workers[n].grad(t, &theta, &mut gbuf);
+                sparsifiers[n].compress(&gbuf, &mut msg);
+                agg.add(omega[n], &msg);
+            }
+            agg.finish(cfg.workers);
+            let (dense, bcast) = (agg.dense(), agg.broadcast());
+            for s in sparsifiers.iter_mut() {
+                if net_rng.f64() >= p_loss {
+                    s.observe(bcast);
+                }
+            }
+            optimizer.step(&mut theta, dense, cfg.lr_schedule.at(cfg.lr, t));
+        }
+        crate::tensor::dist2(&theta, &data.optimum) as f64
+    }
+
+    #[test]
+    fn faultplan_rework_is_bit_identical_to_legacy_sweep() {
+        // Satellite regression: the plan-driven sweep must reproduce the
+        // pre-rework results exactly (same RNG sequence, same aggregation
+        // order), so historical robustness CSVs remain valid.
+        let size = Size { workers: 5, dim: 20, points: 50, iters: 300 };
+        for kind in [SparsifierKind::TopK, SparsifierKind::RegTopK { mu: 1.0, y: 1.0 }] {
+            for p in [0.0, 0.3, 0.7, 1.0] {
+                let new = run_lossy(&size, kind, 0.6, p, 4).unwrap();
+                let old = run_lossy_legacy(&size, kind, 0.6, p, 4);
+                assert!(
+                    new.to_bits() == old.to_bits(),
+                    "{kind:?} p={p}: rework diverged from legacy ({new:e} vs {old:e})"
+                );
+            }
+        }
     }
 
     #[test]

@@ -36,9 +36,13 @@ fn run() -> anyhow::Result<()> {
 
 const USAGE: &str = "usage:
   regtopk exp <id|all> [--out DIR] [--fast] [--artifacts DIR] [--model conv|mlp]
-      ids: fig1 fig3 fig4 fig5 fig6 fig7 fig8 table1 table2 ablations robustness
+      ids: fig1 fig3 fig4 fig5 fig6 fig7 fig8 table1 table2 ablations robustness fig_scale
       --model picks the native image backend (default: conv — the residual CNN)
   regtopk train [--config FILE] [--set key=value ...] [--threaded]
+  regtopk train --cluster [--set key=value ...] [--p-straggle P] [--p-death P]
+      [--p-loss P] [--fault-seed N] [--shards N]
+      simulated-cluster run: logical workers over lanes (`--set lanes=N`,
+      `--set staleness=W`) with seeded fault injection and survivor continuation
   regtopk info [--artifacts DIR]";
 
 fn cmd_exp(args: &Args) -> anyhow::Result<()> {
@@ -86,6 +90,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cfg.lr,
         cfg.iters
     );
+    if args.flag("cluster") {
+        return cmd_train_cluster(args, &cfg);
+    }
     let opts = RunOpts { threaded: args.flag("threaded") };
     let report = run_linreg(&cfg, &opts)?;
     for &(t, gap) in report
@@ -100,6 +107,57 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         report.final_gap(),
         report.result.comm.uplink_bytes(),
         report.result.comm.downlink_bytes()
+    );
+    Ok(())
+}
+
+/// `train --cluster`: run on the simulated-cluster executor with a
+/// generated fault plan (probabilities from the CLI, plan seeded by
+/// `--fault-seed`, default: the training seed).
+fn cmd_train_cluster(args: &Args, cfg: &TrainConfig) -> anyhow::Result<()> {
+    use regtopk::coordinator::cluster::{run_linreg_cluster, ClusterOpts};
+    use regtopk::coordinator::fault::{FaultConfig, FaultPlan};
+    let fcfg = FaultConfig {
+        seed: args.opt_or("fault-seed", cfg.seed).map_err(|e| anyhow::anyhow!("{e}"))?,
+        p_straggle: args.opt_or("p-straggle", 0.0).map_err(|e| anyhow::anyhow!("{e}"))?,
+        p_death: args.opt_or("p-death", 0.0).map_err(|e| anyhow::anyhow!("{e}"))?,
+        p_bcast_loss: args.opt_or("p-loss", 0.0).map_err(|e| anyhow::anyhow!("{e}"))?,
+        ..Default::default()
+    };
+    let plan = FaultPlan::generate(cfg.workers, cfg.iters, &fcfg);
+    let mut copts = ClusterOpts::from_config(cfg);
+    copts.shards = args.opt_or("shards", 0).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "cluster: lanes={} staleness={} p_straggle={} p_death={} p_loss={}",
+        if copts.lanes == 0 { "auto".to_string() } else { copts.lanes.to_string() },
+        copts.staleness,
+        fcfg.p_straggle,
+        fcfg.p_death,
+        fcfg.p_bcast_loss
+    );
+    let gen = regtopk::data::linreg::LinRegGenConfig {
+        workers: cfg.workers,
+        dim: cfg.dim,
+        ..Default::default()
+    };
+    let report = run_linreg_cluster(cfg, &gen, &plan, &copts)?;
+    for &(t, gap) in report
+        .gap_curve
+        .iter()
+        .step_by((report.gap_curve.len() / 20).max(1))
+    {
+        println!("iter {t:>6}  gap {gap:.6e}");
+    }
+    let r = &report.result;
+    println!(
+        "final gap {:.6e}   uplink {} B   downlink {} B",
+        report.final_gap(),
+        r.train.comm.uplink_bytes(),
+        r.train.comm.downlink_bytes()
+    );
+    println!(
+        "faults: merged_stale={} discarded_stale={} empty_rounds={}",
+        r.merged_stale, r.discarded_stale, r.empty_rounds
     );
     Ok(())
 }

@@ -137,6 +137,25 @@ impl CommStats {
         self.downlink_values += other.downlink_values;
         self.downlink_index_bits += other.downlink_index_bits;
     }
+
+    /// Difference against an earlier snapshot of the same cumulative
+    /// counter — the per-round entry of a wire ledger. Panics (debug) if
+    /// `earlier` is not actually earlier.
+    pub fn since(&self, earlier: &CommStats) -> CommStats {
+        debug_assert!(
+            self.uplink_values >= earlier.uplink_values
+                && self.uplink_index_bits >= earlier.uplink_index_bits
+                && self.downlink_values >= earlier.downlink_values
+                && self.downlink_index_bits >= earlier.downlink_index_bits,
+            "snapshot order reversed"
+        );
+        CommStats {
+            uplink_values: self.uplink_values - earlier.uplink_values,
+            uplink_index_bits: self.uplink_index_bits - earlier.uplink_index_bits,
+            downlink_values: self.downlink_values - earlier.downlink_values,
+            downlink_index_bits: self.downlink_index_bits - earlier.downlink_index_bits,
+        }
+    }
 }
 
 /// Render a markdown-style table (used by the Table 1 / Table 2 harnesses).
@@ -229,6 +248,29 @@ mod tests {
         t.uplink_values = 1;
         s.add(&t);
         assert_eq!(s.uplink_values, 101);
+    }
+
+    #[test]
+    fn comm_stats_since_gives_per_round_delta() {
+        let earlier = CommStats {
+            uplink_values: 10,
+            uplink_index_bits: 70,
+            downlink_values: 20,
+            downlink_index_bits: 140,
+        };
+        let later = CommStats {
+            uplink_values: 15,
+            uplink_index_bits: 105,
+            downlink_values: 26,
+            downlink_index_bits: 182,
+        };
+        let d = later.since(&earlier);
+        assert_eq!(d.uplink_values, 5);
+        assert_eq!(d.uplink_index_bits, 35);
+        assert_eq!(d.downlink_values, 6);
+        assert_eq!(d.downlink_index_bits, 42);
+        // Delta of a snapshot against itself is empty.
+        assert_eq!(later.since(&later), CommStats::default());
     }
 
     #[test]

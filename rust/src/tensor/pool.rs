@@ -304,6 +304,27 @@ pub fn plan_fanout(rows: usize, work: usize) -> usize {
     budget.min(work / PAR_GRAIN_WORK).clamp(1, rows)
 }
 
+/// Minimum sparse-union entries per aggregation-merge shard before the
+/// sharded path pays off. A merge work unit (one scatter-add plus a dirty
+/// check through two cache-unfriendly indirections) is far heavier than a
+/// GEMM multiply-accumulate, so the grain sits well below
+/// [`PAR_GRAIN_WORK`]; per-shard cost also includes binary-searching every
+/// message, which the grain has to amortize.
+pub const MERGE_GRAIN_ENTRIES: usize = 8 * 1024;
+
+/// How many J-range shards a sharded union merge over `entries` total
+/// uplink entries should split into: bounded by the calling thread's
+/// budget, the per-shard entry grain, and `dim` (a shard needs at least
+/// one index). The merge is bitwise identical at every shard count, so
+/// this is purely a throughput decision.
+pub fn plan_merge_shards(entries: usize, dim: usize) -> usize {
+    let budget = thread_budget();
+    if budget <= 1 || dim <= 1 {
+        return 1;
+    }
+    budget.min(entries / MERGE_GRAIN_ENTRIES).clamp(1, dim)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -416,6 +437,23 @@ mod tests {
         });
         with_thread_budget(1, || {
             assert_eq!(plan_fanout(1 << 20, 1 << 30), 1);
+        });
+    }
+
+    #[test]
+    fn plan_merge_shards_respects_budget_grain_and_dim() {
+        with_thread_budget(8, || {
+            // Small unions stay serial.
+            assert_eq!(plan_merge_shards(MERGE_GRAIN_ENTRIES - 1, 1 << 20), 1);
+            // Huge unions cap at the budget.
+            assert_eq!(plan_merge_shards(1 << 30, 1 << 20), 8);
+            // Never more shards than indices.
+            assert_eq!(plan_merge_shards(1 << 30, 3), 3);
+            // Crossing the grain enables the second shard.
+            assert!(plan_merge_shards(2 * MERGE_GRAIN_ENTRIES, 1 << 20) >= 2);
+        });
+        with_thread_budget(1, || {
+            assert_eq!(plan_merge_shards(1 << 30, 1 << 20), 1);
         });
     }
 
