@@ -38,7 +38,7 @@ const VALUED: &[&str] = &[
     "config", "set", "out", "sparsifier", "mu", "y", "sparsity", "workers", "iters", "lr",
     "seed", "seeds", "dim", "k", "backend", "artifacts", "samples", "optimizer", "log-every",
     "model", "steps", "batch", "score-backend", "lanes", "staleness", "shards", "p-straggle",
-    "p-death", "p-loss", "fault-seed",
+    "p-death", "p-loss", "fault-seed", "resume", "crash-at", "curve-out",
 ];
 
 impl Args {

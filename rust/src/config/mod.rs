@@ -147,6 +147,21 @@ pub struct TrainConfig {
     /// uplink may lag and still be merged (older uplinks are discarded,
     /// their bytes still charged).
     pub staleness: usize,
+    /// Write a full-state snapshot every `snapshot_every` rounds
+    /// (0 = disabled).
+    pub snapshot_every: usize,
+    /// Directory snapshots are written to (`snap_<round>.rtkc`).
+    pub snapshot_dir: String,
+    /// Keep only the newest `snapshot_keep` snapshot files (0 = keep all).
+    pub snapshot_keep: usize,
+    /// Resume from this snapshot before training: a `.rtkc` file, or a
+    /// directory to pick the newest *valid* snapshot from (corrupt files
+    /// are skipped). Empty = fresh start.
+    pub resume: String,
+    /// Crash injection: hard-kill the process (exit code 13) after
+    /// completing round `crash_at` — after any due snapshot for that round
+    /// has persisted (0 = disabled). Exercises the recovery path end to end.
+    pub crash_at: usize,
 }
 
 impl Default for TrainConfig {
@@ -169,6 +184,11 @@ impl Default for TrainConfig {
             threads: 0,
             lanes: 0,
             staleness: 2,
+            snapshot_every: 0,
+            snapshot_dir: "snapshots".into(),
+            snapshot_keep: 3,
+            resume: String::new(),
+            crash_at: 0,
         }
     }
 }
@@ -241,6 +261,11 @@ impl TrainConfig {
             "threads" => self.threads = value.as_usize()?,
             "lanes" => self.lanes = value.as_usize()?,
             "staleness" => self.staleness = value.as_usize()?,
+            "snapshot_every" => self.snapshot_every = value.as_usize()?,
+            "snapshot_dir" => self.snapshot_dir = value.as_str()?,
+            "snapshot_keep" => self.snapshot_keep = value.as_usize()?,
+            "resume" => self.resume = value.as_str()?,
+            "crash_at" => self.crash_at = value.as_usize()?,
             "lr_step_every" => {
                 let every = value.as_usize()?;
                 self.lr_schedule = match self.lr_schedule {
@@ -273,6 +298,9 @@ impl TrainConfig {
         }
         if self.lr <= 0.0 {
             return Err(ConfigError::new("lr must be positive"));
+        }
+        if self.snapshot_every > 0 && self.snapshot_dir.is_empty() {
+            return Err(ConfigError::new("snapshot_every needs a snapshot_dir"));
         }
         if !self.weights.is_empty() {
             if self.weights.len() != self.workers {
@@ -358,6 +386,28 @@ mod tests {
         assert_eq!(cfg.lanes, 6);
         assert_eq!(cfg.staleness, 4);
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn snapshot_keys_parse_and_validate() {
+        let mut cfg = TrainConfig::default();
+        assert_eq!(cfg.snapshot_every, 0, "snapshots default off");
+        assert_eq!(cfg.snapshot_keep, 3);
+        assert!(cfg.resume.is_empty());
+        cfg.apply_kv("snapshot_every", &Value::Int(25)).unwrap();
+        cfg.apply_kv("snapshot_dir", &Value::Str("/tmp/snaps".into())).unwrap();
+        cfg.apply_kv("snapshot_keep", &Value::Int(5)).unwrap();
+        cfg.apply_kv("resume", &Value::Str("/tmp/snaps/snap_50.rtkc".into())).unwrap();
+        assert_eq!(cfg.crash_at, 0, "crash injection defaults off");
+        cfg.apply_kv("crash_at", &Value::Int(75)).unwrap();
+        assert_eq!(cfg.crash_at, 75);
+        assert_eq!(cfg.snapshot_every, 25);
+        assert_eq!(cfg.snapshot_dir, "/tmp/snaps");
+        assert_eq!(cfg.snapshot_keep, 5);
+        assert_eq!(cfg.resume, "/tmp/snaps/snap_50.rtkc");
+        cfg.validate().unwrap();
+        cfg.snapshot_dir.clear();
+        assert!(cfg.validate().is_err(), "snapshot cadence without a dir is a config error");
     }
 
     #[test]

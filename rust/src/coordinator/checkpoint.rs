@@ -1,21 +1,152 @@
-//! Training-state checkpointing: serialize/restore the global model (and
-//! optionally any flat auxiliary state such as optimizer moments) to a
-//! simple self-describing binary format, so long sweeps can resume and
-//! the finetune suite can persist its pretrained variants.
+//! Training-state checkpointing: serialize/restore named flat tensors to a
+//! self-describing, integrity-checked binary format, so long sweeps can
+//! resume and the finetune suite can persist its pretrained variants.
 //!
-//! Format (little-endian): magic "RTKC" | u32 version | u32 section count
-//! | per section: u32 name_len | name bytes | u64 f32 count | payload.
+//! Format v2 (little-endian):
+//!
+//! ```text
+//! magic "RTKC" | u32 version=2 | u32 section_count
+//! per section:
+//!   u32 name_len | name bytes | u8 kind | u64 elem_count | payload
+//!   | u32 section_crc            (CRC32 of name_len..payload)
+//! trailer: u32 file_crc          (CRC32 of everything before it)
+//! ```
+//!
+//! Section kinds: 0 = f32 (4 bytes/elem), 1 = u64 (8 bytes/elem),
+//! 2 = raw bytes. Every length field is validated against the remaining
+//! buffer before any allocation, so a corrupted or truncated file produces
+//! an error — never an attacker-controlled allocation, never a panic. The
+//! trailer CRC is checked first, which catches any single bit flip in the
+//! file before the structural parse even starts. Writes remain atomic
+//! (temp file + fsync + rename), so a crash mid-save leaves the previous
+//! file intact.
 
-use std::io::{Read, Write};
+use std::io::Write;
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"RTKC";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
-/// A named collection of flat f32 tensors.
+const KIND_F32: u8 = 0;
+const KIND_U64: u8 = 1;
+const KIND_BYTES: u8 = 2;
+
+/// CRC32 (IEEE 802.3, reflected polynomial 0xEDB88320) — written from
+/// scratch since the offline vendor set has no checksum crate.
+pub mod crc32 {
+    const fn build_table() -> [u32; 256] {
+        let mut table = [0u32; 256];
+        let mut i = 0;
+        while i < 256 {
+            let mut c = i as u32;
+            let mut k = 0;
+            while k < 8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+                k += 1;
+            }
+            table[i] = c;
+            i += 1;
+        }
+        table
+    }
+
+    static TABLE: [u32; 256] = build_table();
+
+    /// Continue a CRC32 over `bytes` (feed `of(..)` output back in to
+    /// checksum a stream incrementally).
+    pub fn update(crc: u32, bytes: &[u8]) -> u32 {
+        let mut c = crc ^ 0xFFFF_FFFF;
+        for &b in bytes {
+            c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        c ^ 0xFFFF_FFFF
+    }
+
+    /// CRC32 of a byte slice.
+    pub fn of(bytes: &[u8]) -> u32 {
+        update(0, bytes)
+    }
+}
+
+/// One typed tensor payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Section {
+    F32(Vec<f32>),
+    U64(Vec<u64>),
+    Bytes(Vec<u8>),
+}
+
+impl Section {
+    fn kind(&self) -> u8 {
+        match self {
+            Section::F32(_) => KIND_F32,
+            Section::U64(_) => KIND_U64,
+            Section::Bytes(_) => KIND_BYTES,
+        }
+    }
+
+    fn elems(&self) -> u64 {
+        match self {
+            Section::F32(v) => v.len() as u64,
+            Section::U64(v) => v.len() as u64,
+            Section::Bytes(v) => v.len() as u64,
+        }
+    }
+
+    /// Append the payload as little-endian bytes — one bulk copy per
+    /// section on little-endian hosts, a conversion loop elsewhere.
+    fn extend_payload(&self, buf: &mut Vec<u8>) {
+        match self {
+            Section::F32(v) => extend_le(buf, v, |x| x.to_le_bytes()),
+            Section::U64(v) => extend_le(buf, v, |x| x.to_le_bytes()),
+            Section::Bytes(v) => buf.extend_from_slice(v),
+        }
+    }
+
+    fn parse(kind: u8, payload: &[u8]) -> anyhow::Result<Section> {
+        Ok(match kind {
+            KIND_F32 => Section::F32(
+                payload
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            KIND_U64 => Section::U64(
+                payload
+                    .chunks_exact(8)
+                    .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+            KIND_BYTES => Section::Bytes(payload.to_vec()),
+            other => anyhow::bail!("unknown section kind {other}"),
+        })
+    }
+}
+
+/// Bulk little-endian serialization: on LE hosts the in-memory layout *is*
+/// the wire layout, so write the whole slice in one `extend_from_slice`
+/// instead of a per-value loop.
+fn extend_le<T: Copy, const N: usize>(buf: &mut Vec<u8>, data: &[T], to_le: impl Fn(T) -> [u8; N]) {
+    #[cfg(target_endian = "little")]
+    {
+        let _ = &to_le;
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+        };
+        buf.extend_from_slice(bytes);
+    }
+    #[cfg(not(target_endian = "little"))]
+    {
+        for &v in data {
+            buf.extend_from_slice(&to_le(v));
+        }
+    }
+}
+
+/// A named collection of typed flat tensors.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Checkpoint {
-    pub sections: Vec<(String, Vec<f32>)>,
+    pub sections: Vec<(String, Section)>,
 }
 
 impl Checkpoint {
@@ -24,78 +155,221 @@ impl Checkpoint {
     }
 
     pub fn add(&mut self, name: &str, data: &[f32]) -> &mut Self {
-        self.sections.push((name.to_string(), data.to_vec()));
+        self.sections.push((name.to_string(), Section::F32(data.to_vec())));
         self
     }
 
-    pub fn get(&self, name: &str) -> Option<&[f32]> {
-        self.sections.iter().find(|(n, _)| n == name).map(|(_, d)| d.as_slice())
+    pub fn add_u64(&mut self, name: &str, data: &[u64]) -> &mut Self {
+        self.sections.push((name.to_string(), Section::U64(data.to_vec())));
+        self
     }
 
-    /// Write to a file (atomic: temp + rename).
+    pub fn add_bytes(&mut self, name: &str, data: &[u8]) -> &mut Self {
+        self.sections.push((name.to_string(), Section::Bytes(data.to_vec())));
+        self
+    }
+
+    fn section(&self, name: &str) -> Option<&Section> {
+        self.sections.iter().find(|(n, _)| n == name).map(|(_, s)| s)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&[f32]> {
+        match self.section(name) {
+            Some(Section::F32(v)) => Some(v.as_slice()),
+            _ => None,
+        }
+    }
+
+    pub fn get_u64(&self, name: &str) -> Option<&[u64]> {
+        match self.section(name) {
+            Some(Section::U64(v)) => Some(v.as_slice()),
+            _ => None,
+        }
+    }
+
+    pub fn get_bytes(&self, name: &str) -> Option<&[u8]> {
+        match self.section(name) {
+            Some(Section::Bytes(v)) => Some(v.as_slice()),
+            _ => None,
+        }
+    }
+
+    /// f32 section or a structured error naming it.
+    pub fn require(&self, name: &str) -> anyhow::Result<&[f32]> {
+        self.get(name)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint missing f32 section `{name}`"))
+    }
+
+    /// f32 section with an exact expected length.
+    pub fn require_len(&self, name: &str, len: usize) -> anyhow::Result<&[f32]> {
+        let v = self.require(name)?;
+        anyhow::ensure!(
+            v.len() == len,
+            "checkpoint section `{name}` has {} elements, expected {len}",
+            v.len()
+        );
+        Ok(v)
+    }
+
+    pub fn require_u64(&self, name: &str) -> anyhow::Result<&[u64]> {
+        self.get_u64(name)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint missing u64 section `{name}`"))
+    }
+
+    /// Single-value u64 section (round counters, flags).
+    pub fn require_scalar(&self, name: &str) -> anyhow::Result<u64> {
+        let v = self.require_u64(name)?;
+        anyhow::ensure!(v.len() == 1, "checkpoint section `{name}` is not a scalar");
+        Ok(v[0])
+    }
+
+    pub fn require_bytes(&self, name: &str) -> anyhow::Result<&[u8]> {
+        self.get_bytes(name)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint missing byte section `{name}`"))
+    }
+
+    /// Serialize to the v2 wire format (sections + CRCs + trailer).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
+        for (name, section) in &self.sections {
+            let start = buf.len();
+            buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            buf.extend_from_slice(name.as_bytes());
+            buf.push(section.kind());
+            buf.extend_from_slice(&section.elems().to_le_bytes());
+            section.extend_payload(&mut buf);
+            let crc = crc32::of(&buf[start..]);
+            buf.extend_from_slice(&crc.to_le_bytes());
+        }
+        let crc = crc32::of(&buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        buf
+    }
+
+    /// Parse the v2 wire format. Every failure mode — truncation, bit
+    /// flips, implausible lengths, unknown kinds, trailing garbage — is an
+    /// error, never a panic or an oversized allocation.
+    pub fn from_bytes(buf: &[u8]) -> anyhow::Result<Checkpoint> {
+        anyhow::ensure!(buf.len() >= 16, "checkpoint too short ({} bytes)", buf.len());
+        let body = &buf[..buf.len() - 4];
+        let stored = u32::from_le_bytes(buf[buf.len() - 4..].try_into().unwrap());
+        let actual = crc32::of(body);
+        anyhow::ensure!(
+            stored == actual,
+            "checkpoint file checksum mismatch (stored {stored:#010x}, computed {actual:#010x})"
+        );
+        let mut cur = Cursor { buf: body, pos: 0 };
+        anyhow::ensure!(cur.take(4)? == MAGIC, "not a regtopk checkpoint");
+        let version = cur.u32()?;
+        anyhow::ensure!(
+            version == VERSION,
+            "unsupported checkpoint version {version} (expected {VERSION}; \
+             v1 files carry weights only and cannot seed a full-state resume)"
+        );
+        let count = cur.u32()? as usize;
+        anyhow::ensure!(count < 1_000_000, "implausible section count {count}");
+        let mut sections = Vec::with_capacity(count.min(1024));
+        for _ in 0..count {
+            let start = cur.pos;
+            let name_len = cur.u32()? as usize;
+            anyhow::ensure!(name_len < 4096, "implausible section name length {name_len}");
+            let name = std::str::from_utf8(cur.take(name_len)?)?.to_string();
+            let kind = cur.u8()?;
+            let elems = cur.u64()?;
+            let elem_size: u64 = match kind {
+                KIND_F32 => 4,
+                KIND_U64 => 8,
+                KIND_BYTES => 1,
+                other => anyhow::bail!("section `{name}`: unknown kind {other}"),
+            };
+            // Bound the untrusted length *before* allocating: the payload
+            // must fit in what remains of the file (checked in u64 so the
+            // element-count × size product cannot overflow usize either).
+            let payload_len = elems
+                .checked_mul(elem_size)
+                .filter(|&n| n <= cur.remaining() as u64)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "section `{name}` claims {elems} elements but only {} bytes remain",
+                        cur.remaining()
+                    )
+                })? as usize;
+            let payload = cur.take(payload_len)?;
+            let section = Section::parse(kind, payload)?;
+            let crc_actual = crc32::of(&cur.buf[start..cur.pos]);
+            let crc_stored = cur.u32()?;
+            anyhow::ensure!(
+                crc_stored == crc_actual,
+                "section `{name}` checksum mismatch \
+                 (stored {crc_stored:#010x}, computed {crc_actual:#010x})"
+            );
+            sections.push((name, section));
+        }
+        anyhow::ensure!(cur.remaining() == 0, "{} trailing bytes after sections", cur.remaining());
+        Ok(Checkpoint { sections })
+    }
+
+    /// Write to a file (atomic: temp + fsync + rename).
     pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
         let path = path.as_ref();
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
+        let bytes = self.to_bytes();
         let tmp = path.with_extension("tmp");
-        let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
-        w.write_all(MAGIC)?;
-        w.write_all(&VERSION.to_le_bytes())?;
-        w.write_all(&(self.sections.len() as u32).to_le_bytes())?;
-        for (name, data) in &self.sections {
-            w.write_all(&(name.len() as u32).to_le_bytes())?;
-            w.write_all(name.as_bytes())?;
-            w.write_all(&(data.len() as u64).to_le_bytes())?;
-            for v in data {
-                w.write_all(&v.to_le_bytes())?;
-            }
-        }
-        w.into_inner()?.sync_all()?;
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
         std::fs::rename(&tmp, path)?;
         Ok(())
     }
 
-    /// Load from a file.
+    /// Load and verify a file.
     pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Checkpoint> {
-        let mut r = std::io::BufReader::new(std::fs::File::open(path.as_ref())?);
-        let mut magic = [0u8; 4];
-        r.read_exact(&mut magic)?;
-        anyhow::ensure!(&magic == MAGIC, "not a regtopk checkpoint");
-        let version = read_u32(&mut r)?;
-        anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
-        let count = read_u32(&mut r)? as usize;
-        anyhow::ensure!(count < 1_000_000, "implausible section count");
-        let mut sections = Vec::with_capacity(count);
-        for _ in 0..count {
-            let name_len = read_u32(&mut r)? as usize;
-            anyhow::ensure!(name_len < 4096, "implausible name length");
-            let mut name = vec![0u8; name_len];
-            r.read_exact(&mut name)?;
-            let name = String::from_utf8(name)?;
-            let n = read_u64(&mut r)? as usize;
-            let mut bytes = vec![0u8; n * 4];
-            r.read_exact(&mut bytes)?;
-            let data = bytes
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
-            sections.push((name, data));
-        }
-        Ok(Checkpoint { sections })
+        let bytes = std::fs::read(path.as_ref())?;
+        Self::from_bytes(&bytes)
     }
 }
 
-fn read_u32(r: &mut impl Read) -> anyhow::Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
+/// Bounds-checked slice cursor: every read is validated against the
+/// remaining buffer, so no length field from the file can drive reads or
+/// allocations past it.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
 }
 
-fn read_u64(r: &mut impl Read) -> anyhow::Result<u64> {
-    let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
+impl<'a> Cursor<'a> {
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            n <= self.remaining(),
+            "checkpoint truncated: need {n} bytes at offset {}, have {}",
+            self.pos,
+            self.remaining()
+        );
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
 }
 
 #[cfg(test)]
@@ -109,16 +383,33 @@ mod tests {
     }
 
     #[test]
+    fn crc32_matches_reference_vector() {
+        // The standard IEEE check value.
+        assert_eq!(crc32::of(b"123456789"), 0xCBF4_3926);
+        // Incremental update equals one-shot.
+        let half = crc32::update(crc32::of(b"12345"), b"6789");
+        assert_eq!(half, 0xCBF4_3926);
+        assert_eq!(crc32::of(b""), 0);
+    }
+
+    #[test]
     fn roundtrip() {
         let mut c = Checkpoint::new();
         c.add("theta", &[1.0, -2.5, 3.25]);
         c.add("adam_m", &[0.0; 7]);
+        c.add_u64("round", &[42]);
+        c.add_bytes("meta/config", b"workers=3 dim=8");
         let path = tmpdir().join("a.rtkc");
         c.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(back, c);
         assert_eq!(back.get("theta").unwrap(), &[1.0, -2.5, 3.25]);
+        assert_eq!(back.require_scalar("round").unwrap(), 42);
+        assert_eq!(back.require_bytes("meta/config").unwrap(), b"workers=3 dim=8");
         assert!(back.get("missing").is_none());
+        // Typed getters refuse cross-kind access.
+        assert!(back.get_u64("theta").is_none());
+        assert!(back.get("round").is_none());
         std::fs::remove_file(path).ok();
     }
 
@@ -137,6 +428,89 @@ mod tests {
         std::fs::write(&path, b"not a checkpoint at all").unwrap();
         assert!(Checkpoint::load(&path).is_err());
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_version_1_files() {
+        // Hand-build a v1 file (no CRCs): it must be refused with an error,
+        // not misparsed — weights-only state cannot seed a full resume.
+        let mut v1 = Vec::new();
+        v1.extend_from_slice(b"RTKC");
+        v1.extend_from_slice(&1u32.to_le_bytes());
+        v1.extend_from_slice(&1u32.to_le_bytes());
+        v1.extend_from_slice(&5u32.to_le_bytes());
+        v1.extend_from_slice(b"theta");
+        v1.extend_from_slice(&2u64.to_le_bytes());
+        v1.extend_from_slice(&1.0f32.to_le_bytes());
+        v1.extend_from_slice(&2.0f32.to_le_bytes());
+        let err = Checkpoint::from_bytes(&v1).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("checksum") || msg.contains("version"), "{msg}");
+    }
+
+    #[test]
+    fn oversized_length_fields_error_without_allocating() {
+        // A corrupted element count near u64::MAX must be rejected by the
+        // bound check (and must not overflow into a small allocation).
+        let mut c = Checkpoint::new();
+        c.add("theta", &[1.0, 2.0, 3.0]);
+        let mut bytes = c.to_bytes();
+        // Section layout here: 12-byte header, then name_len(4) + "theta"(5)
+        // + kind(1) => elem count u64 at offset 12+10 = 22.
+        bytes[22..30].copy_from_slice(&u64::MAX.to_le_bytes());
+        // Re-seal both CRCs so only the length check can reject it.
+        let body_end = bytes.len() - 8;
+        let sec_crc = crc32::of(&bytes[12..body_end]);
+        bytes[body_end..body_end + 4].copy_from_slice(&sec_crc.to_le_bytes());
+        let file_end = bytes.len() - 4;
+        let file_crc = crc32::of(&bytes[..file_end]);
+        bytes[file_end..].copy_from_slice(&file_crc.to_le_bytes());
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("elements"), "{err:#}");
+    }
+
+    #[test]
+    fn every_single_byte_flip_is_detected() {
+        // The corruption property test: flip each byte of a small v2 file
+        // in turn; every variant must fail with an error (CRC32 detects all
+        // single-byte errors) — never panic, never load silently.
+        let mut c = Checkpoint::new();
+        c.add("theta", &[0.5, -1.5]);
+        c.add_u64("round", &[9]);
+        let bytes = c.to_bytes();
+        for offset in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[offset] ^= 0xFF;
+            assert!(
+                Checkpoint::from_bytes(&bad).is_err(),
+                "flip at offset {offset} of {} loaded silently",
+                bytes.len()
+            );
+        }
+        // And through the file path too.
+        let path = tmpdir().join("flip.rtkc");
+        let mut bad = bytes.clone();
+        let mid = bytes.len() / 2;
+        bad[mid] ^= 0x01;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn every_truncation_is_detected() {
+        let mut c = Checkpoint::new();
+        c.add("theta", &[0.5, -1.5, 2.25]);
+        c.add_bytes("meta", b"x");
+        let bytes = c.to_bytes();
+        for len in 0..bytes.len() {
+            assert!(
+                Checkpoint::from_bytes(&bytes[..len]).is_err(),
+                "truncation to {len} of {} loaded silently",
+                bytes.len()
+            );
+        }
+        assert!(Checkpoint::from_bytes(&bytes).is_ok());
     }
 
     #[test]

@@ -34,10 +34,11 @@
 //! exactly as on the threaded executor: simulated faults are injected,
 //! never inferred from infrastructure failures.
 
+use super::checkpoint::Checkpoint;
 use super::fault::FaultPlan;
 use super::ring::{ring_channel, RingReceiver, RingSender};
 use super::threaded::DoubleBuffer;
-use super::{IterStats, TrainResult};
+use super::{snapshot, IterStats, TrainResult};
 use crate::collective::Aggregator;
 use crate::config::TrainConfig;
 use crate::grad::WorkerGrad;
@@ -122,11 +123,18 @@ struct LaneUplink {
 enum ToLane {
     Step { t: usize, theta: Arc<Vec<f32>> },
     Observe { t: usize, bcast: Arc<(Vec<u32>, Vec<f32>)> },
+    /// Export every hosted worker's snapshot state (sparsifier +
+    /// fault-lifecycle + any parked straggler message). Sent after
+    /// `Observe` on due rounds; ring order lands the observation first.
+    Snapshot,
     Stop,
 }
 
-struct FromLane {
-    batch: Arc<LaneUplink>,
+enum FromLane {
+    /// Per-round uplink batch.
+    Batch(Arc<LaneUplink>),
+    /// Reply to [`ToLane::Snapshot`]: the hosted workers' state sections.
+    State(Box<Checkpoint>),
 }
 
 struct LaneHandle {
@@ -154,6 +162,57 @@ struct Logical {
     /// Parked straggler message (+ its loss) while `Busy`.
     held: SparseGrad,
     held_loss: f64,
+}
+
+/// Lifecycle codes in the `w<id>/life` snapshot section.
+const LIFE_ALIVE: u64 = 0;
+const LIFE_BUSY: u64 = 1;
+const LIFE_DEAD: u64 = 2;
+
+/// Export one logical worker's full snapshot state under `w<id>/`:
+/// sparsifier sections, the lifecycle word triple `[code, until, origin]`,
+/// and — while straggling — the parked message and its loss.
+fn export_logical(lw: &Logical, out: &mut Checkpoint) {
+    let p = format!("w{}/", lw.id);
+    lw.sparsifier.export_state(&p, out);
+    let (code, until, origin) = match lw.state {
+        WState::Alive => (LIFE_ALIVE, 0, 0),
+        WState::Busy { until, origin } => (LIFE_BUSY, until as u64, origin as u64),
+        WState::Dead => (LIFE_DEAD, 0, 0),
+    };
+    out.add_u64(&format!("{p}life"), &[code, until, origin]);
+    if matches!(lw.state, WState::Busy { .. }) {
+        let idx: Vec<u64> = lw.held.indices.iter().map(|&i| i as u64).collect();
+        out.add_u64(&format!("{p}held_idx"), &idx);
+        out.add(&format!("{p}held_val"), &lw.held.values);
+        out.add_u64(&format!("{p}held_loss"), &[lw.held_loss.to_bits()]);
+    }
+}
+
+/// Restore what [`export_logical`] wrote. Unknown lifecycle codes, missing
+/// held sections, and malformed held indices are errors, never panics.
+fn import_logical(lw: &mut Logical, dim: usize, ckpt: &Checkpoint) -> anyhow::Result<()> {
+    let p = format!("w{}/", lw.id);
+    lw.sparsifier.import_state(&p, ckpt)?;
+    let life = ckpt.require_u64(&format!("{p}life"))?;
+    anyhow::ensure!(life.len() == 3, "section `{p}life` must hold 3 words, has {}", life.len());
+    lw.held.clear();
+    lw.held_loss = 0.0;
+    lw.state = match life[0] {
+        LIFE_ALIVE => WState::Alive,
+        LIFE_DEAD => WState::Dead,
+        LIFE_BUSY => {
+            let name = format!("{p}held_idx");
+            let raw = ckpt.require_u64(&name)?;
+            lw.held.indices = crate::sparsify::import_selection(&name, raw, dim, dim)?;
+            lw.held.values =
+                ckpt.require_len(&format!("{p}held_val"), lw.held.indices.len())?.to_vec();
+            lw.held_loss = f64::from_bits(ckpt.require_scalar(&format!("{p}held_loss"))?);
+            WState::Busy { until: life[1] as usize, origin: life[2] as usize }
+        }
+        other => anyhow::bail!("section `{p}life` has unknown lifecycle code {other}"),
+    };
+    Ok(())
 }
 
 /// Advance one logical worker through round `t`, filling its uplink slot.
@@ -237,7 +296,7 @@ fn spawn_lane(
                     for (slot, lw) in batch.items.iter_mut().zip(workers.iter_mut()) {
                         step_worker(lw, t, &theta, &plan, &mut gbuf, slot);
                     }
-                    if tx_res.send(FromLane { batch: bufs.share(t) }).is_err() {
+                    if tx_res.send(FromLane::Batch(bufs.share(t))).is_err() {
                         break;
                     }
                 }
@@ -247,6 +306,15 @@ fn spawn_lane(
                         if matches!(lw.state, WState::Alive) && !plan.broadcast_lost(lw.id, t) {
                             lw.sparsifier.observe(view);
                         }
+                    }
+                }
+                ToLane::Snapshot => {
+                    let mut ckpt = Checkpoint::new();
+                    for lw in workers.iter() {
+                        export_logical(lw, &mut ckpt);
+                    }
+                    if tx_res.send(FromLane::State(Box::new(ckpt))).is_err() {
+                        break;
                     }
                 }
                 ToLane::Stop => break,
@@ -308,6 +376,57 @@ pub fn train_cluster(
             held_loss: 0.0,
         })
         .collect();
+    let mut optimizer = optim::build(cfg.optimizer, dim);
+    let mut agg = Aggregator::new(dim);
+    let mut theta = theta0;
+    let mut ledger: Vec<CommStats> = Vec::with_capacity(cfg.iters);
+    let (mut merged_stale, mut discarded_stale, mut empty_rounds) = (0u64, 0u64, 0u64);
+    // Resume restores the complete distributed state — θ, optimizer, comm
+    // counters, the per-round ledger prefix, fault counters, and every
+    // logical worker's sparsifier + lifecycle (parked straggler messages
+    // included) — leader-side, *before* the workers move onto lanes. The
+    // fault-plan digest pins the snapshot to its plan: the remaining
+    // churn/straggler tail replays exactly because the plan is queried by
+    // absolute round.
+    let sink = snapshot::SnapshotSink::from_config(cfg);
+    let start = if cfg.resume.is_empty() {
+        0
+    } else {
+        let (path, ckpt) = snapshot::resolve_resume(&cfg.resume)?;
+        (|| -> anyhow::Result<usize> {
+            let round = snapshot::check_meta(&ckpt, cfg, snapshot::CLUSTER_FAMILY)?;
+            let digest = ckpt.require_scalar("meta/fault")?;
+            anyhow::ensure!(
+                digest == plan.digest(),
+                "snapshot was taken under a different fault plan \
+                 (digest {digest:#018x}, this run {:#018x})",
+                plan.digest()
+            );
+            agg.comm = snapshot::read_comm(&ckpt)?;
+            optimizer.import_state("opt/", &ckpt)?;
+            let counters = ckpt.require_u64("counters")?;
+            anyhow::ensure!(counters.len() == 3, "section `counters` must hold 3 words");
+            let led = ckpt.require_u64("ledger")?;
+            anyhow::ensure!(
+                led.len() == round * 4,
+                "section `ledger` has {} words, expected {} (4 per completed round)",
+                led.len(),
+                round * 4
+            );
+            for lw in logicals.iter_mut() {
+                import_logical(lw, dim, &ckpt)?;
+            }
+            theta.copy_from_slice(ckpt.require_len("theta", dim)?);
+            merged_stale = counters[0];
+            discarded_stale = counters[1];
+            empty_rounds = counters[2];
+            for chunk in led.chunks_exact(4) {
+                ledger.push(CommStats::from_words([chunk[0], chunk[1], chunk[2], chunk[3]]));
+            }
+            Ok(round)
+        })()
+        .map_err(|e| anyhow::anyhow!("resuming from `{}`: {e:#}", path.display()))?
+    };
     // Contiguous ascending-id chunks: lane-order concatenation of the
     // uplink batches is then exactly ascending worker order, preserving
     // the serial executors' deterministic aggregation order.
@@ -325,17 +444,12 @@ pub fn train_cluster(
             Arc::clone(&lane_misses),
         ));
     }
-    let mut optimizer = optim::build(cfg.optimizer, dim);
-    let mut agg = Aggregator::new(dim);
-    let mut theta = theta0;
     let mut theta_bufs: DoubleBuffer<Vec<f32>> = DoubleBuffer::new(|| vec![0.0f32; dim]);
     let mut union_bufs: DoubleBuffer<(Vec<u32>, Vec<f32>)> = DoubleBuffer::new(Default::default);
     let mut lane_batches: Vec<Arc<LaneUplink>> = Vec::with_capacity(lanes);
-    let mut ledger: Vec<CommStats> = Vec::with_capacity(cfg.iters);
-    let (mut merged_stale, mut discarded_stale, mut empty_rounds) = (0u64, 0u64, 0u64);
-    let mut prev_comm = CommStats::default();
+    let mut prev_comm = agg.comm;
     let mut result: anyhow::Result<()> = Ok(());
-    'outer: for t in 0..cfg.iters {
+    'outer: for t in start..cfg.iters {
         let lr = cfg.lr_schedule.at(cfg.lr, t);
         theta_bufs.write(t).copy_from_slice(&theta);
         for (l, h) in handles.iter().enumerate() {
@@ -349,7 +463,13 @@ pub fn train_cluster(
         lane_batches.clear();
         for (l, h) in handles.iter().enumerate() {
             match h.rx.recv() {
-                Ok(r) => lane_batches.push(r.batch),
+                Ok(FromLane::Batch(batch)) => lane_batches.push(batch),
+                Ok(FromLane::State(_)) => {
+                    result = Err(anyhow::anyhow!(
+                        "lane {l} sent snapshot state where an iteration-{t} batch was due"
+                    ));
+                    break 'outer;
+                }
                 Err(_) => {
                     result = Err(anyhow::anyhow!(
                         "lane {l} died before uplinking its iteration-{t} batch"
@@ -451,6 +571,57 @@ pub fn train_cluster(
             agg: dense,
             comm: &agg.comm,
         });
+        if let Some(sink) = &sink {
+            if sink.due(t) {
+                // Lane replies arrive in lane order = ascending worker id,
+                // so the section sequence is deterministic. The Snapshot
+                // command queues behind Observe{t} (≤ 2 commands, within
+                // ring capacity) and every State reply is drained before
+                // Step{t+1}.
+                let mut ckpt = Checkpoint::new();
+                snapshot::stamp_meta(&mut ckpt, cfg, t + 1, snapshot::CLUSTER_FAMILY);
+                ckpt.add("theta", &theta);
+                ckpt.add_u64("comm", &agg.comm.to_words());
+                optimizer.export_state("opt/", &mut ckpt);
+                for (l, h) in handles.iter().enumerate() {
+                    if h.tx.send(ToLane::Snapshot).is_err() {
+                        result = Err(anyhow::anyhow!(
+                            "lane {l} died before exporting round-{} snapshot state",
+                            t + 1
+                        ));
+                        break 'outer;
+                    }
+                }
+                for (l, h) in handles.iter().enumerate() {
+                    match h.rx.recv() {
+                        Ok(FromLane::State(part)) => ckpt.sections.extend(part.sections),
+                        _ => {
+                            result = Err(anyhow::anyhow!(
+                                "lane {l} failed to export round-{} snapshot state",
+                                t + 1
+                            ));
+                            break 'outer;
+                        }
+                    }
+                }
+                ckpt.add_u64("meta/fault", &[plan.digest()]);
+                let mut led_words: Vec<u64> = Vec::with_capacity(ledger.len() * 4);
+                for round in &ledger {
+                    led_words.extend_from_slice(&round.to_words());
+                }
+                ckpt.add_u64("ledger", &led_words);
+                ckpt.add_u64("counters", &[merged_stale, discarded_stale, empty_rounds]);
+                if let Err(e) = sink.save(t + 1, &ckpt) {
+                    result = Err(e);
+                    break 'outer;
+                }
+            }
+        }
+        if cfg.crash_at != 0 && t + 1 == cfg.crash_at {
+            // Crash injection: hard-kill without joining the lanes, like a
+            // power loss. Any snapshot due this round already persisted.
+            std::process::exit(13);
+        }
     }
     for h in &handles {
         let _ = h.tx.send(ToLane::Stop);
@@ -710,6 +881,145 @@ mod tests {
             lossy.result.train.comm.uplink_index_bits
         );
         assert_ne!(clean.result.train.theta, lossy.result.train.theta);
+    }
+
+    fn snapdir(tag: &str) -> std::path::PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("regtopk_clu_snap_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn cluster_resume_is_bit_identical_under_active_fault_plan() {
+        // Tentpole acceptance (cluster half): a plan with churn, an
+        // in-window straggler, an out-of-window straggler and a lost
+        // broadcast; snapshots every 8 rounds land mid-outage (round 8,
+        // worker 1 dead), mid-straggle (round 8, worker 2 busy; round 24,
+        // worker 3 busy) and right after a lost broadcast (worker 0,
+        // round 7). Resuming from *every* snapshot at lane counts 1 and 3
+        // must reproduce the uninterrupted run bit-for-bit: θ, cumulative
+        // comm, the complete per-round ledger, fault counters, gap curve.
+        let plan = |n: usize| {
+            FaultPlan::none(n)
+                .kill(1, 5)
+                .readmit(1, 12)
+                .straggle(2, 7, 2) // lag 2 ≤ window: merged after resume
+                .straggle(3, 20, 6) // lag 6 > window: discarded after resume
+                .drop_broadcast(0, 7)
+        };
+        for kind in [
+            SparsifierKind::RegTopK { mu: 1.0, y: 1.0 },
+            SparsifierKind::TopK,
+            SparsifierKind::RandK,
+        ] {
+            let dir = snapdir(&format!("parity_{}", kind.name()));
+            let mut c = cfg(kind, 4, 16, 32);
+            c.log_every = 1;
+            c.snapshot_every = 8;
+            c.snapshot_dir = dir.to_string_lossy().into_owned();
+            c.snapshot_keep = 0;
+            let copts = ClusterOpts::default();
+            let full = run_cluster(&c, &plan(4), &copts);
+            assert!(full.result.merged_stale > 0, "{kind:?}: plan must exercise merge");
+            assert!(full.result.discarded_stale > 0, "{kind:?}: plan must exercise discard");
+            for round in [8usize, 16, 24, 32] {
+                let snap = dir.join(format!("snap_{round}.rtkc"));
+                assert!(snap.exists(), "{kind:?}: snapshot at round {round} missing");
+                let mut rc = c.clone();
+                rc.snapshot_every = 0;
+                rc.resume = snap.to_string_lossy().into_owned();
+                for lanes in [1usize, 3] {
+                    let lopts = ClusterOpts { lanes, ..Default::default() };
+                    let resumed = run_cluster(&rc, &plan(4), &lopts);
+                    let tag = format!("{kind:?} round {round} lanes {lanes}");
+                    assert_eq!(
+                        full.result.train.theta, resumed.result.train.theta,
+                        "{tag}: θ must be bit-identical"
+                    );
+                    assert_eq!(full.result.train.comm, resumed.result.train.comm, "{tag}");
+                    assert_eq!(full.result.ledger, resumed.result.ledger, "{tag}: ledger");
+                    assert_eq!(full.result.merged_stale, resumed.result.merged_stale, "{tag}");
+                    assert_eq!(
+                        full.result.discarded_stale, resumed.result.discarded_stale,
+                        "{tag}"
+                    );
+                    assert_eq!(full.result.empty_rounds, resumed.result.empty_rounds, "{tag}");
+                    let tail: Vec<_> = full
+                        .gap_curve
+                        .iter()
+                        .filter(|&&(t, _)| t >= round)
+                        .copied()
+                        .collect();
+                    assert_eq!(tail, resumed.gap_curve, "{tag}: gap curve tail");
+                }
+            }
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn churn_resume_interplay_keeps_the_ledger_exact() {
+        // Satellite: kill → snapshot (mid-outage) → resume → re-admission,
+        // with the per-round wire ledger hand-checked across the resume
+        // boundary. Worker 1 is dead over rounds 5..12, the snapshot lands
+        // at round 8; the resumed run must re-admit it at round 12 and
+        // charge exactly k values per contributor per round throughout.
+        let dir = snapdir("churn");
+        let mut c = cfg(SparsifierKind::RegTopK { mu: 1.0, y: 1.0 }, 4, 12, 20);
+        c.snapshot_every = 8;
+        c.snapshot_dir = dir.to_string_lossy().into_owned();
+        let plan = FaultPlan::none(4).kill(1, 5).readmit(1, 12);
+        let copts = ClusterOpts::default();
+        let full = run_cluster(&c, &plan, &copts);
+        let mut rc = c.clone();
+        rc.snapshot_every = 0;
+        rc.resume = dir.join("snap_8.rtkc").to_string_lossy().into_owned();
+        let resumed = run_cluster(&rc, &plan, &copts);
+        assert_eq!(full.result.train.theta, resumed.result.train.theta);
+        assert_eq!(full.result.ledger, resumed.result.ledger);
+        // Hand-checked ledger continuity: k = 6 (S=0.5, J=12); 4 workers
+        // contribute except worker 1 during its outage.
+        let k = k_for(c.sparsity, c.dim) as u64;
+        assert_eq!(k, 6);
+        for t in 0..20 {
+            let contributors: u64 = if (5..12).contains(&t) { 3 } else { 4 };
+            assert_eq!(
+                resumed.result.ledger[t].uplink_values,
+                k * contributors,
+                "round {t}: uplink charge must be exact across the resume boundary"
+            );
+        }
+        assert_eq!(ledger_total(&resumed.result.ledger), resumed.result.train.comm);
+        assert_eq!(
+            resumed.result.train.comm.uplink_values,
+            k * (4 * 20 - 7),
+            "worker 1 misses exactly its 7 outage rounds"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_under_a_different_fault_plan_is_refused() {
+        let dir = snapdir("plan_guard");
+        let mut c = cfg(SparsifierKind::TopK, 4, 12, 16);
+        c.snapshot_every = 8;
+        c.snapshot_dir = dir.to_string_lossy().into_owned();
+        let plan = FaultPlan::none(4).kill(2, 3).readmit(2, 10);
+        run_cluster(&c, &plan, &ClusterOpts::default());
+        let mut rc = c.clone();
+        rc.snapshot_every = 0;
+        rc.resume = dir.join("snap_8.rtkc").to_string_lossy().into_owned();
+        let gen = LinRegGenConfig { workers: 4, dim: 12, ..Default::default() };
+        let other = FaultPlan::none(4).kill(2, 3).readmit(2, 10).straggle(0, 6, 2);
+        let err = run_linreg_cluster(&rc, &gen, &other, &ClusterOpts::default())
+            .expect_err("a drifted fault plan must refuse the snapshot")
+            .to_string();
+        assert!(err.contains("fault plan"), "{err}");
+        // The matching plan still resumes fine.
+        assert!(run_linreg_cluster(&rc, &gen, &plan, &ClusterOpts::default()).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

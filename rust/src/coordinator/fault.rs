@@ -141,6 +141,43 @@ impl FaultPlan {
         self.workers[w].bcast_loss.binary_search(&(t as u32)).is_ok()
     }
 
+    /// A stable fingerprint of the whole schedule (FNV-1a over every
+    /// event). Snapshots store it so a resume under a *different* plan is
+    /// rejected up front — the remaining churn/straggler tail only replays
+    /// exactly against the plan the interrupted run was using.
+    pub fn digest(&self) -> u64 {
+        const PRIME: u64 = 0x0000_0100_0000_01B3;
+        fn mix(h: &mut u64, x: u64) {
+            *h = (*h ^ x).wrapping_mul(PRIME);
+        }
+        let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+        mix(&mut h, self.workers.len() as u64);
+        for (w, f) in self.workers.iter().enumerate() {
+            for &t in &f.deaths {
+                mix(&mut h, 1);
+                mix(&mut h, w as u64);
+                mix(&mut h, t as u64);
+            }
+            for &t in &f.readmits {
+                mix(&mut h, 2);
+                mix(&mut h, w as u64);
+                mix(&mut h, t as u64);
+            }
+            for &(t, d) in &f.straggles {
+                mix(&mut h, 3);
+                mix(&mut h, w as u64);
+                mix(&mut h, t as u64);
+                mix(&mut h, d as u64);
+            }
+            for &t in &f.bcast_loss {
+                mix(&mut h, 4);
+                mix(&mut h, w as u64);
+                mix(&mut h, t as u64);
+            }
+        }
+        h
+    }
+
     /// Generate a random plan by walking each worker's lifecycle with its
     /// own split PRNG stream (per-worker streams keep the plan for worker
     /// `w` independent of how many other workers exist). Deaths schedule
@@ -320,6 +357,20 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn digest_separates_plans() {
+        let base = FaultPlan::none(3).kill(1, 5).readmit(1, 9).straggle(2, 3, 2);
+        assert_eq!(base.digest(), base.clone().digest(), "digest is deterministic");
+        assert_ne!(base.digest(), FaultPlan::none(3).digest());
+        assert_ne!(base.digest(), base.clone().drop_broadcast(0, 4).digest());
+        // Same events on a different worker/round/delay all change it.
+        let moved = FaultPlan::none(3).kill(2, 5).readmit(2, 9).straggle(2, 3, 2);
+        assert_ne!(base.digest(), moved.digest());
+        let delayed = FaultPlan::none(3).kill(1, 5).readmit(1, 9).straggle(2, 3, 3);
+        assert_ne!(base.digest(), delayed.digest());
+        assert_ne!(FaultPlan::none(3).digest(), FaultPlan::none(4).digest());
     }
 
     #[test]

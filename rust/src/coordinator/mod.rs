@@ -29,6 +29,7 @@ pub mod cluster;
 pub mod fault;
 pub mod genie;
 pub mod ring;
+pub mod snapshot;
 pub mod threaded;
 
 use crate::collective::Aggregator;
@@ -96,6 +97,10 @@ pub fn train<W: WorkerGrad + ?Sized>(
         anyhow::ensure!(w.dim() == dim, "worker {n} dim {} != theta dim {dim}", w.dim());
     }
     if cfg.sparsifier == SparsifierKind::GlobalTopK {
+        anyhow::ensure!(
+            cfg.snapshot_every == 0 && cfg.resume.is_empty(),
+            "the genie executor does not support snapshots or resume"
+        );
         return genie::train_global_topk(cfg, theta0, workers, probe);
     }
     // The sequential executor is a single lane, so the gradient oracles'
@@ -107,9 +112,25 @@ pub fn train<W: WorkerGrad + ?Sized>(
     let mut optimizer = optim::build(cfg.optimizer, dim);
     let mut agg = Aggregator::new(dim);
     let mut theta = theta0;
+    let sink = snapshot::SnapshotSink::from_config(cfg);
+    let start = if cfg.resume.is_empty() {
+        0
+    } else {
+        let (path, ckpt) = snapshot::resolve_resume(&cfg.resume)?;
+        let restored = snapshot::restore_core(
+            &ckpt,
+            cfg,
+            &mut theta,
+            optimizer.as_mut(),
+            &mut sparsifiers,
+        )
+        .map_err(|e| anyhow::anyhow!("resuming from `{}`: {e:#}", path.display()))?;
+        agg.comm = restored.comm;
+        restored.round
+    };
     let mut gbuf = vec![0.0f32; dim];
     let mut msg = SparseGrad::default();
-    for t in 0..cfg.iters {
+    for t in start..cfg.iters {
         let lr = cfg.lr_schedule.at(cfg.lr, t);
         agg.begin();
         let mut loss_sum = 0.0;
@@ -133,6 +154,24 @@ pub fn train<W: WorkerGrad + ?Sized>(
             agg: dense,
             comm: &agg.comm,
         });
+        if let Some(sink) = &sink {
+            if sink.due(t) {
+                let ckpt = snapshot::build_core(
+                    cfg,
+                    t + 1,
+                    &theta,
+                    &agg.comm,
+                    optimizer.as_ref(),
+                    &sparsifiers,
+                );
+                sink.save(t + 1, &ckpt)?;
+            }
+        }
+        if cfg.crash_at != 0 && t + 1 == cfg.crash_at {
+            // Crash injection: hard-kill the process once this round — and
+            // any snapshot due for it — has persisted, like a power loss.
+            std::process::exit(13);
+        }
     }
     Ok(TrainResult { theta, comm: agg.comm, iters: cfg.iters, reuse_misses: 0 })
 }

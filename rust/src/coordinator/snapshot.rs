@@ -1,0 +1,518 @@
+//! Crash-consistent full-state training snapshots.
+//!
+//! A snapshot captures *everything* a round carries into the next one:
+//! θ, the server optimizer's moments and step counter, every worker's
+//! sparsifier state (error accumulators, RNG stream positions, REGTOP-k's
+//! past-aggregate statistics), the cumulative [`CommStats`] ledger, and —
+//! on the cluster executor — each logical worker's fault-lifecycle state,
+//! parked straggler messages, the per-round wire ledger and the fault-plan
+//! digest. Restoring a snapshot and running the remaining rounds is
+//! bit-identical to never having stopped (pinned by tests across every
+//! sparsifier kind and executor).
+//!
+//! Weights-only checkpoints cannot do this: with error feedback the
+//! accumulator *is* the algorithm — zeroing ε on resume silently changes
+//! which coordinates every worker selects from the first resumed round on.
+//!
+//! On-disk, a snapshot is a v2 [`Checkpoint`] (per-section CRC32 + trailer
+//! checksum, atomic rename), written as `snap_<round>.rtkc` under a
+//! retention policy ([`SnapshotSink`], keep-last-M). Loading falls back to
+//! the newest snapshot that passes verification ([`load_latest`]), so a
+//! truncated or bit-flipped file costs at most `snapshot_every` rounds of
+//! recompute, never a corrupted resume.
+
+use super::checkpoint::Checkpoint;
+use crate::config::TrainConfig;
+use crate::metrics::CommStats;
+use crate::optim::Optimizer;
+use crate::sparsify::Sparsifier;
+use std::path::{Path, PathBuf};
+
+/// Family tag for snapshots of the sequential/threaded executors (which
+/// share one state model and produce byte-identical snapshot files).
+pub const CORE_FAMILY: u64 = 1;
+/// Family tag for cluster-executor snapshots (adds lifecycle state, the
+/// per-round ledger and the fault-plan digest).
+pub const CLUSTER_FAMILY: u64 = 2;
+
+/// Canonical fingerprint of every config field that shapes the training
+/// trajectory. Stored in each snapshot and compared on resume: restoring
+/// under a different algorithmic config is an error, not a silent blend of
+/// two runs. Run-length and output knobs (`iters`, `log_every`, snapshot
+/// cadence, thread/lane counts) are deliberately excluded — extending a
+/// run or resuming on a different executor layout is legitimate.
+pub fn config_fingerprint(cfg: &TrainConfig) -> String {
+    format!(
+        "workers={} dim={} sparsity={} sparsifier={:?} lr={} lr_schedule={:?} \
+         optimizer={:?} weights={:?} seed={} backend={:?} staleness={}",
+        cfg.workers,
+        cfg.dim,
+        cfg.sparsity,
+        cfg.sparsifier,
+        cfg.lr,
+        cfg.lr_schedule,
+        cfg.optimizer,
+        cfg.weights,
+        cfg.seed,
+        cfg.backend,
+        cfg.staleness
+    )
+}
+
+/// Write the identity header every snapshot carries: the completed-round
+/// counter, the executor family, and the config fingerprint.
+pub fn stamp_meta(ckpt: &mut Checkpoint, cfg: &TrainConfig, round: usize, family: u64) {
+    ckpt.add_u64("meta/round", &[round as u64]);
+    ckpt.add_u64("meta/family", &[family]);
+    ckpt.add_bytes("meta/config", config_fingerprint(cfg).as_bytes());
+}
+
+/// Validate a snapshot's identity header against the resuming run and
+/// return the restored round counter.
+pub fn check_meta(ckpt: &Checkpoint, cfg: &TrainConfig, family: u64) -> anyhow::Result<usize> {
+    let fam = ckpt.require_scalar("meta/family")?;
+    anyhow::ensure!(
+        fam == family,
+        "snapshot was written by the {} executor family, this run needs {}",
+        family_name(fam),
+        family_name(family)
+    );
+    let stored = ckpt.require_bytes("meta/config")?;
+    let expect = config_fingerprint(cfg);
+    anyhow::ensure!(
+        stored == expect.as_bytes(),
+        "snapshot config mismatch:\n  snapshot: {}\n  this run: {expect}",
+        String::from_utf8_lossy(stored)
+    );
+    let round = ckpt.require_scalar("meta/round")? as usize;
+    anyhow::ensure!(
+        round <= cfg.iters,
+        "snapshot is at round {round}, beyond this run's {} iterations",
+        cfg.iters
+    );
+    Ok(round)
+}
+
+fn family_name(f: u64) -> &'static str {
+    match f {
+        CORE_FAMILY => "core (sequential/threaded)",
+        CLUSTER_FAMILY => "cluster",
+        _ => "unknown",
+    }
+}
+
+/// Build a core-family snapshot at `round` completed rounds: meta header,
+/// θ, cumulative comm counters, optimizer state, then each worker's
+/// sparsifier state under `w<n>/`. The sequential and threaded executors
+/// emit identical section sequences, so their snapshot files are
+/// byte-identical for the same run state.
+pub fn build_core(
+    cfg: &TrainConfig,
+    round: usize,
+    theta: &[f32],
+    comm: &CommStats,
+    optimizer: &dyn Optimizer,
+    sparsifiers: &[Box<dyn Sparsifier>],
+) -> Checkpoint {
+    let mut ckpt = Checkpoint::new();
+    stamp_meta(&mut ckpt, cfg, round, CORE_FAMILY);
+    ckpt.add("theta", theta);
+    ckpt.add_u64("comm", &comm.to_words());
+    optimizer.export_state("opt/", &mut ckpt);
+    for (n, s) in sparsifiers.iter().enumerate() {
+        s.export_state(&format!("w{n}/"), &mut ckpt);
+    }
+    ckpt
+}
+
+/// State restored from a core snapshot that the executor loop needs
+/// directly (the rest lands in the passed-in mutable components).
+pub struct CoreResume {
+    /// Completed rounds — the resumed loop starts here.
+    pub round: usize,
+    /// Cumulative comm counters at the snapshot point.
+    pub comm: CommStats,
+}
+
+/// Restore a core-family snapshot into freshly built run components.
+/// Every mismatch (config, lengths, indices, types) is an error before
+/// any state is partially applied to θ.
+pub fn restore_core(
+    ckpt: &Checkpoint,
+    cfg: &TrainConfig,
+    theta: &mut [f32],
+    optimizer: &mut dyn Optimizer,
+    sparsifiers: &mut [Box<dyn Sparsifier>],
+) -> anyhow::Result<CoreResume> {
+    let round = check_meta(ckpt, cfg, CORE_FAMILY)?;
+    let comm = read_comm(ckpt)?;
+    optimizer.import_state("opt/", ckpt)?;
+    for (n, s) in sparsifiers.iter_mut().enumerate() {
+        s.import_state(&format!("w{n}/"), ckpt)?;
+    }
+    theta.copy_from_slice(ckpt.require_len("theta", theta.len())?);
+    Ok(CoreResume { round, comm })
+}
+
+/// Read the 4-word cumulative [`CommStats`] section.
+pub fn read_comm(ckpt: &Checkpoint) -> anyhow::Result<CommStats> {
+    let words = ckpt.require_u64("comm")?;
+    anyhow::ensure!(words.len() == 4, "section `comm` has {} words, expected 4", words.len());
+    Ok(CommStats::from_words([words[0], words[1], words[2], words[3]]))
+}
+
+/// Periodic snapshot writer: cadence, target directory, and keep-last-M
+/// retention (rotation deletes the oldest files after each atomic write,
+/// so the directory never holds a partially written snapshot).
+pub struct SnapshotSink {
+    every: usize,
+    dir: PathBuf,
+    keep: usize,
+}
+
+impl SnapshotSink {
+    /// `None` when snapshots are disabled (`snapshot_every = 0`).
+    pub fn from_config(cfg: &TrainConfig) -> Option<SnapshotSink> {
+        (cfg.snapshot_every > 0).then(|| SnapshotSink {
+            every: cfg.snapshot_every,
+            dir: PathBuf::from(&cfg.snapshot_dir),
+            keep: cfg.snapshot_keep,
+        })
+    }
+
+    /// Whether a snapshot is due at the end of round `t` (0-based): after
+    /// every `every` completed rounds.
+    pub fn due(&self, t: usize) -> bool {
+        (t + 1) % self.every == 0
+    }
+
+    /// File path for the snapshot taken after `round` completed rounds.
+    pub fn path_for(&self, round: usize) -> PathBuf {
+        self.dir.join(format!("snap_{round}.rtkc"))
+    }
+
+    /// Atomically write the snapshot for `round`, then drop the oldest
+    /// files beyond the retention bound.
+    pub fn save(&self, round: usize, ckpt: &Checkpoint) -> anyhow::Result<PathBuf> {
+        let path = self.path_for(round);
+        ckpt.save(&path)?;
+        if self.keep > 0 {
+            let mut rounds = list_snapshot_rounds(&self.dir)?;
+            while rounds.len() > self.keep {
+                let oldest = rounds.remove(0);
+                std::fs::remove_file(self.dir.join(format!("snap_{oldest}.rtkc"))).ok();
+            }
+        }
+        Ok(path)
+    }
+}
+
+/// Ascending completed-round numbers of the `snap_<round>.rtkc` files in
+/// `dir` (other files are ignored).
+fn list_snapshot_rounds(dir: &Path) -> anyhow::Result<Vec<u64>> {
+    let mut rounds = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let name = entry?.file_name();
+        let name = name.to_string_lossy();
+        if let Some(mid) = name.strip_prefix("snap_").and_then(|s| s.strip_suffix(".rtkc")) {
+            if let Ok(r) = mid.parse::<u64>() {
+                rounds.push(r);
+            }
+        }
+    }
+    rounds.sort_unstable();
+    Ok(rounds)
+}
+
+/// Load the newest snapshot in `dir` that passes CRC + structural
+/// verification, scanning newest → oldest. A corrupted or truncated
+/// newest file falls back to its predecessor; only when *every* snapshot
+/// fails does this error (reporting the newest failure).
+pub fn load_latest(dir: impl AsRef<Path>) -> anyhow::Result<(PathBuf, Checkpoint)> {
+    let dir = dir.as_ref();
+    let rounds = list_snapshot_rounds(dir)?;
+    anyhow::ensure!(
+        !rounds.is_empty(),
+        "no snapshots (snap_<round>.rtkc) in `{}`",
+        dir.display()
+    );
+    let mut first_err = None;
+    for &r in rounds.iter().rev() {
+        let path = dir.join(format!("snap_{r}.rtkc"));
+        match Checkpoint::load(&path) {
+            Ok(ckpt) => return Ok((path, ckpt)),
+            Err(e) => {
+                eprintln!("warning: skipping corrupt snapshot `{}`: {e:#}", path.display());
+                first_err.get_or_insert(format!("{}: {e:#}", path.display()));
+            }
+        }
+    }
+    anyhow::bail!(
+        "every snapshot in `{}` failed verification (newest: {})",
+        dir.display(),
+        first_err.unwrap()
+    )
+}
+
+/// Resolve a `--resume` argument: a directory picks the newest valid
+/// snapshot ([`load_latest`]); a file path is loaded strictly (a corrupt
+/// explicitly named file is an error, not a silent fallback).
+pub fn resolve_resume(spec: impl AsRef<Path>) -> anyhow::Result<(PathBuf, Checkpoint)> {
+    let spec = spec.as_ref();
+    if spec.is_dir() {
+        load_latest(spec)
+    } else {
+        let ckpt = Checkpoint::load(spec)
+            .map_err(|e| anyhow::anyhow!("cannot resume from `{}`: {e:#}", spec.display()))?;
+        Ok((spec.to_path_buf(), ckpt))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+    use crate::coordinator::{run_linreg, RunOpts};
+    use crate::sparsify::SparsifierKind;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("regtopk_snap_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn cfg(kind: SparsifierKind, dir: &Path, every: usize) -> TrainConfig {
+        TrainConfig {
+            workers: 4,
+            dim: 12,
+            sparsity: 0.5,
+            sparsifier: kind,
+            lr: 0.01,
+            iters: 30,
+            seed: 11,
+            log_every: 1,
+            snapshot_every: every,
+            snapshot_dir: dir.to_string_lossy().into_owned(),
+            snapshot_keep: 0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sink_cadence_and_paths() {
+        let dir = tmpdir("cadence");
+        let c = cfg(SparsifierKind::TopK, &dir, 10);
+        let sink = SnapshotSink::from_config(&c).unwrap();
+        assert!(!sink.due(0));
+        assert!(sink.due(9)); // end of round 9 = 10 completed rounds
+        assert!(sink.due(19));
+        assert!(!sink.due(10));
+        assert!(sink.path_for(10).ends_with("snap_10.rtkc"));
+        let mut off = c.clone();
+        off.snapshot_every = 0;
+        assert!(SnapshotSink::from_config(&off).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retention_keeps_only_the_newest_files() {
+        let dir = tmpdir("keep");
+        let sink = SnapshotSink { every: 1, dir: dir.clone(), keep: 2 };
+        let ckpt = Checkpoint::new();
+        for round in [5, 10, 15, 20] {
+            sink.save(round, &ckpt).unwrap();
+        }
+        assert_eq!(list_snapshot_rounds(&dir).unwrap(), vec![15, 20]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_latest_skips_corrupt_files_and_errors_when_all_bad() {
+        let dir = tmpdir("fallback");
+        let mut a = Checkpoint::new();
+        a.add_u64("meta/round", &[5]);
+        a.save(dir.join("snap_5.rtkc")).unwrap();
+        let mut b = Checkpoint::new();
+        b.add_u64("meta/round", &[10]);
+        b.save(dir.join("snap_10.rtkc")).unwrap();
+        // Intact: newest wins.
+        let (path, ckpt) = load_latest(&dir).unwrap();
+        assert!(path.ends_with("snap_10.rtkc"));
+        assert_eq!(ckpt.require_scalar("meta/round").unwrap(), 10);
+        // Corrupt the newest: fall back to the older valid file.
+        let mut bytes = std::fs::read(dir.join("snap_10.rtkc")).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(dir.join("snap_10.rtkc"), &bytes).unwrap();
+        let (path, ckpt) = load_latest(&dir).unwrap();
+        assert!(path.ends_with("snap_5.rtkc"), "must fall back past the corrupt file");
+        assert_eq!(ckpt.require_scalar("meta/round").unwrap(), 5);
+        // Truncate the older one too: now every snapshot is bad -> error.
+        let good = std::fs::read(dir.join("snap_5.rtkc")).unwrap();
+        std::fs::write(dir.join("snap_5.rtkc"), &good[..good.len() - 3]).unwrap();
+        assert!(load_latest(&dir).is_err());
+        // An explicitly named corrupt file is a strict error even though a
+        // directory fallback would exist.
+        assert!(resolve_resume(dir.join("snap_10.rtkc")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fingerprint_guards_against_config_drift() {
+        let dir = tmpdir("fp");
+        let c = cfg(SparsifierKind::TopK, &dir, 10);
+        run_linreg(&c, &RunOpts::default()).unwrap();
+        let (_, ckpt) = load_latest(&dir).unwrap();
+        assert_eq!(check_meta(&ckpt, &c, CORE_FAMILY).unwrap(), 30);
+        // Same snapshot, drifted config: refused with both fingerprints.
+        let mut drifted = c.clone();
+        drifted.lr = 0.02;
+        let err = check_meta(&ckpt, &drifted, CORE_FAMILY).unwrap_err().to_string();
+        assert!(err.contains("config mismatch"), "{err}");
+        // Wrong executor family: refused.
+        assert!(check_meta(&ckpt, &c, CLUSTER_FAMILY).is_err());
+        // Run-length knobs may differ ... a longer run can resume it.
+        let mut longer = c.clone();
+        longer.iters = 100;
+        longer.log_every = 7;
+        assert_eq!(check_meta(&ckpt, &longer, CORE_FAMILY).unwrap(), 30);
+        // ... but not one shorter than the snapshot point.
+        let mut shorter = c.clone();
+        shorter.iters = 20;
+        assert!(check_meta(&ckpt, &shorter, CORE_FAMILY).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_is_bit_identical_for_every_kind_on_both_core_executors() {
+        // The tentpole acceptance matrix (core half): for every sparsifier
+        // kind, train 30 rounds with snapshots every 10; then resume from
+        // *each* snapshot round on the sequential AND threaded executors —
+        // final θ and comm counters must match the uninterrupted run
+        // bit-for-bit, including RandK's RNG stream position.
+        for kind in [
+            SparsifierKind::TopK,
+            SparsifierKind::RegTopK { mu: 1.0, y: 1.0 },
+            SparsifierKind::Dense,
+            SparsifierKind::HardThreshold { lambda: 0.05 },
+            SparsifierKind::RandK,
+            SparsifierKind::Dgc { momentum: 0.9 },
+        ] {
+            let dir = tmpdir(&format!("parity_{}", kind.name()));
+            let c = cfg(kind, &dir, 10);
+            let full = run_linreg(&c, &RunOpts::default()).unwrap();
+            for round in [10usize, 20] {
+                let snap = dir.join(format!("snap_{round}.rtkc"));
+                assert!(snap.exists(), "{kind:?}: snapshot at round {round} missing");
+                let mut rc = c.clone();
+                rc.snapshot_every = 0;
+                rc.resume = snap.to_string_lossy().into_owned();
+                for threaded in [false, true] {
+                    let resumed = run_linreg(&rc, &RunOpts { threaded }).unwrap();
+                    assert_eq!(
+                        full.result.theta, resumed.result.theta,
+                        "{kind:?} round {round} threaded={threaded}: θ must be bit-identical"
+                    );
+                    assert_eq!(
+                        full.result.comm, resumed.result.comm,
+                        "{kind:?} round {round} threaded={threaded}: comm must match"
+                    );
+                    // The resumed gap curve is exactly the tail of the full
+                    // run's curve (log_every = 1).
+                    let tail: Vec<_> = full
+                        .gap_curve
+                        .iter()
+                        .filter(|&&(t, _)| t >= round)
+                        .copied()
+                        .collect();
+                    assert_eq!(tail, resumed.gap_curve, "{kind:?} round {round}");
+                }
+            }
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn threaded_and_sequential_snapshots_are_byte_identical() {
+        // The two core executors share one state model; the files they
+        // write at the same round must be byte-for-byte equal.
+        let dir_seq = tmpdir("bytes_seq");
+        let dir_thr = tmpdir("bytes_thr");
+        let mut c = cfg(SparsifierKind::RegTopK { mu: 1.0, y: 1.0 }, &dir_seq, 10);
+        run_linreg(&c, &RunOpts { threaded: false }).unwrap();
+        c.snapshot_dir = dir_thr.to_string_lossy().into_owned();
+        run_linreg(&c, &RunOpts { threaded: true }).unwrap();
+        for round in [10, 20, 30] {
+            let a = std::fs::read(dir_seq.join(format!("snap_{round}.rtkc"))).unwrap();
+            let b = std::fs::read(dir_thr.join(format!("snap_{round}.rtkc"))).unwrap();
+            assert_eq!(a, b, "round {round}: executors must write identical snapshots");
+        }
+        std::fs::remove_dir_all(&dir_seq).ok();
+        std::fs::remove_dir_all(&dir_thr).ok();
+    }
+
+    #[test]
+    fn resume_from_directory_uses_newest_valid_and_survives_corruption() {
+        // End-to-end corruption recovery: corrupt the newest snapshot on
+        // disk, resume from the *directory* — training falls back to the
+        // older valid snapshot and still reproduces the uninterrupted run.
+        let dir = tmpdir("dir_resume");
+        let c = cfg(SparsifierKind::RegTopK { mu: 1.0, y: 1.0 }, &dir, 10);
+        let full = run_linreg(&c, &RunOpts::default()).unwrap();
+        // snap_30 exists (end of run); corrupt it and snap_20.
+        for round in [30, 20] {
+            let p = dir.join(format!("snap_{round}.rtkc"));
+            let mut bytes = std::fs::read(&p).unwrap();
+            let mid = bytes.len() / 3;
+            bytes[mid] ^= 0x01;
+            std::fs::write(&p, &bytes).unwrap();
+        }
+        let mut rc = c.clone();
+        rc.snapshot_every = 0;
+        rc.resume = dir.to_string_lossy().into_owned();
+        let resumed = run_linreg(&rc, &RunOpts::default()).unwrap();
+        assert_eq!(full.result.theta, resumed.result.theta, "fallback to snap_10 must work");
+        assert_eq!(full.result.comm, resumed.result.comm);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn adam_and_momentum_state_survive_resume() {
+        // Stateful server optimizers: a weights-only resume would reset the
+        // moments and bias-correction counter; the full-state snapshot must
+        // not. Momentum + Adam, RegTop-k, resume at both rounds.
+        use crate::config::OptimizerKind;
+        for opt in [
+            OptimizerKind::Momentum { beta: 0.9 },
+            OptimizerKind::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+        ] {
+            let dir = tmpdir(&format!("opt_{opt:?}").replace(['{', '}', ' ', ':', ','], "_"));
+            let mut c = cfg(SparsifierKind::RegTopK { mu: 1.0, y: 1.0 }, &dir, 10);
+            c.optimizer = opt;
+            let full = run_linreg(&c, &RunOpts::default()).unwrap();
+            for round in [10usize, 20] {
+                let mut rc = c.clone();
+                rc.snapshot_every = 0;
+                rc.resume = dir.join(format!("snap_{round}.rtkc")).to_string_lossy().into_owned();
+                let resumed = run_linreg(&rc, &RunOpts::default()).unwrap();
+                assert_eq!(
+                    full.result.theta, resumed.result.theta,
+                    "{opt:?} round {round}: optimizer state must survive resume"
+                );
+            }
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn genie_rejects_snapshots_and_resume() {
+        let dir = tmpdir("genie");
+        let c = cfg(SparsifierKind::GlobalTopK, &dir, 10);
+        assert!(run_linreg(&c, &RunOpts::default()).is_err());
+        let mut r = cfg(SparsifierKind::GlobalTopK, &dir, 0);
+        r.resume = dir.to_string_lossy().into_owned();
+        assert!(run_linreg(&r, &RunOpts::default()).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

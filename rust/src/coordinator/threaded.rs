@@ -39,8 +39,9 @@
 //! the peer is mid-iteration (transient) or dead (detected: ring sends
 //! fail once the receiver dropped, exactly like `mpsc` disconnects).
 
+use super::checkpoint::Checkpoint;
 use super::ring::{ring_channel, RingReceiver, RingSender};
-use super::{IterStats, TrainResult};
+use super::{snapshot, IterStats, TrainResult};
 use crate::collective::Aggregator;
 use crate::config::TrainConfig;
 use crate::grad::WorkerGrad;
@@ -100,14 +101,22 @@ enum ToWorker {
     Step { t: usize, theta: Arc<Vec<f32>> },
     /// Sparse broadcast union: (sorted indices, aggregated values).
     Observe { bcast: Arc<(Vec<u32>, Vec<f32>)> },
+    /// Export the sparsifier's round-carried state for a full-state
+    /// snapshot (sent after `Observe` on due rounds; ring order guarantees
+    /// the observation lands before the export).
+    Snapshot,
     Stop,
 }
 
-/// Worker -> leader message: local loss + sparse gradient (a shared handle
-/// into the worker's double-buffered message slot — no copy on the wire).
-struct FromWorker {
-    loss: f64,
-    msg: Arc<SparseGrad>,
+/// Worker -> leader messages.
+enum FromWorker {
+    /// Per-round uplink: local loss + sparse gradient (a shared handle
+    /// into the worker's double-buffered message slot — no copy on the
+    /// wire).
+    Grad { loss: f64, msg: Arc<SparseGrad> },
+    /// Reply to [`ToWorker::Snapshot`]: this worker's state sections
+    /// (boxed — snapshots are rare; the uplink ring stays small).
+    State(Box<Checkpoint>),
 }
 
 struct WorkerHandle {
@@ -120,6 +129,7 @@ fn spawn_worker(
     mut grad: Box<dyn WorkerGrad + Send>,
     mut sparsifier: Box<dyn Sparsifier>,
     dim: usize,
+    prefix: String,
     gemm_budget: usize,
     miss_counter: Arc<AtomicU64>,
 ) -> WorkerHandle {
@@ -137,12 +147,20 @@ fn spawn_worker(
                 ToWorker::Step { t, theta } => {
                     let loss = grad.grad(t, &theta, &mut gbuf);
                     sparsifier.compress(&gbuf, msg_bufs.write(t));
-                    if tx_res.send(FromWorker { loss, msg: msg_bufs.share(t) }).is_err() {
+                    if tx_res.send(FromWorker::Grad { loss, msg: msg_bufs.share(t) }).is_err()
+                    {
                         break;
                     }
                 }
                 ToWorker::Observe { bcast } => {
                     sparsifier.observe(SparseView::new(&bcast.0, &bcast.1))
+                }
+                ToWorker::Snapshot => {
+                    let mut ckpt = Checkpoint::new();
+                    sparsifier.export_state(&prefix, &mut ckpt);
+                    if tx_res.send(FromWorker::State(Box::new(ckpt))).is_err() {
+                        break;
+                    }
                 }
                 ToWorker::Stop => break,
             }
@@ -172,7 +190,28 @@ pub fn train_threaded(
     // the same budget the workers split below (guard restores on exit).
     let _budget = crate::tensor::pool::budget_guard(cfg.thread_budget());
     let omega: Vec<f32> = cfg.omega().iter().map(|&w| w as f32).collect();
-    let sparsifiers = super::build_sparsifiers(cfg, dim);
+    let mut sparsifiers = super::build_sparsifiers(cfg, dim);
+    let mut optimizer = optim::build(cfg.optimizer, dim);
+    let mut agg = Aggregator::new(dim);
+    let mut theta = theta0;
+    // Resume restores worker-side sparsifier state leader-side, *before*
+    // the state moves into the worker threads.
+    let sink = snapshot::SnapshotSink::from_config(cfg);
+    let start = if cfg.resume.is_empty() {
+        0
+    } else {
+        let (path, ckpt) = snapshot::resolve_resume(&cfg.resume)?;
+        let restored = snapshot::restore_core(
+            &ckpt,
+            cfg,
+            &mut theta,
+            optimizer.as_mut(),
+            &mut sparsifiers,
+        )
+        .map_err(|e| anyhow::anyhow!("resuming from `{}`: {e:#}", path.display()))?;
+        agg.comm = restored.comm;
+        restored.round
+    };
     let uplink_misses = Arc::new(AtomicU64::new(0));
     // Split the run's thread budget across the worker threads (each worker
     // is itself one lane), so inter-worker and intra-GEMM parallelism
@@ -181,16 +220,16 @@ pub fn train_threaded(
     let mut handles: Vec<WorkerHandle> = workers
         .into_iter()
         .zip(sparsifiers)
-        .map(|(g, s)| spawn_worker(g, s, dim, gemm_budget, Arc::clone(&uplink_misses)))
+        .enumerate()
+        .map(|(n, (g, s))| {
+            spawn_worker(g, s, dim, format!("w{n}/"), gemm_budget, Arc::clone(&uplink_misses))
+        })
         .collect();
-    let mut optimizer = optim::build(cfg.optimizer, dim);
-    let mut agg = Aggregator::new(dim);
-    let mut theta = theta0;
     let mut theta_bufs: DoubleBuffer<Vec<f32>> = DoubleBuffer::new(|| vec![0.0f32; dim]);
     let mut union_bufs: DoubleBuffer<(Vec<u32>, Vec<f32>)> = DoubleBuffer::new(Default::default);
     let mut uplinks: Vec<(f32, Arc<SparseGrad>)> = Vec::with_capacity(cfg.workers);
     let mut result: anyhow::Result<()> = Ok(());
-    'outer: for t in 0..cfg.iters {
+    'outer: for t in start..cfg.iters {
         let lr = cfg.lr_schedule.at(cfg.lr, t);
         theta_bufs.write(t).copy_from_slice(&theta);
         for (n, h) in handles.iter().enumerate() {
@@ -208,9 +247,15 @@ pub fn train_threaded(
         uplinks.clear();
         for (n, h) in handles.iter().enumerate() {
             match h.rx.recv() {
-                Ok(res) => {
-                    loss_sum += res.loss;
-                    uplinks.push((omega[n], res.msg));
+                Ok(FromWorker::Grad { loss, msg }) => {
+                    loss_sum += loss;
+                    uplinks.push((omega[n], msg));
+                }
+                Ok(FromWorker::State(_)) => {
+                    result = Err(anyhow::anyhow!(
+                        "worker {n} sent snapshot state where an iteration-{t} uplink was due"
+                    ));
+                    break 'outer;
                 }
                 Err(_) => {
                     result = Err(anyhow::anyhow!(
@@ -250,6 +295,51 @@ pub fn train_threaded(
             agg: dense,
             comm: &agg.comm,
         });
+        if let Some(sink) = &sink {
+            if sink.due(t) {
+                // Same section order as the sequential executor's
+                // `build_core`, so both write byte-identical files: meta,
+                // θ, comm, optimizer, then w0../wN in worker order. The
+                // Snapshot command rides the ring behind Observe{t} (≤ 2
+                // queued), and the leader drains every State reply before
+                // Step{t+1}, so capacities hold.
+                let mut ckpt = Checkpoint::new();
+                snapshot::stamp_meta(&mut ckpt, cfg, t + 1, snapshot::CORE_FAMILY);
+                ckpt.add("theta", &theta);
+                ckpt.add_u64("comm", &agg.comm.to_words());
+                optimizer.export_state("opt/", &mut ckpt);
+                for (n, h) in handles.iter().enumerate() {
+                    if h.tx.send(ToWorker::Snapshot).is_err() {
+                        result = Err(anyhow::anyhow!(
+                            "worker {n} died before exporting round-{} snapshot state",
+                            t + 1
+                        ));
+                        break 'outer;
+                    }
+                }
+                for (n, h) in handles.iter().enumerate() {
+                    match h.rx.recv() {
+                        Ok(FromWorker::State(part)) => ckpt.sections.extend(part.sections),
+                        _ => {
+                            result = Err(anyhow::anyhow!(
+                                "worker {n} failed to export round-{} snapshot state",
+                                t + 1
+                            ));
+                            break 'outer;
+                        }
+                    }
+                }
+                if let Err(e) = sink.save(t + 1, &ckpt) {
+                    result = Err(e);
+                    break 'outer;
+                }
+            }
+        }
+        if cfg.crash_at != 0 && t + 1 == cfg.crash_at {
+            // Crash injection: hard-kill without joining the workers, like
+            // a power loss. Any snapshot due this round already persisted.
+            std::process::exit(13);
+        }
     }
     for h in &handles {
         let _ = h.tx.send(ToWorker::Stop);
@@ -451,12 +541,15 @@ mod tests {
             Box::new(PanicAt { dim, at: 1 }),
             SparsifierKind::TopK.build(dim, 2, 1.0, 0),
             dim,
+            "w0/".into(),
             1,
             Arc::new(AtomicU64::new(0)),
         );
         h.tx.send(ToWorker::Step { t: 0, theta: Arc::new(vec![0.0; dim]) }).unwrap();
-        let up = h.rx.recv().expect("iteration-0 uplink");
-        assert_eq!(up.msg.len(), 2);
+        match h.rx.recv().expect("iteration-0 uplink") {
+            FromWorker::Grad { msg, .. } => assert_eq!(msg.len(), 2),
+            FromWorker::State(_) => panic!("unexpected snapshot state"),
+        }
         h.tx.send(ToWorker::Step { t: 1, theta: Arc::new(vec![0.0; dim]) }).unwrap();
         assert!(h.rx.recv().is_err(), "worker dies processing iteration 1");
         // Join before the send assertion: the dying worker drops its two

@@ -53,7 +53,11 @@ pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
         vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0, 10.0]
     };
     let mut curves = Curves::new();
-    let mut suite = FinetuneSuite::new(size);
+    // Same CRC-verified on-disk pretrain cache as Table 1: every μ point
+    // (and a later Table 1 run over the same out-dir) reuses the persisted
+    // checkpoints instead of pretraining again.
+    let mut suite =
+        FinetuneSuite::new(size).with_disk_cache(opts.out_dir.join("pretrain_cache"));
     println!("mu     accuracy(mean±std)   [mu=0 is TOP-k]");
     for &mu in &grid {
         let (m, sd) = accuracy_at_mu_with(&mut suite, mu, sparsity, &seeds)?;

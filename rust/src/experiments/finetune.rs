@@ -8,6 +8,7 @@
 //! structure, 10 common random seeds, and the same statistical tests.
 
 use crate::config::{ModelKind, OptimizerKind, TrainConfig};
+use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::{train, IterStats};
 use crate::data::{ImageDataset, ImageGenConfig};
 use crate::grad::{ConvGrad, MlpGrad, WorkerGrad};
@@ -15,6 +16,7 @@ use crate::models::{ConvConfig, MlpConfig};
 use crate::rng::Pcg64;
 use crate::sparsify::SparsifierKind;
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 /// One model variant of the suite (stand-ins for SqueezeNet /
@@ -225,6 +227,69 @@ pub fn pretrain(size: &SuiteSize, variant: &Variant, seed: u64) -> Vec<f32> {
     theta
 }
 
+/// Canonical description of everything `pretrain` is deterministic in.
+/// Stored verbatim inside the cache file and re-checked on load, so a
+/// filename hash collision degrades to a cache miss, never a wrong θ.
+fn pretrain_key(size: &SuiteSize, variant: &Variant, seed: u64) -> String {
+    format!(
+        "pretrain v2 model={:?} variant={} hidden={} conv_base={} workers={} classes={} \
+         side={} per_worker={} batch={} pretrain_steps={} seed={}",
+        size.model,
+        variant.name,
+        variant.hidden,
+        variant.conv_base,
+        size.workers,
+        size.classes,
+        size.side,
+        size.per_worker,
+        size.batch,
+        size.pretrain_steps,
+        seed
+    )
+}
+
+/// FNV-1a over the canonical key — names the cache file.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Cached pretrain read: the checkpoint-v2 loader verifies the per-section
+/// and trailer CRCs, then the stored key and θ length are checked. Any
+/// failure — truncation, bit flip, a stale file from different suite
+/// dimensions — reads as a miss and the checkpoint is re-derived.
+fn load_cached_pretrain(path: &Path, key: &str, dim: usize) -> Option<Vec<f32>> {
+    let ckpt = Checkpoint::load(path).ok()?;
+    if ckpt.require_bytes("meta/key").ok()? != key.as_bytes() {
+        return None;
+    }
+    Some(ckpt.require_len("theta", dim).ok()?.to_vec())
+}
+
+/// Pre-train with a verified disk cache under `dir`: a valid cached file
+/// for the same generating inputs is trusted (bit-identical to deriving —
+/// pinned in tests); a missing, corrupt, or mismatched one is re-derived
+/// and overwritten. Persisting is best-effort: an unwritable cache is
+/// just a miss, never an error.
+pub fn pretrain_cached(size: &SuiteSize, variant: &Variant, seed: u64, dir: &Path) -> Vec<f32> {
+    let key = pretrain_key(size, variant, seed);
+    let path = dir.join(format!("pretrain_{:016x}.rtkc", fnv1a(key.as_bytes())));
+    if let Some(theta) = load_cached_pretrain(&path, &key, size.model_dim(variant)) {
+        return theta;
+    }
+    let theta = pretrain(size, variant, seed);
+    let mut ckpt = Checkpoint::new();
+    ckpt.add_bytes("meta/key", key.as_bytes());
+    ckpt.add("theta", &theta);
+    if let Err(e) = std::fs::create_dir_all(dir).map_err(anyhow::Error::from).and_then(|_| ckpt.save(&path)) {
+        eprintln!("warning: could not persist pretrain cache `{}`: {e:#}", path.display());
+    }
+    theta
+}
+
 /// The fine-tuning task: a heterogeneity-shifted dataset shared by all
 /// policies under one seed (paired comparison).
 pub fn finetune_data(size: &SuiteSize, seed: u64) -> Arc<ImageDataset> {
@@ -303,11 +368,21 @@ struct SeedWorkload {
 pub struct FinetuneSuite {
     size: SuiteSize,
     cache: HashMap<(&'static str, u64), SeedWorkload>,
+    /// CRC-verified pretrain checkpoint cache on disk ([`pretrain_cached`]);
+    /// `None` keeps the suite memory-only.
+    disk_cache: Option<PathBuf>,
 }
 
 impl FinetuneSuite {
     pub fn new(size: SuiteSize) -> Self {
-        FinetuneSuite { size, cache: HashMap::new() }
+        FinetuneSuite { size, cache: HashMap::new(), disk_cache: None }
+    }
+
+    /// Persist pretrained checkpoints under `dir` so repeated suite runs
+    /// (and separate experiments sharing an out-dir) skip pretraining.
+    pub fn with_disk_cache(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.disk_cache = Some(dir.into());
+        self
     }
 
     pub fn size(&self) -> &SuiteSize {
@@ -317,8 +392,12 @@ impl FinetuneSuite {
     fn workload(&mut self, variant: &Variant, seed: u64) -> &mut SeedWorkload {
         let size = self.size;
         let variant = *variant;
+        let disk = self.disk_cache.clone();
         self.cache.entry((variant.name, seed)).or_insert_with(|| {
-            let checkpoint = pretrain(&size, &variant, seed);
+            let checkpoint = match &disk {
+                Some(dir) => pretrain_cached(&size, &variant, seed, dir),
+                None => pretrain(&size, &variant, seed),
+            };
             let data = finetune_data(&size, seed);
             let eval = size.oracle(&variant, &data, 0, size.batch, seed);
             SeedWorkload { checkpoint, data, eval }
@@ -457,6 +536,76 @@ mod tests {
                 assert_eq!(c.val_loss, f.val_loss, "{:?}", size.model);
             }
         }
+    }
+
+    #[test]
+    fn disk_cached_pretrain_is_verified_and_rederives_on_corruption() {
+        let dir = std::env::temp_dir()
+            .join(format!("regtopk_pretrain_cache_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let size = SuiteSize::default_size(true);
+        let v = VARIANTS[0];
+        let fresh = pretrain(&size, &v, 5);
+        // Miss → derive + persist; hit → bit-identical to deriving.
+        let a = pretrain_cached(&size, &v, 5, &dir);
+        assert_eq!(a, fresh);
+        let path = dir
+            .join(format!("pretrain_{:016x}.rtkc", fnv1a(pretrain_key(&size, &v, 5).as_bytes())));
+        assert!(path.exists(), "miss must persist the checkpoint");
+        let b = pretrain_cached(&size, &v, 5, &dir);
+        assert_eq!(b, fresh, "cache hit must be bit-identical");
+        // Flip one payload byte: the CRC-verified loader must reject the
+        // file and the call must silently re-derive and heal the cache.
+        let mut raw = std::fs::read(&path).unwrap();
+        let mid = raw.len() / 2;
+        raw[mid] ^= 0x40;
+        std::fs::write(&path, &raw).unwrap();
+        assert!(
+            load_cached_pretrain(&path, &pretrain_key(&size, &v, 5), size.model_dim(&v))
+                .is_none(),
+            "corrupted cache file must not load"
+        );
+        let c = pretrain_cached(&size, &v, 5, &dir);
+        assert_eq!(c, fresh, "corruption must fall back to re-deriving");
+        assert!(
+            load_cached_pretrain(&path, &pretrain_key(&size, &v, 5), size.model_dim(&v))
+                .is_some(),
+            "re-derivation must overwrite the corrupt file"
+        );
+        // A stale file under the right name but the wrong key (hash
+        // collision / old format) is a miss, not a wrong checkpoint.
+        let mut stale = Checkpoint::new();
+        stale.add_bytes("meta/key", b"something else entirely");
+        stale.add("theta", &fresh);
+        stale.save(&path).unwrap();
+        let d = pretrain_cached(&size, &v, 5, &dir);
+        assert_eq!(d, fresh);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn disk_cached_suite_matches_memory_only_suite() {
+        let dir = std::env::temp_dir()
+            .join(format!("regtopk_suite_cache_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let size = SuiteSize::default_size(true);
+        let v = &VARIANTS[0];
+        let seeds = [0u64, 1];
+        let mem = FinetuneSuite::new(size)
+            .run_cell(v, SparsifierKind::TopK, 0.05, &seeds)
+            .unwrap();
+        // First disk-backed suite populates the cache, the second reads it.
+        for _ in 0..2 {
+            let disk = FinetuneSuite::new(size)
+                .with_disk_cache(&dir)
+                .run_cell(v, SparsifierKind::TopK, 0.05, &seeds)
+                .unwrap();
+            for (m, d) in mem.iter().zip(&disk) {
+                assert_eq!(m.val_accuracy, d.val_accuracy);
+                assert_eq!(m.val_loss, d.val_loss);
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

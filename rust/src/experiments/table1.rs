@@ -47,7 +47,17 @@ pub fn run_suite(
     sparsities: &[f64],
     seeds: &[u64],
 ) -> anyhow::Result<Vec<Cell>> {
-    let mut suite = FinetuneSuite::new(*size);
+    run_suite_in(FinetuneSuite::new(*size), variants, sparsities, seeds)
+}
+
+/// Grid runner over a caller-built suite (e.g. one with a disk-backed,
+/// CRC-verified pretrain cache).
+pub fn run_suite_in(
+    mut suite: FinetuneSuite,
+    variants: &[Variant],
+    sparsities: &[f64],
+    seeds: &[u64],
+) -> anyhow::Result<Vec<Cell>> {
     let mut cells = Vec::new();
     for v in variants {
         // Previous variants' workloads are dead weight from here on:
@@ -85,7 +95,11 @@ pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
     // matched operating points keep k small but nonzero: 2% and 0.5%.
     let sparsities = [0.02, 0.005];
     let seeds: Vec<u64> = (0..if opts.fast { 3 } else { 10 }).collect();
-    let cells = run_suite(&size, variants, &sparsities, &seeds)?;
+    // Pretrained checkpoints persist across invocations in a CRC-verified
+    // cache; a corrupted file is detected and re-derived, never trusted.
+    let suite =
+        FinetuneSuite::new(size).with_disk_cache(opts.out_dir.join("pretrain_cache"));
+    let cells = run_suite_in(suite, variants, &sparsities, &seeds)?;
     let mut rows = Vec::new();
     for c in &cells {
         let t = c.t_test_acc();

@@ -39,10 +39,17 @@ const USAGE: &str = "usage:
       ids: fig1 fig3 fig4 fig5 fig6 fig7 fig8 table1 table2 ablations robustness fig_scale
       --model picks the native image backend (default: conv — the residual CNN)
   regtopk train [--config FILE] [--set key=value ...] [--threaded]
+      [--resume PATH] [--crash-at N] [--curve-out FILE]
+      --resume: restore a checksummed `.rtkc` snapshot (or the newest valid
+      one in a directory) and continue bit-identically; snapshots are written
+      with `--set snapshot_every=N` (see also snapshot_dir, snapshot_keep)
+      --crash-at: hard-kill (exit 13) after round N persists, for recovery
+      drills; --curve-out: write the gap curve as CSV
   regtopk train --cluster [--set key=value ...] [--p-straggle P] [--p-death P]
       [--p-loss P] [--fault-seed N] [--shards N]
       simulated-cluster run: logical workers over lanes (`--set lanes=N`,
-      `--set staleness=W`) with seeded fault injection and survivor continuation
+      `--set staleness=W`) with seeded fault injection and survivor
+      continuation; snapshot/resume/crash flags apply here too
   regtopk info [--artifacts DIR]";
 
 fn cmd_exp(args: &Args) -> anyhow::Result<()> {
@@ -80,6 +87,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         let value = parse_value(raw).map_err(|e| anyhow::anyhow!("{e}"))?;
         cfg.apply_kv(key, &value).map_err(|e| anyhow::anyhow!("{e}"))?;
     }
+    if let Some(path) = args.opt("resume") {
+        cfg.resume = path.to_string();
+    }
+    if let Some(round) = args.opt_parse::<usize>("crash-at").map_err(|e| anyhow::anyhow!("{e}"))? {
+        cfg.crash_at = round;
+    }
     cfg.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
     println!(
         "training: {} workers={} J={} S={} lr={} iters={}",
@@ -95,6 +108,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     }
     let opts = RunOpts { threaded: args.flag("threaded") };
     let report = run_linreg(&cfg, &opts)?;
+    if let Some(path) = args.opt("curve-out") {
+        write_curve(path, &report.gap_curve)?;
+    }
     for &(t, gap) in report
         .gap_curve
         .iter()
@@ -141,6 +157,9 @@ fn cmd_train_cluster(args: &Args, cfg: &TrainConfig) -> anyhow::Result<()> {
         ..Default::default()
     };
     let report = run_linreg_cluster(cfg, &gen, &plan, &copts)?;
+    if let Some(path) = args.opt("curve-out") {
+        write_curve(path, &report.gap_curve)?;
+    }
     for &(t, gap) in report
         .gap_curve
         .iter()
@@ -159,6 +178,18 @@ fn cmd_train_cluster(args: &Args, cfg: &TrainConfig) -> anyhow::Result<()> {
         "faults: merged_stale={} discarded_stale={} empty_rounds={}",
         r.merged_stale, r.discarded_stale, r.empty_rounds
     );
+    Ok(())
+}
+
+/// Gap curve as CSV. `{:e}` prints the shortest round-trippable form, so
+/// two bit-identical runs produce byte-identical files — the CI resume
+/// smoke test diffs these directly.
+fn write_curve(path: &str, curve: &[(usize, f64)]) -> anyhow::Result<()> {
+    let mut out = String::from("iter,gap\n");
+    for &(t, gap) in curve {
+        out.push_str(&format!("{t},{gap:e}\n"));
+    }
+    std::fs::write(path, out)?;
     Ok(())
 }
 

@@ -138,6 +138,27 @@ impl CommStats {
         self.downlink_index_bits += other.downlink_index_bits;
     }
 
+    /// Flatten into four u64 words for checkpointing (the inverse of
+    /// [`CommStats::from_words`]).
+    pub fn to_words(&self) -> [u64; 4] {
+        [
+            self.uplink_values,
+            self.uplink_index_bits,
+            self.downlink_values,
+            self.downlink_index_bits,
+        ]
+    }
+
+    /// Rebuild from [`CommStats::to_words`] output.
+    pub fn from_words(words: [u64; 4]) -> CommStats {
+        CommStats {
+            uplink_values: words[0],
+            uplink_index_bits: words[1],
+            downlink_values: words[2],
+            downlink_index_bits: words[3],
+        }
+    }
+
     /// Difference against an earlier snapshot of the same cumulative
     /// counter — the per-round entry of a wire ledger. Panics (debug) if
     /// `earlier` is not actually earlier.

@@ -6,6 +6,7 @@
 //! §5.3 fine-tuning experiments.
 
 use crate::config::OptimizerKind;
+use crate::coordinator::checkpoint::Checkpoint;
 
 /// Server-side optimizer state.
 pub trait Optimizer: Send {
@@ -14,6 +15,15 @@ pub trait Optimizer: Send {
 
     /// Reset internal state (new run).
     fn reset(&mut self);
+
+    /// Serialize round-carried state (moments, step counters) under
+    /// `prefix` for a full-state snapshot. Stateless optimizers write
+    /// nothing.
+    fn export_state(&self, prefix: &str, out: &mut Checkpoint);
+
+    /// Restore state written by [`Optimizer::export_state`]; length or
+    /// type mismatches are errors, never panics.
+    fn import_state(&mut self, prefix: &str, ckpt: &Checkpoint) -> anyhow::Result<()>;
 }
 
 /// Plain SGD.
@@ -28,6 +38,12 @@ impl Optimizer for Sgd {
     }
 
     fn reset(&mut self) {}
+
+    fn export_state(&self, _prefix: &str, _out: &mut Checkpoint) {}
+
+    fn import_state(&mut self, _prefix: &str, _ckpt: &Checkpoint) -> anyhow::Result<()> {
+        Ok(())
+    }
 }
 
 /// Heavy-ball momentum.
@@ -55,6 +71,16 @@ impl Optimizer for Momentum {
         for v in self.velocity.iter_mut() {
             *v = 0.0;
         }
+    }
+
+    fn export_state(&self, prefix: &str, out: &mut Checkpoint) {
+        out.add(&format!("{prefix}velocity"), &self.velocity);
+    }
+
+    fn import_state(&mut self, prefix: &str, ckpt: &Checkpoint) -> anyhow::Result<()> {
+        let name = format!("{prefix}velocity");
+        self.velocity.copy_from_slice(ckpt.require_len(&name, self.velocity.len())?);
+        Ok(())
     }
 }
 
@@ -101,6 +127,24 @@ impl Optimizer for Adam {
         for v in self.v.iter_mut() {
             *v = 0.0;
         }
+    }
+
+    fn export_state(&self, prefix: &str, out: &mut Checkpoint) {
+        // The bias-correction step counter rides with the moments — a
+        // resumed Adam must correct with the true global step, not 1.
+        out.add_u64(&format!("{prefix}t"), &[self.t]);
+        out.add(&format!("{prefix}m"), &self.m);
+        out.add(&format!("{prefix}v"), &self.v);
+    }
+
+    fn import_state(&mut self, prefix: &str, ckpt: &Checkpoint) -> anyhow::Result<()> {
+        let t = ckpt.require_scalar(&format!("{prefix}t"))?;
+        let m = ckpt.require_len(&format!("{prefix}m"), self.m.len())?;
+        let v = ckpt.require_len(&format!("{prefix}v"), self.v.len())?;
+        self.t = t;
+        self.m.copy_from_slice(m);
+        self.v.copy_from_slice(v);
+        Ok(())
     }
 }
 

@@ -3,6 +3,7 @@
 
 use super::select::top_k_indices_into;
 use super::{SparseGrad, Sparsifier};
+use crate::coordinator::checkpoint::Checkpoint;
 use crate::rng::Pcg64;
 
 /// No sparsification: send the full accumulated gradient (with error
@@ -46,6 +47,15 @@ impl Sparsifier for Dense {
         for v in self.acc.iter_mut() {
             *v = 0.0;
         }
+    }
+
+    fn export_state(&self, _prefix: &str, _out: &mut Checkpoint) {
+        // Dense carries no round state: eps is identically zero and acc
+        // is rewritten from the fresh gradient every round.
+    }
+
+    fn import_state(&mut self, _prefix: &str, _ckpt: &Checkpoint) -> anyhow::Result<()> {
+        Ok(())
     }
 }
 
@@ -100,6 +110,16 @@ impl Sparsifier for HardThreshold {
         for v in self.eps.iter_mut() {
             *v = 0.0;
         }
+    }
+
+    fn export_state(&self, prefix: &str, out: &mut Checkpoint) {
+        out.add(&format!("{prefix}eps"), &self.eps);
+    }
+
+    fn import_state(&mut self, prefix: &str, ckpt: &Checkpoint) -> anyhow::Result<()> {
+        let name = format!("{prefix}eps");
+        self.eps.copy_from_slice(ckpt.require_len(&name, self.eps.len())?);
+        Ok(())
     }
 }
 
@@ -168,6 +188,23 @@ impl Sparsifier for RandK {
         for v in self.eps.iter_mut() {
             *v = 0.0;
         }
+    }
+
+    fn export_state(&self, prefix: &str, out: &mut Checkpoint) {
+        // RandK's selection stream must continue where it left off, so the
+        // generator position rides along with the error accumulator.
+        out.add(&format!("{prefix}eps"), &self.eps);
+        out.add_u64(&format!("{prefix}rng"), &self.rng.state_words());
+    }
+
+    fn import_state(&mut self, prefix: &str, ckpt: &Checkpoint) -> anyhow::Result<()> {
+        let eps_name = format!("{prefix}eps");
+        let rng_name = format!("{prefix}rng");
+        let words = ckpt.require_u64(&rng_name)?;
+        anyhow::ensure!(words.len() == 4, "section `{rng_name}` must hold 4 words");
+        self.eps.copy_from_slice(ckpt.require_len(&eps_name, self.eps.len())?);
+        self.rng = Pcg64::from_state_words([words[0], words[1], words[2], words[3]]);
+        Ok(())
     }
 }
 

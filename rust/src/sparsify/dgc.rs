@@ -12,6 +12,7 @@
 
 use super::select::top_k_indices_into;
 use super::{SparseGrad, Sparsifier};
+use crate::coordinator::checkpoint::Checkpoint;
 
 /// DGC worker state.
 pub struct Dgc {
@@ -86,6 +87,22 @@ impl Sparsifier for Dgc {
         for v in self.v.iter_mut() {
             *v = 0.0;
         }
+    }
+
+    fn export_state(&self, prefix: &str, out: &mut Checkpoint) {
+        // Both accumulators carry across rounds (momentum + velocity).
+        out.add(&format!("{prefix}u"), &self.u);
+        out.add(&format!("{prefix}v"), &self.v);
+    }
+
+    fn import_state(&mut self, prefix: &str, ckpt: &Checkpoint) -> anyhow::Result<()> {
+        let u_name = format!("{prefix}u");
+        let v_name = format!("{prefix}v");
+        let u = ckpt.require_len(&u_name, self.u.len())?;
+        let v = ckpt.require_len(&v_name, self.v.len())?;
+        self.u.copy_from_slice(u);
+        self.v.copy_from_slice(v);
+        Ok(())
     }
 }
 

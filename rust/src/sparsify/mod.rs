@@ -49,6 +49,7 @@ pub mod select;
 pub mod topk;
 
 use crate::config::ConfigError;
+use crate::coordinator::checkpoint::Checkpoint;
 
 /// A sparsified gradient message: parallel arrays of entry indices and the
 /// (accumulated-)gradient values at those indices.
@@ -238,6 +239,40 @@ pub trait Sparsifier: Send {
 
     /// Reset all state (new run).
     fn reset(&mut self);
+
+    /// Serialize every *round-carried* piece of state (anything read by a
+    /// later `compress`/`observe` before being overwritten) into `out`,
+    /// each section name prefixed with `prefix` (e.g. `"w3/"`). Scratch
+    /// buffers that are fully rewritten before being read are skipped:
+    /// restoring the exported sections into a fresh instance must make the
+    /// continuation bit-identical to never having stopped.
+    fn export_state(&self, prefix: &str, out: &mut Checkpoint);
+
+    /// Restore state written by [`Sparsifier::export_state`] under the
+    /// same prefix. Dimension/length mismatches and out-of-range indices
+    /// are errors, never panics (the checkpoint is untrusted input).
+    fn import_state(&mut self, prefix: &str, ckpt: &Checkpoint) -> anyhow::Result<()>;
+}
+
+/// Validate a checkpointed selection list: ascending, unique, in-range
+/// indices — the invariant every selection producer in this crate
+/// maintains and the O(k) patch/gather paths rely on.
+pub(crate) fn import_selection(
+    name: &str,
+    raw: &[u64],
+    dim: usize,
+    k: usize,
+) -> anyhow::Result<Vec<u32>> {
+    anyhow::ensure!(raw.len() <= k, "section `{name}` has {} entries, k = {k}", raw.len());
+    let mut out = Vec::with_capacity(raw.len());
+    let mut prev: i64 = -1;
+    for &v in raw {
+        anyhow::ensure!(v < dim as u64, "section `{name}` index {v} out of range (J = {dim})");
+        anyhow::ensure!((v as i64) > prev, "section `{name}` indices must be sorted unique");
+        prev = v as i64;
+        out.push(v as u32);
+    }
+    Ok(out)
 }
 
 #[cfg(test)]

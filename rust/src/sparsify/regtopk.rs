@@ -56,7 +56,8 @@
 //! entries are treated as "no information" (Δ = Q → regularizer = C).
 
 use super::select::top_k_indices_into;
-use super::{SparseGrad, SparseView, Sparsifier};
+use super::{import_selection, SparseGrad, SparseView, Sparsifier};
+use crate::coordinator::checkpoint::Checkpoint;
 
 /// Threshold below which ω_n·a_j is considered zero for the Δ division.
 pub const DELTA_GUARD: f32 = 1e-30;
@@ -233,6 +234,43 @@ impl Sparsifier for RegTopK {
         self.selected.clear();
         self.acc_sel_prev.clear();
         self.agg_sel.clear();
+    }
+
+    fn export_state(&self, prefix: &str, out: &mut Checkpoint) {
+        // The full posterior context: iteration counter, error state, the
+        // previous selection S^{t-1} with its accumulated values, and the
+        // broadcast gather (plus the flag saying whether it arrived).
+        // acc/scores/scratch are rewritten before being read and stay out.
+        out.add_u64(&format!("{prefix}t"), &[self.t as u64]);
+        out.add_u64(&format!("{prefix}has_agg"), &[self.has_agg as u64]);
+        out.add(&format!("{prefix}eps"), &self.eps);
+        let sel: Vec<u64> = self.selected.iter().map(|&i| i as u64).collect();
+        out.add_u64(&format!("{prefix}sel"), &sel);
+        out.add(&format!("{prefix}acc_sel_prev"), &self.acc_sel_prev);
+        // A stale gather (broadcast lost ⇒ has_agg = false) is never read
+        // again — export it empty instead of with a mismatched length.
+        out.add(&format!("{prefix}agg_sel"), if self.has_agg { &self.agg_sel } else { &[] });
+    }
+
+    fn import_state(&mut self, prefix: &str, ckpt: &Checkpoint) -> anyhow::Result<()> {
+        let dim = self.eps.len();
+        let t = ckpt.require_scalar(&format!("{prefix}t"))?;
+        let has_agg = ckpt.require_scalar(&format!("{prefix}has_agg"))?;
+        anyhow::ensure!(has_agg <= 1, "section `{prefix}has_agg` must be 0 or 1");
+        let eps = ckpt.require_len(&format!("{prefix}eps"), dim)?;
+        let sel_name = format!("{prefix}sel");
+        let selected = import_selection(&sel_name, ckpt.require_u64(&sel_name)?, dim, self.k)?;
+        let acc_sel_prev =
+            ckpt.require_len(&format!("{prefix}acc_sel_prev"), selected.len())?;
+        let agg_sel =
+            ckpt.require_len(&format!("{prefix}agg_sel"), if has_agg == 1 { selected.len() } else { 0 })?;
+        self.t = t as usize;
+        self.has_agg = has_agg == 1;
+        self.eps.copy_from_slice(eps);
+        self.selected = selected;
+        self.acc_sel_prev = acc_sel_prev.to_vec();
+        self.agg_sel = agg_sel.to_vec();
+        Ok(())
     }
 }
 

@@ -2,6 +2,7 @@
 
 use super::select::top_k_indices_into;
 use super::{SparseGrad, Sparsifier};
+use crate::coordinator::checkpoint::Checkpoint;
 
 /// TOP-k state for one worker: the sparsification error `eps` and reusable
 /// scratch buffers so `compress` allocates nothing after warmup.
@@ -76,6 +77,18 @@ impl Sparsifier for TopK {
         for v in self.acc.iter_mut() {
             *v = 0.0;
         }
+    }
+
+    fn export_state(&self, prefix: &str, out: &mut Checkpoint) {
+        // Only `eps` is round-carried: acc/scores/selected are fully
+        // rewritten by the next compress before anything reads them.
+        out.add(&format!("{prefix}eps"), &self.eps);
+    }
+
+    fn import_state(&mut self, prefix: &str, ckpt: &Checkpoint) -> anyhow::Result<()> {
+        let name = format!("{prefix}eps");
+        self.eps.copy_from_slice(ckpt.require_len(&name, self.eps.len())?);
+        Ok(())
     }
 }
 
