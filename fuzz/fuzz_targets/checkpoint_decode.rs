@@ -1,0 +1,25 @@
+//! Fuzz the checkpoint v2 section decoder: arbitrary bytes through
+//! `Checkpoint::from_bytes` must never panic, overflow, or over-allocate
+//! (the decoder bounds every length field against the remaining input
+//! before allocating). When a mutant does parse, it must re-encode and
+//! re-parse to the same section set — the decode/encode pair is a
+//! round-trip on the accepted language.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+use regtopk::coordinator::checkpoint::Checkpoint;
+
+fuzz_target!(|data: &[u8]| {
+    let Ok(ckpt) = Checkpoint::from_bytes(data) else {
+        return; // graceful rejection is the common, correct outcome
+    };
+    let bytes = ckpt.to_bytes();
+    let again = Checkpoint::from_bytes(&bytes)
+        .expect("re-encoding an accepted checkpoint must stay parseable");
+    assert_eq!(
+        again.to_bytes(),
+        bytes,
+        "decode -> encode must be a fixed point on accepted inputs"
+    );
+});

@@ -1,0 +1,64 @@
+//! Fuzz the snapshot restore path above the section decoder: a parsed
+//! (or fuzzer-mutated) checkpoint driven through meta validation, the
+//! comm-ledger read, and a full `restore_core` into freshly built run
+//! components — across every sparsifier family and optimizer with
+//! importable state. Adversarial section contents (wrong lengths,
+//! out-of-range indices, truncated state vectors, mismatched configs)
+//! must surface as `Err`, never as a panic or a partially applied θ.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+use regtopk::config::{OptimizerKind, TrainConfig};
+use regtopk::coordinator::checkpoint::Checkpoint;
+use regtopk::coordinator::snapshot;
+use regtopk::sparsify::SparsifierKind;
+
+const DIM: usize = 8;
+const WORKERS: usize = 2;
+
+const KINDS: [SparsifierKind; 5] = [
+    SparsifierKind::TopK,
+    SparsifierKind::RegTopK { mu: 1.0, y: 1.0 },
+    SparsifierKind::RandK,
+    SparsifierKind::Dgc { momentum: 0.9 },
+    SparsifierKind::Dense,
+];
+
+const OPTS: [OptimizerKind; 3] = [
+    OptimizerKind::Sgd,
+    OptimizerKind::Momentum { beta: 0.9 },
+    OptimizerKind::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+];
+
+fuzz_target!(|data: &[u8]| {
+    let Ok(ckpt) = Checkpoint::from_bytes(data) else {
+        return; // the decoder itself is covered by checkpoint_decode
+    };
+    let _ = snapshot::read_comm(&ckpt);
+    for kind in KINDS {
+        for opt in OPTS {
+            let cfg = TrainConfig {
+                workers: WORKERS,
+                dim: DIM,
+                sparsity: 0.25,
+                sparsifier: kind,
+                optimizer: opt,
+                ..Default::default()
+            };
+            let mut theta = vec![0.0f32; DIM];
+            let mut optimizer = regtopk::optim::build(cfg.optimizer, DIM);
+            let mut sparsifiers: Vec<_> = (0..WORKERS)
+                .map(|n| cfg.sparsifier.build(DIM, cfg.k(), 1.0 / WORKERS as f64, n as u64))
+                .collect();
+            // Ok or Err are both fine; panicking or aborting is the bug.
+            let _ = snapshot::restore_core(
+                &ckpt,
+                &cfg,
+                &mut theta,
+                optimizer.as_mut(),
+                &mut sparsifiers,
+            );
+        }
+    }
+});

@@ -1,0 +1,131 @@
+//! Loom model-checking harness for the two hand-rolled synchronization
+//! protocols in the main crate: the SPSC ring channel
+//! (`coordinator::ring`) and the scoped GEMM pool's countdown latch
+//! (`tensor::pool`). Loom exhausts every thread interleaving of each
+//! model, so the properties below hold for *all* schedules, not just the
+//! ones a sleep-based unit test happens to provoke.
+//!
+//! The production sources are included verbatim via `#[path]` — there is
+//! no copy to drift out of date. Under `--cfg loom` those files swap
+//! `std::sync`/`std::thread` for loom's versions and compile out the
+//! process-global machinery (sysfs census, `OnceLock` pool, thread-local
+//! budgets), which a model checker cannot host.
+//!
+//! Run with:
+//!
+//! ```sh
+//! cd loom && RUSTFLAGS="--cfg loom" cargo test --release
+//! ```
+//!
+//! Without `--cfg loom` this crate still builds against std and runs the
+//! included files' ordinary unit tests, so a plain `cargo test` here is
+//! harmless (just redundant with the root crate's).
+
+#[path = "../../rust/src/coordinator/ring.rs"]
+pub mod ring;
+
+#[path = "../../rust/src/tensor/pool.rs"]
+pub mod pool;
+
+#[cfg(all(test, loom))]
+mod models {
+    use crate::pool::ScopedPool;
+    use crate::ring::{ring_channel, RecvError};
+    use loom::thread;
+
+    /// FIFO delivery through a capacity-1 ring (every send after the first
+    /// blocks on a full ring), then the disconnect drain: messages buffered
+    /// before the sender dropped are still delivered, and only an empty,
+    /// disconnected ring errors.
+    #[test]
+    fn ring_fifo_then_drain_then_error() {
+        loom::model(|| {
+            let (tx, rx) = ring_channel::<u32>(1);
+            let producer = thread::spawn(move || {
+                tx.send(1).unwrap();
+                tx.send(2).unwrap();
+                // tx drops here: disconnect races with the final recvs.
+            });
+            assert_eq!(rx.recv(), Ok(1));
+            assert_eq!(rx.recv(), Ok(2));
+            assert_eq!(rx.recv(), Err(RecvError));
+            producer.join().unwrap();
+        });
+    }
+
+    /// A sender parked on a full ring must wake and fail — payload handed
+    /// back, never a hang — when the receiver drops. This is the executor's
+    /// worker-death detection path.
+    #[test]
+    fn ring_blocked_sender_wakes_and_fails_on_receiver_drop() {
+        loom::model(|| {
+            let (tx, rx) = ring_channel::<u32>(1);
+            tx.send(1).unwrap();
+            let producer = thread::spawn(move || tx.send(2));
+            drop(rx);
+            let r = producer.join().unwrap();
+            let err = r.expect_err("send to a dropped receiver must fail");
+            assert_eq!(err.0, 2, "the unsent payload must be handed back");
+        });
+    }
+
+    /// recv racing a concurrent send must always observe the message (the
+    /// not_empty signal cannot be lost between the occupancy check and the
+    /// condvar wait).
+    #[test]
+    fn ring_recv_never_misses_a_concurrent_send() {
+        loom::model(|| {
+            let (tx, rx) = ring_channel::<u32>(2);
+            let producer = thread::spawn(move || tx.send(7).unwrap());
+            assert_eq!(rx.recv(), Ok(7));
+            producer.join().unwrap();
+        });
+    }
+
+    /// The latch protocol behind `ScopedPool::scope`: the call must not
+    /// return before the offloaded job has fully run, in every schedule.
+    /// That blocking wait is the exact soundness argument for the
+    /// lifetime-erasing transmute inside `scope` — the borrowed task can
+    /// never outlive the call — so exhausting the interleavings here checks
+    /// the `// SAFETY:` claim itself, not just liveness.
+    #[test]
+    fn pool_scope_blocks_until_offloaded_write_lands() {
+        loom::model(|| {
+            let pool = ScopedPool::new(1);
+            let mut out = [0u32; 2];
+            {
+                let (a, b) = out.split_at_mut(1);
+                let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+                    Box::new(move || a[0] = 1), // offloaded to the worker
+                    Box::new(move || b[0] = 2), // runs inline as `last`
+                ];
+                pool.scope(tasks);
+            }
+            assert_eq!(out, [1, 2], "scope returned before the pooled job ran");
+        });
+    }
+
+    /// Back-to-back scopes on one pool (fresh latch per scope, no stale
+    /// wakeups crossing between them), then the shutdown handshake when the
+    /// pool drops at the end of the model.
+    #[test]
+    fn pool_scopes_are_reusable_and_shutdown_terminates() {
+        loom::model(|| {
+            let pool = ScopedPool::new(1);
+            for round in 1..=2u32 {
+                let mut out = [0u32; 2];
+                {
+                    let (a, b) = out.split_at_mut(1);
+                    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+                        Box::new(move || a[0] = round),
+                        Box::new(move || b[0] = round),
+                    ];
+                    pool.scope(tasks);
+                }
+                assert_eq!(out, [round, round]);
+            }
+            // `pool` drops here: worker must observe the shutdown flag and
+            // exit its queue loop (join would hang forever otherwise).
+        });
+    }
+}

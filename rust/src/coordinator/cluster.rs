@@ -284,7 +284,9 @@ fn spawn_lane(
     let hosted = workers.len();
     let (tx_cmd, rx_cmd) = ring_channel::<ToLane>(CMD_RING_CAP);
     let (tx_res, rx_res) = ring_channel::<FromLane>(UPLINK_RING_CAP);
-    let join = thread::spawn(move || {
+    // OS threads are only created through `tensor::pool` (budget
+    // discipline choke point, enforced by `cargo xtask verify`).
+    let join = crate::tensor::pool::spawn_worker_thread("regtopk-lane".into(), move || {
         crate::tensor::pool::set_thread_budget(gemm_budget);
         let mut gbuf = vec![0.0f32; dim];
         let mut bufs: DoubleBuffer<LaneUplink> =

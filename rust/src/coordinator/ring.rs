@@ -25,7 +25,13 @@
 //! (one leader ⇄ one worker per link); the types are `Send` but
 //! deliberately not `Clone`.
 
+// Under `--cfg loom` (the `loom/` model-checking harness includes this
+// file via `#[path]`) the primitives come from loom, which exhausts every
+// interleaving of the send/recv/disconnect protocol below.
+#[cfg(not(loom))]
 use std::sync::{Arc, Condvar, Mutex};
+#[cfg(loom)]
+use loom::sync::{Arc, Condvar, Mutex};
 
 struct State<T> {
     /// Slot storage, allocated once; `None` = empty slot.
@@ -159,7 +165,7 @@ impl<T> Drop for RingReceiver<T> {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};

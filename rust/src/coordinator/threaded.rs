@@ -135,7 +135,10 @@ fn spawn_worker(
 ) -> WorkerHandle {
     let (tx_cmd, rx_cmd) = ring_channel::<ToWorker>(CMD_RING_CAP);
     let (tx_res, rx_res) = ring_channel::<FromWorker>(UPLINK_RING_CAP);
-    let join = thread::spawn(move || {
+    // OS threads are only created through `tensor::pool` (budget
+    // discipline choke point, enforced by `cargo xtask verify`).
+    let name = format!("regtopk-{}", prefix.trim_end_matches('/'));
+    let join = crate::tensor::pool::spawn_worker_thread(name, move || {
         // This worker's share of the run's compute-thread budget: its
         // gradient GEMMs fan out to at most this many lanes, so N workers
         // × their shares never oversubscribe the configured total.

@@ -54,6 +54,22 @@ fn cmp_score_desc(a: f32, b: f32) -> Ordering {
     }
 }
 
+/// Ascending `f64` comparison with NaN-last semantics: every number sorts
+/// before every NaN, and NaNs compare equal to each other. This is the
+/// crate's one blessed total order for floats — callers that need to sort
+/// or rank possibly-NaN values route through here instead of
+/// `partial_cmp(..).unwrap()` (which panics on the first NaN; the lint in
+/// `xtask` bans that pattern outside this module).
+#[inline]
+pub fn cmp_f64_nan_last(a: f64, b: f64) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => a.partial_cmp(&b).unwrap(),
+    }
+}
+
 /// Partition `idx` in place so its first `need` entries are the top ranked
 /// under the shared total order (in arbitrary internal order). Iterative
 /// quickselect with a median-of-three pivot; expected O(|idx|). Requires
@@ -252,6 +268,17 @@ mod tests {
     }
 
     #[test]
+    fn f64_total_order_nan_last() {
+        let mut xs = [3.0f64, f64::NAN, -1.0, 2.0, f64::NAN, 0.0];
+        xs.sort_by(|a, b| cmp_f64_nan_last(*a, *b));
+        assert_eq!(&xs[..4], &[-1.0, 0.0, 2.0, 3.0]);
+        assert!(xs[4].is_nan() && xs[5].is_nan());
+        assert_eq!(cmp_f64_nan_last(f64::NAN, f64::NAN), Ordering::Equal);
+        assert_eq!(cmp_f64_nan_last(1.0, f64::NAN), Ordering::Less);
+        assert_eq!(cmp_f64_nan_last(f64::NAN, 1.0), Ordering::Greater);
+    }
+
+    #[test]
     fn nan_sorts_last() {
         let scores = [f32::NAN, 1.0, 2.0];
         assert_eq!(top_k_indices(&scores, 2), vec![1, 2]);
@@ -306,6 +333,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "16k-element inputs are too slow under interpretation")]
     fn sampled_path_matches_sort_reference() {
         // Large enough to engage the sampling pre-filter.
         check(10, |g| {
@@ -318,6 +346,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "16k-element inputs are too slow under interpretation")]
     fn sampled_path_survives_heavy_ties_and_nan() {
         check(6, |g| {
             let n = SAMPLE_MIN_LEN + 1000;
@@ -336,6 +365,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "32k-element input is too slow under interpretation")]
     fn under_collecting_estimate_falls_back_exactly() {
         // Adversarial layout for the strided sample: every sampled position
         // holds a large value, so the threshold estimate is far too high

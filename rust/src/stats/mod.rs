@@ -73,9 +73,16 @@ pub fn wilcoxon_signed_rank(a: &[f64], b: &[f64]) -> Option<TestResult> {
     if n < 2 {
         return None;
     }
-    // Rank |d| with average ranks for ties.
+    // Rank |d| with average ranks for ties. NaN differences (e.g. a
+    // diverged run producing NaN accuracy) rank last under the crate's
+    // blessed float total order instead of panicking; NaN != NaN in the
+    // tie scan below, so each NaN gets its own rank, and NaN > 0.0 is
+    // false, so none of them contribute to W+ — the statistic stays
+    // finite and deterministic.
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&i, &j| d[i].abs().partial_cmp(&d[j].abs()).unwrap());
+    order.sort_by(|&i, &j| {
+        crate::sparsify::select::cmp_f64_nan_last(d[i].abs(), d[j].abs())
+    });
     let mut ranks = vec![0.0f64; n];
     let mut tie_correction = 0.0f64;
     let mut i = 0;
@@ -390,5 +397,26 @@ mod tests {
     fn wilcoxon_identical_is_none() {
         let a = [1.0, 2.0, 3.0];
         assert!(wilcoxon_signed_rank(&a, &a).is_none());
+    }
+
+    #[test]
+    fn wilcoxon_nan_difference_is_finite_and_deterministic() {
+        // A diverged run can report NaN accuracy; the NaN difference
+        // passes the `!= 0.0` drop filter, so the ranking must tolerate
+        // it. Before routing through the NaN-last total order this line
+        // panicked in `sort_by` (`partial_cmp(..).unwrap()` on NaN).
+        let a = [1.0, 2.0, f64::NAN, 4.0, 5.0, 7.0, 9.0, 11.0];
+        let b = [0.5, 2.5, 3.0, 3.0, 4.0, 6.0, 8.0, 10.0];
+        let r1 = wilcoxon_signed_rank(&a, &b).unwrap();
+        let r2 = wilcoxon_signed_rank(&a, &b).unwrap();
+        assert!(r1.statistic.is_finite(), "W={}", r1.statistic);
+        assert!(r1.p_value.is_finite() && (0.0..=1.0).contains(&r1.p_value));
+        assert_eq!(r1.statistic.to_bits(), r2.statistic.to_bits());
+        assert_eq!(r1.p_value.to_bits(), r2.p_value.to_bits());
+        // All-NaN differences are equally panic-free.
+        let nan = [f64::NAN; 4];
+        let z = [0.0; 4];
+        let r = wilcoxon_signed_rank(&nan, &z).unwrap();
+        assert!(r.statistic.is_finite());
     }
 }

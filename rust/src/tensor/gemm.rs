@@ -104,6 +104,11 @@ pub enum Kernel {
 pub fn detected_kernel() -> Kernel {
     static DETECTED: OnceLock<Kernel> = OnceLock::new();
     *DETECTED.get_or_init(|| {
+        // Miri interprets portable Rust only — vendor intrinsics are
+        // unsupported, so the soundness pass always runs the scalar path.
+        if cfg!(miri) {
+            return Kernel::Scalar;
+        }
         if std::env::var_os("REGTOPK_NO_SIMD").is_some() {
             return Kernel::Scalar;
         }
@@ -148,6 +153,20 @@ pub fn with_kernel<R>(k: Kernel, f: impl FnOnce() -> R) -> R {
 
 fn active_kernel() -> Kernel {
     FORCED.with(Cell::get).unwrap_or_else(detected_kernel)
+}
+
+/// Debug-checks the dispatch invariant every `unsafe` arm below relies on:
+/// a `Kernel::Avx2` value is only ever constructed after feature detection
+/// succeeded ([`detected_kernel`]) or re-verified ([`with_kernel`]).
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn debug_assert_kernel_supported(kernel: Kernel) {
+    if kernel == Kernel::Avx2 {
+        debug_assert!(
+            is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma"),
+            "Avx2 kernel dispatched on a host without avx2+fma"
+        );
+    }
 }
 
 /// How many row blocks a call of `rows × (work total)` should split into —
@@ -486,6 +505,8 @@ fn nn_tile<S: NnPanelSource + ?Sized>(
     panel: &mut [f32; MR * KC],
     rowbuf: &mut [f32; KC],
 ) {
+    #[cfg(target_arch = "x86_64")]
+    debug_assert_kernel_supported(kernel);
     let rows = block.len() / n;
     let mut i = 0;
     while i + MR <= rows {
@@ -502,6 +523,10 @@ fn nn_tile<S: NnPanelSource + ?Sized>(
                     axpy8x4(s, &bp[p * ncw..(p + 1) * ncw], c0, c1, c2, c3);
                 }
             }
+            // SAFETY: `Avx2` is only constructed after feature detection
+            // (debug-asserted at block entry); the panel is MR·kc long
+            // (MR == 4), bp holds kc·ncw packed entries, and each C row
+            // slice is exactly ncw wide — the kernel's documented bounds.
             #[cfg(target_arch = "x86_64")]
             Kernel::Avx2 => unsafe {
                 super::simd::nn_panel_x4(&panel[..MR * kc], bp, ncw, c0, c1, c2, c3);
@@ -518,6 +543,8 @@ fn nn_tile<S: NnPanelSource + ?Sized>(
                     axpy8(rowbuf[p], &bp[p * ncw..(p + 1) * ncw], crow);
                 }
             }
+            // SAFETY: detection invariant as above; each B slice and the C
+            // row are both ncw elements.
             #[cfg(target_arch = "x86_64")]
             Kernel::Avx2 => unsafe {
                 for p in 0..kc {
@@ -590,6 +617,8 @@ fn tn_rows<S: TnColSource + ?Sized>(
     b: &[f32],
     block: &mut [f32],
 ) {
+    #[cfg(target_arch = "x86_64")]
+    debug_assert_kernel_supported(kernel);
     TNCOL.with(|cell| {
         let mut colv = cell.borrow_mut();
         if colv.len() < k {
@@ -612,6 +641,8 @@ fn tn_rows<S: TnColSource + ?Sized>(
                 );
                 match kernel {
                     Kernel::Scalar => fma4_into(s, b0, b1, b2, b3, crow),
+                    // SAFETY: detection invariant debug-asserted at block
+                    // entry; all four B slices and the C row are n elements.
                     #[cfg(target_arch = "x86_64")]
                     Kernel::Avx2 => unsafe { super::simd::tn_fma4(s, b0, b1, b2, b3, crow) },
                 }
@@ -620,6 +651,8 @@ fn tn_rows<S: TnColSource + ?Sized>(
             while p < k {
                 match kernel {
                     Kernel::Scalar => axpy8(col[p], &b[p * n..(p + 1) * n], crow),
+                    // SAFETY: detection invariant as above; the B slice and
+                    // the C row are both n elements.
                     #[cfg(target_arch = "x86_64")]
                     Kernel::Avx2 => unsafe {
                         super::simd::row_axpy(col[p], &b[p * n..(p + 1) * n], crow);
@@ -662,6 +695,8 @@ fn nt_driver(kernel: Kernel, threads: usize, m: usize, k: usize, n: usize, a: &[
 /// One contiguous row block of `gemm_nt` (`a` starts at the block's first
 /// row; only its first `rows·k` entries are read).
 fn nt_rows(kernel: Kernel, k: usize, n: usize, a: &[f32], b: &[f32], block: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    debug_assert_kernel_supported(kernel);
     let rows = block.len() / n;
     for i in 0..rows {
         let arow = &a[i * k..(i + 1) * k];
@@ -670,6 +705,8 @@ fn nt_rows(kernel: Kernel, k: usize, n: usize, a: &[f32], b: &[f32], block: &mut
             let brow = &b[j * k..(j + 1) * k];
             *cv = match kernel {
                 Kernel::Scalar => super::dot(arow, brow),
+                // SAFETY: detection invariant debug-asserted at block
+                // entry; both row slices are k elements.
                 #[cfg(target_arch = "x86_64")]
                 Kernel::Avx2 => unsafe { super::simd::dot(arow, brow) },
             };

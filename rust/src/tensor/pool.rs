@@ -28,11 +28,25 @@
 //! computed; the GEMM drivers guarantee bit-identical results for every
 //! thread count (tested in `gemm::tests`).
 
-use std::cell::Cell;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+// Under `--cfg loom` (the model-checking harness in `loom/` includes this
+// file via `#[path]`) the sync primitives come from loom so it can exhaust
+// every interleaving of the latch/queue protocol; the process-global
+// machinery (OnceLock pool, sysfs census, thread budgets) is compiled out
+// — models build `ScopedPool` instances directly.
+#[cfg(not(loom))]
+use std::sync::{Arc, Condvar, Mutex};
+#[cfg(not(loom))]
 use std::thread;
+#[cfg(not(loom))]
+use std::{cell::Cell, sync::OnceLock};
+
+#[cfg(loom)]
+use loom::sync::{Arc, Condvar, Mutex};
+#[cfg(loom)]
+use loom::thread;
 
 /// A lifetime-erased job queued to the pool (see [`ScopedPool::scope`] for
 /// why the erasure is sound).
@@ -89,10 +103,7 @@ impl ScopedPool {
         let handles = (0..workers)
             .map(|i| {
                 let shared = Arc::clone(&shared);
-                thread::Builder::new()
-                    .name(format!("regtopk-gemm-{i}"))
-                    .spawn(move || worker_loop(&shared))
-                    .expect("spawn pool worker")
+                spawn_named(format!("regtopk-gemm-{i}"), move || worker_loop(&shared))
             })
             .collect();
         ScopedPool { shared, handles }
@@ -160,6 +171,33 @@ impl Drop for ScopedPool {
     }
 }
 
+/// Spawn one named thread (std `Builder` normally; loom's un-named spawn
+/// under the model checker, which has no thread names).
+#[cfg(not(loom))]
+fn spawn_named(name: String, f: impl FnOnce() + Send + 'static) -> thread::JoinHandle<()> {
+    thread::Builder::new().name(name).spawn(f).expect("spawn pool worker")
+}
+
+#[cfg(loom)]
+fn spawn_named(name: String, f: impl FnOnce() + Send + 'static) -> thread::JoinHandle<()> {
+    let _ = name;
+    thread::spawn(f)
+}
+
+/// Spawn a named, long-lived OS worker thread (executor workers, cluster
+/// lanes). Every OS thread in the crate is created here or in
+/// [`ScopedPool::new`], so thread creation has a single choke point that
+/// composes with the budget discipline below — `cargo xtask verify` bans
+/// `thread::spawn` outside this module and test code to keep it that way.
+#[cfg(not(loom))]
+pub fn spawn_worker_thread<T, F>(name: String, f: F) -> thread::JoinHandle<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    thread::Builder::new().name(name).spawn(f).expect("spawn worker thread")
+}
+
 fn worker_loop(shared: &Shared) {
     loop {
         let job = {
@@ -181,6 +219,7 @@ fn worker_loop(shared: &Shared) {
 /// Parse the first CPU id out of a sysfs `thread_siblings_list` line.
 /// The file uses list syntax (`"0,4"`, `"0-3"`, `"7"`); the first id is
 /// all the physical-core census needs.
+#[cfg(not(loom))]
 fn first_sibling(s: &str) -> Option<usize> {
     s.trim().split(|c| c == ',' || c == '-').next()?.trim().parse().ok()
 }
@@ -192,6 +231,7 @@ fn first_sibling(s: &str) -> Option<usize> {
 /// rather than stop, and end the scan only when the `cpuN` directory
 /// itself is missing. Returns `None` off Linux or when sysfs is
 /// unreadable (the caller falls back to the logical count).
+#[cfg(not(loom))]
 fn sysfs_physical_cores() -> Option<usize> {
     let mut cores = 0usize;
     for cpu in 0..4096usize {
@@ -218,6 +258,7 @@ fn sysfs_physical_cores() -> Option<usize> {
 /// leave no port slack for an SMT sibling to use — two hyperthreads on
 /// one core just contend for the FMA units and L1 — so fanning out to
 /// logical CPUs buys contention, not throughput.
+#[cfg(not(loom))]
 pub fn default_parallelism() -> usize {
     static N: OnceLock<usize> = OnceLock::new();
     *N.get_or_init(|| {
@@ -233,11 +274,13 @@ pub fn default_parallelism() -> usize {
 
 /// The shared pool behind every parallel GEMM: `default_parallelism() - 1`
 /// workers (the calling thread is always the +1).
+#[cfg(not(loom))]
 pub fn global() -> &'static ScopedPool {
     static POOL: OnceLock<ScopedPool> = OnceLock::new();
     POOL.get_or_init(|| ScopedPool::new(default_parallelism().saturating_sub(1)))
 }
 
+#[cfg(not(loom))]
 thread_local! {
     /// 0 = unset (fall back to the process default).
     static BUDGET: Cell<usize> = const { Cell::new(0) };
@@ -245,6 +288,7 @@ thread_local! {
 
 /// This thread's compute-thread budget: how many lanes (caller included) a
 /// GEMM issued from this thread may fan out to.
+#[cfg(not(loom))]
 pub fn thread_budget() -> usize {
     let b = BUDGET.with(Cell::get);
     if b == 0 {
@@ -257,15 +301,18 @@ pub fn thread_budget() -> usize {
 /// Set this thread's budget (0 resets to the process default); returns the
 /// previous raw value. Prefer [`budget_guard`]/[`with_thread_budget`] on
 /// threads that outlive the setting.
+#[cfg(not(loom))]
 pub fn set_thread_budget(n: usize) -> usize {
     BUDGET.with(|c| c.replace(n))
 }
 
 /// RAII restore for [`set_thread_budget`].
+#[cfg(not(loom))]
 pub struct BudgetGuard {
     prev: usize,
 }
 
+#[cfg(not(loom))]
 impl Drop for BudgetGuard {
     fn drop(&mut self) {
         BUDGET.with(|c| c.set(self.prev));
@@ -274,11 +321,13 @@ impl Drop for BudgetGuard {
 
 /// Set the budget for the current scope, restoring the previous value on
 /// drop (executors hold one across a run so test threads stay clean).
+#[cfg(not(loom))]
 pub fn budget_guard(n: usize) -> BudgetGuard {
     BudgetGuard { prev: set_thread_budget(n) }
 }
 
 /// Run `f` under budget `n` (test/bench helper).
+#[cfg(not(loom))]
 pub fn with_thread_budget<R>(n: usize, f: impl FnOnce() -> R) -> R {
     let _g = budget_guard(n);
     f()
@@ -296,6 +345,7 @@ pub const PAR_GRAIN_WORK: usize = 128 * 1024;
 /// `work` total units should split into: bounded by the calling thread's
 /// budget ([`thread_budget`]), the per-thread grain, and the row count (a
 /// block needs at least one row).
+#[cfg(not(loom))]
 pub fn plan_fanout(rows: usize, work: usize) -> usize {
     let budget = thread_budget();
     if budget <= 1 || rows <= 1 {
@@ -317,6 +367,7 @@ pub const MERGE_GRAIN_ENTRIES: usize = 8 * 1024;
 /// budget, the per-shard entry grain, and `dim` (a shard needs at least
 /// one index). The merge is bitwise identical at every shard count, so
 /// this is purely a throughput decision.
+#[cfg(not(loom))]
 pub fn plan_merge_shards(entries: usize, dim: usize) -> usize {
     let budget = thread_budget();
     if budget <= 1 || dim <= 1 {
@@ -325,7 +376,7 @@ pub fn plan_merge_shards(entries: usize, dim: usize) -> usize {
     budget.min(entries / MERGE_GRAIN_ENTRIES).clamp(1, dim)
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};

@@ -33,6 +33,17 @@
 use std::arch::x86_64::*;
 
 /// `y[j] = fma(s, b[j], y[j])` over one row.
+///
+/// # Safety
+///
+/// The host CPU must support AVX2 and FMA — callers gate on
+/// `is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")`
+/// (the `Kernel::Avx2` dispatch arms in `gemm.rs` are the only callers
+/// outside tests). Requires `b.len() == y.len()`; all loads/stores are
+/// unaligned-safe and the scalar tail keeps every access in bounds.
+// SAFETY: `target_feature` guarantees the right ISA once the caller has
+// verified detection; `loadu`/`storeu` at `ptr.add(j)` with
+// `j + 8 <= n8 <= len` stay inside the slices.
 #[target_feature(enable = "avx2", enable = "fma")]
 pub unsafe fn row_axpy(s: f32, b: &[f32], y: &mut [f32]) {
     let n = y.len();
@@ -73,6 +84,17 @@ pub unsafe fn row_axpy(s: f32, b: &[f32], y: &mut [f32]) {
 /// p ascending — identical to [`row_axpy`] repeated per p, which is what
 /// keeps results independent of row grouping and therefore of the row
 /// partition chosen by the parallel driver (pinned bitwise in tests).
+///
+/// # Safety
+///
+/// AVX2+FMA must be verified by the caller (see [`row_axpy`]). Requires
+/// `panel.len() % 4 == 0`, `bp.len() == (panel.len() / 4) * n`, and every
+/// C row at least `n` long; all four conditions are debug-asserted below.
+// SAFETY: feature availability comes from the caller's detection gate;
+// bounds: the j loops stop at `j + 16 <= n` / `j + 8 <= n` before any
+// 8-lane access at offset j / j+8, the B cursor walks `p·n + j` with
+// `p < kc` and `j + 16 <= n` so it stays below `kc·n == bp.len()`, and
+// the scalar tail uses checked indexing.
 #[target_feature(enable = "avx2", enable = "fma")]
 #[allow(clippy::too_many_arguments)]
 pub unsafe fn nn_panel_x4(
@@ -85,7 +107,9 @@ pub unsafe fn nn_panel_x4(
     c3: &mut [f32],
 ) {
     let kc = panel.len() / 4;
+    debug_assert_eq!(panel.len() % 4, 0);
     debug_assert_eq!(bp.len(), kc * n);
+    debug_assert!(c0.len() >= n && c1.len() >= n && c2.len() >= n && c3.len() >= n);
     let mut j = 0;
     while j + 16 <= n {
         let mut a00 = _mm256_loadu_ps(c0.as_ptr().add(j));
@@ -168,6 +192,13 @@ pub unsafe fn nn_panel_x4(
 /// — four fused rank-1 contributions into one C row (the `gemm_tn` inner
 /// kernel). Chain order is fixed (0,1,2,3), so a row's result depends only
 /// on its reduction sequence, never on the thread partition.
+///
+/// # Safety
+///
+/// AVX2+FMA must be verified by the caller (see [`row_axpy`]). Requires
+/// all four B rows to have `y.len()` elements (debug-asserted).
+// SAFETY: detection-gated by the caller; every vector access sits at
+// `j < n8 = n - n % 8`, so `j + 8 <= n` holds for all five slices.
 #[target_feature(enable = "avx2", enable = "fma")]
 pub unsafe fn tn_fma4(s: [f32; 4], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32], y: &mut [f32]) {
     let n = y.len();
@@ -196,6 +227,14 @@ pub unsafe fn tn_fma4(s: [f32; 4], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32
 /// Inner product with one 8-lane FMA accumulator (the `gemm_nt` kernel).
 /// Fixed reduction order: 8-lane FMA sweep, pairwise lane sum, scalar
 /// tail — deterministic for a fixed length.
+///
+/// # Safety
+///
+/// AVX2+FMA must be verified by the caller (see [`row_axpy`]). Requires
+/// `x.len() == y.len()` (debug-asserted).
+// SAFETY: detection-gated by the caller; vector loads stop at
+// `n8 = n - n % 8`, the lane spill targets a local `[f32; 8]`, and the
+// tail uses checked indexing.
 #[target_feature(enable = "avx2", enable = "fma")]
 pub unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
     let n = x.len();
@@ -240,12 +279,14 @@ mod tests {
         let mut y: Vec<f32> = (0..n).map(|i| (i as f32 * 0.11).cos()).collect();
         let want: Vec<f64> =
             y.iter().zip(&b).map(|(&yv, &bv)| yv as f64 + 1.5f64 * bv as f64).collect();
+        // SAFETY: `detected()` verified avx2+fma above; b.len() == y.len().
         unsafe { row_axpy(1.5, &b, &mut y) };
         for (g, w) in y.iter().zip(&want) {
             assert!((*g as f64 - w).abs() < 1e-5, "{g} vs {w}");
         }
 
         let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.21).cos()).collect();
+        // SAFETY: detection checked above; b.len() == x.len().
         let d = unsafe { dot(&b, &x) };
         let dref: f64 = b.iter().zip(&x).map(|(&a, &c)| a as f64 * c as f64).sum();
         assert!((d as f64 - dref).abs() < 1e-4 * (1.0 + dref.abs()));
@@ -266,10 +307,14 @@ mod tests {
         let mut single = grouped.clone();
         {
             let [c0, c1, c2, c3] = &mut grouped[..] else { unreachable!() };
+            // SAFETY: detection checked above; panel is kc*4 long, bp is
+            // kc*n long, and all four C rows have exactly n elements.
             unsafe { nn_panel_x4(&panel, &bp, n, c0, c1, c2, c3) };
         }
         for (r, row) in single.iter_mut().enumerate() {
             for p in 0..kc {
+                // SAFETY: detection checked above; the B slice and row are
+                // both n elements.
                 unsafe { row_axpy(panel[4 * p + r], &bp[p * n..(p + 1) * n], row) };
             }
         }

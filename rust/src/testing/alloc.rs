@@ -1,0 +1,62 @@
+//! Counting wrapper around the system allocator (behind the test-only
+//! `count-allocs` feature). A test binary installs it with
+//! `#[global_allocator]` and asserts *zero* allocation deltas across
+//! steady-state training rounds — the executable form of the invariant
+//! the threaded executor was built around: double-buffered payloads,
+//! ring channels, and reused scratch mean a warmed-up round never
+//! touches the heap (see `rust/tests/alloc_steady.rs`).
+//!
+//! Counters are process-global relaxed atomics: the probes only ever
+//! compare totals sampled from one thread between rounds, so no ordering
+//! stronger than the counter increment itself is needed.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static DEALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Forwarding allocator that counts every heap call.
+pub struct CountingAlloc;
+
+// SAFETY: every method forwards verbatim to `System`, which upholds the
+// `GlobalAlloc` contract; the counter updates have no effect on the
+// returned memory.
+unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: caller upholds the `GlobalAlloc` preconditions, which are
+    // passed through to `System` unchanged.
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    // SAFETY: as above — same layout and pointer contract as `System`.
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        DEALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.dealloc(ptr, layout)
+    }
+
+    // SAFETY: as above; counted as one allocation event.
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    // SAFETY: as above; a realloc is a fresh heap acquisition, so it
+    // counts as an allocation event too.
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Total allocation events (alloc + alloc_zeroed + realloc) so far, over
+/// every thread in the process.
+pub fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Total deallocation events so far.
+pub fn dealloc_count() -> u64 {
+    DEALLOCS.load(Ordering::Relaxed)
+}

@@ -16,6 +16,9 @@
 //! });
 //! ```
 
+#[cfg(feature = "count-allocs")]
+pub mod alloc;
+
 use crate::rng::Pcg64;
 use std::ops::RangeInclusive;
 
@@ -78,7 +81,13 @@ impl Gen {
 
 /// Run `prop` for `cases` seeds. Panics (with the reproducing seed) on the
 /// first failing case after attempting size-shrunk retries.
+///
+/// Under Miri (interpretation is ~100–1000x slower) the case count is
+/// capped so the soundness pass still sweeps every property without
+/// dominating CI wall-clock — Miri hunts undefined behaviour, which one
+/// seed per shape already exposes; the full statistical sweep runs natively.
 pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(cases: u64, prop: F) {
+    let cases = if cfg!(miri) { cases.min(3) } else { cases };
     // A fixed base seed keeps CI deterministic; set REGTOPK_PROP_SEED to
     // explore a different region of the space.
     let base: u64 = std::env::var("REGTOPK_PROP_SEED")

@@ -1,0 +1,79 @@
+//! Zero steady-state allocations across a threaded-executor round.
+//!
+//! Built only with `--features count-allocs` (see `[[test]]`
+//! `required-features` in Cargo.toml): the whole test binary runs under
+//! the counting global allocator, and the per-round probe samples the
+//! process-wide allocation counter into a pre-allocated slot. After a
+//! warm-up prefix (buffer growth settles: SparseGrad capacity, ring
+//! slots, DoubleBuffer payloads), every remaining round must show a
+//! zero allocation delta — the heap-freedom the double-buffered
+//! broadcast/uplink payloads, SPSC ring channels, and reused sparsifier
+//! scratch were built to provide.
+//!
+//! Sized so every parallel plan stays serial (entries and FLOPs below
+//! the fan-out grains): the parallel merge/GEMM paths box their task
+//! closures by design, and that is a per-dispatch cost the grain
+//! thresholds already keep out of small steady-state rounds.
+
+use regtopk::config::TrainConfig;
+use regtopk::coordinator::{train_with_opts, RunOpts};
+use regtopk::data::linreg::{LinRegDataset, LinRegGenConfig};
+use regtopk::grad::LinRegGrad;
+use regtopk::rng::Pcg64;
+use regtopk::sparsify::SparsifierKind;
+use regtopk::testing::alloc::{alloc_count, CountingAlloc};
+use std::sync::Arc;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+const WORKERS: usize = 3;
+const DIM: usize = 32;
+const ITERS: usize = 48;
+/// Rounds at the end of the run that must be allocation-free.
+const STEADY: usize = 8;
+
+#[test]
+fn threaded_executor_steady_state_rounds_do_not_allocate() {
+    let gen = LinRegGenConfig {
+        workers: WORKERS,
+        dim: DIM,
+        points_per_worker: 40,
+        ..Default::default()
+    };
+    let data = Arc::new(LinRegDataset::generate(&gen, &mut Pcg64::seed_from_u64(7)));
+    let cfg = TrainConfig {
+        workers: WORKERS,
+        dim: DIM,
+        sparsity: 0.25,
+        sparsifier: SparsifierKind::RegTopK { mu: 1.0, y: 1.0 },
+        lr: 0.01,
+        iters: ITERS,
+        ..Default::default()
+    };
+    // One counter sample per round, written into pre-allocated slots so
+    // the probe itself never touches the heap.
+    let mut counts = vec![0u64; ITERS];
+    let result = train_with_opts(
+        &cfg,
+        vec![0.0; DIM],
+        LinRegGrad::all(&data),
+        &RunOpts { threaded: true },
+        &mut |s| counts[s.t] = alloc_count(),
+    )
+    .expect("threaded training run");
+    assert_eq!(result.iters, ITERS);
+    assert_eq!(
+        result.reuse_misses, 0,
+        "steady-state payload reuse is a precondition for heap-freedom"
+    );
+    for t in ITERS - STEADY..ITERS {
+        let delta = counts[t] - counts[t - 1];
+        assert_eq!(
+            delta, 0,
+            "round {t} performed {delta} heap allocation(s); steady-state \
+             rounds must not allocate (warm-up counts: {:?})",
+            &counts[..ITERS - STEADY]
+        );
+    }
+}

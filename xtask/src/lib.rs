@@ -1,0 +1,734 @@
+//! Source-scan lint engine behind `cargo xtask verify`.
+//!
+//! The paper's guarantees (bit-identical parallel GEMM, fused ==
+//! materialized conv, bit-identical crash resume) are *algorithmic*
+//! invariants: RegTop-k's posterior statistics are functions of exact past
+//! aggregates, so nondeterminism or unsoundness silently corrupts the
+//! algorithm rather than just the numbers. The example-based parity tests
+//! catch regressions after the fact; these lints fail the build the moment
+//! a PR introduces a pattern that *could* break an invariant:
+//!
+//! | rule | invariant protected |
+//! |------|---------------------|
+//! | `safety-comment` | every `unsafe` site carries its precondition (`// SAFETY:` or a `# Safety` doc section) |
+//! | `float-ord-unwrap` | no `partial_cmp(..).unwrap()` on floats outside `sparsify/select.rs`'s NaN total order — the PR 1 panic class |
+//! | `determinism` | no wall clocks or ambient RNG inside the deterministic paths (`sparsify/`, `coordinator/`, `tensor/`) |
+//! | `thread-spawn` | all OS-thread creation funnels through `tensor::pool` (thread-budget discipline) |
+//!
+//! The scanner is deliberately dependency-free: it masks comments and
+//! string/char literals with a small lexer state machine, then matches
+//! word-bounded tokens against the masked code, so `"thread::spawn"` in a
+//! string or a doc comment never trips a rule. It is a lint, not a parser
+//! — precise enough for these four patterns, and every rule ships with a
+//! seeded negative test below proving it still fires.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// One lint finding.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Stable rule identifier (used by CI annotations and the README table).
+    pub rule: &'static str,
+    /// Path relative to the repo root.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// How many lines above an `unsafe` token a `SAFETY:` comment may sit
+/// (attributes and the fn signature commonly separate them).
+const SAFETY_WINDOW: usize = 10;
+
+/// The one module allowed to order floats with `partial_cmp(..).unwrap()`
+/// — it implements the crate's blessed NaN-last total order.
+const FLOAT_ORD_HOME: &str = "rust/src/sparsify/select.rs";
+
+/// The one module allowed to create OS threads.
+const THREAD_HOME: &str = "rust/src/tensor/pool.rs";
+
+/// Deterministic-path prefixes for the clock/RNG rule: everything the
+/// bit-identity guarantees flow through.
+const DETERMINISTIC_DIRS: [&str; 3] =
+    ["rust/src/sparsify/", "rust/src/coordinator/", "rust/src/tensor/"];
+
+/// Ambient-nondeterminism tokens banned inside [`DETERMINISTIC_DIRS`].
+const NONDET_TOKENS: [&str; 6] = [
+    "Instant::now",
+    "SystemTime::now",
+    "UNIX_EPOCH",
+    "thread_rng",
+    "from_entropy",
+    "rand::random",
+];
+
+/// Masked views of one source file: `code` keeps code bytes and blanks
+/// comments + string/char-literal contents; `comments` keeps comment text
+/// and blanks everything else. Both are byte-for-byte the same length as
+/// the input with newlines preserved, so line numbers line up across all
+/// three.
+struct Masked {
+    code: String,
+    comments: String,
+}
+
+fn mask(src: &str) -> Masked {
+    #[derive(PartialEq)]
+    enum St {
+        Code,
+        LineComment,
+        BlockComment(usize),
+        Str,
+        RawStr(usize),
+        CharLit,
+    }
+    let bytes = src.as_bytes();
+    let mut code = Vec::with_capacity(bytes.len());
+    let mut comments = Vec::with_capacity(bytes.len());
+    let mut st = St::Code;
+    let mut i = 0;
+    while i < bytes.len() {
+        let b = bytes[i];
+        // Newlines always pass through both views.
+        if b == b'\n' {
+            if st == St::LineComment {
+                st = St::Code;
+            }
+            code.push(b'\n');
+            comments.push(b'\n');
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                if b == b'/' && bytes.get(i + 1) == Some(&b'/') {
+                    // Push only this '/'; the second one is handled (and
+                    // pushed) in LineComment state next iteration.
+                    st = St::LineComment;
+                    code.push(b' ');
+                    comments.push(b'/');
+                } else if b == b'/' && bytes.get(i + 1) == Some(&b'*') {
+                    st = St::BlockComment(1);
+                    code.push(b' ');
+                    code.push(b' ');
+                    comments.push(b'/');
+                    comments.push(b'*');
+                    i += 2;
+                    continue;
+                } else if b == b'"' {
+                    st = St::Str;
+                    code.push(b'"');
+                    comments.push(b' ');
+                } else if b == b'r'
+                    && (i == 0 || !is_ident_byte(bytes[i - 1]))
+                    && raw_str_hashes(bytes, i + 1).is_some()
+                {
+                    let h = raw_str_hashes(bytes, i + 1).unwrap();
+                    // r, the hashes, and the opening quote
+                    for _ in 0..h + 2 {
+                        code.push(b' ');
+                        comments.push(b' ');
+                    }
+                    st = St::RawStr(h);
+                    i += h + 2;
+                    continue;
+                } else if b == b'b' && bytes.get(i + 1) == Some(&b'"') {
+                    code.push(b' ');
+                    code.push(b'"');
+                    comments.push(b' ');
+                    comments.push(b' ');
+                    st = St::Str;
+                    i += 2;
+                    continue;
+                } else if b == b'\'' {
+                    // Char literal vs lifetime: a literal closes within a
+                    // couple of characters ('x', '\n', '\u{..}'); a
+                    // lifetime ('a, 'static, '_) never closes.
+                    if is_char_literal(bytes, i) {
+                        st = St::CharLit;
+                        code.push(b'\'');
+                        comments.push(b' ');
+                    } else {
+                        code.push(b);
+                        comments.push(b' ');
+                    }
+                } else {
+                    code.push(b);
+                    comments.push(b' ');
+                }
+            }
+            St::LineComment => {
+                code.push(b' ');
+                comments.push(b);
+            }
+            St::BlockComment(depth) => {
+                if b == b'*' && bytes.get(i + 1) == Some(&b'/') {
+                    code.push(b' ');
+                    code.push(b' ');
+                    comments.push(b'*');
+                    comments.push(b'/');
+                    st = if depth == 1 { St::Code } else { St::BlockComment(depth - 1) };
+                    i += 2;
+                    continue;
+                } else if b == b'/' && bytes.get(i + 1) == Some(&b'*') {
+                    code.push(b' ');
+                    code.push(b' ');
+                    comments.push(b'/');
+                    comments.push(b'*');
+                    st = St::BlockComment(depth + 1);
+                    i += 2;
+                    continue;
+                } else {
+                    code.push(b' ');
+                    comments.push(b);
+                }
+            }
+            St::Str => {
+                if b == b'\\' && i + 1 < bytes.len() {
+                    code.push(b' ');
+                    code.push(b' ');
+                    comments.push(b' ');
+                    comments.push(b' ');
+                    i += 2;
+                    continue;
+                } else if b == b'"' {
+                    code.push(b'"');
+                    comments.push(b' ');
+                    st = St::Code;
+                } else {
+                    code.push(b' ');
+                    comments.push(b' ');
+                }
+            }
+            St::RawStr(h) => {
+                if b == b'"' && bytes[i + 1..].iter().take_while(|&&c| c == b'#').count() >= h {
+                    for _ in 0..h + 1 {
+                        code.push(b' ');
+                        comments.push(b' ');
+                    }
+                    st = St::Code;
+                    i += h + 1;
+                    continue;
+                } else {
+                    code.push(b' ');
+                    comments.push(b' ');
+                }
+            }
+            St::CharLit => {
+                if b == b'\\' && i + 1 < bytes.len() {
+                    code.push(b' ');
+                    code.push(b' ');
+                    comments.push(b' ');
+                    comments.push(b' ');
+                    i += 2;
+                    continue;
+                } else if b == b'\'' {
+                    code.push(b'\'');
+                    comments.push(b' ');
+                    st = St::Code;
+                } else {
+                    code.push(b' ');
+                    comments.push(b' ');
+                }
+            }
+        }
+        i += 1;
+    }
+    // Unmasked bytes pass through verbatim (multibyte sequences intact);
+    // masked bytes become ASCII spaces — the result stays valid UTF-8.
+    Masked {
+        code: String::from_utf8(code).expect("masking preserves UTF-8"),
+        comments: String::from_utf8(comments).expect("masking preserves UTF-8"),
+    }
+}
+
+/// If `bytes[at..]` starts `#*"` (zero or more hashes then a quote),
+/// return the hash count — i.e. position `at` is just past the `r` of a
+/// raw-string opener. Guards against identifiers like `ring` by requiring
+/// the preceding character (before the `r`) to be a non-ident boundary,
+/// which the caller established by matching the `r` in code state.
+fn raw_str_hashes(bytes: &[u8], at: usize) -> Option<usize> {
+    let h = bytes[at..].iter().take_while(|&&c| c == b'#').count();
+    if bytes.get(at + h) == Some(&b'"') {
+        Some(h)
+    } else {
+        None
+    }
+}
+
+/// Heuristic: does the `'` at `at` open a char literal (vs a lifetime)?
+fn is_char_literal(bytes: &[u8], at: usize) -> bool {
+    match bytes.get(at + 1) {
+        Some(b'\\') => true, // '\n', '\'', '\u{..}' — always a literal
+        Some(_) => {
+            // 'x' closes right after one (possibly multibyte) char; a
+            // lifetime never has a closing quote. Scan a short window.
+            bytes[at + 1..].iter().take(5).skip(1).take_while(|&&c| c != b'\n').any(|&c| c == b'\'')
+        }
+        None => false,
+    }
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// All word-bounded occurrences of `token` in `hay` (byte offsets).
+/// Boundary = the bytes adjacent to the match are not identifier bytes.
+/// `::` inside the token is matched literally.
+fn token_positions(hay: &str, token: &str) -> Vec<usize> {
+    let hb = hay.as_bytes();
+    let tb = token.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = hay[from..].find(token) {
+        let at = from + pos;
+        let before_ok = at == 0 || !is_ident_byte(hb[at - 1]);
+        let after = at + tb.len();
+        let after_ok = after >= hb.len() || !is_ident_byte(hb[after]);
+        // Also reject a path continuation before the token (`x::thread::spawn`
+        // is still a match on `thread::spawn`; but `my_thread::spawn` must
+        // not match, which the ident-boundary check already handles).
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = at + 1;
+    }
+    out
+}
+
+/// 1-based line number of byte offset `at`.
+fn line_of(src: &str, at: usize) -> usize {
+    src.as_bytes()[..at].iter().filter(|&&b| b == b'\n').count() + 1
+}
+
+/// Line ranges (1-based, inclusive) covered by `#[cfg(test)]`-gated items
+/// (including forms like `#[cfg(all(test, not(loom)))]`). Brace-matched on
+/// the masked code so strings and comments can't unbalance the scan.
+fn test_regions(code: &str) -> Vec<(usize, usize)> {
+    let bytes = code.as_bytes();
+    let mut regions = Vec::new();
+    for at in token_positions(code, "cfg") {
+        // Must look like an attribute: `#[cfg` or `#[cfg_attr` etc. — walk
+        // back over whitespace to find `#[`.
+        let mut k = at;
+        while k > 0 && (bytes[k - 1] as char).is_whitespace() {
+            k -= 1;
+        }
+        if k < 1 || bytes[k - 1] != b'[' || k < 2 || bytes[k - 2] != b'#' {
+            continue;
+        }
+        // The attribute argument list: from the `(` after cfg to its
+        // matching `)`.
+        let Some(open) = code[at..].find('(').map(|p| at + p) else { continue };
+        let mut depth = 0usize;
+        let mut close = None;
+        for (j, &b) in bytes.iter().enumerate().skip(open) {
+            match b {
+                b'(' => depth += 1,
+                b')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        close = Some(j);
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let Some(close) = close else { continue };
+        // `not(test)` gates NON-test code — drop it before looking for a
+        // positive `test` token.
+        let args = code[open..=close].replace("not(test)", "");
+        if token_positions(&args, "test").is_empty() {
+            continue;
+        }
+        // Gated item body: first `{` after the attribute, brace-matched. A
+        // `;` first means a brace-less item (`mod tests;`) — no inline
+        // region to record.
+        let Some(body_open) = code[close..].find('{').map(|p| close + p) else { continue };
+        if code[close..body_open].contains(';') {
+            continue;
+        }
+        let mut depth = 0usize;
+        let mut body_close = None;
+        for (j, &b) in bytes.iter().enumerate().skip(body_open) {
+            match b {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        body_close = Some(j);
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let Some(body_close) = body_close else { continue };
+        regions.push((line_of(code, at), line_of(code, body_close)));
+    }
+    regions
+}
+
+fn in_regions(regions: &[(usize, usize)], line: usize) -> bool {
+    regions.iter().any(|&(a, b)| a <= line && line <= b)
+}
+
+/// Is this whole file test/bench code (exempt from rules 2–4)?
+fn is_test_file(rel: &str) -> bool {
+    rel.starts_with("rust/tests/") || rel.starts_with("rust/benches/")
+}
+
+/// Lint one file. `rel` is the repo-root-relative path with `/` separators
+/// (rule scoping keys off it); `src` is the file contents.
+pub fn lint_file(rel: &str, src: &str) -> Vec<Violation> {
+    let masked = mask(src);
+    let mut out = Vec::new();
+    rule_safety_comment(rel, &masked, &mut out);
+    if !is_test_file(rel) {
+        let tests = test_regions(&masked.code);
+        rule_float_ord_unwrap(rel, &masked, &tests, &mut out);
+        rule_determinism(rel, &masked, &tests, &mut out);
+        rule_thread_spawn(rel, &masked, &tests, &mut out);
+    }
+    out
+}
+
+/// Rule `safety-comment`: every `unsafe` token is preceded (within
+/// [`SAFETY_WINDOW`] lines) by a not-yet-consumed comment line containing
+/// `SAFETY:` or a `# Safety` doc section. Applies to test code too —
+/// test-side unsafe has the same preconditions as production unsafe.
+fn rule_safety_comment(rel: &str, m: &Masked, out: &mut Vec<Violation>) {
+    let mut marker_lines: Vec<usize> = m
+        .comments
+        .lines()
+        .enumerate()
+        .filter(|(_, l)| l.contains("SAFETY:") || l.contains("# Safety"))
+        .map(|(i, _)| i + 1)
+        .collect();
+    let mut unsafe_lines: Vec<usize> =
+        token_positions(&m.code, "unsafe").iter().map(|&p| line_of(&m.code, p)).collect();
+    unsafe_lines.dedup();
+    for line in unsafe_lines {
+        // Nearest unconsumed marker at or above this line, within range.
+        let found = marker_lines
+            .iter()
+            .rposition(|&ml| ml <= line && line - ml <= SAFETY_WINDOW);
+        match found {
+            Some(idx) => {
+                marker_lines.remove(idx); // one marker covers one site
+            }
+            None => out.push(Violation {
+                rule: "safety-comment",
+                file: rel.to_string(),
+                line,
+                message: format!(
+                    "`unsafe` without a `// SAFETY:` comment (or `# Safety` doc) in the {SAFETY_WINDOW} lines above — state the precondition this site relies on"
+                ),
+            }),
+        }
+    }
+}
+
+/// Rule `float-ord-unwrap`: `partial_cmp` immediately chained into
+/// `.unwrap()`/`.expect(` panics on the first NaN score. Outside the
+/// blessed total order in `select.rs`, route through
+/// `sparsify::select::cmp_f64_nan_last` (or `f32::total_cmp`).
+fn rule_float_ord_unwrap(rel: &str, m: &Masked, tests: &[(usize, usize)], out: &mut Vec<Violation>) {
+    if rel == FLOAT_ORD_HOME {
+        return;
+    }
+    for at in token_positions(&m.code, "partial_cmp") {
+        let line = line_of(&m.code, at);
+        if in_regions(tests, line) {
+            continue;
+        }
+        // Same-statement window: up to the terminating `;` (or end of file
+        // for expression position).
+        let rest = &m.code[at..];
+        let stmt_end = rest.find(';').unwrap_or(rest.len());
+        let stmt = &rest[..stmt_end];
+        if stmt.contains(".unwrap") || stmt.contains(".expect") {
+            out.push(Violation {
+                rule: "float-ord-unwrap",
+                file: rel.to_string(),
+                line,
+                message: "`partial_cmp(..).unwrap()` panics on NaN — use \
+                          `sparsify::select::cmp_f64_nan_last` / the select.rs total order"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// Rule `determinism`: wall clocks and ambient RNG are banned in the
+/// deterministic paths — selection sets and aggregates must be pure
+/// functions of (seed, config, round).
+fn rule_determinism(rel: &str, m: &Masked, tests: &[(usize, usize)], out: &mut Vec<Violation>) {
+    if !DETERMINISTIC_DIRS.iter().any(|d| rel.starts_with(d)) {
+        return;
+    }
+    for token in NONDET_TOKENS {
+        for at in token_positions(&m.code, token) {
+            let line = line_of(&m.code, at);
+            if in_regions(tests, line) {
+                continue;
+            }
+            out.push(Violation {
+                rule: "determinism",
+                file: rel.to_string(),
+                line,
+                message: format!(
+                    "`{token}` in a deterministic path — bit-identity (resume, parallel==serial) \
+                     requires state to be a pure function of seed/config/round"
+                ),
+            });
+        }
+    }
+}
+
+/// Rule `thread-spawn`: OS threads are created only in `tensor::pool`
+/// (`ScopedPool::new` + `spawn_worker_thread`) so the thread-budget
+/// discipline has a single choke point.
+fn rule_thread_spawn(rel: &str, m: &Masked, tests: &[(usize, usize)], out: &mut Vec<Violation>) {
+    if rel == THREAD_HOME {
+        return;
+    }
+    for at in token_positions(&m.code, "thread::spawn") {
+        let line = line_of(&m.code, at);
+        if in_regions(tests, line) {
+            continue;
+        }
+        out.push(Violation {
+            rule: "thread-spawn",
+            file: rel.to_string(),
+            line,
+            message: "`thread::spawn` outside tensor::pool — use \
+                      `tensor::pool::spawn_worker_thread` (budget discipline)"
+                .to_string(),
+        });
+    }
+}
+
+/// Recursively collect `.rs` files under `dir` (sorted for stable output).
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    let mut entries: Vec<_> = entries.flatten().map(|e| e.path()).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            rs_files(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// The directories `verify` scans, relative to the repo root. `xtask/`,
+/// `loom/`, and `fuzz/` are harness code and out of scope.
+const SCAN_DIRS: [&str; 4] = ["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// Run every rule over the tree at `root`. Returns all violations, stably
+/// ordered by (file, line).
+pub fn verify(root: &Path) -> std::io::Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    for d in SCAN_DIRS {
+        rs_files(&root.join(d), &mut files);
+    }
+    let mut out = Vec::new();
+    for path in files {
+        let src = std::fs::read_to_string(&path)?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        out.extend(lint_file(&rel, &src));
+    }
+    out.sort_by(|a, b| a.file.cmp(&b.file).then(a.line.cmp(&b.line)));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ---- seeded negative tests: every rule must FIRE on its violation ----
+
+    #[test]
+    fn safety_comment_rule_fires_on_undocumented_unsafe() {
+        let src = "fn f(p: *const u8) -> u8 {\n    unsafe { p.read() }\n}\n";
+        let v = lint_file("rust/src/tensor/bad.rs", src);
+        assert!(
+            v.iter().any(|v| v.rule == "safety-comment" && v.line == 2),
+            "expected safety-comment violation, got {v:?}"
+        );
+    }
+
+    #[test]
+    fn safety_comment_rule_accepts_documented_unsafe() {
+        let src = "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller guarantees p is valid.\n    unsafe { p.read() }\n}\n";
+        assert!(lint_file("rust/src/tensor/ok.rs", src).is_empty());
+    }
+
+    #[test]
+    fn safety_doc_section_counts_for_unsafe_fn() {
+        let src = "/// Reads a byte.\n///\n/// # Safety\n///\n/// `p` must be valid for reads.\npub unsafe fn f(p: *const u8) -> u8 {\n    p.read()\n}\n";
+        assert!(lint_file("rust/src/tensor/ok2.rs", src).is_empty());
+    }
+
+    #[test]
+    fn one_safety_comment_does_not_cover_two_unsafe_sites() {
+        let src = "fn f(p: *const u8) {\n    // SAFETY: p valid.\n    unsafe { p.read() };\n    unsafe { p.read() };\n}\n";
+        let v = lint_file("rust/src/tensor/two.rs", src);
+        assert_eq!(v.len(), 1, "second site must need its own comment: {v:?}");
+        assert_eq!(v[0].line, 4);
+    }
+
+    #[test]
+    fn safety_comment_applies_in_test_code_too() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        let p = &0u8 as *const u8;\n        unsafe { p.read() };\n    }\n}\n";
+        let v = lint_file("rust/src/tensor/tt.rs", src);
+        assert!(v.iter().any(|v| v.rule == "safety-comment"));
+    }
+
+    #[test]
+    fn unsafe_in_comment_or_string_is_ignored() {
+        let src = "// this mentions unsafe code but has none\nfn f() -> &'static str {\n    \"unsafe { }\"\n}\n";
+        assert!(lint_file("rust/src/tensor/s.rs", src).is_empty());
+    }
+
+    #[test]
+    fn float_ord_unwrap_rule_fires() {
+        let src = "pub fn sort(v: &mut [f32]) {\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+        let v = lint_file("rust/src/stats/bad.rs", src);
+        assert!(
+            v.iter().any(|v| v.rule == "float-ord-unwrap" && v.line == 2),
+            "expected float-ord-unwrap violation, got {v:?}"
+        );
+    }
+
+    #[test]
+    fn float_ord_expect_also_fires() {
+        let src = "pub fn m(a: f64, b: f64) -> std::cmp::Ordering {\n    a.partial_cmp(&b).expect(\"no NaN\")\n}\n";
+        let v = lint_file("rust/src/metrics/bad.rs", src);
+        assert!(v.iter().any(|v| v.rule == "float-ord-unwrap"));
+    }
+
+    #[test]
+    fn float_ord_unwrap_allowed_in_select_rs_and_tests() {
+        let src = "pub fn cmp(a: f32, b: f32) -> std::cmp::Ordering {\n    b.partial_cmp(&a).unwrap()\n}\n";
+        assert!(lint_file("rust/src/sparsify/select.rs", src).is_empty());
+        let test_src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        let _ = 1.0f32.partial_cmp(&2.0).unwrap();\n    }\n}\n";
+        assert!(lint_file("rust/src/stats/mod.rs", test_src).is_empty());
+    }
+
+    #[test]
+    fn bare_partial_cmp_without_unwrap_is_allowed() {
+        let src = "pub fn m(a: f64, b: f64) -> Option<std::cmp::Ordering> {\n    a.partial_cmp(&b)\n}\n";
+        assert!(lint_file("rust/src/metrics/ok.rs", src).is_empty());
+    }
+
+    #[test]
+    fn determinism_rule_fires_on_clock_in_deterministic_path() {
+        for token in ["Instant::now()", "SystemTime::now()", "thread_rng()"] {
+            let src = format!("pub fn f() {{\n    let _t = {token};\n}}\n");
+            let v = lint_file("rust/src/sparsify/bad.rs", &src);
+            assert!(
+                v.iter().any(|v| v.rule == "determinism" && v.line == 2),
+                "expected determinism violation for {token}, got {v:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn determinism_rule_scoped_to_deterministic_dirs() {
+        let src = "pub fn f() {\n    let _t = Instant::now();\n}\n";
+        // Timing code is fine in the bench/experiment layers.
+        assert!(lint_file("rust/src/bench/mod.rs", src).is_empty());
+        assert!(lint_file("rust/src/experiments/fig_scale.rs", src).is_empty());
+        // ... and in tests inside a deterministic dir.
+        let test_src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        let _ = Instant::now();\n    }\n}\n";
+        assert!(lint_file("rust/src/coordinator/mod.rs", test_src).is_empty());
+    }
+
+    #[test]
+    fn thread_spawn_rule_fires_outside_pool() {
+        let src = "pub fn f() {\n    std::thread::spawn(|| {});\n}\n";
+        let v = lint_file("rust/src/coordinator/bad.rs", src);
+        assert!(
+            v.iter().any(|v| v.rule == "thread-spawn" && v.line == 2),
+            "expected thread-spawn violation, got {v:?}"
+        );
+    }
+
+    #[test]
+    fn thread_spawn_allowed_in_pool_tests_and_bench_files() {
+        let src = "pub fn f() {\n    std::thread::spawn(|| {});\n}\n";
+        assert!(lint_file("rust/src/tensor/pool.rs", src).is_empty());
+        assert!(lint_file("rust/tests/integration.rs", src).is_empty());
+        assert!(lint_file("rust/benches/gemm_par.rs", src).is_empty());
+        let test_src = "#[cfg(all(test, not(loom)))]\nmod tests {\n    #[test]\n    fn t() {\n        std::thread::spawn(|| {}).join().unwrap();\n    }\n}\n";
+        assert!(lint_file("rust/src/coordinator/ring.rs", test_src).is_empty());
+    }
+
+    // ---- masking machinery ----
+
+    #[test]
+    fn masking_blanks_comments_strings_chars_and_raw_strings() {
+        let src = r##"fn f() { let s = "unsafe"; let r = r#"thread::spawn"#; let c = 'u'; } // unsafe"##;
+        let m = mask(src);
+        assert!(!m.code.contains("unsafe"));
+        assert!(!m.code.contains("thread::spawn"));
+        assert!(m.comments.contains("unsafe"));
+        assert_eq!(m.code.len(), src.len());
+    }
+
+    #[test]
+    fn masking_keeps_lifetimes_as_code() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x }";
+        let m = mask(src);
+        assert!(m.code.contains("&'a str"));
+    }
+
+    #[test]
+    fn token_matching_respects_word_boundaries() {
+        assert_eq!(token_positions("let unsafety = 1;", "unsafe").len(), 0);
+        assert_eq!(token_positions("unsafe { }", "unsafe").len(), 1);
+        assert_eq!(token_positions("my_thread::spawn()", "thread::spawn").len(), 0);
+        assert_eq!(token_positions("std::thread::spawn()", "thread::spawn").len(), 1);
+    }
+
+    #[test]
+    fn test_region_detection_brace_matches() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() { let x = \"}\"; }\n}\nfn c() {}\n";
+        let m = mask(src);
+        let r = test_regions(&m.code);
+        assert_eq!(r.len(), 1);
+        assert!(in_regions(&r, 3) && in_regions(&r, 4) && in_regions(&r, 5));
+        assert!(!in_regions(&r, 1) && !in_regions(&r, 6));
+    }
+
+    // ---- the tree itself must be clean ----
+
+    #[test]
+    fn repo_tree_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf();
+        let violations = verify(&root).expect("scan repo");
+        assert!(
+            violations.is_empty(),
+            "lint violations in tree:\n{}",
+            violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}

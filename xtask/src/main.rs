@@ -1,0 +1,60 @@
+//! `cargo xtask verify` — run the repo lint pass (see lib.rs for rules).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn usage() -> ExitCode {
+    eprintln!("usage: cargo xtask verify [--root <repo-root>]");
+    ExitCode::from(2)
+}
+
+/// The repo root: `--root` wins; else the working directory when it looks
+/// like the repo (the `cargo xtask` alias runs from the workspace root);
+/// else the parent of this crate's manifest dir.
+fn resolve_root(explicit: Option<PathBuf>) -> PathBuf {
+    if let Some(r) = explicit {
+        return r;
+    }
+    if let Ok(cwd) = std::env::current_dir() {
+        if cwd.join("rust/src").is_dir() {
+            return cwd;
+        }
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).parent().expect("xtask has a parent dir").to_path_buf()
+}
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    let Some(cmd) = args.next() else { return usage() };
+    if cmd != "verify" {
+        return usage();
+    }
+    let mut root = None;
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(p) => root = Some(PathBuf::from(p)),
+                None => return usage(),
+            },
+            _ => return usage(),
+        }
+    }
+    let root = resolve_root(root);
+    match xtask::verify(&root) {
+        Ok(violations) if violations.is_empty() => {
+            println!("xtask verify: ok ({} clean)", root.display());
+            ExitCode::SUCCESS
+        }
+        Ok(violations) => {
+            for v in &violations {
+                eprintln!("{v}");
+            }
+            eprintln!("xtask verify: {} violation(s)", violations.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("xtask verify: scan failed: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
