@@ -1,9 +1,9 @@
 use regtopk::experiments::fig3::{run_policy, Size, MU};
+use regtopk::obs::clock::Stopwatch;
 use regtopk::sparsify::SparsifierKind;
-use std::time::Instant;
 fn main() {
     let size = Size { workers: 20, dim: 100, points: 500, iters: 2500 };
-    let t0 = Instant::now();
+    let t0 = Stopwatch::start();
     let r = run_policy(&size, SparsifierKind::RegTopK { mu: MU, y: 1.0 }, 0.6, 0).unwrap();
     println!("one paper-scale 2500-iter run: {:.2?}  final={:.3e}", t0.elapsed(), r.final_gap());
 }

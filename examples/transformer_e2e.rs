@@ -71,7 +71,7 @@ fn main() -> anyhow::Result<()> {
         ("topk", SparsifierKind::TopK, sparsity),
         ("regtopk", SparsifierKind::RegTopK { mu: 3.0, y: 1.0 }, s_or(sparsity)),
     ] {
-        let t0 = std::time::Instant::now();
+        let t0 = regtopk::obs::clock::Stopwatch::start();
         let cfg = TrainConfig {
             workers: workers_n,
             dim,

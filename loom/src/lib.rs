@@ -27,6 +27,43 @@ pub mod ring;
 #[path = "../../rust/src/tensor/pool.rs"]
 pub mod pool;
 
+/// No-op stand-in for the main crate's `obs` flight recorder: the included
+/// files call `crate::obs::span(..)` on their hot paths, and the models
+/// only need those calls to compile, not to record. (Observability is
+/// deliberately out of model scope — a disarmed span has no
+/// synchronization, so it cannot change the interleavings being checked.)
+pub mod obs {
+    #[derive(Clone, Copy, Debug)]
+    pub enum SpanKind {
+        Round,
+        GemmPack,
+        GemmKernel,
+        GemmPanelSource,
+        PoolFanout,
+        Im2colGather,
+        SparsifySelect,
+        SparsifyCompress,
+        MergeShard,
+        RingSend,
+        RingSendBlocked,
+        RingRecv,
+        LaneRound,
+        SnapshotIo,
+        CheckpointIo,
+    }
+
+    #[must_use]
+    pub struct Span;
+
+    pub fn span(_kind: SpanKind) -> Span {
+        Span
+    }
+
+    pub fn span_arg(_kind: SpanKind, _arg: u32) -> Span {
+        Span
+    }
+}
+
 #[cfg(all(test, loom))]
 mod models {
     use crate::pool::ScopedPool;

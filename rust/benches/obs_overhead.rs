@@ -1,0 +1,77 @@
+//! Flight-recorder overhead: end-to-end training with the recorder off
+//! vs installed, on the sequential and threaded executors.
+//!
+//! The `obs` contract is *zero perturbation of outputs* and *bounded
+//! perturbation of time*: spans are two clock reads and one SPSC ring
+//! push, the round drain is one mutex + memcpy per round. This bench
+//! pins the time side — the on/off median ratio lands in
+//! `BENCH_obs_overhead.json` (`overhead_pct`, budget < 2%).
+
+use regtopk::bench::{black_box, Bencher};
+use regtopk::config::TrainConfig;
+use regtopk::coordinator::{train_with_opts, RunOpts};
+use regtopk::data::linreg::{LinRegDataset, LinRegGenConfig};
+use regtopk::grad::LinRegGrad;
+use regtopk::metrics::json::Json;
+use regtopk::obs::{self, RecorderConfig};
+use regtopk::rng::Pcg64;
+use regtopk::sparsify::SparsifierKind;
+use std::sync::Arc;
+
+const WORKERS: usize = 20;
+const DIM: usize = 1000;
+const ITERS: usize = 50;
+
+fn main() {
+    let b = Bencher::from_env();
+    println!("== flight-recorder overhead (linreg J={DIM} N={WORKERS}, {ITERS} iters/run) ==");
+    let gen = LinRegGenConfig {
+        workers: WORKERS,
+        dim: DIM,
+        points_per_worker: 100,
+        ..Default::default()
+    };
+    let data = Arc::new(LinRegDataset::generate(&gen, &mut Pcg64::seed_from_u64(1)));
+    let cfg = TrainConfig {
+        workers: WORKERS,
+        dim: DIM,
+        sparsity: 0.01,
+        sparsifier: SparsifierKind::RegTopK { mu: 1.0, y: 1.0 },
+        lr: 0.01,
+        iters: ITERS,
+        ..Default::default()
+    };
+
+    let mut extras: Vec<(&str, Json)> = Vec::new();
+    let mut worst = 0.0f64;
+    for (label, threaded) in [("sequential", false), ("threaded", true)] {
+        let run = || {
+            let workers = LinRegGrad::all(&data);
+            let r = train_with_opts(&cfg, vec![0.0; DIM], workers, &RunOpts { threaded }, &mut |_| {})
+                .unwrap();
+            black_box(r.theta[0]);
+        };
+        let off = b.report(&format!("{label}/{ITERS}iters/recorder_off"), run);
+        obs::install(RecorderConfig::default());
+        let on = b.report(&format!("{label}/{ITERS}iters/recorder_on"), run);
+        obs::uninstall();
+        let ratio = on.median.as_secs_f64() / off.median.as_secs_f64();
+        worst = worst.max(ratio);
+        println!(
+            "{:<44} overhead {:+.2}% (on/off median ratio {ratio:.4})",
+            "",
+            (ratio - 1.0) * 100.0
+        );
+        let key: &str = if threaded { "overhead_ratio_threaded" } else { "overhead_ratio_sequential" };
+        extras.push((key, Json::Num(ratio)));
+    }
+    extras.push(("overhead_ratio", Json::Num(worst)));
+    extras.push(("overhead_pct", Json::Num((worst - 1.0) * 100.0)));
+    println!("\nworst-case overhead: {:+.2}%", (worst - 1.0) * 100.0);
+
+    if let Err(e) = b.write_json_with("obs_overhead", extras, "BENCH_obs_overhead.json") {
+        eprintln!("warning: could not write BENCH_obs_overhead.json: {e}");
+    } else {
+        println!("wrote BENCH_obs_overhead.json");
+    }
+}

@@ -9,9 +9,10 @@
 //! the perf trajectory can be diffed across PRs (e.g.
 //! `BENCH_sparsify_hot.json` at the repo root).
 
+use crate::obs::clock::Stopwatch;
 use std::cell::RefCell;
 use std::path::Path;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Timing statistics over repeated runs of a closure.
 #[derive(Clone, Copy, Debug)]
@@ -118,11 +119,11 @@ impl Bencher {
             f();
         }
         let mut samples = Vec::with_capacity(self.target_samples);
-        let started = Instant::now();
+        let started = Stopwatch::start();
         while samples.len() < self.target_samples.max(1) {
-            let t0 = Instant::now();
+            let t0 = Stopwatch::start();
             f();
-            samples.push(t0.elapsed().as_nanos() as u64);
+            samples.push(t0.elapsed_ns());
             if started.elapsed() > self.budget && samples.len() >= 3 {
                 break;
             }

@@ -38,7 +38,8 @@ const VALUED: &[&str] = &[
     "config", "set", "out", "sparsifier", "mu", "y", "sparsity", "workers", "iters", "lr",
     "seed", "seeds", "dim", "k", "backend", "artifacts", "samples", "optimizer", "log-every",
     "model", "steps", "batch", "score-backend", "lanes", "staleness", "shards", "p-straggle",
-    "p-death", "p-loss", "fault-seed", "resume", "crash-at", "curve-out",
+    "p-death", "p-loss", "fault-seed", "resume", "crash-at", "curve-out", "trace-out",
+    "metrics-out",
 ];
 
 impl Args {
@@ -159,6 +160,13 @@ mod tests {
         assert_eq!(a.opt_or("workers", 4usize).unwrap(), 4);
         let bad = parse(&["train", "--iters", "many"]);
         assert!(bad.opt_parse::<usize>("iters").is_err());
+    }
+
+    #[test]
+    fn obs_output_flags_take_values() {
+        let a = parse(&["train", "--trace-out", "t.json", "--metrics-out=m.jsonl"]);
+        assert_eq!(a.opt("trace-out"), Some("t.json"));
+        assert_eq!(a.opt("metrics-out"), Some("m.jsonl"));
     }
 
     #[test]

@@ -275,6 +275,7 @@ fn merge_shard<M: Borrow<SparseGrad>>(
     dirty: &mut [bool],
     scr: &mut ShardScratch,
 ) {
+    let _span = crate::obs::span_arg(crate::obs::SpanKind::MergeShard, lo);
     scr.touched.clear();
     for (omega, msg) in batch {
         let msg = msg.borrow();

@@ -162,6 +162,15 @@ pub struct TrainConfig {
     /// completing round `crash_at` — after any due snapshot for that round
     /// has persisted (0 = disabled). Exercises the recovery path end to end.
     pub crash_at: usize,
+    /// Write a Chrome trace-event JSON (Perfetto-loadable) of the run's
+    /// flight-recorder spans to this path. Empty = tracing off. Purely an
+    /// output knob: deliberately excluded from the snapshot fingerprint,
+    /// and the run's training outputs are bitwise identical either way.
+    pub trace_out: String,
+    /// Write a JSONL round-metrics journal to this path (plus a
+    /// Prometheus-style text dump at `<path>.prom`). Empty = off; same
+    /// output-only contract as `trace_out`.
+    pub metrics_out: String,
 }
 
 impl Default for TrainConfig {
@@ -189,6 +198,8 @@ impl Default for TrainConfig {
             snapshot_keep: 3,
             resume: String::new(),
             crash_at: 0,
+            trace_out: String::new(),
+            metrics_out: String::new(),
         }
     }
 }
@@ -266,6 +277,8 @@ impl TrainConfig {
             "snapshot_keep" => self.snapshot_keep = value.as_usize()?,
             "resume" => self.resume = value.as_str()?,
             "crash_at" => self.crash_at = value.as_usize()?,
+            "trace_out" => self.trace_out = value.as_str()?,
+            "metrics_out" => self.metrics_out = value.as_str()?,
             "lr_step_every" => {
                 let every = value.as_usize()?;
                 self.lr_schedule = match self.lr_schedule {
@@ -408,6 +421,18 @@ mod tests {
         cfg.validate().unwrap();
         cfg.snapshot_dir.clear();
         assert!(cfg.validate().is_err(), "snapshot cadence without a dir is a config error");
+    }
+
+    #[test]
+    fn obs_output_keys_parse_and_default_off() {
+        let mut cfg = TrainConfig::default();
+        assert!(cfg.trace_out.is_empty(), "tracing defaults off");
+        assert!(cfg.metrics_out.is_empty(), "metrics journal defaults off");
+        cfg.apply_kv("trace_out", &Value::Str("results/trace.json".into())).unwrap();
+        cfg.apply_kv("metrics_out", &Value::Str("results/metrics.jsonl".into())).unwrap();
+        assert_eq!(cfg.trace_out, "results/trace.json");
+        assert_eq!(cfg.metrics_out, "results/metrics.jsonl");
+        cfg.validate().unwrap();
     }
 
     #[test]

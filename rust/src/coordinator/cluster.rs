@@ -259,12 +259,25 @@ fn step_worker(
         WState::Alive => {
             let loss = lw.grad.grad(t, theta, gbuf);
             if let Some(d) = plan.straggle_delay(lw.id, t) {
-                lw.sparsifier.compress(gbuf, &mut lw.held);
+                {
+                    let _c = crate::obs::span_arg(
+                        crate::obs::SpanKind::SparsifyCompress,
+                        lw.id as u32,
+                    );
+                    lw.sparsifier.compress(gbuf, &mut lw.held);
+                }
+                crate::obs::count(crate::obs::CounterKind::StragglerParked, 1);
                 lw.held_loss = loss;
                 lw.state = WState::Busy { until: t + d, origin: t };
                 slot.observer = false;
             } else {
-                lw.sparsifier.compress(gbuf, &mut slot.msg);
+                {
+                    let _c = crate::obs::span_arg(
+                        crate::obs::SpanKind::SparsifyCompress,
+                        lw.id as u32,
+                    );
+                    lw.sparsifier.compress(gbuf, &mut slot.msg);
+                }
                 slot.loss = loss;
                 slot.origin = t as u32;
                 slot.contribute = true;
@@ -294,6 +307,7 @@ fn spawn_lane(
         while let Ok(cmd) = rx_cmd.recv() {
             match cmd {
                 ToLane::Step { t, theta } => {
+                    let _lane = crate::obs::span_arg(crate::obs::SpanKind::LaneRound, t as u32);
                     let batch = bufs.write(t);
                     for (slot, lw) in batch.items.iter_mut().zip(workers.iter_mut()) {
                         step_worker(lw, t, &theta, &plan, &mut gbuf, slot);
@@ -451,7 +465,9 @@ pub fn train_cluster(
     let mut lane_batches: Vec<Arc<LaneUplink>> = Vec::with_capacity(lanes);
     let mut prev_comm = agg.comm;
     let mut result: anyhow::Result<()> = Ok(());
+    crate::obs::set_executor(crate::obs::Executor::Cluster);
     'outer: for t in start..cfg.iters {
+        let round_span = crate::obs::span_arg(crate::obs::SpanKind::Round, t as u32);
         let lr = cfg.lr_schedule.at(cfg.lr, t);
         theta_bufs.write(t).copy_from_slice(&theta);
         for (l, h) in handles.iter().enumerate() {
@@ -495,6 +511,7 @@ pub fn train_cluster(
                 let lag = t - item.origin as usize;
                 if lag > copts.staleness {
                     discarded_stale += 1;
+                    crate::obs::count(crate::obs::CounterKind::StragglerDiscarded, 1);
                     agg.comm.uplink_values += item.msg.len() as u64;
                     if item.msg.len() < dim {
                         agg.comm.uplink_index_bits +=
@@ -504,6 +521,7 @@ pub fn train_cluster(
                 }
                 if lag > 0 {
                     merged_stale += 1;
+                    crate::obs::count(crate::obs::CounterKind::StragglerMerged, 1);
                 }
                 loss_sum += item.loss;
                 contrib.push(item);
@@ -536,6 +554,7 @@ pub fn train_cluster(
             .collect();
         if contrib.is_empty() {
             empty_rounds += 1;
+            crate::obs::count(crate::obs::CounterKind::EmptyRound, 1);
         }
         let shards = if copts.shards == 0 {
             let entries: usize = batch.iter().map(|(_, m)| m.len()).sum();
@@ -619,6 +638,16 @@ pub fn train_cluster(
                 }
             }
         }
+        // Close the round span before the drain so it lands in this
+        // round's report; the comm delta is exactly the ledger entry just
+        // pushed (fault counters arrive as recorded counter events, not
+        // via `extra` — passing them twice would double-count).
+        drop(round_span);
+        crate::obs::round_boundary(
+            t as u64,
+            ledger.last().copied().unwrap_or_default(),
+            [0; 4],
+        );
         if cfg.crash_at != 0 && t + 1 == cfg.crash_at {
             // Crash injection: hard-kill without joining the lanes, like a
             // power loss. Any snapshot due this round already persisted.

@@ -48,7 +48,10 @@ pub fn train_global_topk<W: WorkerGrad + ?Sized>(
     let mut scratch: Vec<u32> = Vec::new();
     let mut selected: Vec<u32> = Vec::new();
     let mut msg = SparseGrad::default();
+    crate::obs::set_executor(crate::obs::Executor::Genie);
+    let mut comm_prev = agg.comm;
     for t in 0..cfg.iters {
+        let round_span = crate::obs::span_arg(crate::obs::SpanKind::Round, t as u32);
         let lr = cfg.lr_schedule.at(cfg.lr, t);
         // Phase 1 (genie): roll the accumulators in place and aggregate
         // them (eps now holds a_n^t = eps_n^{t-1} + g_n^t).
@@ -93,6 +96,9 @@ pub fn train_global_topk<W: WorkerGrad + ?Sized>(
             agg: dense,
             comm: &agg.comm,
         });
+        drop(round_span);
+        crate::obs::round_boundary(t as u64, agg.comm.since(&comm_prev), [0; 4]);
+        comm_prev = agg.comm;
     }
     Ok(TrainResult { theta, comm: agg.comm, iters: cfg.iters, reuse_misses: 0 })
 }

@@ -130,13 +130,20 @@ pub fn train<W: WorkerGrad + ?Sized>(
     };
     let mut gbuf = vec![0.0f32; dim];
     let mut msg = SparseGrad::default();
+    crate::obs::set_executor(crate::obs::Executor::Sequential);
+    let mut comm_prev = agg.comm;
     for t in start..cfg.iters {
+        let round_span = crate::obs::span_arg(crate::obs::SpanKind::Round, t as u32);
         let lr = cfg.lr_schedule.at(cfg.lr, t);
         agg.begin();
         let mut loss_sum = 0.0;
         for n in 0..cfg.workers {
             loss_sum += workers[n].grad(t, &theta, &mut gbuf);
-            sparsifiers[n].compress(&gbuf, &mut msg);
+            {
+                let _c =
+                    crate::obs::span_arg(crate::obs::SpanKind::SparsifyCompress, n as u32);
+                sparsifiers[n].compress(&gbuf, &mut msg);
+            }
             agg.add(omega[n], &msg);
         }
         // Broadcast the sparse union — O(N·k); the dense view is only
@@ -167,6 +174,11 @@ pub fn train<W: WorkerGrad + ?Sized>(
                 sink.save(t + 1, &ckpt)?;
             }
         }
+        // Close the round span *before* the drain so it lands in this
+        // round's report, then join it with the round's comm delta.
+        drop(round_span);
+        crate::obs::round_boundary(t as u64, agg.comm.since(&comm_prev), [0; 4]);
+        comm_prev = agg.comm;
         if cfg.crash_at != 0 && t + 1 == cfg.crash_at {
             // Crash injection: hard-kill the process once this round — and
             // any snapshot due for it — has persisted, like a power loss.

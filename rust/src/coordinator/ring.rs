@@ -95,15 +95,21 @@ impl<T> RingSender<T> {
     /// the payload — as soon as the receiver is gone, including while
     /// blocked on a full ring.
     pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+        let _span = crate::obs::span(crate::obs::SpanKind::RingSend);
         let mut s = self.shared.state.lock().unwrap();
-        loop {
-            if !s.receiver_alive {
-                return Err(SendError(value));
+        if s.receiver_alive && s.len == s.buf.len() {
+            // Full ring: time the blocked portion separately — the
+            // flight-recorder signal for backpressure on this link.
+            let _blocked = crate::obs::span(crate::obs::SpanKind::RingSendBlocked);
+            loop {
+                s = self.shared.not_full.wait(s).unwrap();
+                if !s.receiver_alive || s.len < s.buf.len() {
+                    break;
+                }
             }
-            if s.len < s.buf.len() {
-                break;
-            }
-            s = self.shared.not_full.wait(s).unwrap();
+        }
+        if !s.receiver_alive {
+            return Err(SendError(value));
         }
         let cap = s.buf.len();
         let slot = (s.head + s.len) % cap;
@@ -128,6 +134,7 @@ impl<T> RingReceiver<T> {
     /// Messages buffered before a sender disconnect are still delivered;
     /// only an empty, disconnected ring errors.
     pub fn recv(&self) -> Result<T, RecvError> {
+        let _span = crate::obs::span(crate::obs::SpanKind::RingRecv);
         let mut s = self.shared.state.lock().unwrap();
         loop {
             if s.len > 0 {

@@ -114,6 +114,7 @@ pub fn build_core(
     optimizer: &dyn Optimizer,
     sparsifiers: &[Box<dyn Sparsifier>],
 ) -> Checkpoint {
+    let _span = crate::obs::span_arg(crate::obs::SpanKind::CheckpointIo, round as u32);
     let mut ckpt = Checkpoint::new();
     stamp_meta(&mut ckpt, cfg, round, CORE_FAMILY);
     ckpt.add("theta", theta);
@@ -144,6 +145,7 @@ pub fn restore_core(
     optimizer: &mut dyn Optimizer,
     sparsifiers: &mut [Box<dyn Sparsifier>],
 ) -> anyhow::Result<CoreResume> {
+    let _span = crate::obs::span(crate::obs::SpanKind::CheckpointIo);
     let round = check_meta(ckpt, cfg, CORE_FAMILY)?;
     let comm = read_comm(ckpt)?;
     optimizer.import_state("opt/", ckpt)?;
@@ -194,6 +196,7 @@ impl SnapshotSink {
     /// Atomically write the snapshot for `round`, then drop the oldest
     /// files beyond the retention bound.
     pub fn save(&self, round: usize, ckpt: &Checkpoint) -> anyhow::Result<PathBuf> {
+        let _span = crate::obs::span_arg(crate::obs::SpanKind::SnapshotIo, round as u32);
         let path = self.path_for(round);
         ckpt.save(&path)?;
         if self.keep > 0 {
@@ -239,10 +242,14 @@ pub fn load_latest(dir: impl AsRef<Path>) -> anyhow::Result<(PathBuf, Checkpoint
     let mut first_err = None;
     for &r in rounds.iter().rev() {
         let path = dir.join(format!("snap_{r}.rtkc"));
+        let _span = crate::obs::span(crate::obs::SpanKind::SnapshotIo);
         match Checkpoint::load(&path) {
             Ok(ckpt) => return Ok((path, ckpt)),
             Err(e) => {
-                eprintln!("warning: skipping corrupt snapshot `{}`: {e:#}", path.display());
+                crate::obs::log::warn(&format!(
+                    "skipping corrupt snapshot `{}`: {e:#}",
+                    path.display()
+                ));
                 first_err.get_or_insert(format!("{}: {e:#}", path.display()));
             }
         }
@@ -262,6 +269,7 @@ pub fn resolve_resume(spec: impl AsRef<Path>) -> anyhow::Result<(PathBuf, Checkp
     if spec.is_dir() {
         load_latest(spec)
     } else {
+        let _span = crate::obs::span(crate::obs::SpanKind::SnapshotIo);
         let ckpt = Checkpoint::load(spec)
             .map_err(|e| anyhow::anyhow!("cannot resume from `{}`: {e:#}", spec.display()))?;
         Ok((spec.to_path_buf(), ckpt))
@@ -355,6 +363,32 @@ mod tests {
         // An explicitly named corrupt file is a strict error even though a
         // directory fallback would exist.
         assert!(resolve_resume(dir.join("snap_10.rtkc")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_snapshot_warning_goes_through_the_log_sink() {
+        // Satellite: the fallback warning must flow through `obs::log`
+        // (the xtask-enforced stderr choke point) so tests can observe it
+        // instead of scraping a child process's stderr.
+        let dir = tmpdir("log_capture");
+        let mut a = Checkpoint::new();
+        a.add_u64("meta/round", &[5]);
+        a.save(dir.join("snap_5.rtkc")).unwrap();
+        let mut b = Checkpoint::new();
+        b.add_u64("meta/round", &[10]);
+        b.save(dir.join("snap_10.rtkc")).unwrap();
+        let mut bytes = std::fs::read(dir.join("snap_10.rtkc")).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(dir.join("snap_10.rtkc"), &bytes).unwrap();
+        let (result, msgs) = crate::obs::log::with_capture(|| load_latest(&dir));
+        let (path, _) = result.unwrap();
+        assert!(path.ends_with("snap_5.rtkc"), "fallback must still work under capture");
+        assert_eq!(msgs.len(), 1, "one corrupt file, one warning: {msgs:?}");
+        assert_eq!(msgs[0].0, crate::obs::log::Level::Warn);
+        assert!(msgs[0].1.contains("snap_10.rtkc"), "{}", msgs[0].1);
+        assert!(msgs[0].1.contains("skipping corrupt snapshot"), "{}", msgs[0].1);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -149,7 +149,13 @@ fn spawn_worker(
             match cmd {
                 ToWorker::Step { t, theta } => {
                     let loss = grad.grad(t, &theta, &mut gbuf);
-                    sparsifier.compress(&gbuf, msg_bufs.write(t));
+                    {
+                        let _c = crate::obs::span_arg(
+                            crate::obs::SpanKind::SparsifyCompress,
+                            t as u32,
+                        );
+                        sparsifier.compress(&gbuf, msg_bufs.write(t));
+                    }
                     if tx_res.send(FromWorker::Grad { loss, msg: msg_bufs.share(t) }).is_err()
                     {
                         break;
@@ -232,7 +238,10 @@ pub fn train_threaded(
     let mut union_bufs: DoubleBuffer<(Vec<u32>, Vec<f32>)> = DoubleBuffer::new(Default::default);
     let mut uplinks: Vec<(f32, Arc<SparseGrad>)> = Vec::with_capacity(cfg.workers);
     let mut result: anyhow::Result<()> = Ok(());
+    crate::obs::set_executor(crate::obs::Executor::Threaded);
+    let mut comm_prev = agg.comm;
     'outer: for t in start..cfg.iters {
+        let round_span = crate::obs::span_arg(crate::obs::SpanKind::Round, t as u32);
         let lr = cfg.lr_schedule.at(cfg.lr, t);
         theta_bufs.write(t).copy_from_slice(&theta);
         for (n, h) in handles.iter().enumerate() {
@@ -338,6 +347,11 @@ pub fn train_threaded(
                 }
             }
         }
+        // Close the round span before the drain so it lands in this
+        // round's report, joined with the round's comm delta.
+        drop(round_span);
+        crate::obs::round_boundary(t as u64, agg.comm.since(&comm_prev), [0; 4]);
+        comm_prev = agg.comm;
         if cfg.crash_at != 0 && t + 1 == cfg.crash_at {
             // Crash injection: hard-kill without joining the workers, like
             // a power loss. Any snapshot due this round already persisted.

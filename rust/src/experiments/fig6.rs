@@ -164,13 +164,15 @@ impl Workload {
         if Manifest::available(artifacts_dir) {
             match Workload::hlo(artifacts_dir, seed) {
                 Ok(w) => return w,
-                Err(e) => eprintln!("fig6: HLO workload unavailable ({e}); using native"),
+                Err(e) => crate::obs::log::warn(&format!(
+                    "fig6: HLO workload unavailable ({e}); using native"
+                )),
             }
         } else {
-            eprintln!(
+            crate::obs::log::info(&format!(
                 "fig6: no artifacts at {artifacts_dir}; using native {} backend",
                 model.name()
-            );
+            ));
         }
         Workload::native(seed, model)
     }

@@ -77,7 +77,7 @@ pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
         "workers", "final_gap", "total_bytes", "merged", "discarded", "empty", "iters/sec"
     );
     for &n in ns {
-        let t0 = std::time::Instant::now();
+        let t0 = crate::obs::clock::Stopwatch::start();
         let (report, _plan) = run_point(n, dim, points, iters)?;
         let elapsed = t0.elapsed().as_secs_f64();
         let ips = iters as f64 / elapsed.max(1e-9);

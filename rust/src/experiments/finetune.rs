@@ -285,7 +285,10 @@ pub fn pretrain_cached(size: &SuiteSize, variant: &Variant, seed: u64, dir: &Pat
     ckpt.add_bytes("meta/key", key.as_bytes());
     ckpt.add("theta", &theta);
     if let Err(e) = std::fs::create_dir_all(dir).map_err(anyhow::Error::from).and_then(|_| ckpt.save(&path)) {
-        eprintln!("warning: could not persist pretrain cache `{}`: {e:#}", path.display());
+        crate::obs::log::warn(&format!(
+            "could not persist pretrain cache `{}`: {e:#}",
+            path.display()
+        ));
     }
     theta
 }

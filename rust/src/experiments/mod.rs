@@ -34,6 +34,11 @@ pub struct ExpOpts {
     /// the residual CNN by default, with the MLP kept as the cheap
     /// fallback/cross-check.
     pub model: crate::config::ModelKind,
+    /// Flight-recorder Chrome trace output path (empty = tracing off).
+    pub trace_out: String,
+    /// Flight-recorder JSONL metrics journal path (empty = off); a
+    /// Prometheus text dump lands at `<path>.prom` alongside it.
+    pub metrics_out: String,
 }
 
 impl Default for ExpOpts {
@@ -43,6 +48,8 @@ impl Default for ExpOpts {
             fast: false,
             artifacts_dir: crate::runtime::hlo_grad::default_artifacts_dir(),
             model: crate::config::ModelKind::Conv,
+            trace_out: String::new(),
+            metrics_out: String::new(),
         }
     }
 }
@@ -58,8 +65,29 @@ impl ExpOpts {
     }
 }
 
-/// Registry of experiment ids -> runner, used by the CLI.
+/// Registry of experiment ids -> runner, used by the CLI. When the opts
+/// ask for trace/metrics output, the whole experiment (or `all` sweep)
+/// runs under one flight recorder, exported on the way out.
 pub fn run(id: &str, opts: &ExpOpts) -> anyhow::Result<()> {
+    let tracing = !opts.trace_out.is_empty() || !opts.metrics_out.is_empty();
+    if tracing && crate::obs::installed().is_none() {
+        crate::obs::install(crate::obs::RecorderConfig::default());
+    }
+    let result = run_inner(id, opts);
+    if tracing {
+        if let Some(rec) = crate::obs::uninstall() {
+            let trace =
+                (!opts.trace_out.is_empty()).then(|| std::path::Path::new(opts.trace_out.as_str()));
+            let metrics = (!opts.metrics_out.is_empty())
+                .then(|| std::path::Path::new(opts.metrics_out.as_str()));
+            let dash = crate::obs::export::write_outputs(rec, trace, metrics)?;
+            print!("{dash}");
+        }
+    }
+    result
+}
+
+fn run_inner(id: &str, opts: &ExpOpts) -> anyhow::Result<()> {
     match id {
         "fig1" => fig1::run(opts),
         "fig3" => fig3::run(opts),
@@ -76,7 +104,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> anyhow::Result<()> {
         "all" => {
             for id in ALL {
                 println!("\n=== experiment {id} ===");
-                run(id, opts)?;
+                run_inner(id, opts)?;
             }
             Ok(())
         }

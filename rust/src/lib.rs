@@ -40,6 +40,7 @@ pub mod experiments;
 pub mod grad;
 pub mod metrics;
 pub mod models;
+pub mod obs;
 pub mod optim;
 pub mod rng;
 pub mod runtime;

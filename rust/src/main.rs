@@ -50,7 +50,14 @@ const USAGE: &str = "usage:
       simulated-cluster run: logical workers over lanes (`--set lanes=N`,
       `--set staleness=W`) with seeded fault injection and survivor
       continuation; snapshot/resume/crash flags apply here too
-  regtopk info [--artifacts DIR]";
+  regtopk info [--artifacts DIR]
+
+  observability (train and exp): [--trace-out FILE] [--metrics-out FILE]
+      installs the flight recorder for the run (training outputs stay
+      bitwise identical), then writes a Perfetto-loadable Chrome trace
+      (--trace-out), a JSONL round journal plus `<FILE>.prom` Prometheus
+      dump (--metrics-out), and prints the span dashboard; also settable
+      via `--set trace_out=...` / `--set metrics_out=...`";
 
 fn cmd_exp(args: &Args) -> anyhow::Result<()> {
     let id = args
@@ -68,6 +75,12 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
     if let Some(model) = args.opt("model") {
         opts.model =
             regtopk::config::ModelKind::parse(model).map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    if let Some(path) = args.opt("trace-out") {
+        opts.trace_out = path.to_string();
+    }
+    if let Some(path) = args.opt("metrics-out") {
+        opts.metrics_out = path.to_string();
     }
     opts.fast = args.flag("fast");
     std::fs::create_dir_all(&opts.out_dir)?;
@@ -93,6 +106,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     if let Some(round) = args.opt_parse::<usize>("crash-at").map_err(|e| anyhow::anyhow!("{e}"))? {
         cfg.crash_at = round;
     }
+    if let Some(path) = args.opt("trace-out") {
+        cfg.trace_out = path.to_string();
+    }
+    if let Some(path) = args.opt("metrics-out") {
+        cfg.metrics_out = path.to_string();
+    }
     cfg.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
     println!(
         "training: {} workers={} J={} S={} lr={} iters={}",
@@ -107,7 +126,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         return cmd_train_cluster(args, &cfg);
     }
     let opts = RunOpts { threaded: args.flag("threaded") };
-    let report = run_linreg(&cfg, &opts)?;
+    let report = with_recorder(&cfg, || run_linreg(&cfg, &opts))?;
     if let Some(path) = args.opt("curve-out") {
         write_curve(path, &report.gap_curve)?;
     }
@@ -156,7 +175,7 @@ fn cmd_train_cluster(args: &Args, cfg: &TrainConfig) -> anyhow::Result<()> {
         dim: cfg.dim,
         ..Default::default()
     };
-    let report = run_linreg_cluster(cfg, &gen, &plan, &copts)?;
+    let report = with_recorder(cfg, || run_linreg_cluster(cfg, &gen, &plan, &copts))?;
     if let Some(path) = args.opt("curve-out") {
         write_curve(path, &report.gap_curve)?;
     }
@@ -179,6 +198,35 @@ fn cmd_train_cluster(args: &Args, cfg: &TrainConfig) -> anyhow::Result<()> {
         r.merged_stale, r.discarded_stale, r.empty_rounds
     );
     Ok(())
+}
+
+/// Run `f` under the flight recorder when the config asks for trace or
+/// metrics output, then export and print the span dashboard. Exporting
+/// happens even when the run errored — a partial trace of a crashed run
+/// is exactly when you want the flight recorder.
+fn with_recorder<T>(cfg: &TrainConfig, f: impl FnOnce() -> anyhow::Result<T>) -> anyhow::Result<T> {
+    let tracing = !cfg.trace_out.is_empty() || !cfg.metrics_out.is_empty();
+    if tracing {
+        regtopk::obs::install(regtopk::obs::RecorderConfig::default());
+    }
+    let result = f();
+    if tracing {
+        if let Some(rec) = regtopk::obs::uninstall() {
+            let trace =
+                (!cfg.trace_out.is_empty()).then(|| std::path::Path::new(cfg.trace_out.as_str()));
+            let metrics = (!cfg.metrics_out.is_empty())
+                .then(|| std::path::Path::new(cfg.metrics_out.as_str()));
+            let dash = regtopk::obs::export::write_outputs(rec, trace, metrics)?;
+            print!("{dash}");
+            if !cfg.trace_out.is_empty() {
+                println!("wrote trace {}", cfg.trace_out);
+            }
+            if !cfg.metrics_out.is_empty() {
+                println!("wrote metrics {} (+ .prom)", cfg.metrics_out);
+            }
+        }
+    }
+    result
 }
 
 /// Gap curve as CSV. `{:e}` prints the shortest round-trippable form, so

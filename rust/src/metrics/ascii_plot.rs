@@ -43,18 +43,29 @@ impl AsciiPlot {
 
     /// Render to a string.
     pub fn render(&self) -> String {
-        let pts: Vec<(f64, f64, char)> = self
-            .series
-            .iter()
-            .flat_map(|(m, s)| {
-                s.points
-                    .iter()
-                    .filter_map(|&(x, y)| self.transform(y).map(|ty| (x as f64, ty, *m)))
-                    .collect::<Vec<_>>()
-            })
-            .collect();
+        // NaN/inf must not reach the min/max range fold below: NaN poisons
+        // the axis bounds and an infinite range buckets every point to one
+        // edge row as spurious marks. Skip them up front and say so.
+        let mut skipped = 0usize;
+        let mut pts: Vec<(f64, f64, char)> = Vec::new();
+        for (m, s) in &self.series {
+            for &(x, y) in &s.points {
+                if !y.is_finite() {
+                    skipped += 1;
+                    continue;
+                }
+                if let Some(ty) = self.transform(y) {
+                    pts.push((x as f64, ty, *m));
+                }
+            }
+        }
+        let skip_note = if skipped > 0 {
+            format!("  (skipped {skipped} non-finite point(s))\n")
+        } else {
+            String::new()
+        };
         if pts.is_empty() {
-            return format!("{} (no data)\n", self.title);
+            return format!("{} (no data)\n{skip_note}", self.title);
         }
         let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
         let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
@@ -108,6 +119,7 @@ impl AsciiPlot {
         let legend: Vec<String> =
             self.series.iter().map(|(m, s)| format!("{m}={}", s.name)).collect();
         out.push_str(&format!("  legend: {}\n", legend.join("  ")));
+        out.push_str(&skip_note);
         out
     }
 }
@@ -149,6 +161,40 @@ mod tests {
     fn empty_plot_does_not_panic() {
         let p = AsciiPlot::new("empty");
         assert!(p.render().contains("no data"));
+    }
+
+    #[test]
+    fn non_finite_points_are_skipped_and_annotated() {
+        let mut p = AsciiPlot::new("nonfinite");
+        p.add(
+            'o',
+            &mk_series(
+                "gap",
+                &[(0, 1.0), (1, f64::NAN), (2, f64::INFINITY), (3, f64::NEG_INFINITY), (4, 2.0)],
+            ),
+        );
+        let r = p.render();
+        assert!(r.contains("skipped 3 non-finite point(s)"), "missing annotation: {r}");
+        // The finite points still plot, and the y-range stays finite: the
+        // row-label column must not contain NaN/inf renderings.
+        assert!(r.contains('o'));
+        assert!(!r.contains("NaN") && !r.contains("inf"), "axis poisoned: {r}");
+    }
+
+    #[test]
+    fn all_non_finite_renders_no_data_with_annotation() {
+        let mut p = AsciiPlot::new("allnan");
+        p.add('x', &mk_series("g", &[(0, f64::NAN), (1, f64::INFINITY)]));
+        let r = p.render();
+        assert!(r.contains("no data"));
+        assert!(r.contains("skipped 2 non-finite point(s)"));
+    }
+
+    #[test]
+    fn finite_plots_carry_no_skip_annotation() {
+        let mut p = AsciiPlot::new("clean");
+        p.add('o', &mk_series("g", &[(0, 1.0), (1, 2.0)]));
+        assert!(!p.render().contains("skipped"));
     }
 
     #[test]

@@ -1,0 +1,101 @@
+//! The crate's single blessed monotonic-time choke point.
+//!
+//! Every wall-clock read in the repo flows through this module: the span
+//! recorder ([`super::record`]), the bench harness ([`crate::bench`]), and
+//! the experiment/example timing probes. `cargo xtask verify` enforces the
+//! funnel — `Instant::now` / `SystemTime::now` tokens anywhere else in the
+//! tree (outside `#[cfg(test)]` regions and the test/bench tiers) fail the
+//! build. Centralizing time has two payoffs:
+//!
+//! 1. **Zero-perturbation tracing.** Timestamps exist only as observability
+//!    *outputs* (trace files, bench reports). No algorithmic path can read
+//!    the clock, so training results are bitwise identical with the
+//!    recorder on or off, and experiment CSVs stay deterministic.
+//! 2. **One timebase.** All readings are nanoseconds on a single process
+//!    epoch (first clock use), so spans recorded on different threads are
+//!    directly comparable and Chrome-trace timestamps need no per-thread
+//!    offset reconciliation.
+
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// The process epoch: fixed at the first clock read, shared by every
+/// thread. `OnceLock` makes the race at first use benign (one winner, no
+/// allocation).
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Monotonic nanoseconds since the process epoch. Never goes backwards;
+/// allocation-free after the first call.
+#[inline]
+pub fn now_ns() -> u64 {
+    // `Instant` is monotonic, so `elapsed` from a fixed epoch is too. The
+    // u128→u64 cast is exact for ~584 years of process uptime.
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// A started stopwatch — the replacement for the `let t0 = Instant::now();
+/// .. t0.elapsed()` idiom everywhere outside this module.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    t0: u64,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    #[inline]
+    pub fn start() -> Self {
+        Stopwatch { t0: now_ns() }
+    }
+
+    /// Nanoseconds since `start` (saturating, so a same-tick read is 0).
+    #[inline]
+    pub fn elapsed_ns(&self) -> u64 {
+        now_ns().saturating_sub(self.t0)
+    }
+
+    /// Elapsed time as a `Duration`.
+    #[inline]
+    pub fn elapsed(&self) -> Duration {
+        Duration::from_nanos(self.elapsed_ns())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn now_is_monotone() {
+        let mut prev = now_ns();
+        for _ in 0..1000 {
+            let t = now_ns();
+            assert!(t >= prev, "clock went backwards: {t} < {prev}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn stopwatch_measures_real_time() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(5));
+        let ns = sw.elapsed_ns();
+        assert!(ns >= 4_000_000, "5 ms sleep measured as {ns} ns");
+        // A later Duration reading can only be at or past the earlier one.
+        assert!(sw.elapsed() >= Duration::from_nanos(ns));
+    }
+
+    #[test]
+    fn epoch_is_shared_across_threads() {
+        // Readings taken on different threads must live on one timebase:
+        // a reading taken strictly later (joined-before ordering) must not
+        // be smaller.
+        let t0 = now_ns();
+        let t1 = crate::tensor::pool::spawn_worker_thread("clock-test".into(), now_ns)
+            .join()
+            .unwrap();
+        assert!(t1 >= t0);
+    }
+}

@@ -1,0 +1,423 @@
+//! Trace and metrics exporters over a drained [`Recorder`].
+//!
+//! Four formats, all derived from the same snapshot:
+//!
+//! * **Chrome trace-event JSON** ([`chrome_trace`]) — loadable in Perfetto
+//!   (or `chrome://tracing`): `pid` is the executor, `tid` is the recorder
+//!   slot of the named thread that produced the span. Built on
+//!   [`crate::metrics::json::Json`], so the output round-trips through the
+//!   in-repo parser by construction.
+//! * **JSONL metrics journal** ([`metrics_jsonl`]) — one JSON object per
+//!   [`RoundReport`] per line, for downstream scripting.
+//! * **Prometheus-style text** ([`prometheus_text`]) — cumulative span /
+//!   counter / wire totals as scrape-format lines.
+//! * **Terminal dashboard** ([`dashboard`]) — a per-round wall-clock plot
+//!   on [`AsciiPlot`] plus a span-aggregate table.
+
+use super::record::{CounterKind, Executor, Recorder, RoundReport, SpanKind, TraceEvent};
+use crate::metrics::json::Json;
+use crate::metrics::{render_table, AsciiPlot, Series};
+use std::io::Write as _;
+use std::path::Path;
+
+/// Microseconds (Chrome-trace time unit) from an epoch-nanosecond stamp.
+fn us(ns: u64) -> Json {
+    Json::Num(ns as f64 / 1000.0)
+}
+
+/// Build the Chrome trace-event document for everything the recorder has
+/// retained (flushing still-buffered events first).
+pub fn chrome_trace(rec: &Recorder) -> Json {
+    let (mut events, _) = rec.snapshot();
+    // Span events are recorded at *end* time, so raw drain order is not
+    // start-ordered (nested spans invert it). Perfetto tolerates disorder,
+    // but a sorted stream is self-checking — the exporter tests pin
+    // per-tid monotonicity.
+    events.sort_by(|a, b| (a.tid, a.ev.t0).cmp(&(b.tid, b.ev.t0)));
+
+    let mut out: Vec<Json> = Vec::new();
+    // Metadata: a process_name per executor pid and a thread_name per
+    // (pid, tid) observed in the stream.
+    let mut seen_pids: Vec<u8> = Vec::new();
+    let mut seen_tids: Vec<(u8, u16)> = Vec::new();
+    for te in &events {
+        if !seen_pids.contains(&te.ev.pid) {
+            seen_pids.push(te.ev.pid);
+        }
+        if !seen_tids.contains(&(te.ev.pid, te.tid)) {
+            seen_tids.push((te.ev.pid, te.tid));
+        }
+    }
+    seen_pids.sort_unstable();
+    seen_tids.sort_unstable();
+    for pid in &seen_pids {
+        out.push(Json::obj(vec![
+            ("ph", Json::Str("M".into())),
+            ("name", Json::Str("process_name".into())),
+            ("pid", Json::Num(*pid as f64)),
+            ("tid", Json::Num(0.0)),
+            ("args", Json::obj(vec![("name", Json::Str(Executor::from_u8(*pid).name().into()))])),
+        ]));
+    }
+    let slots = rec.slots();
+    for (pid, tid) in &seen_tids {
+        let name = slots.get(*tid as usize).map(|s| s.name()).unwrap_or_default();
+        out.push(Json::obj(vec![
+            ("ph", Json::Str("M".into())),
+            ("name", Json::Str("thread_name".into())),
+            ("pid", Json::Num(*pid as f64)),
+            ("tid", Json::Num(*tid as f64)),
+            ("args", Json::obj(vec![("name", Json::Str(name))])),
+        ]));
+    }
+    for TraceEvent { tid, ev } in &events {
+        if ev.counter {
+            let kind = CounterKind::all()[(ev.kind as usize).min(CounterKind::all().len() - 1)];
+            out.push(Json::obj(vec![
+                ("ph", Json::Str("C".into())),
+                ("name", Json::Str(kind.name().into())),
+                ("cat", Json::Str("obs".into())),
+                ("pid", Json::Num(ev.pid as f64)),
+                ("tid", Json::Num(*tid as f64)),
+                ("ts", us(ev.t0)),
+                ("args", Json::obj(vec![("value", Json::Num(ev.value as f64))])),
+            ]));
+        } else {
+            let kind = SpanKind::all()[(ev.kind as usize).min(SpanKind::all().len() - 1)];
+            out.push(Json::obj(vec![
+                ("ph", Json::Str("X".into())),
+                ("name", Json::Str(kind.name().into())),
+                ("cat", Json::Str("obs".into())),
+                ("pid", Json::Num(ev.pid as f64)),
+                ("tid", Json::Num(*tid as f64)),
+                ("ts", us(ev.t0)),
+                ("dur", us(ev.t1.saturating_sub(ev.t0))),
+                ("args", Json::obj(vec![("arg", Json::Num(ev.arg as f64))])),
+            ]));
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+        ("otherData", Json::obj(vec![
+            ("producer", Json::Str("regtopk-obs".into())),
+            ("dropped_events", Json::Num(rec.dropped_events() as f64)),
+        ])),
+    ])
+}
+
+/// One JSONL line per round report. Zero-valued spans/counters are elided
+/// so steady-state lines stay short.
+pub fn metrics_jsonl(reports: &[RoundReport]) -> String {
+    let mut out = String::new();
+    for rep in reports {
+        let mut spans: Vec<(&str, Json)> = Vec::new();
+        for kind in SpanKind::all() {
+            let st = rep.spans[kind as usize];
+            if st.count == 0 {
+                continue;
+            }
+            spans.push((
+                kind.name(),
+                Json::obj(vec![
+                    ("count", Json::Num(st.count as f64)),
+                    ("total_ns", Json::Num(st.total_ns as f64)),
+                    ("max_ns", Json::Num(st.max_ns as f64)),
+                ]),
+            ));
+        }
+        let mut counters: Vec<(&str, Json)> = Vec::new();
+        for kind in CounterKind::all() {
+            let v = rep.counters[kind as usize];
+            if v != 0 {
+                counters.push((kind.name(), Json::Num(v as f64)));
+            }
+        }
+        let line = Json::obj(vec![
+            ("round", Json::Num(rep.round as f64)),
+            ("executor", Json::Str(Executor::from_u8(rep.executor).name().into())),
+            ("spans", Json::obj(spans)),
+            ("counters", Json::obj(counters)),
+            (
+                "comm",
+                Json::obj(vec![
+                    ("uplink_values", Json::Num(rep.comm.uplink_values as f64)),
+                    ("uplink_index_bits", Json::Num(rep.comm.uplink_index_bits as f64)),
+                    ("downlink_values", Json::Num(rep.comm.downlink_values as f64)),
+                    ("downlink_index_bits", Json::Num(rep.comm.downlink_index_bits as f64)),
+                    ("total_bytes", Json::Num(rep.comm.total_bytes() as f64)),
+                ]),
+            ),
+            ("dropped_events", Json::Num(rep.dropped_events as f64)),
+        ]);
+        out.push_str(&line.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Prometheus text-format dump of cumulative totals across all round
+/// reports (plus the recorder-wide drop counter).
+pub fn prometheus_text(rec: &Recorder) -> String {
+    let (_, reports) = rec.snapshot();
+    let mut spans = [(0u64, 0u64); super::record::SPAN_KINDS];
+    let mut counters = [0u64; super::record::COUNTER_KINDS];
+    let mut comm = crate::metrics::CommStats::default();
+    for rep in &reports {
+        for kind in SpanKind::all() {
+            let st = rep.spans[kind as usize];
+            spans[kind as usize].0 += st.count;
+            spans[kind as usize].1 += st.total_ns;
+        }
+        for kind in CounterKind::all() {
+            counters[kind as usize] += rep.counters[kind as usize];
+        }
+        comm.add(&rep.comm);
+    }
+    let mut out = String::new();
+    out.push_str("# TYPE regtopk_span_count counter\n");
+    out.push_str("# TYPE regtopk_span_total_ns counter\n");
+    for kind in SpanKind::all() {
+        let (count, total) = spans[kind as usize];
+        out.push_str(&format!("regtopk_span_count{{kind=\"{}\"}} {count}\n", kind.name()));
+        out.push_str(&format!("regtopk_span_total_ns{{kind=\"{}\"}} {total}\n", kind.name()));
+    }
+    out.push_str("# TYPE regtopk_fault_events counter\n");
+    for kind in CounterKind::all() {
+        out.push_str(&format!(
+            "regtopk_fault_events{{kind=\"{}\"}} {}\n",
+            kind.name(),
+            counters[kind as usize]
+        ));
+    }
+    out.push_str("# TYPE regtopk_comm counter\n");
+    out.push_str(&format!("regtopk_comm_uplink_values {}\n", comm.uplink_values));
+    out.push_str(&format!("regtopk_comm_uplink_index_bits {}\n", comm.uplink_index_bits));
+    out.push_str(&format!("regtopk_comm_downlink_values {}\n", comm.downlink_values));
+    out.push_str(&format!("regtopk_comm_downlink_index_bits {}\n", comm.downlink_index_bits));
+    out.push_str(&format!("regtopk_comm_total_bytes {}\n", comm.total_bytes()));
+    out.push_str("# TYPE regtopk_rounds_reported counter\n");
+    out.push_str(&format!("regtopk_rounds_reported {}\n", reports.len()));
+    out.push_str("# TYPE regtopk_dropped_events counter\n");
+    out.push_str(&format!("regtopk_dropped_events {}\n", rec.dropped_events()));
+    out
+}
+
+/// Terminal dashboard: per-round wall-clock plot + aggregate span table.
+pub fn dashboard(rec: &Recorder) -> String {
+    let (_, reports) = rec.snapshot();
+    if reports.is_empty() {
+        return "obs: no round reports recorded\n".to_string();
+    }
+    let mut round_ms = Series::new("round_ms");
+    for rep in &reports {
+        let ns = rep.spans[SpanKind::Round as usize].total_ns;
+        round_ms.push(rep.round as usize, ns as f64 / 1e6);
+    }
+    let mut plot = AsciiPlot::new("round wall-clock (ms)");
+    plot.add('*', &round_ms);
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for kind in SpanKind::all() {
+        let (mut count, mut total, mut max) = (0u64, 0u64, 0u64);
+        for rep in &reports {
+            let st = rep.spans[kind as usize];
+            count += st.count;
+            total += st.total_ns;
+            max = max.max(st.max_ns);
+        }
+        if count == 0 {
+            continue;
+        }
+        rows.push(vec![
+            kind.name().to_string(),
+            count.to_string(),
+            format!("{:.3}", total as f64 / 1e6),
+            format!("{:.1}", total as f64 / count as f64 / 1e3),
+            format!("{:.1}", max as f64 / 1e3),
+        ]);
+    }
+    let mut out = plot.render();
+    out.push('\n');
+    out.push_str(&render_table(
+        &["span", "count", "total_ms", "mean_us", "max_us"],
+        &rows,
+    ));
+    out.push_str(&format!("dropped_events: {}\n", rec.dropped_events()));
+    out
+}
+
+/// Write `text` to `path`, creating parent directories.
+fn write_file(path: &Path, text: &str) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(text.as_bytes())
+}
+
+/// CLI-facing export: Chrome trace to `trace_out` (if set), JSONL journal
+/// to `metrics_out` plus a Prometheus sibling at `<metrics_out>.prom` (if
+/// set). Returns the dashboard string for the caller to print.
+pub fn write_outputs(
+    rec: &Recorder,
+    trace_out: Option<&Path>,
+    metrics_out: Option<&Path>,
+) -> std::io::Result<String> {
+    if let Some(path) = trace_out {
+        write_file(path, &chrome_trace(rec).to_string())?;
+    }
+    if let Some(path) = metrics_out {
+        let (_, reports) = rec.snapshot();
+        write_file(path, &metrics_jsonl(&reports))?;
+        let mut prom = path.as_os_str().to_owned();
+        prom.push(".prom");
+        write_file(Path::new(&prom), &prometheus_text(rec))?;
+    }
+    Ok(dashboard(rec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::record::{Event, RecorderConfig, SpanStat, COUNTER_KINDS, SPAN_KINDS};
+    use super::*;
+
+    fn test_recorder() -> &'static Recorder {
+        // Leak so slot claiming (which demands 'static) works in tests.
+        Box::leak(Box::new(Recorder::new(RecorderConfig {
+            per_thread_capacity: 64,
+            max_threads: 2,
+            trace_capacity: 64,
+            round_capacity: 8,
+        })))
+    }
+
+    fn push_span(rec: &Recorder, tid: usize, kind: SpanKind, t0: u64, t1: u64) {
+        rec.test_slot(tid).push_for_test(Event {
+            kind: kind as u8,
+            counter: false,
+            pid: Executor::Threaded as u8,
+            arg: 7,
+            t0,
+            t1,
+            value: 0,
+        });
+    }
+
+    #[test]
+    fn chrome_trace_roundtrips_and_is_sorted_per_tid() {
+        let rec = test_recorder();
+        rec.test_slot(0).set_name_for_test("regtopk-w0");
+        rec.test_slot(1).set_name_for_test("regtopk-w1");
+        // Nested spans drain end-time-ordered (inner first); the exporter
+        // must still emit start-ordered streams per tid.
+        push_span(rec, 0, SpanKind::GemmKernel, 200, 300);
+        push_span(rec, 0, SpanKind::PoolFanout, 100, 400);
+        push_span(rec, 1, SpanKind::MergeShard, 50, 90);
+        let doc = chrome_trace(rec);
+        let text = doc.to_string();
+        let back = Json::parse(&text).expect("chrome trace parses with the in-repo parser");
+        let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+        let mut last_ts: Vec<(f64, f64)> = Vec::new(); // (tid, ts)
+        let mut names = Vec::new();
+        for e in events {
+            match e.get("ph").unwrap().as_str().unwrap() {
+                "M" => {
+                    if e.get("name").unwrap().as_str() == Some("thread_name") {
+                        names.push(
+                            e.get("args").unwrap().get("name").unwrap().as_str().unwrap().to_string(),
+                        );
+                    }
+                }
+                "X" => {
+                    let tid = e.get("tid").unwrap().as_f64().unwrap();
+                    let ts = e.get("ts").unwrap().as_f64().unwrap();
+                    if let Some(&(ptid, pts)) = last_ts.iter().rev().find(|(t, _)| *t == tid) {
+                        assert!(
+                            ts >= pts,
+                            "tid {ptid} timestamps not monotone: {ts} after {pts}"
+                        );
+                    }
+                    last_ts.push((tid, ts));
+                }
+                other => panic!("unexpected ph {other}"),
+            }
+        }
+        assert_eq!(last_ts.len(), 3);
+        assert!(names.iter().all(|n| n.starts_with("regtopk-")), "thread names: {names:?}");
+        // pid metadata names the executor.
+        assert!(text.contains("\"threaded\""));
+    }
+
+    #[test]
+    fn jsonl_one_parseable_line_per_report() {
+        let mut rep = RoundReport { round: 3, executor: Executor::Cluster as u8, ..Default::default() };
+        rep.spans[SpanKind::Round as usize] = SpanStat { count: 1, total_ns: 5000, max_ns: 5000 };
+        rep.counters[CounterKind::StragglerMerged as usize] = 2;
+        rep.comm.uplink_values = 11;
+        let text = metrics_jsonl(&[rep, RoundReport::default()]);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let j = Json::parse(lines[0]).unwrap();
+        assert_eq!(j.get("round").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("executor").unwrap().as_str(), Some("cluster"));
+        assert_eq!(
+            j.get("spans").unwrap().get("round").unwrap().get("count").unwrap().as_usize(),
+            Some(1)
+        );
+        assert_eq!(j.get("counters").unwrap().get("straggler_merged").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("comm").unwrap().get("uplink_values").unwrap().as_usize(), Some(11));
+        // Zero-valued spans are elided.
+        assert!(j.get("spans").unwrap().get("gemm_kernel").is_none());
+    }
+
+    #[test]
+    fn prometheus_text_has_span_and_drop_lines() {
+        let rec = test_recorder();
+        push_span(rec, 0, SpanKind::Round, 0, 1000);
+        rec.round_boundary(0, Default::default(), [0; COUNTER_KINDS]);
+        let text = prometheus_text(rec);
+        assert!(text.contains("regtopk_span_count{kind=\"round\"} 1\n"));
+        assert!(text.contains("regtopk_span_total_ns{kind=\"round\"} 1000\n"));
+        assert!(text.contains("regtopk_rounds_reported 1\n"));
+        assert!(text.contains("regtopk_dropped_events 0\n"));
+        // Every kind appears even at zero (stable scrape schema).
+        for kind in SpanKind::all() {
+            assert!(text.contains(&format!("kind=\"{}\"", kind.name())));
+        }
+        assert_eq!(SPAN_KINDS, SpanKind::all().len());
+    }
+
+    #[test]
+    fn dashboard_renders_plot_and_table() {
+        let rec = test_recorder();
+        for round in 0..4u64 {
+            push_span(rec, 0, SpanKind::Round, round * 1000, round * 1000 + 500);
+            rec.round_boundary(round, Default::default(), [0; COUNTER_KINDS]);
+        }
+        let dash = dashboard(rec);
+        assert!(dash.contains("round wall-clock (ms)"));
+        assert!(dash.contains("| round"));
+        assert!(dash.contains("dropped_events: 0"));
+    }
+
+    #[test]
+    fn write_outputs_emits_all_files() {
+        let rec = test_recorder();
+        push_span(rec, 0, SpanKind::Round, 0, 100);
+        rec.round_boundary(0, Default::default(), [0; COUNTER_KINDS]);
+        let dir = std::env::temp_dir().join("regtopk_obs_export_test");
+        let trace = dir.join("trace.json");
+        let metrics = dir.join("metrics.jsonl");
+        let dash = write_outputs(rec, Some(&trace), Some(&metrics)).unwrap();
+        assert!(dash.contains("round"));
+        let trace_text = std::fs::read_to_string(&trace).unwrap();
+        assert!(Json::parse(&trace_text).is_ok());
+        assert!(std::fs::read_to_string(&metrics).unwrap().lines().count() >= 1);
+        let prom = std::fs::read_to_string(dir.join("metrics.jsonl.prom")).unwrap();
+        assert!(prom.contains("regtopk_span_count"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

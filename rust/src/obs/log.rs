@@ -1,0 +1,143 @@
+//! Leveled logging choke point. The crate's only sanctioned route to
+//! stderr diagnostics: `cargo xtask verify` bans the `eprintln` token
+//! everywhere else in library code (rule `log-choke`), so warnings like
+//! the corrupt-snapshot fallback cannot scatter into ad-hoc prints that
+//! tests can't observe.
+//!
+//! The sink is process-global: stderr by default, or an in-memory capture
+//! installed by [`with_capture`] so tests can assert on emitted warnings
+//! without scraping the child process's stderr.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Log severity. Ordered so sinks/tests can filter with `>=`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Info,
+    Warn,
+    Error,
+}
+
+impl Level {
+    /// The prefix printed on stderr (and recorded in captures).
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Info => "info",
+            Level::Warn => "warning",
+            Level::Error => "error",
+        }
+    }
+}
+
+enum Sink {
+    Stderr,
+    Capture(Vec<(Level, String)>),
+}
+
+fn sink() -> &'static Mutex<Sink> {
+    static SINK: OnceLock<Mutex<Sink>> = OnceLock::new();
+    SINK.get_or_init(|| Mutex::new(Sink::Stderr))
+}
+
+/// Serializes [`with_capture`] callers so concurrent tests cannot steal
+/// each other's messages.
+fn capture_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    match LOCK.get_or_init(|| Mutex::new(())).lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Emit one message at `level` through the global sink.
+pub fn emit(level: Level, msg: &str) {
+    let mut s = match sink().lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    match &mut *s {
+        Sink::Stderr => {
+            eprintln!("{}: {msg}", level.tag());
+        }
+        Sink::Capture(buf) => buf.push((level, msg.to_string())),
+    }
+}
+
+/// [`emit`] at [`Level::Info`].
+pub fn info(msg: &str) {
+    emit(Level::Info, msg);
+}
+
+/// [`emit`] at [`Level::Warn`].
+pub fn warn(msg: &str) {
+    emit(Level::Warn, msg);
+}
+
+/// [`emit`] at [`Level::Error`].
+pub fn error(msg: &str) {
+    emit(Level::Error, msg);
+}
+
+/// Run `f` with the global sink redirected to an in-memory buffer and
+/// return `(f(), captured messages)`. Captures are exclusive: concurrent
+/// callers serialize on an internal lock, and the stderr sink is restored
+/// even if earlier captures poisoned it.
+pub fn with_capture<R>(f: impl FnOnce() -> R) -> (R, Vec<(Level, String)>) {
+    let _guard = capture_lock();
+    {
+        let mut s = match sink().lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        *s = Sink::Capture(Vec::new());
+    }
+    let out = f();
+    let mut s = match sink().lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    let captured = match std::mem::replace(&mut *s, Sink::Stderr) {
+        Sink::Capture(buf) => buf,
+        Sink::Stderr => Vec::new(),
+    };
+    (out, captured)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capture_collects_leveled_messages_in_order() {
+        let ((), msgs) = with_capture(|| {
+            info("starting");
+            warn("snapshot CRC mismatch");
+            error("unrecoverable");
+        });
+        assert_eq!(
+            msgs,
+            vec![
+                (Level::Info, "starting".to_string()),
+                (Level::Warn, "snapshot CRC mismatch".to_string()),
+                (Level::Error, "unrecoverable".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn capture_is_scoped() {
+        let ((), first) = with_capture(|| warn("inside"));
+        assert_eq!(first.len(), 1);
+        // After the capture ends the sink is stderr again; a fresh capture
+        // must not see earlier messages.
+        let ((), second) = with_capture(|| {});
+        assert!(second.is_empty());
+    }
+
+    #[test]
+    fn levels_are_ordered() {
+        assert!(Level::Error > Level::Warn);
+        assert!(Level::Warn > Level::Info);
+        assert_eq!(Level::Warn.tag(), "warning");
+    }
+}

@@ -1,0 +1,30 @@
+//! Flight-recorder observability: zero-perturbation span tracing, round
+//! telemetry, and trace exporters.
+//!
+//! Layering:
+//!
+//! * [`clock`] — the crate's single blessed monotonic-time choke point
+//!   (xtask-enforced: `Instant::now` tokens outside it fail `verify`).
+//! * [`record`] — per-thread fixed-capacity span/counter rings, RAII span
+//!   guards, recorder install/uninstall, and the round-boundary drain
+//!   into [`record::RoundReport`]s.
+//! * [`export`] — Chrome trace-event JSON (Perfetto), JSONL metrics
+//!   journal, Prometheus text dump, terminal dashboard.
+//! * [`log`] — the leveled stderr/capture sink (xtask-enforced `eprintln`
+//!   choke point).
+//!
+//! The contract every hot path relies on: with no recorder installed,
+//! [`span`] is a single atomic load; with one installed, recording drops
+//! (and counts) rather than blocking or allocating, and nothing here is
+//! ever read back by training code — outputs stay bitwise identical with
+//! the recorder on or off.
+
+pub mod clock;
+pub mod export;
+pub mod log;
+pub mod record;
+
+pub use record::{
+    count, install, installed, round_boundary, set_executor, span, span_arg, uninstall,
+    CounterKind, Executor, Recorder, RecorderConfig, RoundReport, Span, SpanKind,
+};

@@ -81,7 +81,7 @@ impl Engine {
             );
             literals.push(literal_f32(buf, &spec.shape)?);
         }
-        let t0 = std::time::Instant::now();
+        let t0 = crate::obs::clock::Stopwatch::start();
         let exe = self.executable(name)?;
         let result = exe
             .execute::<Literal>(&literals)
@@ -89,7 +89,7 @@ impl Engine {
         let tuple = result[0][0]
             .to_literal_sync()
             .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
-        self.exec_nanos += t0.elapsed().as_nanos() as u64;
+        self.exec_nanos += t0.elapsed_ns();
         self.exec_calls += 1;
         let parts = tuple
             .to_tuple()

@@ -189,6 +189,7 @@ fn try_sampled_select(
 /// `scratch` is an index buffer reused across calls to avoid per-iteration
 /// allocation in the training loop; it is resized as needed.
 pub fn top_k_indices_into(scores: &[f32], k: usize, scratch: &mut Vec<u32>, out: &mut Vec<u32>) {
+    let _span = crate::obs::span_arg(crate::obs::SpanKind::SparsifySelect, k as u32);
     out.clear();
     let n = scores.len();
     if k == 0 || n == 0 {

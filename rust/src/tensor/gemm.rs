@@ -404,6 +404,7 @@ pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]
 pub fn gemm_nn_from<S: NnPanelSource>(m: usize, k: usize, n: usize, src: &S, b: &[f32], c: &mut [f32]) {
     assert_eq!(b.len(), k * n, "B shape mismatch");
     assert_eq!(c.len(), m * n, "C shape mismatch");
+    let _span = crate::obs::span(crate::obs::SpanKind::GemmPanelSource);
     let threads = effective_threads(m, m * k * n + src.pack_work());
     nn_driver_src(active_kernel(), threads, m, k, n, src, b, c);
 }
@@ -447,6 +448,7 @@ fn nn_rows<S: NnPanelSource + ?Sized>(
     b: &[f32],
     block: &mut [f32],
 ) {
+    let _span = crate::obs::span_arg(crate::obs::SpanKind::GemmKernel, r0 as u32);
     for v in block.iter_mut() {
         *v = 0.0;
     }
@@ -474,9 +476,12 @@ fn nn_rows<S: NnPanelSource + ?Sized>(
             while k0 < k {
                 let kc = KC.min(k - k0);
                 let bp = &mut bpack[..kc * ncw];
-                for p in 0..kc {
-                    let brow = &b[(k0 + p) * n + j0..(k0 + p) * n + j0 + ncw];
-                    bp[p * ncw..(p + 1) * ncw].copy_from_slice(brow);
+                {
+                    let _pack = crate::obs::span_arg(crate::obs::SpanKind::GemmPack, j0 as u32);
+                    for p in 0..kc {
+                        let brow = &b[(k0 + p) * n + j0..(k0 + p) * n + j0 + ncw];
+                        bp[p * ncw..(p + 1) * ncw].copy_from_slice(brow);
+                    }
                 }
                 nn_tile(kernel, src, r0, k0, kc, bp, n, j0, ncw, block, &mut panel, &mut rowbuf);
                 k0 += kc;
@@ -576,6 +581,7 @@ pub fn gemm_tn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]
 pub fn gemm_tn_from<S: TnColSource>(m: usize, k: usize, n: usize, src: &S, b: &[f32], c: &mut [f32]) {
     assert_eq!(b.len(), k * n, "B shape mismatch");
     assert_eq!(c.len(), m * n, "C shape mismatch");
+    let _span = crate::obs::span(crate::obs::SpanKind::GemmPanelSource);
     let threads = effective_threads(m, m * k * n + src.pack_work());
     tn_driver_src(active_kernel(), threads, m, k, n, src, b, c);
 }
@@ -617,6 +623,7 @@ fn tn_rows<S: TnColSource + ?Sized>(
     b: &[f32],
     block: &mut [f32],
 ) {
+    let _span = crate::obs::span_arg(crate::obs::SpanKind::GemmKernel, i0 as u32);
     #[cfg(target_arch = "x86_64")]
     debug_assert_kernel_supported(kernel);
     TNCOL.with(|cell| {
@@ -695,6 +702,7 @@ fn nt_driver(kernel: Kernel, threads: usize, m: usize, k: usize, n: usize, a: &[
 /// One contiguous row block of `gemm_nt` (`a` starts at the block's first
 /// row; only its first `rows·k` entries are read).
 fn nt_rows(kernel: Kernel, k: usize, n: usize, a: &[f32], b: &[f32], block: &mut [f32]) {
+    let _span = crate::obs::span(crate::obs::SpanKind::GemmKernel);
     #[cfg(target_arch = "x86_64")]
     debug_assert_kernel_supported(kernel);
     let rows = block.len() / n;

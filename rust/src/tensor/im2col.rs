@@ -121,6 +121,7 @@ impl ConvShape {
 pub fn im2col(s: &ConvShape, n: usize, input: &[f32], cols: &mut [f32]) {
     assert_eq!(input.len(), s.in_len(n), "im2col input shape mismatch");
     assert_eq!(cols.len(), s.cols_len(n), "im2col cols shape mismatch");
+    let _span = crate::obs::span(crate::obs::SpanKind::Im2colGather);
     let cw = s.col_width();
     let kc = s.k * s.cin; // one ky-row of a patch
     let plane = s.h_in * s.w_in * s.cin;
@@ -346,6 +347,7 @@ impl TnColSource for ImplicitCols<'_> {
     /// (stride `stride·cin` along `ox`), zero where the window hangs over
     /// the padding border.
     fn fill_col(&self, i: usize, col: &mut [f32]) {
+        let _span = crate::obs::span_arg(crate::obs::SpanKind::Im2colGather, i as u32);
         let s = &self.s;
         let cin = s.cin;
         let (ky, rem) = (i / (s.k * cin), i % (s.k * cin));

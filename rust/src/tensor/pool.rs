@@ -121,6 +121,7 @@ impl ScopedPool {
     /// call). If a task panics, the panic is reported from this call after
     /// all other tasks finished; the pool stays usable.
     pub fn scope<'s>(&self, mut tasks: Vec<Box<dyn FnOnce() + Send + 's>>) {
+        let _span = crate::obs::span_arg(crate::obs::SpanKind::PoolFanout, tasks.len() as u32);
         let Some(last) = tasks.pop() else { return };
         if tasks.is_empty() || self.handles.is_empty() {
             // Nothing to offload (or nowhere to offload it): run inline.

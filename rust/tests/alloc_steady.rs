@@ -14,6 +14,10 @@
 //! the fan-out grains): the parallel merge/GEMM paths box their task
 //! closures by design, and that is a per-dispatch cost the grain
 //! thresholds already keep out of small steady-state rounds.
+//!
+//! The flight recorder is installed for the whole run: zero steady-state
+//! allocations must hold *with tracing on*, or "zero-perturbation
+//! observability" would be a fair-weather claim.
 
 use regtopk::config::TrainConfig;
 use regtopk::coordinator::{train_with_opts, RunOpts};
@@ -21,6 +25,7 @@ use regtopk::data::linreg::{LinRegDataset, LinRegGenConfig};
 use regtopk::grad::LinRegGrad;
 use regtopk::rng::Pcg64;
 use regtopk::sparsify::SparsifierKind;
+use regtopk::obs::{self, RecorderConfig};
 use regtopk::testing::alloc::{alloc_count, CountingAlloc};
 use std::sync::Arc;
 
@@ -35,6 +40,16 @@ const STEADY: usize = 8;
 
 #[test]
 fn threaded_executor_steady_state_rounds_do_not_allocate() {
+    // Run WITH the flight recorder installed: its pre-allocated rings and
+    // reserved trace/report stores are part of the zero-alloc contract —
+    // span pushes, slot claims, and round-boundary drains must all stay
+    // off the heap once warm.
+    let rec = obs::install(RecorderConfig {
+        per_thread_capacity: 4096,
+        max_threads: 8,
+        trace_capacity: 65536,
+        round_capacity: 1024,
+    });
     let gen = LinRegGenConfig {
         workers: WORKERS,
         dim: DIM,
@@ -76,4 +91,11 @@ fn threaded_executor_steady_state_rounds_do_not_allocate() {
             &counts[..ITERS - STEADY]
         );
     }
+    // The recorder really was live for those rounds, and recorded within
+    // its pre-allocated budget.
+    obs::uninstall();
+    assert!(rec.accepted_events() > 0, "recorder saw no events");
+    assert_eq!(rec.dropped_events(), 0, "sized buffers must not drop at this scale");
+    let (_, reports) = rec.snapshot();
+    assert_eq!(reports.len(), ITERS, "one RoundReport per training round");
 }

@@ -1,0 +1,232 @@
+//! Flight-recorder integration tests: the zero-perturbation contract and
+//! exporter validity on *real* training runs.
+//!
+//! The central claim of `obs` is that observability is free of
+//! side-effects on training: a run with the recorder installed produces
+//! bitwise-identical training outputs (θ bits, communication ledger,
+//! fault bookkeeping) to a run without it — across executors and
+//! sparsifier kinds, including a faulted cluster run. The recorder is a
+//! process-global, so the tests in this binary serialize on one mutex.
+
+use regtopk::config::TrainConfig;
+use regtopk::coordinator::cluster::{run_linreg_cluster, ClusterOpts};
+use regtopk::coordinator::fault::{FaultConfig, FaultPlan};
+use regtopk::coordinator::{run_linreg_on, RunOpts};
+use regtopk::data::linreg::LinRegGenConfig;
+use regtopk::metrics::json::Json;
+use regtopk::obs::{self, Recorder, RecorderConfig};
+use regtopk::sparsify::SparsifierKind;
+use std::sync::Mutex;
+
+/// Worker-side kinds spanning the selection families: plain magnitude
+/// top-k, the paper's regularized policy, and the dense baseline.
+const KINDS: [SparsifierKind; 3] =
+    [SparsifierKind::TopK, SparsifierKind::RegTopK { mu: 1.0, y: 1.0 }, SparsifierKind::Dense];
+
+/// One recorder exists per process; tests that install one take this.
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn serialized() -> std::sync::MutexGuard<'static, ()> {
+    OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn cfg_for(kind: SparsifierKind) -> (TrainConfig, LinRegGenConfig) {
+    let cfg = TrainConfig {
+        workers: 4,
+        dim: 32,
+        sparsity: 0.25,
+        sparsifier: kind,
+        lr: 0.01,
+        iters: 24,
+        seed: 11,
+        ..Default::default()
+    };
+    let gen = LinRegGenConfig {
+        workers: cfg.workers,
+        dim: cfg.dim,
+        points_per_worker: 40,
+        ..Default::default()
+    };
+    (cfg, gen)
+}
+
+/// Run `f` with a freshly installed recorder, uninstalling afterwards.
+fn recorded<R>(rcfg: RecorderConfig, f: impl FnOnce() -> R) -> (R, &'static Recorder) {
+    let rec = obs::install(rcfg);
+    let out = f();
+    obs::uninstall();
+    (out, rec)
+}
+
+fn bits(theta: &[f32]) -> Vec<u32> {
+    theta.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn sequential_training_is_bitwise_identical_with_recorder_on() {
+    let _g = serialized();
+    for kind in KINDS {
+        let (cfg, gen) = cfg_for(kind);
+        let base = run_linreg_on(&cfg, &gen, &RunOpts::default()).unwrap();
+        let (traced, rec) = recorded(RecorderConfig::default(), || {
+            run_linreg_on(&cfg, &gen, &RunOpts::default()).unwrap()
+        });
+        assert_eq!(bits(&base.result.theta), bits(&traced.result.theta), "{kind:?}: θ bits");
+        assert_eq!(base.result.comm, traced.result.comm, "{kind:?}: comm ledger");
+        assert_eq!(base.gap_curve, traced.gap_curve, "{kind:?}: gap curve");
+        assert!(rec.accepted_events() > 0, "{kind:?}: recorder saw nothing");
+    }
+}
+
+#[test]
+fn threaded_training_is_bitwise_identical_with_recorder_on() {
+    let _g = serialized();
+    for kind in KINDS {
+        let (cfg, gen) = cfg_for(kind);
+        let base = run_linreg_on(&cfg, &gen, &RunOpts { threaded: true }).unwrap();
+        let (traced, rec) = recorded(RecorderConfig::default(), || {
+            run_linreg_on(&cfg, &gen, &RunOpts { threaded: true }).unwrap()
+        });
+        assert_eq!(bits(&base.result.theta), bits(&traced.result.theta), "{kind:?}: θ bits");
+        assert_eq!(base.result.comm, traced.result.comm, "{kind:?}: comm ledger");
+        let (_, reports) = rec.snapshot();
+        assert_eq!(reports.len(), cfg.iters, "{kind:?}: one report per round");
+    }
+}
+
+#[test]
+fn faulted_cluster_run_is_bitwise_identical_with_recorder_on() {
+    let _g = serialized();
+    for kind in KINDS {
+        let (mut cfg, gen) = cfg_for(kind);
+        cfg.workers = 6;
+        cfg.iters = 30;
+        let gen = LinRegGenConfig { workers: cfg.workers, ..gen };
+        let fcfg = FaultConfig {
+            seed: 5,
+            p_straggle: 0.3,
+            p_death: 0.1,
+            p_bcast_loss: 0.2,
+            ..Default::default()
+        };
+        let plan = FaultPlan::generate(cfg.workers, cfg.iters, &fcfg);
+        let copts = ClusterOpts::from_config(&cfg);
+        let base = run_linreg_cluster(&cfg, &gen, &plan, &copts).unwrap();
+        let (traced, rec) = recorded(RecorderConfig::default(), || {
+            run_linreg_cluster(&cfg, &gen, &plan, &copts).unwrap()
+        });
+        assert_eq!(
+            bits(&base.result.train.theta),
+            bits(&traced.result.train.theta),
+            "{kind:?}: θ bits under faults"
+        );
+        assert_eq!(base.result.ledger, traced.result.ledger, "{kind:?}: wire ledger");
+        assert_eq!(base.result.merged_stale, traced.result.merged_stale, "{kind:?}");
+        assert_eq!(base.result.discarded_stale, traced.result.discarded_stale, "{kind:?}");
+        assert_eq!(base.result.empty_rounds, traced.result.empty_rounds, "{kind:?}");
+        let (_, reports) = rec.snapshot();
+        assert_eq!(reports.len(), cfg.iters, "{kind:?}: one report per round");
+        // The fault counters the executor recorded as events must agree
+        // with the run's own bookkeeping (summed across rounds).
+        use regtopk::obs::CounterKind;
+        let total = |k: CounterKind| {
+            reports.iter().map(|r| r.counters[k as usize]).sum::<u64>()
+        };
+        assert_eq!(total(CounterKind::StragglerMerged), base.result.merged_stale, "{kind:?}");
+        assert_eq!(total(CounterKind::StragglerDiscarded), base.result.discarded_stale, "{kind:?}");
+        assert_eq!(total(CounterKind::EmptyRound), base.result.empty_rounds, "{kind:?}");
+    }
+}
+
+#[test]
+fn real_run_trace_exports_valid_chrome_json_and_jsonl() {
+    let _g = serialized();
+    let (cfg, gen) = cfg_for(SparsifierKind::RegTopK { mu: 1.0, y: 1.0 });
+    let (_, rec) = recorded(RecorderConfig::default(), || {
+        run_linreg_on(&cfg, &gen, &RunOpts { threaded: true }).unwrap()
+    });
+    // Chrome trace: parses with the in-repo JSON parser, per-tid span
+    // streams are start-time monotone, and the executor's worker threads
+    // appear under their `regtopk-` names.
+    let text = obs::export::chrome_trace(rec).to_string();
+    let doc = Json::parse(&text).expect("trace parses");
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    let mut span_names = Vec::new();
+    let mut thread_names = Vec::new();
+    let mut last_ts: Vec<(f64, f64)> = Vec::new();
+    for e in events {
+        match e.get("ph").unwrap().as_str().unwrap() {
+            "M" => {
+                if e.get("name").unwrap().as_str() == Some("thread_name") {
+                    thread_names
+                        .push(e.get("args").unwrap().get("name").unwrap().as_str().unwrap().to_string());
+                }
+            }
+            "X" => {
+                let tid = e.get("tid").unwrap().as_f64().unwrap();
+                let ts = e.get("ts").unwrap().as_f64().unwrap();
+                if let Some(&(_, prev)) = last_ts.iter().rev().find(|(t, _)| *t == tid) {
+                    assert!(ts >= prev, "tid {tid}: ts {ts} after {prev}");
+                }
+                last_ts.push((tid, ts));
+                span_names.push(e.get("name").unwrap().as_str().unwrap().to_string());
+            }
+            "C" => {}
+            other => panic!("unexpected ph {other}"),
+        }
+    }
+    assert!(span_names.iter().any(|n| n == "round"), "no round spans in {span_names:?}");
+    assert!(span_names.iter().any(|n| n == "sparsify_compress"), "no compress spans");
+    assert!(
+        thread_names.iter().any(|n| n.starts_with("regtopk-")),
+        "no executor worker threads named: {thread_names:?}"
+    );
+    // JSONL journal: one parseable line per round, rounds in order.
+    let (_, reports) = rec.snapshot();
+    let jsonl = obs::export::metrics_jsonl(&reports);
+    let lines: Vec<&str> = jsonl.lines().collect();
+    assert_eq!(lines.len(), cfg.iters);
+    for (t, line) in lines.iter().enumerate() {
+        let j = Json::parse(line).expect("jsonl line parses");
+        assert_eq!(j.get("round").unwrap().as_usize(), Some(t));
+        assert_eq!(j.get("executor").unwrap().as_str(), Some("threaded"));
+    }
+    // Prometheus dump carries the cumulative round count.
+    let prom = obs::export::prometheus_text(rec);
+    assert!(prom.contains(&format!("regtopk_rounds_reported {}\n", cfg.iters)));
+}
+
+#[test]
+fn dropped_event_accounting_is_exact_under_a_tiny_ring() {
+    let _g = serialized();
+    let (cfg, gen) = cfg_for(SparsifierKind::TopK);
+    // Reference run with roomy buffers: nothing drops, so `accepted` is
+    // the exact number of recording attempts the run generates.
+    let (_, big) = recorded(RecorderConfig::default(), || {
+        run_linreg_on(&cfg, &gen, &RunOpts::default()).unwrap()
+    });
+    assert_eq!(big.dropped_events(), 0, "reference run must not drop");
+    let attempts = big.accepted_events();
+    assert!(attempts > 0);
+    // Same deterministic run under a 2-event ring: the per-round event
+    // burst (1 round span + `workers` compress spans) exceeds the ring,
+    // so events MUST drop — but every attempt is still accounted for:
+    // accepted + dropped is conserved across buffer sizes.
+    let (_, tiny) = recorded(
+        RecorderConfig { per_thread_capacity: 2, ..RecorderConfig::default() },
+        || run_linreg_on(&cfg, &gen, &RunOpts::default()).unwrap(),
+    );
+    assert!(tiny.dropped_events() > 0, "a 2-event ring must overflow");
+    assert_eq!(
+        tiny.accepted_events() + tiny.dropped_events(),
+        attempts,
+        "drop accounting lost events"
+    );
+    // The drop total is surfaced in the export, not silently swallowed.
+    let text = obs::export::chrome_trace(tiny).to_string();
+    let doc = Json::parse(&text).unwrap();
+    assert_eq!(
+        doc.get("otherData").unwrap().get("dropped_events").unwrap().as_f64().unwrap() as u64,
+        tiny.dropped_events()
+    );
+}

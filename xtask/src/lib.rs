@@ -12,14 +12,16 @@
 //! |------|---------------------|
 //! | `safety-comment` | every `unsafe` site carries its precondition (`// SAFETY:` or a `# Safety` doc section) |
 //! | `float-ord-unwrap` | no `partial_cmp(..).unwrap()` on floats outside `sparsify/select.rs`'s NaN total order — the PR 1 panic class |
-//! | `determinism` | no wall clocks or ambient RNG inside the deterministic paths (`sparsify/`, `coordinator/`, `tensor/`) |
+//! | `determinism` | no ambient RNG inside the deterministic paths (`sparsify/`, `coordinator/`, `tensor/`) |
+//! | `time-funnel` | every wall-clock read goes through `obs::clock` — timestamps are observability *outputs* only, so tracing cannot perturb training |
+//! | `log-choke` | stderr diagnostics go through `obs::log` (leveled, capturable) — no ad-hoc `eprintln` that tests can't observe |
 //! | `thread-spawn` | all OS-thread creation funnels through `tensor::pool` (thread-budget discipline) |
 //!
 //! The scanner is deliberately dependency-free: it masks comments and
 //! string/char literals with a small lexer state machine, then matches
 //! word-bounded tokens against the masked code, so `"thread::spawn"` in a
 //! string or a doc comment never trips a rule. It is a lint, not a parser
-//! — precise enough for these four patterns, and every rule ships with a
+//! — precise enough for these six patterns, and every rule ships with a
 //! seeded negative test below proving it still fires.
 
 use std::fmt;
@@ -54,20 +56,28 @@ const FLOAT_ORD_HOME: &str = "rust/src/sparsify/select.rs";
 /// The one module allowed to create OS threads.
 const THREAD_HOME: &str = "rust/src/tensor/pool.rs";
 
-/// Deterministic-path prefixes for the clock/RNG rule: everything the
+/// Deterministic-path prefixes for the RNG rule: everything the
 /// bit-identity guarantees flow through.
 const DETERMINISTIC_DIRS: [&str; 3] =
     ["rust/src/sparsify/", "rust/src/coordinator/", "rust/src/tensor/"];
 
-/// Ambient-nondeterminism tokens banned inside [`DETERMINISTIC_DIRS`].
-const NONDET_TOKENS: [&str; 6] = [
-    "Instant::now",
-    "SystemTime::now",
-    "UNIX_EPOCH",
-    "thread_rng",
-    "from_entropy",
-    "rand::random",
-];
+/// Ambient-RNG tokens banned inside [`DETERMINISTIC_DIRS`].
+const RNG_TOKENS: [&str; 3] = ["thread_rng", "from_entropy", "rand::random"];
+
+/// Wall-clock tokens banned crate-wide (outside [`TIME_HOME`]): the
+/// flight recorder's zero-perturbation guarantee needs every timestamp to
+/// flow through one auditable choke point, not just the deterministic
+/// dirs — a stray `Instant::now` in the bench or experiment layer is how
+/// timing sneaks back into control flow.
+const TIME_TOKENS: [&str; 3] = ["Instant::now", "SystemTime::now", "UNIX_EPOCH"];
+
+/// The one module allowed to read the wall clock (`obs::clock` — epoch,
+/// `now_ns`, `Stopwatch`).
+const TIME_HOME: &str = "rust/src/obs/clock.rs";
+
+/// Modules allowed to write to stderr directly: the leveled log sink
+/// itself, and the CLI entry point's usage/error reporting.
+const LOG_HOMES: [&str; 2] = ["rust/src/obs/log.rs", "rust/src/main.rs"];
 
 /// Masked views of one source file: `code` keeps code bytes and blanks
 /// comments + string/char-literal contents; `comments` keeps comment text
@@ -397,6 +407,8 @@ pub fn lint_file(rel: &str, src: &str) -> Vec<Violation> {
         let tests = test_regions(&masked.code);
         rule_float_ord_unwrap(rel, &masked, &tests, &mut out);
         rule_determinism(rel, &masked, &tests, &mut out);
+        rule_time_funnel(rel, &masked, &tests, &mut out);
+        rule_log_choke(rel, &masked, &tests, &mut out);
         rule_thread_spawn(rel, &masked, &tests, &mut out);
     }
     out
@@ -469,14 +481,14 @@ fn rule_float_ord_unwrap(rel: &str, m: &Masked, tests: &[(usize, usize)], out: &
     }
 }
 
-/// Rule `determinism`: wall clocks and ambient RNG are banned in the
-/// deterministic paths — selection sets and aggregates must be pure
-/// functions of (seed, config, round).
+/// Rule `determinism`: ambient RNG is banned in the deterministic paths —
+/// selection sets and aggregates must be pure functions of (seed, config,
+/// round). Wall clocks are covered crate-wide by [`rule_time_funnel`].
 fn rule_determinism(rel: &str, m: &Masked, tests: &[(usize, usize)], out: &mut Vec<Violation>) {
     if !DETERMINISTIC_DIRS.iter().any(|d| rel.starts_with(d)) {
         return;
     }
-    for token in NONDET_TOKENS {
+    for token in RNG_TOKENS {
         for at in token_positions(&m.code, token) {
             let line = line_of(&m.code, at);
             if in_regions(tests, line) {
@@ -492,6 +504,60 @@ fn rule_determinism(rel: &str, m: &Masked, tests: &[(usize, usize)], out: &mut V
                 ),
             });
         }
+    }
+}
+
+/// Rule `time-funnel`: the wall clock is read only in `obs::clock`. Every
+/// other module takes time through `clock::now_ns` / `clock::Stopwatch`,
+/// which keeps timestamps strictly on the observability side: the flight
+/// recorder can prove zero perturbation only if no training or harness
+/// code can branch on a raw clock read.
+fn rule_time_funnel(rel: &str, m: &Masked, tests: &[(usize, usize)], out: &mut Vec<Violation>) {
+    if rel == TIME_HOME {
+        return;
+    }
+    for token in TIME_TOKENS {
+        for at in token_positions(&m.code, token) {
+            let line = line_of(&m.code, at);
+            if in_regions(tests, line) {
+                continue;
+            }
+            out.push(Violation {
+                rule: "time-funnel",
+                file: rel.to_string(),
+                line,
+                message: format!(
+                    "`{token}` outside obs::clock — read time via \
+                     `obs::clock::now_ns()` / `obs::clock::Stopwatch` so every \
+                     timestamp flows through the one audited choke point"
+                ),
+            });
+        }
+    }
+}
+
+/// Rule `log-choke`: ad-hoc `eprintln!` is banned outside the leveled log
+/// sink (`obs::log`) and the CLI entry point. Diagnostics routed through
+/// `obs::log::{info,warn,error}` stay capturable in tests and visible to
+/// the recorder; a raw `eprintln!` is invisible to both.
+fn rule_log_choke(rel: &str, m: &Masked, tests: &[(usize, usize)], out: &mut Vec<Violation>) {
+    if LOG_HOMES.contains(&rel) {
+        return;
+    }
+    for at in token_positions(&m.code, "eprintln") {
+        let line = line_of(&m.code, at);
+        if in_regions(tests, line) {
+            continue;
+        }
+        out.push(Violation {
+            rule: "log-choke",
+            file: rel.to_string(),
+            line,
+            message: "`eprintln!` outside obs::log — emit through \
+                      `obs::log::{info,warn,error}` so diagnostics are leveled \
+                      and capturable in tests"
+                .to_string(),
+        });
     }
 }
 
@@ -640,8 +706,8 @@ mod tests {
     }
 
     #[test]
-    fn determinism_rule_fires_on_clock_in_deterministic_path() {
-        for token in ["Instant::now()", "SystemTime::now()", "thread_rng()"] {
+    fn determinism_rule_fires_on_rng_in_deterministic_path() {
+        for token in ["thread_rng()", "rand::random::<u64>()", "Pcg64::from_entropy()"] {
             let src = format!("pub fn f() {{\n    let _t = {token};\n}}\n");
             let v = lint_file("rust/src/sparsify/bad.rs", &src);
             assert!(
@@ -653,13 +719,63 @@ mod tests {
 
     #[test]
     fn determinism_rule_scoped_to_deterministic_dirs() {
-        let src = "pub fn f() {\n    let _t = Instant::now();\n}\n";
-        // Timing code is fine in the bench/experiment layers.
+        let src = "pub fn f() {\n    let _r = thread_rng();\n}\n";
+        // Ambient RNG is (lint-)fine outside the deterministic paths...
         assert!(lint_file("rust/src/bench/mod.rs", src).is_empty());
         assert!(lint_file("rust/src/experiments/fig_scale.rs", src).is_empty());
         // ... and in tests inside a deterministic dir.
-        let test_src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        let _ = Instant::now();\n    }\n}\n";
+        let test_src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        let _ = thread_rng();\n    }\n}\n";
         assert!(lint_file("rust/src/coordinator/mod.rs", test_src).is_empty());
+    }
+
+    #[test]
+    fn time_funnel_rule_fires_crate_wide() {
+        for token in ["Instant::now()", "SystemTime::now()", "UNIX_EPOCH"] {
+            let src = format!("pub fn f() {{\n    let _t = {token};\n}}\n");
+            // Fires even outside the deterministic dirs — bench layer,
+            // experiments, examples all funnel through obs::clock now.
+            for rel in
+                ["rust/src/bench/mod.rs", "rust/src/experiments/fig_scale.rs", "examples/probe.rs"]
+            {
+                let v = lint_file(rel, &src);
+                assert!(
+                    v.iter().any(|v| v.rule == "time-funnel" && v.line == 2),
+                    "expected time-funnel violation for {token} in {rel}, got {v:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn time_funnel_allowed_in_clock_home_tests_and_test_files() {
+        let src = "pub fn f() {\n    let _t = Instant::now();\n}\n";
+        assert!(lint_file("rust/src/obs/clock.rs", src).is_empty());
+        assert!(lint_file("rust/tests/integration.rs", src).is_empty());
+        assert!(lint_file("rust/benches/e2e_iter.rs", src).is_empty());
+        let test_src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        let _ = Instant::now();\n    }\n}\n";
+        assert!(lint_file("rust/src/metrics/mod.rs", test_src).is_empty());
+    }
+
+    #[test]
+    fn log_choke_rule_fires_outside_log_sink() {
+        let src = "pub fn f() {\n    eprintln!(\"warning: something\");\n}\n";
+        for rel in ["rust/src/coordinator/snapshot.rs", "rust/src/experiments/fig6.rs"] {
+            let v = lint_file(rel, src);
+            assert!(
+                v.iter().any(|v| v.rule == "log-choke" && v.line == 2),
+                "expected log-choke violation in {rel}, got {v:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn log_choke_allowed_in_log_sink_main_and_tests() {
+        let src = "pub fn f() {\n    eprintln!(\"warning: something\");\n}\n";
+        assert!(lint_file("rust/src/obs/log.rs", src).is_empty());
+        assert!(lint_file("rust/src/main.rs", src).is_empty());
+        assert!(lint_file("rust/tests/integration.rs", src).is_empty());
+        let test_src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        eprintln!(\"debug\");\n    }\n}\n";
+        assert!(lint_file("rust/src/runtime/engine.rs", test_src).is_empty());
     }
 
     #[test]
