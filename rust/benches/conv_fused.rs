@@ -1,9 +1,12 @@
 //! Fused (implicit-GEMM) vs materialized conv path: the tentpole
 //! comparison for the pack+GEMM fusion.
 //!
-//! Measures `conv_forward + conv_param_grad` — the two directions that
-//! used to materialize the O(B·Ho·Wo·K²·Cin) `cols` buffer — against
-//! `conv_forward_fused + conv_param_grad_fused` at two widths:
+//! Measures all three conv directions that used to materialize an
+//! O(B·Ho·Wo·K²·Cin) patch buffer: `conv_forward + conv_param_grad`
+//! against `conv_forward_fused + conv_param_grad_fused`, and the data
+//! gradient `conv_data_grad` (gemm_nt into a `dcols` scratch + col2im
+//! scatter) against the sink-fused `conv_data_grad_fused` (col2im
+//! epilogue, no adjoint buffer), at two widths:
 //!
 //! * the **stem-width layer** (3 → 8 channels at 16×16, the acceptance
 //!   shape: low arithmetic intensity, so the eliminated cols round trip
@@ -24,14 +27,22 @@
 use regtopk::bench::{black_box, Bencher};
 use regtopk::metrics::json::Json;
 use regtopk::models::conv::{
-    self, conv_forward, conv_forward_fused, conv_param_grad, conv_param_grad_fused, ConvConfig,
-    ConvNet,
+    self, conv_data_grad, conv_data_grad_fused, conv_forward, conv_forward_fused, conv_param_grad,
+    conv_param_grad_fused, ConvConfig, ConvNet,
 };
 use regtopk::rng::Pcg64;
 use regtopk::tensor::im2col::ConvShape;
 
-/// Bench one layer both ways; returns (materialized_ns, fused_ns).
-fn layer_pair(b: &Bencher, rng: &mut Pcg64, label: &str, shape: ConvShape, batch: usize) -> (f64, f64) {
+/// Per-layer bench result: median ns for each (materialized, fused) pair.
+struct LayerTimes {
+    /// Forward + weight gradient (the PR 5 fusion).
+    fwd_dw: (f64, f64),
+    /// Data gradient: gemm_nt + col2im vs the sink epilogue.
+    dgrad: (f64, f64),
+}
+
+/// Bench one layer both ways in every direction.
+fn layer_pair(b: &Bencher, rng: &mut Pcg64, label: &str, shape: ConvShape, batch: usize) -> LayerTimes {
     let desc = conv::ConvDesc { shape, w_off: 0, b_off: shape.weight_len() };
     let theta = rng.normal_vec(shape.weight_len() + shape.cout, 0.0, 0.2);
     let input = rng.normal_vec(shape.in_len(batch), 0.0, 1.0);
@@ -41,6 +52,8 @@ fn layer_pair(b: &Bencher, rng: &mut Pcg64, label: &str, shape: ConvShape, batch
     let mut out_f = vec![0.0f32; shape.out_len(batch)];
     let mut grad_m = vec![0.0f32; theta.len()];
     let mut grad_f = vec![0.0f32; theta.len()];
+    let mut din_m = vec![0.0f32; shape.in_len(batch)];
+    let mut din_f = vec![0.0f32; shape.in_len(batch)];
     // Parity gate: fused must equal materialized bit for bit before any
     // timing is reported.
     conv_forward(&desc, batch, &theta, &input, &mut cols, &mut out_m);
@@ -49,6 +62,9 @@ fn layer_pair(b: &Bencher, rng: &mut Pcg64, label: &str, shape: ConvShape, batch
     conv_param_grad(&desc, batch, &input, &dz, &mut cols, &mut grad_m);
     conv_param_grad_fused(&desc, batch, &input, &dz, &mut grad_f);
     assert_eq!(grad_m, grad_f, "{label}: fused param grad diverged");
+    conv_data_grad(&desc, batch, &theta, &dz, &mut cols, &mut din_m, false);
+    conv_data_grad_fused(&desc, batch, &theta, &dz, &mut din_f, false);
+    assert_eq!(din_m, din_f, "{label}: sink-fused data grad diverged");
 
     // fwd + dW are one GEMM each at the same M·K·N.
     let macs = shape.rows(batch) * shape.col_width() * shape.cout * 2;
@@ -64,7 +80,24 @@ fn layer_pair(b: &Bencher, rng: &mut Pcg64, label: &str, shape: ConvShape, batch
     });
     let speedup = mat.median.as_secs_f64() / fus.median.as_secs_f64();
     println!("{:<44} fused speedup {speedup:.2}x", "");
-    (mat.median.as_secs_f64() * 1e9, fus.median.as_secs_f64() * 1e9)
+
+    // The data gradient is one gemm_nt at the transposed M·K·N plus the
+    // col2im scatter-add (counted once — both paths perform it).
+    let dmacs = shape.rows(batch) * shape.cout * shape.col_width() + shape.cols_len(batch);
+    let dmat = b.report_throughput(&format!("conv_fused/materialized_dgrad/{label}"), dmacs, || {
+        conv_data_grad(&desc, batch, &theta, &dz, &mut cols, &mut din_m, false);
+        black_box(&din_m);
+    });
+    let dfus = b.report_throughput(&format!("conv_fused/sink_fused_dgrad/{label}"), dmacs, || {
+        conv_data_grad_fused(&desc, batch, &theta, &dz, &mut din_f, false);
+        black_box(&din_f);
+    });
+    let dspeed = dmat.median.as_secs_f64() / dfus.median.as_secs_f64();
+    println!("{:<44} sink-fused dgrad speedup {dspeed:.2}x", "");
+    LayerTimes {
+        fwd_dw: (mat.median.as_secs_f64() * 1e9, fus.median.as_secs_f64() * 1e9),
+        dgrad: (dmat.median.as_secs_f64() * 1e9, dfus.median.as_secs_f64() * 1e9),
+    }
 }
 
 fn main() {
@@ -72,14 +105,14 @@ fn main() {
     let batch = 16usize;
     let mut rng = Pcg64::seed_from_u64(3);
 
-    println!("== fused (implicit-GEMM) vs materialized conv layer, fwd + dW (B = {batch}) ==");
+    println!("== fused (implicit-GEMM) vs materialized conv layer, all directions (B = {batch}) ==");
     let stem = ConvShape::new(3, 8, 3, 1, 1, 16, 16);
-    let (stem_m, stem_f) = layer_pair(&b, &mut rng, "stem3x3_16x16_c3_w8", stem, batch);
+    let stem_t = layer_pair(&b, &mut rng, "stem3x3_16x16_c3_w8", stem, batch);
     let stage = ConvShape::new(32, 32, 3, 1, 1, 8, 8);
-    let (stage_m, stage_f) = layer_pair(&b, &mut rng, "stage3x3_8x8_c32_w32", stage, batch);
+    let stage_t = layer_pair(&b, &mut rng, "stage3x3_8x8_c32_w32", stage, batch);
 
-    // End-to-end model gradient on the fused path (no forward/weight-grad
-    // cols buffer exists in ConvNet's steady state anymore).
+    // End-to-end model gradient on the fully pack-free path (no patch
+    // buffer exists in ConvNet's steady state in any direction).
     println!("\n== residual CNN batch gradient on the fused path ==");
     let cfg = ConvConfig {
         channels: 3,
@@ -90,6 +123,9 @@ fn main() {
         blocks: [2, 2, 2, 2],
     };
     let dim = cfg.dim();
+    // The Fig. 6 native conv scale (J is spatial-independent, so the
+    // 16×16 bench input carries the same parameter vector).
+    assert_eq!(dim, 175_802, "model entry must run at the Fig. 6 J");
     let theta = cfg.init(&mut rng);
     let xb = rng.normal_vec(batch * cfg.pixels(), 0.0, 1.0);
     let labels: Vec<usize> = (0..batch).map(|i| i % cfg.classes).collect();
@@ -102,12 +138,21 @@ fn main() {
     });
 
     let speedups = Json::obj(vec![
-        ("stem3x3_16x16_c3_w8", Json::Num(stem_m / stem_f)),
-        ("stage3x3_8x8_c32_w32", Json::Num(stage_m / stage_f)),
+        ("stem3x3_16x16_c3_w8", Json::Num(stem_t.fwd_dw.0 / stem_t.fwd_dw.1)),
+        ("stage3x3_8x8_c32_w32", Json::Num(stage_t.fwd_dw.0 / stage_t.fwd_dw.1)),
     ]);
-    if let Err(e) =
-        b.write_json_with("conv_fused", vec![("speedup_fused_vs_materialized", speedups)], "BENCH_conv_fused.json")
-    {
+    let dgrad_speedups = Json::obj(vec![
+        ("stem3x3_16x16_c3_w8", Json::Num(stem_t.dgrad.0 / stem_t.dgrad.1)),
+        ("stage3x3_8x8_c32_w32", Json::Num(stage_t.dgrad.0 / stage_t.dgrad.1)),
+    ]);
+    if let Err(e) = b.write_json_with(
+        "conv_fused",
+        vec![
+            ("speedup_fused_vs_materialized", speedups),
+            ("speedup_sink_fused_dgrad_vs_materialized", dgrad_speedups),
+        ],
+        "BENCH_conv_fused.json",
+    ) {
         eprintln!("could not write BENCH_conv_fused.json: {e}");
     } else {
         println!("wrote BENCH_conv_fused.json");

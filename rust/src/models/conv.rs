@@ -29,13 +29,15 @@
 //! the coordinator see — with the per-layer segment map available from
 //! [`ConvConfig::offsets`] (the conv analogue of `MlpConfig::offsets`).
 //!
-//! Forward and weight-gradient GEMMs run **fused** (implicit GEMM): the
-//! im2col panels are generated straight into the GEMM microkernel from
-//! the stored activations ([`crate::tensor::im2col::ImplicitCols`]), so
-//! the O(B·Ho·Wo·K²·Cin) `cols` buffer never materializes in either
-//! direction — its packing traffic happens in L1-resident panels instead
-//! of a DRAM round trip. Only the data gradient keeps a materialized
-//! `dcols` buffer (col2im consumes the GEMM output in full). Fused is
+//! All three conv GEMM directions run **fused** (implicit GEMM). Forward
+//! and weight-gradient generate their im2col panels straight into the
+//! GEMM microkernel from the stored activations
+//! ([`crate::tensor::im2col::ImplicitCols`]); the data gradient feeds its
+//! `dY·Wᵀ` rows through a col2im *sink* epilogue
+//! ([`crate::tensor::im2col::Col2imSink`]) that scatter-adds each row into
+//! `dinput` the moment it is produced. The O(B·Ho·Wo·K²·Cin) patch buffer
+//! therefore never materializes in *any* direction — its traffic happens
+//! in L1-resident panels/rows instead of a DRAM round trip. Fused is
 //! bitwise-identical to the materialized composition per kernel path
 //! (parity matrix in tests). All scratch lives in [`ConvNet`] and is
 //! grown once: steady-state `batch_grad_packed` calls allocate nothing.
@@ -46,8 +48,8 @@
 //! finite differences pin both to the loss.
 
 use crate::rng::Pcg64;
-use crate::tensor::gemm::{gemm_nn, gemm_nn_from, gemm_nt, gemm_tn, gemm_tn_from};
-use crate::tensor::im2col::{col2im_add, im2col, ConvShape, ImplicitCols};
+use crate::tensor::gemm::{gemm_nn, gemm_nn_from, gemm_nt, gemm_nt_sink, gemm_tn, gemm_tn_from};
+use crate::tensor::im2col::{col2im_add, im2col, Col2imSink, ConvShape, ImplicitCols};
 use crate::tensor::softmax_inplace;
 
 use super::mlp::argmax;
@@ -245,10 +247,6 @@ impl ConvPlan {
         }))
     }
 
-    fn max_cols_len(&self, n: usize) -> usize {
-        self.each_conv().map(|d| d.shape.cols_len(n)).max().unwrap()
-    }
-
     fn max_node_len(&self, n: usize) -> usize {
         (0..=self.blocks.len()).map(|j| self.node_len(j, n)).max().unwrap()
     }
@@ -375,9 +373,12 @@ pub fn conv_param_grad_fused(d: &ConvDesc, n: usize, input: &[f32], dz: &[f32], 
     bias_grad(&mut grad[d.b_off..d.b_off + s.cout], dz);
 }
 
-/// `dinput (+)= col2im(dz · Wᵀ)` — data gradient of one conv layer.
+/// `dinput (+)= col2im(dz · Wᵀ)` — data gradient of one conv layer
+/// through the *materialized* adjoint patch matrix (`dcols` scratch).
 /// Overwrites `dinput` unless `accumulate` (the projection shortcut folds
-/// its gradient into the main branch's this way).
+/// its gradient into the main branch's this way). Kept as the reference
+/// half of the parity matrix and for benches; the training path runs
+/// [`conv_data_grad_fused`].
 pub fn conv_data_grad(
     d: &ConvDesc,
     n: usize,
@@ -396,6 +397,30 @@ pub fn conv_data_grad(
         }
     }
     col2im_add(s, n, dcols, dinput);
+}
+
+/// Sink-fused data gradient: the `dz · Wᵀ` rows are scatter-added into
+/// `dinput` by a col2im epilogue ([`Col2imSink`]) as the GEMM produces
+/// them, so the O(B·Ho·Wo·K²·Cin) `dcols` adjoint never materializes.
+/// Bitwise-identical to [`conv_data_grad`] for a fixed kernel path at
+/// every thread count (the sink's `row_align` keeps every `dinput` plane
+/// single-writer with the serial accumulation order).
+pub fn conv_data_grad_fused(
+    d: &ConvDesc,
+    n: usize,
+    theta: &[f32],
+    dz: &[f32],
+    dinput: &mut [f32],
+    accumulate: bool,
+) {
+    let s = &d.shape;
+    if !accumulate {
+        for v in dinput.iter_mut() {
+            *v = 0.0;
+        }
+    }
+    let sink = Col2imSink::new(s, n, dinput);
+    gemm_nt_sink(s.rows(n), s.cout, s.col_width(), dz, &theta[d.w_off..d.w_off + s.weight_len()], &sink);
 }
 
 /// Direct (no im2col, no GEMM) forward of one conv layer for one sample —
@@ -489,10 +514,10 @@ pub struct ConvNet {
     pub plan: ConvPlan,
     cap: usize,
     grad_cap: usize,
-    // Patch-matrix gradient scratch (data-grad GEMM output, consumed by
-    // col2im). The forward/weight-grad packs no longer exist: those GEMMs
-    // run fused ([`conv_forward_fused`] / [`conv_param_grad_fused`]).
-    dcols: Vec<f32>,
+    // No patch-matrix scratch exists in any direction: forward and
+    // weight-grad run fused ([`conv_forward_fused`] /
+    // [`conv_param_grad_fused`]) and the data gradient scatter-adds
+    // through the col2im sink epilogue ([`conv_data_grad_fused`]).
     /// Activation nodes: `xs[0]` = stem output, `xs[i+1]` = block `i` output.
     xs: Vec<Vec<f32>>,
     /// Per-block mid activation (after conv1 + ReLU).
@@ -527,7 +552,6 @@ impl ConvNet {
             plan,
             cap: 0,
             grad_cap: 0,
-            dcols: Vec::new(),
             xs: vec![Vec::new(); nb + 1],
             mids: vec![Vec::new(); nb],
             ptmp: Vec::new(),
@@ -574,7 +598,6 @@ impl ConvNet {
             return;
         }
         let p = &self.plan;
-        self.dcols.resize(p.max_cols_len(n), 0.0);
         for (j, g) in self.gxs.iter_mut().enumerate() {
             g.resize(p.node_len(j, n), 0.0);
         }
@@ -738,15 +761,15 @@ impl ConvNet {
             let gmid = &mut self.gmids[i][..blk.conv1.shape.out_len(n)];
             relu_mask(gout, y);
             conv_param_grad_fused(&blk.conv2, n, mid, gout, grad);
-            conv_data_grad(&blk.conv2, n, theta, gout, &mut self.dcols, gmid, false);
+            conv_data_grad_fused(&blk.conv2, n, theta, gout, gmid, false);
             relu_mask(gmid, mid);
             conv_param_grad_fused(&blk.conv1, n, xin, gmid, grad);
-            conv_data_grad(&blk.conv1, n, theta, gmid, &mut self.dcols, gin, false);
+            conv_data_grad_fused(&blk.conv1, n, theta, gmid, gin, false);
             match &blk.proj {
                 None => add_into(gin, gout),
                 Some(pr) => {
                     conv_param_grad_fused(pr, n, xin, gout, grad);
-                    conv_data_grad(pr, n, theta, gout, &mut self.dcols, gin, true);
+                    conv_data_grad_fused(pr, n, theta, gout, gin, true);
                 }
             }
         }
@@ -1172,9 +1195,11 @@ mod tests {
 
     #[test]
     fn fused_conv_is_bitwise_identical_to_materialized() {
-        // The tentpole acceptance pin: the implicit-GEMM layer functions
-        // against their materialized-cols counterparts, bit for bit, over
-        // kernel dispatch × thread budgets × boundary geometry — pad > 0,
+        // The tentpole acceptance pin: all three implicit-GEMM layer
+        // functions (forward, weight grad, and the sink-fused data grad in
+        // both overwrite and accumulate modes) against their
+        // materialized-cols counterparts, bit for bit, over kernel
+        // dispatch × thread budgets × boundary geometry — pad > 0,
         // stride > 1, 1×1 projections, pad 0, non-tile-multiple B·Ho·Wo
         // row counts, and a KC-crossing patch width (3²·30 = 270 > 256).
         use crate::tensor::gemm::{detected_kernel, with_kernel, Kernel};
@@ -1200,26 +1225,48 @@ mod tests {
                 let theta = rng.normal_vec(shape.weight_len() + shape.cout, 0.0, 0.5);
                 let input = rng.normal_vec(shape.in_len(n), 0.0, 1.0);
                 let dz = rng.normal_vec(shape.out_len(n), 0.0, 1.0);
+                let warm = rng.normal_vec(shape.in_len(n), 0.0, 1.0);
                 let mut cols = vec![0.0f32; shape.cols_len(n)];
                 let mut out_m = vec![0.0f32; shape.out_len(n)];
                 let mut out_f = vec![1.0f32; shape.out_len(n)];
                 let mut grad_m = vec![0.0f32; theta.len()];
                 let mut grad_f = vec![1.0f32; theta.len()];
+                let mut din_m = vec![0.0f32; shape.in_len(n)];
+                let mut din_f = vec![1.0f32; shape.in_len(n)];
                 for &kern in &kernels {
                     for budget in [1usize, 2, 5] {
-                        with_kernel(kern, || {
-                            pool::with_thread_budget(budget, || {
-                                conv_forward(&d, n, &theta, &input, &mut cols, &mut out_m);
-                                conv_forward_fused(&d, n, &theta, &input, &mut out_f);
-                                conv_param_grad(&d, n, &input, &dz, &mut cols, &mut grad_m);
-                                conv_param_grad_fused(&d, n, &input, &dz, &mut grad_f);
-                            })
-                        });
-                        assert_eq!(out_m, out_f, "forward {shape:?} n={n} {kern:?} t={budget}");
-                        assert_eq!(
-                            grad_m, grad_f,
-                            "param grad {shape:?} n={n} {kern:?} t={budget}"
-                        );
+                        for accumulate in [false, true] {
+                            // The accumulate case (the projection-shortcut
+                            // fold) must agree starting from a warm buffer.
+                            if accumulate {
+                                din_m.copy_from_slice(&warm);
+                                din_f.copy_from_slice(&warm);
+                            }
+                            with_kernel(kern, || {
+                                pool::with_thread_budget(budget, || {
+                                    conv_forward(&d, n, &theta, &input, &mut cols, &mut out_m);
+                                    conv_forward_fused(&d, n, &theta, &input, &mut out_f);
+                                    conv_param_grad(&d, n, &input, &dz, &mut cols, &mut grad_m);
+                                    conv_param_grad_fused(&d, n, &input, &dz, &mut grad_f);
+                                    conv_data_grad(
+                                        &d, n, &theta, &dz, &mut cols, &mut din_m, accumulate,
+                                    );
+                                    conv_data_grad_fused(&d, n, &theta, &dz, &mut din_f, accumulate);
+                                })
+                            });
+                            assert_eq!(
+                                out_m, out_f,
+                                "forward {shape:?} n={n} {kern:?} t={budget}"
+                            );
+                            assert_eq!(
+                                grad_m, grad_f,
+                                "param grad {shape:?} n={n} {kern:?} t={budget}"
+                            );
+                            assert_eq!(
+                                din_m, din_f,
+                                "data grad {shape:?} n={n} {kern:?} t={budget} acc={accumulate}"
+                            );
+                        }
                     }
                 }
             }

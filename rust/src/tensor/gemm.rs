@@ -32,6 +32,17 @@
 //! **bitwise** per kernel path, because the kernels consume identical
 //! panel contents in the identical KC-blocked order.
 //!
+//! # Row sinks (fused epilogues)
+//!
+//! [`NtRowSink`] is the *write-side* dual: [`gemm_nt_sink`] computes
+//! `A·Bᵀ` row by row into thread-local scratch and hands each finished
+//! row to the sink instead of storing it in a C buffer. The fused col2im
+//! path ([`super::im2col::Col2imSink`]) consumes `dY·Wᵀ` rows straight
+//! into the data-gradient image, deleting the materialized `dcols`
+//! adjoint. [`NtRowSink::row_align`] lets a sink demand that row groups
+//! never split across parallel tasks — the single-writer guarantee that
+//! keeps a scatter-adding sink race-free and parallel == serial bitwise.
+//!
 //! # NC-blocked B-panels
 //!
 //! `nn` calls with `n > NC` additionally block the *output columns*: each
@@ -160,7 +171,7 @@ fn active_kernel() -> Kernel {
 /// succeeded ([`detected_kernel`]) or re-verified ([`with_kernel`]).
 #[cfg(target_arch = "x86_64")]
 #[inline]
-fn debug_assert_kernel_supported(kernel: Kernel) {
+pub(crate) fn debug_assert_kernel_supported(kernel: Kernel) {
     if kernel == Kernel::Avx2 {
         debug_assert!(
             is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma"),
@@ -190,7 +201,15 @@ pub trait NnPanelSource: Sync {
     /// Interleave `panel[MR·p + l] = A[r + l][k0 + p]` for `l < MR`,
     /// `p < kc` — the microkernel's packed layout. Only called with
     /// `kc ≤ KC` and all `MR` rows in range.
-    fn fill_panel(&self, r: usize, k0: usize, kc: usize, panel: &mut [f32]);
+    ///
+    /// `kernel` is the dispatch path the *driver* resolved for this call:
+    /// sources with SIMD gather implementations (the fused im2col source)
+    /// key their internal dispatch off it rather than re-resolving, so a
+    /// pinned kernel propagates into pool tasks (the thread-local pin
+    /// does not cross threads) and panel generation always runs on the
+    /// same path as the consuming microkernel. Pure-copy sources ignore
+    /// it — a gather produces identical bits on either path.
+    fn fill_panel(&self, kernel: Kernel, r: usize, k0: usize, kc: usize, panel: &mut [f32]);
 
     /// `row[p] = A[r][k0 + p]` for `p < kc` (remainder rows that fall out
     /// of `MR`-row groups).
@@ -212,7 +231,7 @@ struct SliceNn<'a> {
 }
 
 impl NnPanelSource for SliceNn<'_> {
-    fn fill_panel(&self, r: usize, k0: usize, kc: usize, panel: &mut [f32]) {
+    fn fill_panel(&self, _kernel: Kernel, r: usize, k0: usize, kc: usize, panel: &mut [f32]) {
         let a0 = &self.a[r * self.k + k0..r * self.k + k0 + kc];
         let a1 = &self.a[(r + 1) * self.k + k0..(r + 1) * self.k + k0 + kc];
         let a2 = &self.a[(r + 2) * self.k + k0..(r + 2) * self.k + k0 + kc];
@@ -239,6 +258,21 @@ pub trait TnColSource: Sync {
     /// sequentially.
     fn fill_col(&self, i: usize, col: &mut [f32]);
 
+    /// Gather `g ≤ MR` *adjacent* columns at once: column `i0 + j` into
+    /// `cols[j·k .. (j+1)·k]`. The driver batches its row block in
+    /// `MR`-column groups through this so sources whose adjacent columns
+    /// alias the same underlying reads (the im2col source, where
+    /// neighbouring `(ky,kx,ci)` columns sit `1` apart in every image
+    /// row) can share each strided load across the group instead of
+    /// re-gathering per column. The default is the per-column loop —
+    /// bitwise-identical output by contract, since each column's values
+    /// are a pure function of its index either way.
+    fn fill_cols(&self, i0: usize, g: usize, k: usize, cols: &mut [f32]) {
+        for j in 0..g {
+            self.fill_col(i0 + j, &mut cols[j * k..(j + 1) * k]);
+        }
+    }
+
     /// See [`NnPanelSource::pack_work`].
     fn pack_work(&self) -> usize {
         0
@@ -264,9 +298,13 @@ thread_local! {
     /// Thread-local (pool workers persist), grown once: steady-state
     /// large-`n` GEMMs allocate nothing.
     static BPACK: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
-    /// Gathered A-column scratch for the `tn` drivers, grown once to the
-    /// largest reduction length seen on this thread.
+    /// Gathered A-column scratch for the `tn` drivers (an `MR`-column
+    /// group per fill), grown once to the largest `MR · k` seen on this
+    /// thread.
     static TNCOL: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+    /// Output-row scratch for the `nt` sink driver ([`gemm_nt_sink`]),
+    /// grown once to the largest row width seen on this thread.
+    static NTROW: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
 }
 
 /// Split `c` into `threads` contiguous row blocks and run `f(row0, block)`
@@ -515,7 +553,7 @@ fn nn_tile<S: NnPanelSource + ?Sized>(
     let rows = block.len() / n;
     let mut i = 0;
     while i + MR <= rows {
-        src.fill_panel(r0 + i, k0, kc, &mut panel[..MR * kc]);
+        src.fill_panel(kernel, r0 + i, k0, kc, &mut panel[..MR * kc]);
         let mut crows = block[i * n..(i + MR) * n].chunks_exact_mut(n);
         let c0 = &mut crows.next().unwrap()[j0..j0 + ncw];
         let c1 = &mut crows.next().unwrap()[j0..j0 + ncw];
@@ -608,12 +646,14 @@ fn tn_driver_src<S: TnColSource + ?Sized>(
     });
 }
 
-/// One contiguous row block of the `tn` drivers: C rows `i0 ..`. Each
-/// output row gathers its A column into thread-local contiguous scratch
-/// first (a strided copy for slices, a generated stream for fused
-/// sources), then runs the fixed-order rank-1 chain over it — same values
-/// in the same order as reading the column in place, so the gather is
-/// bitwise-invisible.
+/// One contiguous row block of the `tn` drivers: C rows `i0 ..`. Output
+/// rows are processed in `MR`-row groups whose A columns are gathered in
+/// one [`TnColSource::fill_cols`] call (adjacent im2col columns share
+/// their strided image reads; slices fall back to per-column copies) into
+/// thread-local contiguous scratch, then each row runs the fixed-order
+/// rank-1 chain over its own gathered column — same values in the same
+/// per-row order as the ungrouped per-column gather, so both the gather
+/// and the grouping are bitwise-invisible.
 fn tn_rows<S: TnColSource + ?Sized>(
     kernel: Kernel,
     k: usize,
@@ -628,45 +668,52 @@ fn tn_rows<S: TnColSource + ?Sized>(
     debug_assert_kernel_supported(kernel);
     TNCOL.with(|cell| {
         let mut colv = cell.borrow_mut();
-        if colv.len() < k {
-            colv.resize(k, 0.0);
+        if colv.len() < MR * k {
+            colv.resize(MR * k, 0.0);
         }
-        let col = &mut colv[..k];
-        for (bi, crow) in block.chunks_exact_mut(n).enumerate() {
-            src.fill_col(i0 + bi, col);
-            for v in crow.iter_mut() {
-                *v = 0.0;
-            }
-            let mut p = 0;
-            while p + 4 <= k {
-                let s = [col[p], col[p + 1], col[p + 2], col[p + 3]];
-                let (b0, b1, b2, b3) = (
-                    &b[p * n..(p + 1) * n],
-                    &b[(p + 1) * n..(p + 2) * n],
-                    &b[(p + 2) * n..(p + 3) * n],
-                    &b[(p + 3) * n..(p + 4) * n],
-                );
-                match kernel {
-                    Kernel::Scalar => fma4_into(s, b0, b1, b2, b3, crow),
-                    // SAFETY: detection invariant debug-asserted at block
-                    // entry; all four B slices and the C row are n elements.
-                    #[cfg(target_arch = "x86_64")]
-                    Kernel::Avx2 => unsafe { super::simd::tn_fma4(s, b0, b1, b2, b3, crow) },
+        let rows = block.len() / n;
+        let mut bi = 0;
+        while bi < rows {
+            let g = MR.min(rows - bi);
+            let cols = &mut colv[..g * k];
+            src.fill_cols(i0 + bi, g, k, cols);
+            for (j, crow) in block[bi * n..(bi + g) * n].chunks_exact_mut(n).enumerate() {
+                let col = &cols[j * k..(j + 1) * k];
+                for v in crow.iter_mut() {
+                    *v = 0.0;
                 }
-                p += 4;
-            }
-            while p < k {
-                match kernel {
-                    Kernel::Scalar => axpy8(col[p], &b[p * n..(p + 1) * n], crow),
-                    // SAFETY: detection invariant as above; the B slice and
-                    // the C row are both n elements.
-                    #[cfg(target_arch = "x86_64")]
-                    Kernel::Avx2 => unsafe {
-                        super::simd::row_axpy(col[p], &b[p * n..(p + 1) * n], crow);
-                    },
+                let mut p = 0;
+                while p + 4 <= k {
+                    let s = [col[p], col[p + 1], col[p + 2], col[p + 3]];
+                    let (b0, b1, b2, b3) = (
+                        &b[p * n..(p + 1) * n],
+                        &b[(p + 1) * n..(p + 2) * n],
+                        &b[(p + 2) * n..(p + 3) * n],
+                        &b[(p + 3) * n..(p + 4) * n],
+                    );
+                    match kernel {
+                        Kernel::Scalar => fma4_into(s, b0, b1, b2, b3, crow),
+                        // SAFETY: detection invariant debug-asserted at block
+                        // entry; all four B slices and the C row are n elements.
+                        #[cfg(target_arch = "x86_64")]
+                        Kernel::Avx2 => unsafe { super::simd::tn_fma4(s, b0, b1, b2, b3, crow) },
+                    }
+                    p += 4;
                 }
-                p += 1;
+                while p < k {
+                    match kernel {
+                        Kernel::Scalar => axpy8(col[p], &b[p * n..(p + 1) * n], crow),
+                        // SAFETY: detection invariant as above; the B slice and
+                        // the C row are both n elements.
+                        #[cfg(target_arch = "x86_64")]
+                        Kernel::Avx2 => unsafe {
+                            super::simd::row_axpy(col[p], &b[p * n..(p + 1) * n], crow);
+                        },
+                    }
+                    p += 1;
+                }
             }
+            bi += g;
         }
     });
 }
@@ -720,6 +767,133 @@ fn nt_rows(kernel: Kernel, k: usize, n: usize, a: &[f32], b: &[f32], block: &mut
             };
         }
     }
+}
+
+/// Consumer of finished `A·Bᵀ` output rows — the write-side dual of the
+/// panel sources: instead of the driver storing C, each completed row is
+/// handed to the sink, which folds it into its own output layout (the
+/// fused col2im epilogue scatter-adds it into the gradient image).
+///
+/// Contract: the driver calls [`consume_row`](Self::consume_row) exactly
+/// once per output row `r ∈ [0, m)`. Rows are partitioned across pool
+/// tasks in contiguous ascending blocks whose boundaries always fall on
+/// multiples of [`row_align`](Self::row_align); within a task rows arrive
+/// in ascending order. A sink whose writes for rows `[g·align, (g+1)·align)`
+/// touch memory disjoint from every other group's writes is therefore
+/// single-writer with a fixed per-element accumulation order — parallel
+/// execution is race-free and bitwise-identical to serial.
+pub trait NtRowSink: Sync {
+    /// Row-group size that must never split across parallel tasks. The
+    /// driver asserts `m % row_align() == 0` and only cuts task
+    /// boundaries between groups. Defaults to 1 (no constraint).
+    fn row_align(&self) -> usize {
+        1
+    }
+
+    /// Consume output row `r` (`row[j] = Σ_p A[r,p]·B[j,p]`, length `n`).
+    /// Called once per row, ascending within each task's block; `&self`
+    /// because tasks share the sink — see the trait docs for the
+    /// disjointness obligation that makes interior mutation sound.
+    fn consume_row(&self, r: usize, row: &[f32]);
+
+    /// Extra work units the parallel grain accounts for on top of the
+    /// kernel MACs (≈ elements the sink touches per full pass). Zero if
+    /// consumption is negligible next to the dot products.
+    fn sink_work(&self) -> usize {
+        0
+    }
+}
+
+/// `A(m×k) · Bᵀ (B is n × k row-major)`, streamed row-by-row into `sink`
+/// instead of a C buffer — the fused-epilogue entry point (col2im
+/// scatter-add without the materialized adjoint). Each output row is
+/// computed in thread-local scratch with the same per-element dot kernels
+/// as [`gemm_nt`], so the values handed to the sink are bitwise-identical
+/// to the rows [`gemm_nt`] would have stored, for a fixed kernel path at
+/// every thread count.
+pub fn gemm_nt_sink<S: NtRowSink>(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], sink: &S) {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), n * k, "B shape mismatch");
+    let _span = crate::obs::span(crate::obs::SpanKind::GemmRowSink);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let align = sink.row_align().max(1);
+    assert_eq!(m % align, 0, "row count {m} not a multiple of the sink alignment {align}");
+    let groups = m / align;
+    let threads = effective_threads(groups, m * k * n + sink.sink_work());
+    nt_sink_driver(active_kernel(), threads, m, k, n, align, a, b, sink);
+}
+
+fn nt_sink_driver<S: NtRowSink + ?Sized>(
+    kernel: Kernel,
+    threads: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    align: usize,
+    a: &[f32],
+    b: &[f32],
+    sink: &S,
+) {
+    let groups = m / align;
+    let t = threads.clamp(1, groups);
+    if t == 1 {
+        nt_sink_rows(kernel, k, n, 0, m, a, b, sink);
+        return;
+    }
+    // Same contiguous block split as `run_row_blocks`, but over *groups*
+    // so no task boundary ever falls inside a row-alignment group.
+    let (base, rem) = (groups / t, groups % t);
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(t);
+    let mut g0 = 0;
+    for i in 0..t {
+        let gs = base + usize::from(i < rem);
+        let (r0, rows) = (g0 * align, gs * align);
+        tasks.push(Box::new(move || nt_sink_rows(kernel, k, n, r0, rows, a, b, sink)));
+        g0 += gs;
+    }
+    pool::global().scope(tasks);
+}
+
+/// One contiguous row block of the sink driver: rows `r0 .. r0 + rows` of
+/// `A·Bᵀ`, each computed into thread-local scratch (grown once — zero
+/// steady-state allocations) and handed to the sink in ascending order.
+/// `k == 0` degenerates to all-zero rows, matching [`nt_driver`].
+fn nt_sink_rows<S: NtRowSink + ?Sized>(
+    kernel: Kernel,
+    k: usize,
+    n: usize,
+    r0: usize,
+    rows: usize,
+    a: &[f32],
+    b: &[f32],
+    sink: &S,
+) {
+    let _span = crate::obs::span_arg(crate::obs::SpanKind::GemmKernel, r0 as u32);
+    #[cfg(target_arch = "x86_64")]
+    debug_assert_kernel_supported(kernel);
+    NTROW.with(|cell| {
+        let mut rowv = cell.borrow_mut();
+        if rowv.len() < n {
+            rowv.resize(n, 0.0);
+        }
+        let row = &mut rowv[..n];
+        for r in r0..r0 + rows {
+            let arow = &a[r * k..(r + 1) * k];
+            for (j, cv) in row.iter_mut().enumerate() {
+                let brow = &b[j * k..(j + 1) * k];
+                *cv = match kernel {
+                    Kernel::Scalar => super::dot(arow, brow),
+                    // SAFETY: detection invariant debug-asserted at block
+                    // entry; both row slices are k elements.
+                    #[cfg(target_arch = "x86_64")]
+                    Kernel::Avx2 => unsafe { super::simd::dot(arow, brow) },
+                };
+            }
+            sink.consume_row(r, row);
+        }
+    });
 }
 
 #[cfg(test)]
@@ -970,7 +1144,7 @@ mod tests {
     struct GenNn;
 
     impl NnPanelSource for GenNn {
-        fn fill_panel(&self, r: usize, k0: usize, kc: usize, panel: &mut [f32]) {
+        fn fill_panel(&self, _kernel: Kernel, r: usize, k0: usize, kc: usize, panel: &mut [f32]) {
             for p in 0..kc {
                 for l in 0..MR {
                     panel[MR * p + l] = gen_elem(r + l, k0 + p);
@@ -1025,6 +1199,76 @@ mod tests {
                             assert_eq!(c_mat, c_src, "tn {m}x{k}x{n} {kern:?} t={t}");
                         })
                     });
+                }
+            }
+        }
+    }
+
+    /// A sink that stores rows into a plain C buffer through a raw
+    /// pointer — the minimal test double for [`gemm_nt_sink`]. Rows are
+    /// disjoint slices of `c`, and the driver calls `consume_row` once
+    /// per row, so no two tasks ever write the same element.
+    struct SliceSink {
+        ptr: *mut f32,
+        n: usize,
+        align: usize,
+    }
+
+    // SAFETY: `consume_row` writes only `c[r·n .. (r+1)·n]` and the
+    // driver hands each row index to exactly one task — writes from
+    // different threads never alias.
+    unsafe impl Sync for SliceSink {}
+
+    impl NtRowSink for SliceSink {
+        fn row_align(&self) -> usize {
+            self.align
+        }
+
+        fn consume_row(&self, r: usize, row: &[f32]) {
+            debug_assert_eq!(row.len(), self.n);
+            // SAFETY: see the `Sync` justification — `r` is in-range by
+            // the driver contract and each row is written exactly once.
+            let dst = unsafe { std::slice::from_raw_parts_mut(self.ptr.add(r * self.n), self.n) };
+            dst.copy_from_slice(row);
+        }
+
+        fn sink_work(&self) -> usize {
+            3 // arbitrary: exercises the grain accounting path
+        }
+    }
+
+    /// The sink driver hands out exactly the rows `gemm_nt` would have
+    /// stored — bitwise, per kernel path, at every thread budget and row
+    /// alignment (including `k = 0`, where rows are empty dots == 0.0).
+    #[test]
+    fn sink_driver_matches_gemm_nt_bitwise() {
+        let pool_max = pool::default_parallelism().max(3);
+        let mut rng = crate::rng::Pcg64::seed_from_u64(53);
+        for &(m, k, n) in &[(12usize, 37usize, 9usize), (20, 300, 7), (6, 0, 4), (5, 8, 1)] {
+            let a = rng.normal_vec(m * k, 0.0, 1.0);
+            let bt = rng.normal_vec(n * k, 0.0, 1.0);
+            let mut want = vec![0.0f32; m * n];
+            let mut got = vec![0.0f32; m * n];
+            // Alignments that divide every m above: 1 (no constraint) and
+            // a proper group size.
+            for align in [1usize, if m % 4 == 0 { 4 } else { m }] {
+                for &kern in &kernels_available() {
+                    for &t in &[1usize, 2, pool_max] {
+                        with_kernel(kern, || {
+                            pool::with_thread_budget(t, || {
+                                gemm_nt(m, k, n, &a, &bt, &mut want);
+                                got.fill(f32::NAN);
+                                let sink = SliceSink { ptr: got.as_mut_ptr(), n, align };
+                                gemm_nt_sink(m, k, n, &a, &bt, &sink);
+                            })
+                        });
+                        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                        assert_eq!(
+                            bits(&want),
+                            bits(&got),
+                            "{m}x{k}x{n} {kern:?} t={t} align={align}"
+                        );
+                    }
                 }
             }
         }

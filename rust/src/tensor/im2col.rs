@@ -5,9 +5,9 @@
 //!
 //! ```text
 //! cols = im2col(X)                      rows (b,oy,ox) × cols (ky,kx,ci)
-//! Y    = cols · W                       gemm_nn   (forward)
-//! dW   = colsᵀ · dY                     gemm_tn   (weight gradient)
-//! dX   = col2im(dY · Wᵀ)                gemm_nt + scatter-add (data gradient)
+//! Y    = cols · W                       gemm_nn      (forward)
+//! dW   = colsᵀ · dY                     gemm_tn      (weight gradient)
+//! dX   = col2im(dY · Wᵀ)                gemm_nt_sink (data gradient)
 //! ```
 //!
 //! with the weight stored row-major `(k·k·cin) × cout` — i.e. the patch
@@ -35,11 +35,25 @@
 //! **bitwise identical** to `im2col` + the materialized GEMM on every
 //! kernel path at every thread count — while the `cols` working set
 //! (O(B·Ho·Wo·K²·Cin) floats, written to and re-read from DRAM twice per
-//! training step) never exists. Only the *data* gradient keeps a
-//! materialized buffer: `col2im`'s scatter-add adjoint consumes the
-//! `dcols` GEMM output in full.
+//! training step) never exists.
+//!
+//! The *data* gradient is fused from the write side instead:
+//! [`Col2imSink`] implements the GEMM core's row-sink trait
+//! ([`NtRowSink`]), scatter-adding each finished `dY·Wᵀ` row straight
+//! into the NHWC gradient image as the `gemm_nt_sink` driver produces it
+//! — the same per-row traversal as [`col2im_add`], so sink-fused ==
+//! materialized bitwise, and the `dcols` adjoint buffer never exists
+//! either. Parallel safety comes from row alignment: the sink pins task
+//! boundaries to whole samples (`row_align = Ho·Wo`), so each gradient
+//! plane has exactly one writer accumulating in serial order.
+//!
+//! Interior panel gathers dispatch to an AVX2 interleave-transpose kernel
+//! ([`super::simd::gather_interleave4`]) on the same detected-kernel path
+//! as the GEMM microkernels; gathers are pure copies, so dispatch is
+//! bitwise-invisible.
 
-use super::gemm::{NnPanelSource, TnColSource, KC, MR};
+use super::gemm::{Kernel, NnPanelSource, NtRowSink, TnColSource, KC, MR};
+use std::marker::PhantomData;
 
 /// Geometry of one convolution as the packing module sees it.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -171,33 +185,43 @@ pub fn col2im_add(s: &ConvShape, n: usize, dcols: &[f32], dinput: &mut [f32]) {
     assert_eq!(dcols.len(), s.cols_len(n), "col2im dcols shape mismatch");
     assert_eq!(dinput.len(), s.in_len(n), "col2im dinput shape mismatch");
     let cw = s.col_width();
-    let kc = s.k * s.cin;
     let plane = s.h_in * s.w_in * s.cin;
     for b in 0..n {
         let dimage = &mut dinput[b * plane..(b + 1) * plane];
         for oy in 0..s.h_out {
             for ox in 0..s.w_out {
                 let r = (b * s.h_out + oy) * s.w_out + ox;
-                let row = &dcols[r * cw..(r + 1) * cw];
-                let ix0 = (ox * s.stride) as isize - s.pad as isize;
-                let kx_lo = ((-ix0).max(0) as usize).min(s.k);
-                let kx_hi = ((s.w_in as isize - ix0).max(0) as usize).min(s.k);
-                if kx_lo >= kx_hi {
-                    continue;
-                }
-                for ky in 0..s.k {
-                    let iy = (oy * s.stride + ky) as isize - s.pad as isize;
-                    if iy < 0 || iy >= s.h_in as isize {
-                        continue;
-                    }
-                    let ix_lo = (ix0 + kx_lo as isize) as usize;
-                    let dst0 = (iy as usize * s.w_in + ix_lo) * s.cin;
-                    let src = &row[ky * kc + kx_lo * s.cin..ky * kc + kx_hi * s.cin];
-                    for (d, &v) in dimage[dst0..dst0 + src.len()].iter_mut().zip(src) {
-                        *d += v;
-                    }
-                }
+                col2im_row_add(s, oy, ox, &dcols[r * cw..(r + 1) * cw], dimage);
             }
+        }
+    }
+}
+
+/// Scatter-add one patch-matrix gradient row (output position `(oy, ox)`)
+/// onto its sample's NHWC gradient plane — the per-row core shared by
+/// [`col2im_add`] and the fused [`Col2imSink`] epilogue. One contiguous
+/// `+=` slab per in-bounds `ky` row, exactly the adjoint of the im2col
+/// slab copy; sharing the body is what makes sink-fused == materialized
+/// bitwise by construction.
+#[inline]
+fn col2im_row_add(s: &ConvShape, oy: usize, ox: usize, row: &[f32], dimage: &mut [f32]) {
+    let kc = s.k * s.cin;
+    let ix0 = (ox * s.stride) as isize - s.pad as isize;
+    let kx_lo = ((-ix0).max(0) as usize).min(s.k);
+    let kx_hi = ((s.w_in as isize - ix0).max(0) as usize).min(s.k);
+    if kx_lo >= kx_hi {
+        return;
+    }
+    for ky in 0..s.k {
+        let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+        if iy < 0 || iy >= s.h_in as isize {
+            continue;
+        }
+        let ix_lo = (ix0 + kx_lo as isize) as usize;
+        let dst0 = (iy as usize * s.w_in + ix_lo) * s.cin;
+        let src = &row[ky * kc + kx_lo * s.cin..ky * kc + kx_hi * s.cin];
+        for (d, &v) in dimage[dst0..dst0 + src.len()].iter_mut().zip(src) {
+            *d += v;
         }
     }
 }
@@ -272,18 +296,78 @@ impl<'a> ImplicitCols<'a> {
             ky += 1;
         }
     }
+
+    /// Gather `run` *adjacent* patch columns `i .. i + run` — all within
+    /// one `(ky, kx)` channel run (`i % cin + run ≤ cin`) — into
+    /// column-major `out` (`out[j·rows .. (j+1)·rows]` = column `i + j`).
+    /// Adjacent `ci` columns of one `(ky, kx)` sit one float apart at
+    /// every output position, so the whole run is served by a single
+    /// strided walk reading each `run`-wide pixel slab once, instead of
+    /// `run` independent gathers re-touching the same cache lines. Pure
+    /// copies in the same per-column order as [`TnColSource::fill_col`] —
+    /// grouping is bitwise-invisible (pinned by tests).
+    fn fill_col_run(&self, i: usize, run: usize, rows: usize, out: &mut [f32]) {
+        let s = &self.s;
+        let cin = s.cin;
+        let (ky, rem) = (i / (s.k * cin), i % (s.k * cin));
+        let (kx, ci) = (rem / cin, rem % cin);
+        debug_assert!(run >= 1 && ci + run <= cin, "run must stay inside one (ky, kx) ci-run");
+        debug_assert_eq!(rows, s.rows(self.n));
+        debug_assert_eq!(out.len(), run * rows);
+        let plane = s.h_in * s.w_in * cin;
+        // Valid ox window: 0 ≤ ox·stride + kx − pad < w_in.
+        let t = kx as isize - s.pad as isize;
+        let ox_lo = if t >= 0 { 0 } else { ((-t) as usize + s.stride - 1) / s.stride };
+        let ox_lo = ox_lo.min(s.w_out);
+        let ox_hi = if (s.w_in as isize) > t {
+            (((s.w_in as isize - 1 - t) as usize) / s.stride + 1).min(s.w_out)
+        } else {
+            0
+        };
+        for b in 0..self.n {
+            let image = &self.input[b * plane..(b + 1) * plane];
+            for oy in 0..s.h_out {
+                let r0 = (b * s.h_out + oy) * s.w_out;
+                let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+                if iy < 0 || iy >= s.h_in as isize || ox_lo >= ox_hi {
+                    for j in 0..run {
+                        out[j * rows + r0..j * rows + r0 + s.w_out].fill(0.0);
+                    }
+                    continue;
+                }
+                for j in 0..run {
+                    let dst = &mut out[j * rows + r0..j * rows + r0 + s.w_out];
+                    dst[..ox_lo].fill(0.0);
+                    dst[ox_hi..].fill(0.0);
+                }
+                let row0 = iy as usize * s.w_in * cin;
+                let mut src =
+                    (row0 as isize + ((ox_lo * s.stride) as isize + t) * cin as isize) as usize + ci;
+                for ox in ox_lo..ox_hi {
+                    let vals = &image[src..src + run];
+                    for (j, &v) in vals.iter().enumerate() {
+                        out[j * rows + r0 + ox] = v;
+                    }
+                    src += s.stride * cin;
+                }
+            }
+        }
+    }
 }
 
 impl NnPanelSource for ImplicitCols<'_> {
-    fn fill_panel(&self, r: usize, k0: usize, kc: usize, panel: &mut [f32]) {
+    fn fill_panel(&self, kernel: Kernel, r: usize, k0: usize, kc: usize, panel: &mut [f32]) {
         let s = &self.s;
         // Interior fast path (the bulk of a conv's panels): all `MR` rows
         // share `(b, oy)` and every receptive field is fully in-image —
         // then the requested `[k0, k0+kc)` window is one pure strided
         // gather, one pass, no tmp row. Row `r + l` sees the window
         // shifted by `l·stride` source columns, so lane `l` reads at
-        // `base + u + l·stride·cin`. Pure copies, so bitwise-identical to
-        // the general path below (pinned by tests).
+        // `base + u + l·stride·cin`. The gather dispatches on the
+        // driver-resolved `kernel`: the AVX2 interleave-transpose kernel
+        // when available, the scalar quad loop otherwise. Pure copies on
+        // either path, so dispatch is bitwise-invisible and both are
+        // bitwise-identical to the general path below (pinned by tests).
         {
             let hw = s.h_out * s.w_out;
             let rem = r % hw;
@@ -304,17 +388,34 @@ impl NnPanelSource for ImplicitCols<'_> {
                 let kcrow = s.k * cin;
                 let c_end = k0 + kc;
                 let mut ky = k0 / kcrow;
+                #[cfg(target_arch = "x86_64")]
+                super::gemm::debug_assert_kernel_supported(kernel);
                 while ky * kcrow < c_end {
                     let row0 = ky * kcrow;
                     let lo = k0.max(row0);
                     let hi = c_end.min(row0 + kcrow);
                     let base = &image[((iy0 + ky) * s.w_in + ix0) * cin + (lo - row0)..];
                     let pk = &mut panel[MR * (lo - k0)..MR * (hi - k0)];
-                    for (u, quad) in pk.chunks_exact_mut(MR).enumerate() {
-                        quad[0] = base[u];
-                        quad[1] = base[u + lstep];
-                        quad[2] = base[u + 2 * lstep];
-                        quad[3] = base[u + 3 * lstep];
+                    match kernel {
+                        Kernel::Scalar => {
+                            for (u, quad) in pk.chunks_exact_mut(MR).enumerate() {
+                                quad[0] = base[u];
+                                quad[1] = base[u + lstep];
+                                quad[2] = base[u + 2 * lstep];
+                                quad[3] = base[u + 3 * lstep];
+                            }
+                        }
+                        // SAFETY: `Avx2` is only constructed after feature
+                        // detection (debug-asserted above); the interior
+                        // check guarantees lane 3's ky row is fully
+                        // in-image, so `base` (a to-end-of-plane suffix)
+                        // extends at least `(hi−lo) + 3·lstep` elements,
+                        // and `pk` is exactly `MR·(hi−lo)` — the kernel's
+                        // documented bounds (debug-asserted there too).
+                        #[cfg(target_arch = "x86_64")]
+                        Kernel::Avx2 => unsafe {
+                            super::simd::gather_interleave4(base, lstep, hi - lo, pk);
+                        },
                     }
                     ky += 1;
                 }
@@ -348,40 +449,22 @@ impl TnColSource for ImplicitCols<'_> {
     /// the padding border.
     fn fill_col(&self, i: usize, col: &mut [f32]) {
         let _span = crate::obs::span_arg(crate::obs::SpanKind::Im2colGather, i as u32);
-        let s = &self.s;
-        let cin = s.cin;
-        let (ky, rem) = (i / (s.k * cin), i % (s.k * cin));
-        let (kx, ci) = (rem / cin, rem % cin);
-        let plane = s.h_in * s.w_in * cin;
-        debug_assert_eq!(col.len(), s.rows(self.n));
-        // Valid ox window: 0 ≤ ox·stride + kx − pad < w_in.
-        let t = kx as isize - s.pad as isize;
-        let ox_lo = if t >= 0 { 0 } else { ((-t) as usize + s.stride - 1) / s.stride };
-        let ox_lo = ox_lo.min(s.w_out);
-        let ox_hi = if (s.w_in as isize) > t {
-            (((s.w_in as isize - 1 - t) as usize) / s.stride + 1).min(s.w_out)
-        } else {
-            0
-        };
-        for b in 0..self.n {
-            let image = &self.input[b * plane..(b + 1) * plane];
-            for oy in 0..s.h_out {
-                let dst = &mut col[((b * s.h_out) + oy) * s.w_out..][..s.w_out];
-                let iy = (oy * s.stride + ky) as isize - s.pad as isize;
-                if iy < 0 || iy >= s.h_in as isize || ox_lo >= ox_hi {
-                    dst.fill(0.0);
-                    continue;
-                }
-                dst[..ox_lo].fill(0.0);
-                let row0 = iy as usize * s.w_in * cin;
-                let mut src =
-                    (row0 as isize + ((ox_lo * s.stride) as isize + t) * cin as isize) as usize + ci;
-                for v in dst[ox_lo..ox_hi].iter_mut() {
-                    *v = image[src];
-                    src += s.stride * cin;
-                }
-                dst[ox_hi..].fill(0.0);
-            }
+        let rows = col.len();
+        self.fill_col_run(i, 1, rows, col);
+    }
+
+    /// Grouped gather for the driver's `MR`-row batches: split the group
+    /// at `(ky, kx)` channel-run boundaries and serve each maximal
+    /// adjacent-`ci` run with one shared strided walk ([`Self::fill_col_run`]).
+    fn fill_cols(&self, i0: usize, g: usize, k: usize, cols: &mut [f32]) {
+        let _span = crate::obs::span_arg(crate::obs::SpanKind::Im2colGather, i0 as u32);
+        let cin = self.s.cin;
+        let mut j = 0;
+        while j < g {
+            let i = i0 + j;
+            let run = (cin - i % cin).min(g - j);
+            self.fill_col_run(i, run, k, &mut cols[j * k..(j + run) * k]);
+            j += run;
         }
     }
 
@@ -390,10 +473,93 @@ impl TnColSource for ImplicitCols<'_> {
     }
 }
 
+/// Fused col2im epilogue: an [`NtRowSink`] that scatter-adds each
+/// finished `dY·Wᵀ` row of the data-gradient GEMM straight onto the NHWC
+/// gradient image — `dX = col2im(dY·Wᵀ)` without the `dcols` adjoint ever
+/// existing (module docs). Row `r` of that GEMM is the patch-gradient of
+/// output position `(b, oy, ox) = (r / HoWo, …)`; consuming it is exactly
+/// one [`col2im_row_add`] onto sample `b`'s plane.
+///
+/// # Parallel safety (single writer)
+///
+/// [`row_align`](NtRowSink::row_align) is `Ho·Wo`, so the sink driver
+/// never splits one sample's rows across tasks: every row landing on
+/// plane `b` is consumed by one task, in ascending row order — each
+/// `dinput` element has a single writer accumulating in the serial
+/// traversal order, which is what makes parallel sink-fused bitwise-equal
+/// to serial and to the materialized [`col2im_add`] path (pinned by the
+/// conv parity tests).
+pub struct Col2imSink<'a> {
+    s: ConvShape,
+    n: usize,
+    dinput: *mut f32,
+    len: usize,
+    /// The sink logically holds the `&'a mut [f32]` it was built from;
+    /// the raw pointer only exists so disjoint-plane writes can happen
+    /// through a shared `&self` from pool tasks.
+    _borrow: PhantomData<&'a mut [f32]>,
+}
+
+// SAFETY: the only mutation path is `consume_row`, which writes solely to
+// sample `b = r / (h_out·w_out)`'s gradient plane. The driver contract
+// (row_align = h_out·w_out, contiguous ascending blocks cut on group
+// boundaries) hands every row of a given sample to exactly one task, so
+// writes from different threads target disjoint planes and never alias.
+unsafe impl Sync for Col2imSink<'_> {}
+
+impl<'a> Col2imSink<'a> {
+    pub fn new(s: &ConvShape, n: usize, dinput: &'a mut [f32]) -> Self {
+        assert_eq!(dinput.len(), s.in_len(n), "col2im sink dinput shape mismatch");
+        Col2imSink { s: *s, n, dinput: dinput.as_mut_ptr(), len: dinput.len(), _borrow: PhantomData }
+    }
+}
+
+impl NtRowSink for Col2imSink<'_> {
+    fn row_align(&self) -> usize {
+        self.s.h_out * self.s.w_out
+    }
+
+    fn consume_row(&self, r: usize, row: &[f32]) {
+        let s = &self.s;
+        let hw = s.h_out * s.w_out;
+        let (b, rem) = (r / hw, r % hw);
+        let (oy, ox) = (rem / s.w_out, rem % s.w_out);
+        let plane = s.h_in * s.w_in * s.cin;
+        debug_assert_eq!(row.len(), s.col_width());
+        debug_assert!(r < s.rows(self.n) && (b + 1) * plane <= self.len);
+        // SAFETY: bounds are debug-asserted above (`r` is in range by the
+        // driver contract, so plane `b` lies inside the borrowed slice),
+        // and the `Sync` justification makes this task the plane's only
+        // writer — no aliasing `&mut` exists.
+        let dimage = unsafe { std::slice::from_raw_parts_mut(self.dinput.add(b * plane), plane) };
+        col2im_row_add(s, oy, ox, row, dimage);
+    }
+
+    fn sink_work(&self) -> usize {
+        // Each patch-gradient element is read once and scatter-added with
+        // window bookkeeping — same ~2-units-per-element weight as the
+        // gather side's pack_work.
+        2 * self.s.cols_len(self.n)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::testing::check;
+
+    /// Every dispatch path the host can execute (the drivers resolve the
+    /// kernel and pass it into the source; here we sweep it directly).
+    fn kernels_available() -> Vec<Kernel> {
+        let mut v = vec![Kernel::Scalar];
+        #[cfg(target_arch = "x86_64")]
+        {
+            if crate::tensor::gemm::detected_kernel() == Kernel::Avx2 {
+                v.push(Kernel::Avx2);
+            }
+        }
+        v
+    }
 
     /// Index-at-a-time reference with explicit bounds tests per element.
     fn im2col_naive(s: &ConvShape, n: usize, input: &[f32]) -> Vec<f32> {
@@ -506,6 +672,32 @@ mod tests {
         assert_eq!(dx, vec![11.0; 4]);
     }
 
+    /// Feeding the sink one adjoint row at a time (exactly what the
+    /// `gemm_nt_sink` driver does) must reproduce the materialized
+    /// [`col2im_add`] bitwise — including on a warm (accumulating)
+    /// gradient buffer, which the conv backward's projection-shortcut
+    /// fold relies on.
+    #[test]
+    fn sink_rows_equal_materialized_col2im_bitwise() {
+        check(40, |g| {
+            let s = random_shape(g);
+            let n = g.usize_in(1..=2);
+            let dcols: Vec<f32> = (0..s.cols_len(n)).map(|_| g.normal_f32()).collect();
+            let warm: Vec<f32> = (0..s.in_len(n)).map(|_| g.normal_f32()).collect();
+            let mut want = warm.clone();
+            col2im_add(&s, n, &dcols, &mut want);
+            let mut got = warm;
+            let cw = s.col_width();
+            let sink = Col2imSink::new(&s, n, &mut got);
+            for r in 0..s.rows(n) {
+                sink.consume_row(r, &dcols[r * cw..(r + 1) * cw]);
+            }
+            assert_eq!(sink.row_align(), s.h_out * s.w_out);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&want), bits(&got), "shape {s:?} n={n}");
+        });
+    }
+
     #[test]
     fn implicit_source_reproduces_materialized_cols_exactly() {
         // Every access pattern the GEMM drivers use — row windows, MR-row
@@ -531,20 +723,24 @@ mod tests {
                 src.fill_row(r, k0, kc, &mut row);
                 assert_eq!(row, cols[r * cw + k0..r * cw + k0 + kc], "row {r} [{k0}, {kc})");
             }
-            // Interleaved MR-row panels — the microkernel fill.
+            // Interleaved MR-row panels — the microkernel fill, on every
+            // dispatch path the host has (the AVX2 gather is a pure copy,
+            // so AVX2 == scalar == materialized exactly).
             if rows >= MR {
                 let r = g.usize_in(0..=rows - MR);
                 let k0 = g.usize_in(0..=cw - 1);
                 let kc = g.usize_in(1..=(cw - k0).min(KC));
-                let mut panel = vec![0.0f32; MR * kc];
-                src.fill_panel(r, k0, kc, &mut panel);
-                for p in 0..kc {
-                    for l in 0..MR {
-                        assert_eq!(
-                            panel[MR * p + l],
-                            cols[(r + l) * cw + k0 + p],
-                            "panel r={r} l={l} p={p}"
-                        );
+                for &kern in &kernels_available() {
+                    let mut panel = vec![0.0f32; MR * kc];
+                    src.fill_panel(kern, r, k0, kc, &mut panel);
+                    for p in 0..kc {
+                        for l in 0..MR {
+                            assert_eq!(
+                                panel[MR * p + l],
+                                cols[(r + l) * cw + k0 + p],
+                                "panel r={r} l={l} p={p} {kern:?}"
+                            );
+                        }
                     }
                 }
             }
@@ -556,7 +752,58 @@ mod tests {
                     assert_eq!(v, cols[r * cw + i], "col {i} row {r}");
                 }
             }
+            // Grouped columns — the tn driver's MR-batch fill, at offsets
+            // that cross (ky, kx) channel-run boundaries.
+            for _ in 0..4 {
+                let i0 = g.usize_in(0..=cw - 1);
+                let gsz = g.usize_in(1..=(cw - i0).min(MR + 2));
+                let mut grouped = vec![7.0f32; gsz * rows];
+                TnColSource::fill_cols(&src, i0, gsz, rows, &mut grouped);
+                for j in 0..gsz {
+                    for (r, &v) in grouped[j * rows..(j + 1) * rows].iter().enumerate() {
+                        assert_eq!(v, cols[r * cw + i0 + j], "cols i0={i0} j={j} row {r}");
+                    }
+                }
+            }
         });
+    }
+
+    /// Dedicated interior-fast-path coverage: the random shapes above have
+    /// per-ky spans of at most 9 floats, which exercises mostly the scalar
+    /// tail of the AVX2 gather. A 30-channel shape (kcrow = 90) drives the
+    /// 8-wide transpose body for real, across strides, KC-crossing column
+    /// windows, and every panel row — each kernel pinned exactly equal to
+    /// the materialized patch matrix.
+    #[test]
+    fn interior_panel_gather_is_exact_across_kernels_at_wide_cin() {
+        for &(stride, h_in, w_in) in &[(1usize, 6usize, 10usize), (2, 7, 16)] {
+            let s = ConvShape::new(30, 2, 3, stride, 1, h_in, w_in);
+            let n = 2;
+            let input: Vec<f32> = (0..s.in_len(n)).map(|i| (i as f32 * 0.11).sin()).collect();
+            let cols = im2col_naive(&s, n, &input);
+            let src = ImplicitCols::new(&s, n, &input);
+            let cw = s.col_width(); // 270 — crosses KC = 256
+            let rows = s.rows(n);
+            let windows =
+                [(0usize, cw.min(KC)), (cw - 100, 100), (37, 151), (KC, cw - KC), (89, 2)];
+            for r in 0..=rows - MR {
+                for &(k0, kc) in &windows {
+                    for &kern in &kernels_available() {
+                        let mut panel = vec![f32::NAN; MR * kc];
+                        src.fill_panel(kern, r, k0, kc, &mut panel);
+                        for p in 0..kc {
+                            for l in 0..MR {
+                                assert_eq!(
+                                    panel[MR * p + l].to_bits(),
+                                    cols[(r + l) * cw + k0 + p].to_bits(),
+                                    "stride={stride} r={r} k0={k0} p={p} l={l} {kern:?}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

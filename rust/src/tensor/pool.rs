@@ -337,9 +337,11 @@ pub fn with_thread_budget<R>(n: usize, f: impl FnOnce() -> R) -> R {
 /// Minimum work units per thread before a parallel driver should fan out —
 /// below this, pool dispatch overhead beats the parallel win. A "work
 /// unit" is one multiply-accumulate for plain GEMM calls; panel-*sourced*
-/// calls (fused im2col) add their generation cost on top, so a call whose
-/// on-the-fly packing dominates its FLOPs still crosses the grain at the
-/// right total size.
+/// calls (fused im2col) add their generation cost on top, and row-*sink*
+/// calls (the fused col2im epilogue) add their write-side scatter cost
+/// (`NtRowSink::sink_work`), so a call whose on-the-fly packing or
+/// scatter-add dominates its FLOPs still crosses the grain at the right
+/// total size.
 pub const PAR_GRAIN_WORK: usize = 128 * 1024;
 
 /// How many row blocks a parallel driver working `rows` output rows and

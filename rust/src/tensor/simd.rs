@@ -224,6 +224,67 @@ pub unsafe fn tn_fma4(s: [f32; 4], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32
     }
 }
 
+/// Interleaved 4-lane strided gather for the fused im2col interior fast
+/// path: `panel[4·u + l] = src[u + l·lstep]` for `u < span`, `l < 4`.
+///
+/// This is the transpose of four contiguous 8-wide loads: each iteration
+/// reads 8 consecutive pixels from four image rows spaced `lstep` apart
+/// and stores them as eight MR=4 quads, replacing the scalar
+/// strided-quad loop in `ImplicitCols::fill_panel`. It is a *pure copy*
+/// — no arithmetic, no rounding — so its output is bitwise identical to
+/// the scalar gather by construction (pinned in tests below and in the
+/// im2col parity matrix).
+///
+/// # Safety
+///
+/// AVX2 must be verified by the caller (see [`row_axpy`]; this kernel
+/// needs no FMA but is only dispatched behind the combined avx2+fma
+/// detection gate). Requires `src.len() >= span + 3·lstep` and
+/// `panel.len() >= 4·span` (both debug-asserted); all loads/stores are
+/// unaligned-safe and the tail is scalar checked indexing.
+// SAFETY: detection-gated by the caller; the vector body runs for
+// `u + 8 <= span`, so the furthest load touches
+// `src[u + 3·lstep + 7] < span + 3·lstep <= src.len()` and the furthest
+// store `panel[4·u + 31] < 4·span <= panel.len()`; the tail uses checked
+// indexing.
+#[target_feature(enable = "avx2")]
+pub unsafe fn gather_interleave4(src: &[f32], lstep: usize, span: usize, panel: &mut [f32]) {
+    debug_assert!(src.len() >= span + 3 * lstep);
+    debug_assert!(panel.len() >= 4 * span);
+    let n8 = span - span % 8;
+    let mut u = 0;
+    while u < n8 {
+        let p0 = _mm256_loadu_ps(src.as_ptr().add(u));
+        let p1 = _mm256_loadu_ps(src.as_ptr().add(u + lstep));
+        let p2 = _mm256_loadu_ps(src.as_ptr().add(u + 2 * lstep));
+        let p3 = _mm256_loadu_ps(src.as_ptr().add(u + 3 * lstep));
+        // 4×8 interleave transpose: unpack pairs rows, shuffle builds the
+        // per-u quads within each 128-bit lane, permute2f128 serializes
+        // the lanes back into ascending-u order.
+        let t0 = _mm256_unpacklo_ps(p0, p1); // [r0₀ r1₀ r0₁ r1₁ | r0₄ r1₄ r0₅ r1₅]
+        let t1 = _mm256_unpackhi_ps(p0, p1); // [r0₂ r1₂ r0₃ r1₃ | r0₆ r1₆ r0₇ r1₇]
+        let t2 = _mm256_unpacklo_ps(p2, p3);
+        let t3 = _mm256_unpackhi_ps(p2, p3);
+        let v0 = _mm256_shuffle_ps::<0x44>(t0, t2); // quads u+0, u+4
+        let v1 = _mm256_shuffle_ps::<0xEE>(t0, t2); // quads u+1, u+5
+        let v2 = _mm256_shuffle_ps::<0x44>(t1, t3); // quads u+2, u+6
+        let v3 = _mm256_shuffle_ps::<0xEE>(t1, t3); // quads u+3, u+7
+        let out = panel.as_mut_ptr().add(4 * u);
+        _mm256_storeu_ps(out, _mm256_permute2f128_ps::<0x20>(v0, v1));
+        _mm256_storeu_ps(out.add(8), _mm256_permute2f128_ps::<0x20>(v2, v3));
+        _mm256_storeu_ps(out.add(16), _mm256_permute2f128_ps::<0x31>(v0, v1));
+        _mm256_storeu_ps(out.add(24), _mm256_permute2f128_ps::<0x31>(v2, v3));
+        u += 8;
+    }
+    while u < span {
+        panel[4 * u] = src[u];
+        panel[4 * u + 1] = src[u + lstep];
+        panel[4 * u + 2] = src[u + 2 * lstep];
+        panel[4 * u + 3] = src[u + 3 * lstep];
+        u += 1;
+    }
+}
+
 /// Inner product with one 8-lane FMA accumulator (the `gemm_nt` kernel).
 /// Fixed reduction order: 8-lane FMA sweep, pairwise lane sum, scalar
 /// tail — deterministic for a fixed length.
@@ -319,5 +380,31 @@ mod tests {
             }
         }
         assert_eq!(grouped, single);
+    }
+
+    #[test]
+    fn interleave_gather_matches_scalar_quads_bitwise() {
+        if !detected() {
+            return;
+        }
+        // Pure copy: the transpose kernel must reproduce the scalar
+        // strided-quad gather bit-for-bit, across sub-vector spans,
+        // vector-exact spans, tails, and strides narrower than a vector
+        // (overlapping loads).
+        for &(span, lstep) in &[(1usize, 1usize), (7, 3), (8, 5), (13, 2), (24, 30), (90, 6)] {
+            let src: Vec<f32> = (0..span + 3 * lstep).map(|i| (i as f32 * 0.13).sin()).collect();
+            let mut got = vec![f32::NAN; 4 * span];
+            let mut want = vec![f32::NAN; 4 * span];
+            // SAFETY: detection checked above; src has span + 3·lstep
+            // elements and the panel has 4·span.
+            unsafe { gather_interleave4(&src, lstep, span, &mut got) };
+            for u in 0..span {
+                for l in 0..4 {
+                    want[4 * u + l] = src[u + l * lstep];
+                }
+            }
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&got), bits(&want), "span={span} lstep={lstep}");
+        }
     }
 }

@@ -22,7 +22,9 @@
 use regtopk::config::TrainConfig;
 use regtopk::coordinator::{train_with_opts, RunOpts};
 use regtopk::data::linreg::{LinRegDataset, LinRegGenConfig};
-use regtopk::grad::LinRegGrad;
+use regtopk::data::{ImageDataset, ImageGenConfig};
+use regtopk::grad::{ConvGrad, LinRegGrad};
+use regtopk::models::conv::ConvConfig;
 use regtopk::rng::Pcg64;
 use regtopk::sparsify::SparsifierKind;
 use regtopk::obs::{self, RecorderConfig};
@@ -32,6 +34,15 @@ use std::sync::Arc;
 #[global_allocator]
 static ALLOC: CountingAlloc = CountingAlloc;
 
+/// The allocation counter is process-wide, so the tests in this binary
+/// must not overlap (a concurrent test's warm-up would show up as a
+/// steady-state delta here).
+static ALLOC_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn serialized() -> std::sync::MutexGuard<'static, ()> {
+    ALLOC_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 const WORKERS: usize = 3;
 const DIM: usize = 32;
 const ITERS: usize = 48;
@@ -40,6 +51,7 @@ const STEADY: usize = 8;
 
 #[test]
 fn threaded_executor_steady_state_rounds_do_not_allocate() {
+    let _g = serialized();
     // Run WITH the flight recorder installed: its pre-allocated rings and
     // reserved trace/report stores are part of the zero-alloc contract —
     // span pushes, slot claims, and round-boundary drains must all stay
@@ -98,4 +110,63 @@ fn threaded_executor_steady_state_rounds_do_not_allocate() {
     assert_eq!(rec.dropped_events(), 0, "sized buffers must not drop at this scale");
     let (_, reports) = rec.snapshot();
     assert_eq!(reports.len(), ITERS, "one RoundReport per training round");
+}
+
+/// The conv backward is now pack-free in every direction (no `dcols`
+/// adjoint buffer; the data gradient scatter-adds through the col2im sink
+/// epilogue), so a ConvGrad training round must hit the same zero-alloc
+/// steady state as the linreg one — every per-round buffer lives in
+/// [`ConvNet`] / [`ConvGrad`] scratch grown once during warm-up.
+#[test]
+fn conv_backward_steady_state_rounds_do_not_allocate() {
+    let _g = serialized();
+    const CITERS: usize = 24;
+    let ccfg = ConvConfig {
+        channels: 2,
+        height: 5,
+        width: 5,
+        classes: 3,
+        base_width: 2,
+        blocks: [1, 1, 1, 1],
+    };
+    let icfg = ImageGenConfig {
+        classes: ccfg.classes,
+        channels: ccfg.channels,
+        height: ccfg.height,
+        width: ccfg.width,
+        per_worker: 16,
+        workers: 2,
+        ..Default::default()
+    };
+    let data = Arc::new(ImageDataset::generate(&icfg, &mut Pcg64::seed_from_u64(21)));
+    let dim = ccfg.dim();
+    let cfg = TrainConfig {
+        workers: 2,
+        dim,
+        sparsity: 0.25,
+        sparsifier: SparsifierKind::RegTopK { mu: 1.0, y: 1.0 },
+        lr: 0.01,
+        iters: CITERS,
+        ..Default::default()
+    };
+    let mut counts = vec![0u64; CITERS];
+    let result = train_with_opts(
+        &cfg,
+        vec![0.0; dim],
+        ConvGrad::all(&data, ccfg, 4, 9),
+        &RunOpts { threaded: true },
+        &mut |s| counts[s.t] = alloc_count(),
+    )
+    .expect("threaded conv training run");
+    assert_eq!(result.iters, CITERS);
+    for t in CITERS - STEADY..CITERS {
+        let delta = counts[t] - counts[t - 1];
+        assert_eq!(
+            delta, 0,
+            "conv round {t} performed {delta} heap allocation(s); the \
+             pack-free backward must not allocate once warm (warm-up \
+             counts: {:?})",
+            &counts[..CITERS - STEADY]
+        );
+    }
 }

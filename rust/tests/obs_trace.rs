@@ -11,12 +11,16 @@
 use regtopk::config::TrainConfig;
 use regtopk::coordinator::cluster::{run_linreg_cluster, ClusterOpts};
 use regtopk::coordinator::fault::{FaultConfig, FaultPlan};
-use regtopk::coordinator::{run_linreg_on, RunOpts};
+use regtopk::coordinator::{run_linreg_on, train_with_opts, RunOpts};
 use regtopk::data::linreg::LinRegGenConfig;
+use regtopk::data::{ImageDataset, ImageGenConfig};
+use regtopk::grad::ConvGrad;
 use regtopk::metrics::json::Json;
+use regtopk::models::conv::ConvConfig;
 use regtopk::obs::{self, Recorder, RecorderConfig};
+use regtopk::rng::Pcg64;
 use regtopk::sparsify::SparsifierKind;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Worker-side kinds spanning the selection families: plain magnitude
 /// top-k, the paper's regularized policy, and the dense baseline.
@@ -194,6 +198,70 @@ fn real_run_trace_exports_valid_chrome_json_and_jsonl() {
     // Prometheus dump carries the cumulative round count.
     let prom = obs::export::prometheus_text(rec);
     assert!(prom.contains(&format!("regtopk_rounds_reported {}\n", cfg.iters)));
+}
+
+/// The conv gradient now runs its data gradient through the col2im sink
+/// epilogue ([`regtopk::tensor::gemm::gemm_nt_sink`]). Recorder-on must
+/// stay bitwise identical to recorder-off through that path, and the new
+/// `gemm_row_sink` span kind must actually show up in the exported trace
+/// (i.e. the sink driver is really the one running the backward).
+#[test]
+fn conv_training_through_sink_epilogue_is_bitwise_identical_with_recorder_on() {
+    let _g = serialized();
+    let ccfg = ConvConfig {
+        channels: 2,
+        height: 5,
+        width: 5,
+        classes: 4,
+        base_width: 2,
+        blocks: [1, 1, 1, 1],
+    };
+    let icfg = ImageGenConfig {
+        classes: ccfg.classes,
+        channels: ccfg.channels,
+        height: ccfg.height,
+        width: ccfg.width,
+        per_worker: 24,
+        workers: 2,
+        ..Default::default()
+    };
+    let data = Arc::new(ImageDataset::generate(&icfg, &mut Pcg64::seed_from_u64(31)));
+    let dim = ccfg.dim();
+    let cfg = TrainConfig {
+        workers: 2,
+        dim,
+        sparsity: 0.25,
+        sparsifier: SparsifierKind::RegTopK { mu: 1.0, y: 1.0 },
+        lr: 0.01,
+        iters: 8,
+        seed: 13,
+        ..Default::default()
+    };
+    let run = |probe: &mut dyn FnMut(regtopk::coordinator::IterStats<'_>)| {
+        train_with_opts(
+            &cfg,
+            vec![0.0; dim],
+            ConvGrad::all(&data, ccfg, 6, 5),
+            &RunOpts { threaded: true },
+            probe,
+        )
+        .unwrap()
+    };
+    let base = run(&mut |_| {});
+    let (traced, rec) = recorded(RecorderConfig::default(), || run(&mut |_| {}));
+    assert_eq!(bits(&base.theta), bits(&traced.theta), "θ bits through the sink epilogue");
+    assert_eq!(base.comm, traced.comm, "comm ledger");
+    // The sink driver span is present in the chrome export by name.
+    let text = obs::export::chrome_trace(rec).to_string();
+    let doc = Json::parse(&text).expect("trace parses");
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    let has_sink = events.iter().any(|e| {
+        e.get("ph").unwrap().as_str() == Some("X")
+            && e.get("name").unwrap().as_str() == Some("gemm_row_sink")
+    });
+    assert!(has_sink, "no gemm_row_sink spans recorded in the conv backward");
+    let (_, reports) = rec.snapshot();
+    assert_eq!(reports.len(), cfg.iters, "one report per round");
 }
 
 #[test]

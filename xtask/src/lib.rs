@@ -669,6 +669,21 @@ mod tests {
     }
 
     #[test]
+    fn safety_comment_rule_covers_unsafe_trait_impls() {
+        // The site class introduced by the fused row sinks: an
+        // `unsafe impl Sync` whose soundness rests on a driver-level
+        // disjointness contract must state it like any other unsafe site.
+        let bad = "struct Sink(*mut f32);\nunsafe impl Sync for Sink {}\n";
+        let v = lint_file("rust/src/tensor/sink_bad.rs", bad);
+        assert!(
+            v.iter().any(|v| v.rule == "safety-comment" && v.line == 2),
+            "expected safety-comment violation on the unsafe impl, got {v:?}"
+        );
+        let good = "struct Sink(*mut f32);\n// SAFETY: tasks write disjoint row groups, so shared\n// `&Sink` access never aliases a mutation.\nunsafe impl Sync for Sink {}\n";
+        assert!(lint_file("rust/src/tensor/sink_ok.rs", good).is_empty());
+    }
+
+    #[test]
     fn unsafe_in_comment_or_string_is_ignored() {
         let src = "// this mentions unsafe code but has none\nfn f() -> &'static str {\n    \"unsafe { }\"\n}\n";
         assert!(lint_file("rust/src/tensor/s.rs", src).is_empty());
